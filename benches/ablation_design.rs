@@ -1,0 +1,164 @@
+//! Ablations for the design choices DESIGN.md calls out — not a paper
+//! figure, but the evidence behind three claims the paper asserts
+//! without isolating:
+//!
+//!   A. Tile size T is the data-reuse lever (§3.1): each loaded data
+//!      vector is reused T times, so cycles/FLOP fall with T until
+//!      register pressure caps it — the reason Algorithm 1 pins
+//!      accumulators in registers.
+//!   B. Data packing matters *because of* streaming locality: with the
+//!      cache model's next-line prefetcher disabled, packed and
+//!      unpacked GEMM converge — packing's win is prefetch-friendly
+//!      contiguity, not fewer accesses.
+//!   C. CNHW beats NCHW on batch-level packing (§5.2): CNHW rows span
+//!      batches, so strips stay full when W_out is small; NCHW confines
+//!      rows to one image and wastes tail lanes per image.
+
+//!   D. Structured beats unstructured *at execution time* (§2.1): a CSR
+//!      kernel at the same sparsity does the same MACs but loses the
+//!      shared-index data reuse and the register-resident accumulators,
+//!      so column-wise wins wall-clock at equal FLOPs.
+
+use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::im2col::pack_data_matrix;
+use nmprune::models::resnet50_fig5_layers;
+use nmprune::pruning::{prune_colwise_adaptive, prune_unstructured, Csr};
+use nmprune::rvv::kernels::{sim_gemm_dense, sim_gemm_dense_unpacked, sim_spmm_colwise};
+use nmprune::rvv::{CacheConfig, CostModel, RvvConfig, RvvMachine};
+use nmprune::util::XorShiftRng;
+
+const LMUL: usize = 2;
+
+fn machine(prefetch: bool) -> RvvMachine {
+    RvvMachine::new(RvvConfig {
+        vlen_bits: 256,
+        num_regs: 32,
+        cache: CacheConfig {
+            prefetch,
+            ..CacheConfig::default()
+        },
+        cost: CostModel::default(),
+    })
+}
+
+fn main() {
+    let mut rng = XorShiftRng::new(0xAB1);
+
+    // ---- A: tile-size sweep on the column-wise kernel ----
+    let mut ta = Table::new(
+        "Ablation A — tile size T vs cycles (colwise SpMM, 50% sparsity, LMUL=2)",
+        &["T", "cycles", "cycles/row", "data loads", "loads/row"],
+    );
+    let (rows, k, cols) = (64usize, 576usize, 512usize);
+    let w = rng.normal_vec(rows * k, 1.0);
+    let a = rng.normal_vec(k * cols, 1.0);
+    for tile in [1usize, 2, 4, 8, 12, 15] {
+        let mut m = machine(true);
+        let v = m.vlmax(LMUL);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let cp = prune_colwise_adaptive(&w, rows, k, tile, 0.5);
+        let (_, rep) = sim_spmm_colwise(&mut m, &cp, &p, LMUL);
+        ta.row(&[
+            format!("{tile}"),
+            format!("{}", rep.cycles),
+            format!("{:.0}", rep.cycles as f64 / rows as f64),
+            format!("{}", rep.l1_loads),
+            format!("{:.0}", rep.l1_loads as f64 / rows as f64),
+        ]);
+    }
+    ta.print();
+    println!("claim A: cycles/row falls with T (shared data vector reused T times)\n");
+
+    // ---- B: prefetch on/off × packed/unpacked dense GEMM ----
+    let mut tb = Table::new(
+        "Ablation B — packing win is streaming locality (dense GEMM cycles)",
+        &["config", "packed", "unpacked", "unpacked/packed"],
+    );
+    let (rows, k, cols) = (64usize, 576usize, 1024usize);
+    let w = rng.normal_vec(rows * k, 1.0);
+    let a = rng.normal_vec(k * cols, 1.0);
+    for prefetch in [true, false] {
+        let mut m = machine(prefetch);
+        let v = m.vlmax(LMUL);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let (_, rp) = sim_gemm_dense(&mut m, &w, rows, &p, 8, LMUL);
+        let mut m = machine(prefetch);
+        let aa = m.alloc(&a);
+        let (_, ru) = sim_gemm_dense_unpacked(&mut m, &w, rows, aa, k, cols, 8, LMUL);
+        tb.row(&[
+            if prefetch { "prefetch ON" } else { "prefetch OFF" }.into(),
+            format!("{}", rp.cycles),
+            format!("{}", ru.cycles),
+            format!("{:.2}x", ru.cycles as f64 / rp.cycles as f64),
+        ]);
+    }
+    tb.print();
+    println!("claim B: the packed/unpacked gap collapses without the stream prefetcher\n");
+
+    // ---- C: CNHW vs NCHW strip utilisation across batch sizes ----
+    let mut tc = Table::new(
+        "Ablation C — batch-level packing: strip-lane utilisation (V=32)",
+        &["layer", "batch", "CNHW strips", "NCHW strips", "CNHW util", "NCHW util"],
+    );
+    let v = 32usize;
+    for l in resnet50_fig5_layers(1) {
+        let s = l.shape;
+        if s.w_out() * s.h_out() >= 4 * v {
+            continue; // §5's effect appears when per-image cols are small
+        }
+        for batch in [1usize, 2, 4] {
+            let per_image = s.h_out() * s.w_out();
+            let cols = batch * per_image;
+            // CNHW: one matrix, rows span batches.
+            let cnhw_strips = cols.div_ceil(v);
+            // NCHW: per-image matrices, each padded to strip width.
+            let nchw_strips = batch * per_image.div_ceil(v);
+            tc.row(&[
+                l.name.into(),
+                format!("{batch}"),
+                format!("{cnhw_strips}"),
+                format!("{nchw_strips}"),
+                format!("{:.0}%", 100.0 * cols as f64 / (cnhw_strips * v) as f64),
+                format!("{:.0}%", 100.0 * cols as f64 / (nchw_strips * v) as f64),
+            ]);
+        }
+    }
+    tc.print();
+    println!("claim C: CNHW keeps strips full as batch grows; NCHW wastes tail lanes per image\n");
+
+    // ---- D: column-wise structured vs unstructured CSR, equal sparsity ----
+    let mut td = Table::new(
+        "Ablation D — column-wise (ours) vs unstructured CSR at equal sparsity (native)",
+        &["sparsity", "colwise ms", "CSR ms", "colwise/CSR"],
+    );
+    let (rows, k, cols, v, tile) = (64usize, 576usize, 1024usize, 32usize, 8usize);
+    let w = rng.normal_vec(rows * k, 1.0);
+    let a = rng.normal_vec(k * cols, 1.0);
+    let p = pack_data_matrix(&a, k, cols, v);
+    let cfg = BenchConfig::quick();
+    for sparsity in [0.5f64, 0.75, 0.9] {
+        let cp = prune_colwise_adaptive(&w, rows, k, tile, sparsity);
+        let bc = bench("colwise", cfg, || nmprune::gemm::spmm_colwise(&cp, &p));
+        let csr = Csr::from_dense(&prune_unstructured(&w, sparsity), rows, k);
+        let bu = bench("csr", cfg, || {
+            // Strip-by-strip CSR SpMM over the same packed operand.
+            let mut out = vec![0.0f32; rows * p.strips * v];
+            for s in 0..p.strips {
+                let y = csr.spmm(p.strip(s), v);
+                out[s * rows * v..(s + 1) * rows * v].copy_from_slice(&y);
+            }
+            out
+        });
+        td.row(&[
+            format!("{:.0}%", sparsity * 100.0),
+            format!("{:.3}", bc.mean_ms()),
+            format!("{:.3}", bu.mean_ms()),
+            format!("{:.2}x faster", bu.mean_ns() / bc.mean_ns()),
+        ]);
+    }
+    td.print();
+    println!(
+        "claim D: same executed FLOPs, but the shared column-index set and \
+         register-resident accumulators make the structured kernel win"
+    );
+}

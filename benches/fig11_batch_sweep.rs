@@ -1,0 +1,73 @@
+//! Fig. 11 — end-to-end ResNet-50 inference time across batch sizes
+//! {1, 2, 4} for: dense NHWC (SiFive-style), dense CNHW, and our sparse
+//! CNHW at 25/50/75% sparsity (§4.5).
+//!
+//! Paper claims: dense CNHW beats NHWC at batch 1–2, the gap narrows at
+//! batch 4; sparse beats both at every batch; at 75% sparsity the
+//! speedups over dense NHWC are 3.0×/1.9×/1.5× for batches 1/2/4.
+//!
+//! `NMPRUNE_BENCH_QUICK=1` drops the resolution to 112 to keep CI fast;
+//! the full run uses the paper's 224×224 ImageNet geometry.
+
+use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::engine::{ExecConfig, Executor};
+use nmprune::models::{build_model, ModelArch};
+use nmprune::tensor::Tensor;
+use nmprune::util::XorShiftRng;
+
+const THREADS: usize = 4;
+
+fn main() {
+    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
+    let res = if quick { 112 } else { 224 };
+    let batches: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let cfg = BenchConfig {
+        warmup: std::time::Duration::from_millis(0),
+        measure: std::time::Duration::from_millis(if quick { 1 } else { 2000 }),
+        min_samples: if quick { 1 } else { 2 },
+        max_samples: if quick { 2 } else { 5 },
+    };
+
+    let mut t = Table::new(
+        &format!("Fig. 11 — ResNet-50 end-to-end time (ms) @{res}, 4 threads"),
+        &[
+            "batch",
+            "dense NHWC",
+            "dense CNHW",
+            "sparse 25%",
+            "sparse 50%",
+            "sparse 75%",
+            "75% vs NHWC",
+        ],
+    );
+
+    let mut rng = XorShiftRng::new(0xF11);
+    for &b in batches {
+        let variants: Vec<(String, ExecConfig)> = vec![
+            ("nhwc".into(), ExecConfig::dense_nhwc(THREADS)),
+            ("cnhw".into(), ExecConfig::dense_cnhw(THREADS)),
+            ("s25".into(), ExecConfig::sparse_cnhw(THREADS, 0.25)),
+            ("s50".into(), ExecConfig::sparse_cnhw(THREADS, 0.5)),
+            ("s75".into(), ExecConfig::sparse_cnhw(THREADS, 0.75)),
+        ];
+        let x = Tensor::random(&[b, res, res, 3], &mut rng, 0.0, 1.0);
+        let mut ms = Vec::new();
+        for (name, cfg_exec) in variants {
+            let exec = Executor::new(build_model(ModelArch::ResNet50, b, res), cfg_exec);
+            let r = bench(&name, cfg, || exec.run(&x));
+            ms.push(r.mean_ms());
+        }
+        t.row(&[
+            format!("{b}"),
+            format!("{:.1}", ms[0]),
+            format!("{:.1}", ms[1]),
+            format!("{:.1}", ms[2]),
+            format!("{:.1}", ms[3]),
+            format!("{:.1}", ms[4]),
+            format!("{:.2}x", ms[0] / ms[4]),
+        ]);
+    }
+
+    t.print();
+    println!("paper: 75% sparsity vs dense NHWC = 3.0x (b1), 1.9x (b2), 1.5x (b4)");
+}

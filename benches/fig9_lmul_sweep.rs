@@ -1,0 +1,110 @@
+//! Fig. 9 — convolution inference time across LMUL ∈ {1, 2, 4, 8} with
+//! column-wise N:M pruning (50% sparsity), multi-threaded tile dispatch
+//! (§4.4).
+//!
+//! Paper claims: the optimal LMUL varies per layer (LMUL=4 best for
+//! Stage1-conv1, LMUL=2 for Stage1-conv2, LMUL=8 for Stage1-conv3, …)
+//! and the best configuration is up to 4× faster than the worst — a
+//! static LMUL is inadequate, motivating the §3.3 tuner.
+//!
+//! The register-pressure constraint (T+1)·LMUL ≤ 32 couples the two
+//! template parameters: at LMUL=8 only T ≤ 3 fits, so wider vectors
+//! trade away accumulator rows exactly as on the K1.
+
+use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::conv::Conv2dSparseCnhw;
+use nmprune::models::resnet50_fig5_layers;
+use nmprune::pruning::prune_colwise_adaptive;
+use nmprune::rvv::kernels::{max_tile_for_lmul, sim_fused_im2col_pack, sim_spmm_colwise};
+use nmprune::rvv::RvvMachine;
+use nmprune::tensor::layout::oihw_to_filter_matrix;
+use nmprune::tensor::Tensor;
+use nmprune::tuner::LMULS;
+use nmprune::util::XorShiftRng;
+
+const SPARSITY: f64 = 0.5;
+const THREADS: usize = 4;
+
+fn main() {
+    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
+    let layers = resnet50_fig5_layers(1);
+    let cfg = BenchConfig::quick();
+
+    let mut nat_t = Table::new(
+        "Fig. 9 (native) — sparse conv wall-clock (ms) across LMUL, 4 threads",
+        &["layer", "LMUL=1", "LMUL=2", "LMUL=4", "LMUL=8", "best", "worst/best"],
+    );
+    let mut sim_t = Table::new(
+        "Fig. 9 (sim) — sparse conv RVV cycles across LMUL (pack+GEMM)",
+        &["layer", "LMUL=1", "LMUL=2", "LMUL=4", "LMUL=8", "best", "worst/best"],
+    );
+
+    for l in &layers {
+        let s = l.shape;
+        let mut rng = XorShiftRng::new(0xF19 ^ s.c_out as u64);
+        let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
+        let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+        let f = oihw_to_filter_matrix(&w);
+
+        // --- native wall-clock across v = 8·LMUL ---
+        let mut cells = vec![l.name.to_string()];
+        let mut times = Vec::new();
+        for &lmul in &LMULS {
+            let v = 8 * lmul;
+            let tile = (32 / lmul - 1).min(8);
+            let op = Conv2dSparseCnhw::new_adaptive(s, &w, v, tile, SPARSITY);
+            let b = bench("conv", cfg, || op.run(&x, THREADS));
+            times.push(b.mean_ns());
+            cells.push(format!("{:.3}", b.mean_ms()));
+        }
+        let (bi, &bv) = times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let wv = times.iter().cloned().fold(0.0f64, f64::max);
+        cells.push(format!("LMUL={}", LMULS[bi]));
+        cells.push(format!("{:.2}x", wv / bv));
+        nat_t.row(&cells);
+
+        // --- simulator cycles (bounded strips; per-strip cost is exact) ---
+        let mut cells = vec![l.name.to_string()];
+        let mut cycs = Vec::new();
+        for &lmul in &LMULS {
+            let m0 = RvvMachine::k1();
+            let v = m0.vlmax(lmul);
+            let tile = max_tile_for_lmul(&m0, lmul).min(8);
+            let full_cols = s.gemm_cols();
+            let cap = if quick { 2 * v } else { 8 * v };
+            let cols = full_cols.min(cap);
+            let scale = full_cols as f64 / cols as f64;
+            // Pack phase on a proportionally shrunk input (W scaled).
+            let mut m = RvvMachine::k1();
+            let xa = m.alloc(&x.data);
+            let (_, rp) = sim_fused_im2col_pack(&mut m, xa, &s, lmul);
+            // GEMM phase on bounded strips (cycle cost depends only on
+            // shape, so a random A of the right geometry suffices).
+            let cp = prune_colwise_adaptive(&f.data, s.c_out, s.k(), tile, SPARSITY);
+            let a = rng.normal_vec(s.k() * cols, 1.0);
+            let bounded = nmprune::im2col::pack_data_matrix(&a, s.k(), cols, v);
+            let mut m = RvvMachine::k1();
+            let (_, rg) = sim_spmm_colwise(&mut m, &cp, &bounded, lmul);
+            let total = rp.cycles as f64 + rg.cycles as f64 * scale;
+            cycs.push(total);
+            cells.push(format!("{total:.0}"));
+        }
+        let (bi, &bv) = cycs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let wv = cycs.iter().cloned().fold(0.0f64, f64::max);
+        cells.push(format!("LMUL={}", LMULS[bi]));
+        cells.push(format!("{:.2}x", wv / bv));
+        sim_t.row(&cells);
+    }
+
+    nat_t.print();
+    sim_t.print();
+    println!("paper: optimal LMUL varies per layer; best vs worst up to 4x");
+}

@@ -1,0 +1,91 @@
+//! §Perf microbenchmarks — the native hot-path kernels in isolation.
+//! Used by the EXPERIMENTS.md §Perf iteration log (before/after per
+//! optimization step). GFLOP/s is effective (counting pruned-away FLOPs
+//! for sparse kernels would flatter them; we count executed MACs ×2).
+
+use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
+use nmprune::gemm::{gemm_dense, spmm_colwise};
+use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix};
+use nmprune::pruning::prune_colwise_adaptive;
+use nmprune::tensor::Tensor;
+use nmprune::util::XorShiftRng;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup: std::time::Duration::from_millis(150),
+        measure: std::time::Duration::from_millis(1200),
+        min_samples: 8,
+        max_samples: 400,
+    };
+    let mut t = Table::new(
+        "§Perf hot-path kernels",
+        &["kernel", "shape", "time", "GFLOP/s (executed)"],
+    );
+    let mut rng = XorShiftRng::new(0x9E6F);
+
+    // Representative GEMM geometry: Stage1-conv2-like (K=576, cols=3136).
+    let (rows, k, cols, v, tile) = (64usize, 576usize, 3136usize, 32usize, 8usize);
+    let w = rng.normal_vec(rows * k, 1.0);
+    let a = rng.normal_vec(k * cols, 1.0);
+    let p = pack_data_matrix(&a, k, cols, v);
+
+    let r = bench("dense", cfg, || gemm_dense(&w, rows, &p, tile));
+    let flops = 2.0 * rows as f64 * k as f64 * cols as f64;
+    t.row(&[
+        "gemm_dense".into(),
+        format!("{rows}x{k}x{cols} v{v} t{tile}"),
+        format!("{:.3} ms", r.mean_ms()),
+        format!("{:.2}", flops / r.mean_ns()),
+    ]);
+
+    let cp = prune_colwise_adaptive(&w, rows, k, tile, 0.5);
+    let r = bench("colwise", cfg, || spmm_colwise(&cp, &p));
+    t.row(&[
+        "spmm_colwise 50%".into(),
+        format!("{rows}x{k}x{cols} v{v} t{tile}"),
+        format!("{:.3} ms", r.mean_ms()),
+        format!("{:.2}", 0.5 * flops / r.mean_ns()),
+    ]);
+
+    let cp75 = prune_colwise_adaptive(&w, rows, k, tile, 0.75);
+    let r = bench("colwise75", cfg, || spmm_colwise(&cp75, &p));
+    t.row(&[
+        "spmm_colwise 75%".into(),
+        format!("{rows}x{k}x{cols} v{v} t{tile}"),
+        format!("{:.3} ms", r.mean_ms()),
+        format!("{:.2}", 0.25 * flops / r.mean_ns()),
+    ]);
+
+    // Fused pack on the matching conv (64ch 56×56, 3×3 s1 p1).
+    let s = ConvShape::square(1, 64, 56, 64, 3, 1, 1);
+    let x = Tensor::random(&[64, 1, 56, 56], &mut rng, -1.0, 1.0);
+    let r = bench("pack", cfg, || fused_im2col_pack_cnhw(&x, &s, v));
+    let bytes = (s.k() * s.gemm_cols() * 4) as f64;
+    t.row(&[
+        "fused_im2col_pack".into(),
+        format!("{s}"),
+        format!("{:.3} ms", r.mean_ms()),
+        format!("{:.2} GB/s out", bytes / r.mean_ns()),
+    ]);
+
+    // Whole sparse conv (pack + GEMM + alloc), 1 and 4 threads.
+    let wt = Tensor::random(&[64, 64, 3, 3], &mut rng, -0.5, 0.5);
+    let op = Conv2dSparseCnhw::new_adaptive(s, &wt, v, tile, 0.5);
+    let r1 = bench("conv1t", cfg, || op.run(&x, 1));
+    let r4 = bench("conv4t", cfg, || op.run(&x, 4));
+    t.row(&[
+        "conv sparse 1thr".into(),
+        format!("{s}"),
+        format!("{:.3} ms", r1.mean_ms()),
+        format!("{:.2}", 0.5 * flops / r1.mean_ns()),
+    ]);
+    t.row(&[
+        "conv sparse 4thr".into(),
+        format!("{s}"),
+        format!("{:.3} ms", r4.mean_ms()),
+        format!("{:.2}", 0.5 * flops / r4.mean_ns()),
+    ]);
+
+    t.print();
+}

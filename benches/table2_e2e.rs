@@ -1,0 +1,82 @@
+//! Table 2 — end-to-end inference time for the full model zoo, dense vs
+//! column-wise sparse at r ∈ {0.25, 0.50, 0.75}, batch 1 (§4.5).
+//!
+//! Paper claims: shallow ResNets up to 4.0× over dense NHWC, deep
+//! ResNets up to 3.2×, MobileNet-V2 up to 1.4×, DenseNet-121 modest.
+//! The paper's accuracy column comes from ImageNet retraining; our
+//! substitution trains the synthetic-task CNN (`make accuracy` →
+//! `artifacts/accuracy_table.md`) and this bench reprints those numbers
+//! when present.
+
+use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::engine::{ExecConfig, Executor};
+use nmprune::models::{build_model, model_names, ModelArch};
+use nmprune::tensor::Tensor;
+use nmprune::util::XorShiftRng;
+
+const THREADS: usize = 4;
+
+fn main() {
+    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
+    let res = if quick { 112 } else { 224 };
+    let cfg = BenchConfig {
+        warmup: std::time::Duration::from_millis(0),
+        measure: std::time::Duration::from_millis(if quick { 1 } else { 1500 }),
+        min_samples: if quick { 1 } else { 2 },
+        max_samples: if quick { 2 } else { 4 },
+    };
+
+    let mut t = Table::new(
+        &format!("Table 2 — end-to-end time (ms) @{res}, batch 1, 4 threads"),
+        &[
+            "model",
+            "dense NHWC",
+            "r=0.25",
+            "r=0.50",
+            "r=0.75",
+            "best speedup",
+        ],
+    );
+
+    let mut rng = XorShiftRng::new(0x7B2);
+    for &name in model_names() {
+        if quick && matches!(name, "resnet101" | "resnet152" | "densenet121") {
+            continue;
+        }
+        let arch = ModelArch::parse(name).unwrap();
+        let x = Tensor::random(&[1, res, res, 3], &mut rng, 0.0, 1.0);
+
+        let run = |cfg_exec: ExecConfig| -> f64 {
+            let exec = Executor::new(build_model(arch, 1, res), cfg_exec);
+            bench(name, cfg, || exec.run(&x)).mean_ms()
+        };
+        let dense = run(ExecConfig::dense_nhwc(THREADS));
+        let r25 = run(ExecConfig::sparse_cnhw(THREADS, 0.25));
+        let r50 = run(ExecConfig::sparse_cnhw(THREADS, 0.5));
+        let r75 = run(ExecConfig::sparse_cnhw(THREADS, 0.75));
+
+        t.row(&[
+            name.into(),
+            format!("{dense:.1}"),
+            format!("{r25:.1}"),
+            format!("{r50:.1}"),
+            format!("{r75:.1}"),
+            format!("{:.2}x", dense / r25.min(r50).min(r75)),
+        ]);
+    }
+
+    t.print();
+
+    // Accuracy column (Table 1 + Table 2 Acc): reprint the training
+    // harness output if it has been generated.
+    match std::fs::read_to_string("artifacts/accuracy_table.md") {
+        Ok(s) => println!("\n## Accuracy (synthetic-task substitution — see DESIGN.md §2)\n\n{s}"),
+        Err(_) => println!(
+            "\n(accuracy table not found — run `make accuracy` to train/prune/fine-tune \
+             the substitution CNN and emit artifacts/accuracy_table.md)"
+        ),
+    }
+    println!(
+        "paper: shallow ResNets up to 4.0x, deep up to 3.2x, MobileNet-V2 1.4x, DenseNet-121 modest"
+    );
+}

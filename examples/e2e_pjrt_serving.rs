@@ -1,0 +1,140 @@
+//! End-to-end driver: all three layers composed on a real workload.
+//!
+//! This is the proof that the stack holds together:
+//!
+//!   L1  Pallas column-wise-SpMM + fused im2col/pack kernels …
+//!   L2  … inside the jax `smallcnn` forward, AOT-lowered once by
+//!       `make artifacts` to HLO text, …
+//!   L3  … compiled and served here by the Rust coordinator: a dynamic
+//!       batcher groups incoming requests to the largest available AOT
+//!       batch variant (b ∈ {1, 2, 4}) and executes via PJRT — Python is
+//!       never on the request path.
+//!
+//! The driver (1) verifies numerics against the Python-side expected
+//! output for the saved sample input, (2) serves a stream of requests
+//! through the batcher, and (3) reports throughput and latency, which
+//! EXPERIMENTS.md records.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pjrt_serving`
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::Instant;
+
+use nmprune::runtime::{load_flat_f32, read_manifest, PjrtRuntime};
+use nmprune::util::stats::Summary;
+use nmprune::util::{allclose, XorShiftRng};
+
+const RES: usize = 16; // smallcnn artifact resolution (aot.py --res)
+const BATCHES: [usize; 3] = [4, 2, 1]; // largest-first
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = dir.join("manifest.tsv");
+    if !manifest.exists() {
+        eprintln!("run `make artifacts` first (no {manifest:?})");
+        std::process::exit(1);
+    }
+
+    // ---- L3 runtime: compile every artifact once ----
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let entries = read_manifest(&manifest).expect("manifest");
+    for e in &entries {
+        rt.load_hlo_text(&e.name, &e.file, e.input_arity)
+            .unwrap_or_else(|err| panic!("compile {}: {err}", e.name));
+    }
+    println!(
+        "platform {}: compiled {} artifacts",
+        rt.platform(),
+        entries.len()
+    );
+
+    // ---- model operands: the pruned weights are runtime parameters ----
+    // smallcnn_b* inputs are [x, op1..op7]; load the saved operands.
+    let operands: Vec<(Vec<usize>, Vec<f32>)> = (1..8)
+        .map(|i| {
+            load_flat_f32(&dir.join(format!("smallcnn_b1.input{i}.txt"))).expect("operand")
+        })
+        .collect();
+
+    // ---- numerics parity: serve the saved sample input, compare ----
+    let (x_dims, x_data) = load_flat_f32(&dir.join("smallcnn_b1.input0.txt")).unwrap();
+    let (_, expected) = load_flat_f32(&dir.join("smallcnn_b1.expected0.txt")).unwrap();
+    let logits = run_batch(&rt, &x_data, &x_dims, &operands);
+    assert!(
+        allclose(&logits, &expected, 1e-4, 1e-5),
+        "Rust-served logits disagree with the Python-side expected output"
+    );
+    println!("numerics parity vs python: OK ({} logits)", expected.len());
+
+    // ---- serving loop with a dynamic batcher ----
+    let n_requests = std::env::args()
+        .skip_while(|a| a != "--requests")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64usize);
+    let mut rng = XorShiftRng::new(11);
+    let mut queue: VecDeque<(usize, Vec<f32>, Instant)> = (0..n_requests)
+        .map(|i| {
+            let img = rng.normal_vec(RES * RES * 3, 1.0);
+            (i, img, Instant::now())
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut latencies = Vec::new();
+    let mut batches_used = Vec::new();
+    let mut served = 0usize;
+    while !queue.is_empty() {
+        // Batcher policy: largest AOT batch variant that the queue fills.
+        let b = *BATCHES.iter().find(|&&b| queue.len() >= b).unwrap();
+        let reqs: Vec<_> = queue.drain(..b).collect();
+        let mut x = Vec::with_capacity(b * RES * RES * 3);
+        for (_, img, _) in &reqs {
+            x.extend_from_slice(img);
+        }
+        let dims = [b, RES, RES, 3];
+        let out = run_batch(&rt, &x, &dims, &operands);
+        let classes = out.len() / b;
+        for (slot, (_, _, enq)) in reqs.iter().enumerate() {
+            let _logits = &out[slot * classes..(slot + 1) * classes];
+            latencies.push(enq.elapsed().as_nanos() as f64);
+            served += 1;
+        }
+        batches_used.push(b);
+    }
+    let wall = t0.elapsed();
+    let lat = Summary::of(&latencies);
+    let mean_batch =
+        batches_used.iter().sum::<usize>() as f64 / batches_used.len() as f64;
+    println!(
+        "served {served} requests in {:.1} ms  ({:.0} req/s, mean batch {mean_batch:.2})",
+        wall.as_secs_f64() * 1e3,
+        served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency: mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms",
+        lat.mean / 1e6,
+        lat.median / 1e6,
+        lat.p95 / 1e6
+    );
+}
+
+/// Execute the right smallcnn batch variant for `x[b, RES, RES, 3]`.
+fn run_batch(
+    rt: &PjrtRuntime,
+    x: &[f32],
+    x_dims: &[usize],
+    operands: &[(Vec<usize>, Vec<f32>)],
+) -> Vec<f32> {
+    let b = x_dims[0];
+    let name = format!("smallcnn_b{b}");
+    let mut inputs: Vec<(&[f32], &[usize])> = vec![(x, x_dims)];
+    for (dims, data) in operands {
+        inputs.push((data, dims));
+    }
+    let mut outs = rt
+        .execute_f32(&name, &inputs)
+        .unwrap_or_else(|e| panic!("execute {name}: {e}"));
+    outs.remove(0)
+}

@@ -1,0 +1,82 @@
+//! Auto-tuning walkthrough (§3.3) — profile the (T, LMUL) template
+//! space per conv layer on two backends and show why profiling must
+//! happen *on the deployment target* (AITemplate's core argument).
+//!
+//! For each representative ResNet-50 layer:
+//!   * sim-tune   — deterministic RVV-simulator cycles (the paper's K1
+//!                  twin): what you would ship to the RISC-V board;
+//!   * native-tune — wall-clock on *this* host: what you ship here.
+//!
+//! The two winners differ per layer — a config tuned for one machine is
+//! routinely suboptimal on another, which is exactly why the framework
+//! re-profiles per target instead of hard-coding tile/LMUL tables.
+//!
+//! Run: `cargo run --release --example tune_layers -- [--sparsity 0.5]`
+
+use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::conv::Conv2dSparseCnhw;
+use nmprune::models::resnet50_fig5_layers;
+use nmprune::tensor::Tensor;
+use nmprune::tuner::{candidate_space, tune_native, tune_sim_colwise};
+use nmprune::util::cli::Args;
+use nmprune::util::XorShiftRng;
+
+fn main() {
+    let args = Args::from_env();
+    let sparsity = args.get_parsed("sparsity", 0.5f64);
+    let tile_cap = args.get_parsed("tile-cap", 8usize);
+    let threads = args.get_parsed("threads", 2usize);
+    println!(
+        "candidate space: {} (T, LMUL) pairs, sparsity {sparsity}",
+        candidate_space(tile_cap).len()
+    );
+
+    let mut t = Table::new(
+        "Per-layer tuning: sim-chosen vs native-chosen (LMUL, T), and the native win",
+        &[
+            "layer",
+            "sim (LMUL,T)",
+            "native (LMUL,T)",
+            "native tuned ms",
+            "static (4,7) ms",
+            "tuned gain",
+            "same winner?",
+        ],
+    );
+
+    let cfg = BenchConfig::quick();
+    let mut agree = 0usize;
+    let layers = resnet50_fig5_layers(1);
+    for l in &layers {
+        let s = l.shape;
+        let rs = tune_sim_colwise(&s, sparsity, tile_cap);
+        let rn = tune_native(&s, Some(sparsity), threads, tile_cap);
+
+        let mut rng = XorShiftRng::new(0x7E ^ s.c_out as u64);
+        let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
+        let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+
+        let tuned = Conv2dSparseCnhw::new_adaptive(s, &w, rn.best.v, rn.best.tile, sparsity);
+        let fixed = Conv2dSparseCnhw::new_adaptive(s, &w, 32, 7, sparsity);
+        let bt = bench("tuned", cfg, || tuned.run(&x, threads));
+        let bf = bench("static", cfg, || fixed.run(&x, threads));
+
+        let same = rs.best.lmul == rn.best.lmul && rs.best.tile == rn.best.tile;
+        agree += same as usize;
+        t.row(&[
+            l.name.into(),
+            format!("({},{})", rs.best.lmul, rs.best.tile),
+            format!("({},{})", rn.best.lmul, rn.best.tile),
+            format!("{:.3}", bt.mean_ms()),
+            format!("{:.3}", bf.mean_ms()),
+            format!("{:.2}x", bf.mean_ns() / bt.mean_ns()),
+            format!("{same}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "sim and native winners agree on {agree}/{} layers — profiling must run on the \
+         deployment target (§3.3); a static (LMUL, T) is inadequate (§4.4)",
+        layers.len()
+    );
+}

@@ -1,0 +1,4 @@
+"""Build-time compile path: Pallas kernels (L1), the JAX model (L2) and
+the AOT lowering to HLO text consumed by the Rust runtime (L3).
+Python never runs on the request path.
+"""

@@ -1,0 +1,145 @@
+"""AOT lowering: jax/Pallas → HLO **text** artifacts for the Rust runtime.
+
+HLO text, NOT ``lowered.compile()``/``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  conv_dense       one conv layer, dense GEMM kernel path
+  conv_sparse50    same layer, column-wise N:M at 50% sparsity
+  smallcnn_b{1,2,4} full smallcnn forward per batch size
+
+For each artifact a sample input (``.input.txt``) and expected output
+(``.expected.txt``) are saved as flat f32 text for the Rust-side
+numerics parity test, plus a ``manifest.tsv`` the runtime loads.
+
+Usage: python -m compile.aot [--out-dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def save_flat(path: str, arr: np.ndarray) -> None:
+    """Dims on line 1 (space-separated), flat f32 values one per line."""
+    arr = np.asarray(arr, np.float32)
+    with open(path, "w") as f:
+        f.write(" ".join(str(d) for d in arr.shape) + "\n")
+        for v in arr.reshape(-1):
+            f.write(f"{v:.9g}\n")
+
+
+def lower_artifact(fn, example_inputs, name: str, out_dir: str,
+                   manifest: list[str], description: str) -> None:
+    """Lower fn(*inputs) to HLO text + save sample input/output pairs."""
+    specs = [jax.ShapeDtypeStruct(np.asarray(x).shape, jnp.float32)
+             for x in example_inputs]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    # Sample I/O for the Rust parity test.
+    outputs = fn(*[jnp.asarray(x) for x in example_inputs])
+    if not isinstance(outputs, tuple):
+        outputs = (outputs,)
+    for i, x in enumerate(example_inputs):
+        save_flat(os.path.join(out_dir, f"{name}.input{i}.txt"), np.asarray(x))
+    for i, y in enumerate(outputs):
+        save_flat(os.path.join(out_dir, f"{name}.expected{i}.txt"), np.asarray(y))
+    manifest.append(f"{name}\t{name}.hlo.txt\t{len(example_inputs)}\t{description}")
+    print(f"  {name}: {len(text)} chars, {len(example_inputs)} input(s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--res", type=int, default=16, help="smallcnn input resolution")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"writing artifacts to {out_dir}")
+
+    manifest: list[str] = []
+    rng = np.random.default_rng(7)
+    params = model.init_params(seed=0)
+
+    # Weights are runtime *parameters*, never baked constants: the HLO
+    # text printer elides large literals (`constant({...})`) and the
+    # xla_extension-0.5.1 parser zero-fills them. Caught by the Rust
+    # aot_parity test; recorded in EXPERIMENTS.md §Gotchas.
+
+    # --- single conv layer artifacts (conv2 geometry of smallcnn) ----
+    w2f = model.filter_matrix(params["conv2"])  # [32, 144]
+    x_conv = rng.normal(0, 1, (16, 1, args.res, args.res)).astype(np.float32)
+
+    def conv_dense(x, f):
+        return (model.conv2d_kernels_dense(x, f, kh=3, kw=3, stride=2,
+                                           pad=1, v=32, tile=8),)
+
+    nret = model.ref.retained_for_sparsity(w2f.shape[1], 0.5)
+    w_vals, idx, _ = model.pack_colwise_weights(w2f, 8, nret, w2f.shape[1])
+    idx_f = idx.astype(np.float32)
+
+    def conv_sparse(x, vals, ix):
+        return (model.conv2d_kernels_sparse(x, vals, ix, c_out=32, kh=3,
+                                            kw=3, stride=2, pad=1, v=32),)
+
+    lower_artifact(conv_dense, [x_conv, w2f], "conv_dense", out_dir, manifest,
+                   "conv2 16->32 3x3 s2, dense GEMM kernel")
+    lower_artifact(conv_sparse, [x_conv, w_vals, idx_f], "conv_sparse50",
+                   out_dir, manifest, "conv2 16->32 3x3 s2, column-wise N:M 50%")
+
+    # --- full smallcnn per batch size (the PJRT serving artifacts) ----
+    operands = model.small_cnn_operands(params, tile=8, sparsity=0.5)
+    for batch in (1, 2, 4):
+        x = rng.normal(0, 1, (batch, args.res, args.res, 3)).astype(np.float32)
+
+        def fwd(xb, *ops):
+            return (model.small_cnn_fwd_operands(xb, *ops, v=32, tile=8),)
+
+        lower_artifact(fwd, [x] + operands, f"smallcnn_b{batch}", out_dir,
+                       manifest,
+                       f"smallcnn fwd batch={batch}, sparse 50% kernel path")
+
+    # --- residual block (skip-connection composition through the
+    #     Pallas kernels; served standalone by the runtime) ------------
+    rb_c = 16
+    rb_params = model.init_resblock_params(rb_c, seed=3)
+    rb_ops = model.resblock_operands(rb_params, tile=8, sparsity=0.5)
+    x_rb = rng.normal(0, 1, (rb_c, 1, args.res, args.res)).astype(np.float32)
+
+    def rb_fwd(x, c1v, c1i, c2v, c2i):
+        return (model.resblock_fwd_operands(x, c1v, c1i, c2v, c2i,
+                                            c=rb_c, v=32),)
+
+    lower_artifact(rb_fwd, [x_rb] + rb_ops, "resblock", out_dir, manifest,
+                   f"BasicBlock c={rb_c} 3x3/3x3 identity skip, sparse 50%")
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tfile\tinput_arity\tdescription\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

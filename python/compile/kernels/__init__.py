@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only; interpret=True on CPU).
+
+* ``colwise_spmm`` — Algorithm 1, compressed-operand MXU formulation.
+* ``im2col_pack`` — Algorithm 2, fused im2col + strip packing.
+* ``dense_gemm`` — dense tiled baseline.
+* ``nm_row_spmm`` — conventional row-based N:M baseline.
+* ``ref`` — pure jnp/numpy oracles + pruning helpers.
+"""
+
+from . import ref  # noqa: F401
+from .colwise_spmm import colwise_spmm, colwise_spmm_dense_result, pack_colwise_weights  # noqa: F401
+from .dense_gemm import dense_gemm, dense_gemm_result  # noqa: F401
+from .im2col_pack import fused_im2col_pack  # noqa: F401
+from .nm_row_spmm import rownm_spmm, rownm_spmm_result  # noqa: F401

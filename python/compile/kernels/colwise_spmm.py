@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: Algorithm 1 — column-wise N:M sparse GEMM.
+
+TPU adaptation of the paper's RVV micro-kernel (DESIGN.md
+§Hardware-Adaptation): because every row of a T-row tile shares one
+retained-column index set, the kernel gathers the N retained rows of the
+packed data strip **once** into VMEM and contracts them against the
+compressed ``(T, N)`` value block as a dense MXU matmul — the
+compressed-operand formulation. Row-based N:M cannot do this (each row
+would need its own gather; see ``nm_row_spmm.py``).
+
+Grid: (strips, tiles). Per step the VMEM working set is
+``K·V + T·N + T·V`` f32 words — the BlockSpec analogue of the paper's
+register budget ``(T+1)·LMUL ≤ 32``.
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO, which is what
+the Rust runtime loads. Real-TPU performance is estimated from the VMEM
+footprint + MXU utilisation in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def pack_colwise_weights(w: np.ndarray, tile: int, n: int, m: int):
+    """Compress ``w[rows, cols]`` into the kernel operands:
+
+    Returns (w_vals [ntiles, T, NRET] f32, idx [ntiles, NRET] i32, rows).
+    The tail tile is padded with zero rows; NRET is uniform because the
+    aligned N:M grouping retains the same count per tile.
+    """
+    rows, _ = w.shape
+    _, tiles = ref.prune_colwise(w, tile, n, m)
+    nret = len(tiles[0]["indices"])
+    ntiles = len(tiles)
+    w_vals = np.zeros((ntiles, tile, nret), np.float32)
+    idx = np.zeros((ntiles, nret), np.int32)
+    for ti, t in enumerate(tiles):
+        assert len(t["indices"]) == nret, "aligned N:M gives uniform NRET"
+        w_vals[ti, : t["row_count"]] = t["values"]
+        idx[ti] = t["indices"]
+    return w_vals, idx, rows
+
+
+def colwise_spmm(a_packed, w_vals, idx, *, interpret: bool = True):
+    """Sparse GEMM: ``C = W_compressed · A``.
+
+    a_packed: [strips, K, V]   packed data matrix
+    w_vals:   [ntiles, T, N]   compressed tile values
+    idx:      [ntiles, N] i32  shared retained-column indices per tile
+    returns:  [ntiles*T, strips*V] (caller crops rows/cols)
+    """
+    strips, k, v = a_packed.shape
+    ntiles, t, nret = w_vals.shape
+    # idx may arrive as f32 (the AOT path marshals f32 only — HLO text
+    # elides large constants, so weights/indices are runtime parameters).
+    idx = jnp.asarray(idx).astype(jnp.int32)
+
+    def kernel(a_ref, w_ref, idx_ref, o_ref):
+        a = a_ref[0]            # [K, V] strip resident in VMEM
+        wv = w_ref[0]           # [T, N] compressed values
+        ix = idx_ref[0]         # [N]
+        gathered = jnp.take(a, ix, axis=0)  # one gather per *tile*
+        # Dense (T,N)x(N,V) contraction over the compressed operands:
+        # (1 - sparsity) of the dense FLOPs, MXU-friendly.
+        o_ref[0, :, 0, :] = wv @ gathered
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(strips, ntiles),
+        in_specs=[
+            pl.BlockSpec((1, k, v), lambda s, ti: (s, 0, 0)),
+            pl.BlockSpec((1, t, nret), lambda s, ti: (ti, 0, 0)),
+            pl.BlockSpec((1, nret), lambda s, ti: (ti, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, 1, v), lambda s, ti: (ti, 0, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntiles, t, strips, v), jnp.float32),
+        interpret=interpret,
+    )(a_packed, w_vals, idx)
+    return out.transpose(0, 1, 2, 3).reshape(ntiles * t, strips * v)
+
+
+def colwise_spmm_dense_result(w: np.ndarray, a: np.ndarray, tile: int, n: int, m: int, v: int):
+    """End-to-end helper: prune + compress + pack + kernel, returning the
+    ``[rows, cols]`` result (test convenience)."""
+    rows, _ = w.shape
+    cols = a.shape[1]
+    w_vals, idx, _ = pack_colwise_weights(w, tile, n, m)
+    packed = jnp.asarray(ref.pack_data_matrix(a, v))
+    out = colwise_spmm(packed, jnp.asarray(w_vals), jnp.asarray(idx))
+    return out[:rows, :cols]

@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: dense tiled GEMM over packed strips — the
+dense baseline the sparse kernels are compared against.
+
+Grid: (strips, row_tiles); per step one ``(T, K)·(K, V)`` MXU matmul.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def dense_gemm(a_packed, w, tile: int, *, interpret: bool = True):
+    """``C = W · A`` with A packed.
+
+    a_packed: [strips, K, V]
+    w:        [rows, K] (rows padded to a multiple of `tile` internally)
+    returns:  [rows, strips*V] (caller crops cols)
+    """
+    strips, k, v = a_packed.shape
+    rows = w.shape[0]
+    rows_pad = -(-rows // tile) * tile
+    if rows_pad != rows:
+        w = jnp.concatenate(
+            [jnp.asarray(w), jnp.zeros((rows_pad - rows, k), jnp.float32)]
+        )
+    row_tiles = rows_pad // tile
+
+    def kernel(a_ref, w_ref, o_ref):
+        o_ref[:, 0, :] = w_ref[...] @ a_ref[0]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(strips, row_tiles),
+        in_specs=[
+            pl.BlockSpec((1, k, v), lambda s, rt: (s, 0, 0)),
+            pl.BlockSpec((tile, k), lambda s, rt: (rt, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1, v), lambda s, rt: (rt, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, strips, v), jnp.float32),
+        interpret=interpret,
+    )(a_packed, jnp.asarray(w, jnp.float32))
+    return out.reshape(rows_pad, strips * v)[:rows]
+
+
+def dense_gemm_result(w: np.ndarray, a: np.ndarray, tile: int, v: int):
+    """prune-free helper: pack + kernel, cropped to [rows, cols]."""
+    from . import ref
+
+    cols = a.shape[1]
+    packed = jnp.asarray(ref.pack_data_matrix(a, v))
+    return dense_gemm(packed, w, tile)[:, :cols]

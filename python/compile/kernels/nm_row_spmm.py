@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: conventional row-based N:M SpMM baseline.
+
+Contrast with ``colwise_spmm``: every output row carries its *own*
+retained-column index array, so the kernel must gather per row —
+``(T, PR, V)`` intermediate instead of one shared ``(N, V)`` gather —
+and the contraction degrades from one MXU matmul to a broadcast-multiply
+reduction. This is the TPU manifestation of the redundant-access
+pathology the paper identifies on RVV (§3.1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def rownm_spmm(a_packed, values, indices, tile: int, *, interpret: bool = True):
+    """``C = W_rowNM · A``.
+
+    a_packed: [strips, K, V]
+    values:   [rows, PR] retained values (rows padded to tile multiple)
+    indices:  [rows, PR] i32 column of each value
+    returns:  [rows, strips*V]
+    """
+    strips, k, v = a_packed.shape
+    rows, pr = values.shape
+    rows_pad = -(-rows // tile) * tile
+    if rows_pad != rows:
+        values = jnp.concatenate(
+            [jnp.asarray(values), jnp.zeros((rows_pad - rows, pr), jnp.float32)]
+        )
+        indices = jnp.concatenate(
+            [jnp.asarray(indices), jnp.zeros((rows_pad - rows, pr), jnp.int32)]
+        )
+    row_tiles = rows_pad // tile
+
+    def kernel(a_ref, vals_ref, idx_ref, o_ref):
+        a = a_ref[0]                       # [K, V]
+        vals = vals_ref[...]               # [T, PR]
+        ix = idx_ref[...]                  # [T, PR]
+        gathered = jnp.take(a, ix.reshape(-1), axis=0).reshape(
+            vals.shape[0], vals.shape[1], a.shape[1]
+        )                                  # per-row gather: [T, PR, V]
+        o_ref[:, 0, :] = (vals[:, :, None] * gathered).sum(axis=1)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(strips, row_tiles),
+        in_specs=[
+            pl.BlockSpec((1, k, v), lambda s, rt: (s, 0, 0)),
+            pl.BlockSpec((tile, pr), lambda s, rt: (rt, 0)),
+            pl.BlockSpec((tile, pr), lambda s, rt: (rt, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1, v), lambda s, rt: (rt, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, strips, v), jnp.float32),
+        interpret=interpret,
+    )(a_packed, jnp.asarray(values, jnp.float32), jnp.asarray(indices, jnp.int32))
+    return out.reshape(rows_pad, strips * v)[:rows]
+
+
+def rownm_spmm_result(w: np.ndarray, a: np.ndarray, n: int, m: int, tile: int, v: int):
+    """compress + pack + kernel, cropped to [rows, cols]."""
+    from . import ref
+
+    cols = a.shape[1]
+    values, indices = ref.compress_rownm(w, n, m)
+    packed = jnp.asarray(ref.pack_data_matrix(a, v))
+    return rownm_spmm(packed, values, indices, tile)[:, :cols]

@@ -1,0 +1,169 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel (the CORE
+correctness signal), plus the pruning/compression helpers that mirror
+``rust/src/pruning`` exactly.
+
+All matrices follow the Rust conventions:
+  * filter matrix ``W[rows, K]`` with K = Kh*Kw*C_in, rows ordered
+    kernel-position-major / input-channel-minor (OHWI flattening);
+  * data matrix ``A[K, cols]`` with cols = N*H_out*W_out, (n, ho, wo)
+    ordered, w innermost;
+  * packed matrix ``[strips, K, V]`` with zero-padded tail strip.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------
+# Pruning / compression (mirrors rust/src/pruning)
+
+def retained_for_sparsity(m: int, sparsity: float) -> int:
+    """N = round((1 - sparsity) * M), clamped to [0, M]."""
+    return min(int(round((1.0 - sparsity) * m)), m)
+
+
+def prune_colwise(w: np.ndarray, tile: int, n: int, m: int):
+    """Column-wise N:M pruning (paper §3.1).
+
+    Returns (mask, tiles) where tiles is a list of dicts with keys
+    ``row_start``, ``row_count``, ``indices`` (sorted), ``values``
+    [row_count, nret] — the compressed format Algorithm 1 consumes.
+    """
+    rows, cols = w.shape
+    assert 1 <= n <= m
+    mask = np.zeros_like(w, dtype=bool)
+    tiles = []
+    groups = -(-cols // m)  # ceil
+    for row_start in range(0, rows, tile):
+        row_count = min(tile, rows - row_start)
+        block = w[row_start:row_start + row_count]
+        keep: list[int] = []
+        for g in range(groups):
+            lo, hi = g * m, min((g + 1) * m, cols)
+            scores = np.abs(block[:, lo:hi]).sum(axis=0)
+            k = min(n, hi - lo)
+            # ties broken by lower index, like the Rust top_n_indices
+            order = np.lexsort((np.arange(hi - lo), -scores))[:k]
+            keep.extend(sorted(lo + int(i) for i in order))
+        keep_arr = np.array(keep, dtype=np.int32)
+        mask[row_start:row_start + row_count, keep_arr] = True
+        tiles.append({
+            "row_start": row_start,
+            "row_count": row_count,
+            "indices": keep_arr,
+            "values": block[:, keep_arr].astype(np.float32),
+        })
+    return mask, tiles
+
+
+def prune_colwise_adaptive(w: np.ndarray, tile: int, sparsity: float):
+    """Adaptive-M column-wise pruning: M = K, N from the sparsity ratio."""
+    cols = w.shape[1]
+    n = max(retained_for_sparsity(cols, sparsity), 1)
+    return prune_colwise(w, tile, n, cols)
+
+
+def prune_rownm(w: np.ndarray, n: int, m: int) -> np.ndarray:
+    """Row-based N:M magnitude pruning mask (conventional baseline)."""
+    rows, cols = w.shape
+    mask = np.zeros_like(w, dtype=bool)
+    for r in range(rows):
+        for lo in range(0, cols, m):
+            hi = min(lo + m, cols)
+            k = min(n, hi - lo)
+            scores = np.abs(w[r, lo:hi])
+            order = np.lexsort((np.arange(hi - lo), -scores))[:k]
+            mask[r, lo + order] = True
+    return mask
+
+
+def compress_rownm(w: np.ndarray, n: int, m: int):
+    """Row-based N:M compressed format: (values, indices) each
+    [rows, groups*n] (aligned cols only)."""
+    rows, cols = w.shape
+    assert cols % m == 0, "aligned columns required for compression"
+    mask = prune_rownm(w, n, m)
+    per_row = (cols // m) * n
+    values = np.zeros((rows, per_row), np.float32)
+    indices = np.zeros((rows, per_row), np.int32)
+    for r in range(rows):
+        idx = np.nonzero(mask[r])[0]
+        assert len(idx) == per_row
+        values[r] = w[r, idx]
+        indices[r] = idx
+    return values, indices
+
+
+# ---------------------------------------------------------------------
+# Data-matrix oracles
+
+def im2col_cnhw(x: np.ndarray, kh: int, kw: int, stride: int, pad: int) -> np.ndarray:
+    """im2col over CNHW input -> A[K, N*Ho*Wo], zero padding."""
+    c_in, n, h, w = x.shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = n * ho * wo
+    a = np.zeros((kh * kw * c_in, cols), np.float32)
+    xp = np.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    for ky in range(kh):
+        for kx in range(kw):
+            for c in range(c_in):
+                row = (ky * kw + kx) * c_in + c
+                patch = xp[c, :, ky:ky + ho * stride:stride, kx:kx + wo * stride:stride]
+                a[row] = patch.reshape(cols)
+    return a
+
+
+def pack_data_matrix(a: np.ndarray, v: int) -> np.ndarray:
+    """Pack A[K, cols] into [strips, K, V] with zero-padded tail."""
+    k, cols = a.shape
+    strips = max(-(-cols // v), 1)
+    out = np.zeros((strips, k, v), np.float32)
+    for s in range(strips):
+        valid = min(v, cols - s * v)
+        if valid > 0:
+            out[s, :, :valid] = a[:, s * v:s * v + valid]
+    return out
+
+
+def fused_im2col_pack_ref(x, kh, kw, stride, pad, v):
+    """Reference for the fused kernel = pack(im2col(x))."""
+    return pack_data_matrix(im2col_cnhw(np.asarray(x), kh, kw, stride, pad), v)
+
+
+# ---------------------------------------------------------------------
+# GEMM oracles
+
+def matmul_ref(w, a):
+    """Dense C = W @ A (jnp, f32)."""
+    return jnp.asarray(w, jnp.float32) @ jnp.asarray(a, jnp.float32)
+
+
+def spmm_colwise_ref(w: np.ndarray, tile: int, n: int, m: int, a: np.ndarray):
+    """Column-wise sparse GEMM oracle: masked dense matmul."""
+    mask, _ = prune_colwise(w, tile, n, m)
+    return matmul_ref(np.where(mask, w, 0.0), a)
+
+
+def spmm_rownm_ref(w: np.ndarray, n: int, m: int, a: np.ndarray):
+    """Row-based N:M sparse GEMM oracle."""
+    mask = prune_rownm(w, n, m)
+    return matmul_ref(np.where(mask, w, 0.0), a)
+
+
+def conv2d_ref_cnhw(x, w_oihw, stride: int, pad: int):
+    """Direct convolution oracle over CNHW input / OIHW weights,
+    returning CNHW output — via the im2col + filter-matrix route (itself
+    verified against jax.lax.conv in tests)."""
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w_oihw, np.float32)
+    c_out, c_in, kh, kw = w.shape
+    _, n, h, win = x.shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (win + 2 * pad - kw) // stride + 1
+    a = im2col_cnhw(x, kh, kw, stride, pad)
+    f = w.transpose(0, 2, 3, 1).reshape(c_out, kh * kw * c_in)  # OHWI flat
+    out = f @ a
+    return out.reshape(c_out, n, ho, wo)

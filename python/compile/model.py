@@ -1,0 +1,304 @@
+"""Layer-2 JAX model: CNN forward pass composed from the Pallas kernels.
+
+Two twin forward paths:
+
+* ``small_cnn_fwd_kernels`` — the *deployment* path: NHWC→CNHW layout
+  transform, fused im2col+pack (Algorithm 2) and column-wise sparse /
+  dense GEMM Pallas kernels per conv layer. This is what ``aot.py``
+  lowers to HLO text for the Rust runtime.
+* ``small_cnn_fwd_jnp`` — the *training* path: plain ``jax.lax`` convs
+  with optional pruning masks, fast enough for the accuracy experiments
+  in ``train_prune.py``. Tests assert the two paths agree.
+
+The model ("smallcnn") is the synthetic-task stand-in for the paper's
+ImageNet CNNs (see DESIGN.md §2: accuracy claims are ordinal and
+architecture-independent; the Rust model zoo carries the real
+ResNet/MobileNet/DenseNet geometry for the performance experiments).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    colwise_spmm,
+    dense_gemm,
+    fused_im2col_pack,
+    pack_colwise_weights,
+    ref,
+)
+
+# ---------------------------------------------------------------------
+# Parameters
+
+LAYERS = (
+    # name,   c_in, c_out, k, stride, pad
+    ("conv1", 3, 16, 3, 1, 1),
+    ("conv2", 16, 32, 3, 2, 1),
+    ("conv3", 32, 32, 3, 1, 1),
+)
+NUM_CLASSES = 10
+
+
+def init_params(seed: int = 0) -> dict:
+    """He-initialised weights as numpy arrays (OIHW convs + FC)."""
+    rng = np.random.default_rng(seed)
+    params: dict = {}
+    for name, c_in, c_out, k, _, _ in LAYERS:
+        scale = np.sqrt(2.0 / (c_in * k * k))
+        params[name] = rng.normal(0, scale, (c_out, c_in, k, k)).astype(np.float32)
+    params["fc_w"] = rng.normal(0, np.sqrt(1.0 / 32), (NUM_CLASSES, 32)).astype(np.float32)
+    params["fc_b"] = np.zeros(NUM_CLASSES, np.float32)
+    return params
+
+
+def filter_matrix(w_oihw) -> np.ndarray:
+    """OIHW → the GEMM filter matrix [C_out, Kh*Kw*C_in] (k-major,
+    channel-inner) — matches rust `oihw_to_filter_matrix`."""
+    w = np.asarray(w_oihw)
+    o, i, kh, kw = w.shape
+    return w.transpose(0, 2, 3, 1).reshape(o, kh * kw * i)
+
+
+# ---------------------------------------------------------------------
+# Deployment path (Pallas kernels)
+
+def conv2d_kernels_dense(x_cnhw, f_matrix, *, kh: int, kw: int, stride: int,
+                         pad: int, v: int, tile: int = 8):
+    """Dense conv on the kernel path with the filter matrix as a runtime
+    operand (AOT artifacts must not bake weights as constants: the HLO
+    text printer elides large literals and the old parser zero-fills
+    them — see aot.py)."""
+    c_in, n, h, w_in = x_cnhw.shape
+    c_out = f_matrix.shape[0]
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w_in + 2 * pad - kw) // stride + 1
+    cols = n * ho * wo
+    packed = fused_im2col_pack(x_cnhw, kh, kw, stride, pad, v)
+    out = dense_gemm(packed, f_matrix, tile)
+    return out[:c_out, :cols].reshape(c_out, n, ho, wo)
+
+
+def conv2d_kernels_sparse(x_cnhw, w_vals, idx, *, c_out: int, kh: int,
+                          kw: int, stride: int, pad: int, v: int):
+    """Column-wise sparse conv on the kernel path with the compressed
+    operands (values [ntiles,T,N], indices [ntiles,N], possibly f32) as
+    runtime parameters."""
+    c_in, n, h, w_in = x_cnhw.shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w_in + 2 * pad - kw) // stride + 1
+    cols = n * ho * wo
+    packed = fused_im2col_pack(x_cnhw, kh, kw, stride, pad, v)
+    out = colwise_spmm(packed, w_vals, idx)
+    return out[:c_out, :cols].reshape(c_out, n, ho, wo)
+
+
+def conv2d_kernels(x_cnhw, w_oihw, *, stride: int, pad: int, v: int,
+                   tile: int = 8, sparsity: float | None = None):
+    """One conv layer on the kernel path: fused im2col/pack → GEMM.
+
+    ``sparsity=None`` → dense GEMM kernel; otherwise adaptive-M
+    column-wise pruning at that ratio (compression happens at trace time
+    — weights are static).
+    Returns CNHW output.
+    """
+    c_in, n, h, w_in = x_cnhw.shape
+    c_out, _, kh, kw = np.asarray(w_oihw).shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w_in + 2 * pad - kw) // stride + 1
+    cols = n * ho * wo
+    f = filter_matrix(w_oihw)
+    packed = fused_im2col_pack(x_cnhw, kh, kw, stride, pad, v)
+    if sparsity is None:
+        out = dense_gemm(packed, f, tile)
+    else:
+        nret = max(ref.retained_for_sparsity(f.shape[1], sparsity), 1)
+        w_vals, idx, _ = pack_colwise_weights(f, tile, nret, f.shape[1])
+        out = colwise_spmm(packed, jnp.asarray(w_vals), jnp.asarray(idx))
+    return out[:c_out, :cols].reshape(c_out, n, ho, wo)
+
+
+def small_cnn_fwd_kernels(params: dict, x_nhwc, *, v: int = 32,
+                          tile: int = 8, sparsity: float | None = None):
+    """Full smallcnn forward on the kernel path. NHWC input → logits.
+
+    Layout policy mirrors the paper (§4.1.2): NHWC→CNHW before the first
+    conv, CNHW throughout, and the first conv is never pruned.
+    """
+    x = jnp.transpose(jnp.asarray(x_nhwc, jnp.float32), (3, 0, 1, 2))  # → CNHW
+    for li, (name, _, _, _, stride, pad) in enumerate(LAYERS):
+        sp = None if li == 0 else sparsity  # never prune the first conv
+        x = conv2d_kernels(x, params[name], stride=stride, pad=pad, v=v,
+                           tile=tile, sparsity=sp)
+        x = jnp.maximum(x, 0.0)
+    # Global average pool: CNHW → [N, C].
+    feat = x.mean(axis=(2, 3)).T
+    return feat @ jnp.asarray(params["fc_w"]).T + jnp.asarray(params["fc_b"])
+
+
+def small_cnn_operands(params: dict, *, tile: int = 8,
+                       sparsity: float = 0.5) -> list[np.ndarray]:
+    """Flatten smallcnn weights into the runtime-operand list the AOT
+    artifact takes: [conv1 filter, conv2 vals, conv2 idx, conv3 vals,
+    conv3 idx, fc_w, fc_b]. Indices are f32 (the runtime marshals f32;
+    the kernel casts back). Compression happens here — host side, once."""
+    out: list[np.ndarray] = [filter_matrix(params["conv1"])]
+    for name in ("conv2", "conv3"):
+        f = filter_matrix(params[name])
+        nret = max(ref.retained_for_sparsity(f.shape[1], sparsity), 1)
+        w_vals, idx, _ = pack_colwise_weights(f, tile, nret, f.shape[1])
+        out.append(w_vals)
+        out.append(idx.astype(np.float32))
+    out.append(params["fc_w"])
+    out.append(params["fc_b"])
+    return out
+
+
+def small_cnn_fwd_operands(x_nhwc, conv1_f, c2_vals, c2_idx, c3_vals, c3_idx,
+                           fc_w, fc_b, *, v: int = 32, tile: int = 8):
+    """smallcnn forward with every weight as a runtime operand — the AOT
+    entrypoint (arity 8). Numerically identical to
+    ``small_cnn_fwd_kernels`` at the same sparsity."""
+    x = jnp.transpose(jnp.asarray(x_nhwc, jnp.float32), (3, 0, 1, 2))
+    (_, _, c1out, k1, s1, p1) = LAYERS[0]
+    x = conv2d_kernels_dense(x, conv1_f, kh=k1, kw=k1, stride=s1, pad=p1,
+                             v=v, tile=tile)
+    x = jnp.maximum(x, 0.0)
+    for (vals, idx), (_, _, c_out, k, stride, pad) in zip(
+        [(c2_vals, c2_idx), (c3_vals, c3_idx)], LAYERS[1:]
+    ):
+        x = conv2d_kernels_sparse(x, vals, idx, c_out=c_out, kh=k, kw=k,
+                                  stride=stride, pad=pad, v=v)
+        x = jnp.maximum(x, 0.0)
+    feat = x.mean(axis=(2, 3)).T
+    return feat @ jnp.asarray(fc_w).T + jnp.asarray(fc_b)
+
+
+# ---------------------------------------------------------------------
+# Residual block (ResNet BasicBlock) on the kernel path — exercises the
+# skip-connection composition the Rust model zoo uses, end to end
+# through the Pallas kernels, and is AOT-lowered as its own artifact.
+
+def init_resblock_params(c: int, seed: int = 1) -> dict:
+    """Two 3×3 convs at width ``c`` (identity skip)."""
+    rng = np.random.default_rng(seed)
+    scale = np.sqrt(2.0 / (c * 9))
+    return {
+        "rb_conv1": rng.normal(0, scale, (c, c, 3, 3)).astype(np.float32),
+        "rb_conv2": rng.normal(0, scale, (c, c, 3, 3)).astype(np.float32),
+    }
+
+
+def resblock_fwd_kernels(params: dict, x_cnhw, *, v: int = 32,
+                         tile: int = 8, sparsity: float | None = 0.5):
+    """BasicBlock on the kernel path: conv-relu-conv + identity, relu.
+
+    Input and output are CNHW ``[C, N, H, W]`` (stride 1, pad 1 keeps
+    the geometry, so the skip is a plain add).
+    """
+    h = conv2d_kernels(x_cnhw, params["rb_conv1"], stride=1, pad=1, v=v,
+                       tile=tile, sparsity=sparsity)
+    h = jnp.maximum(h, 0.0)
+    h = conv2d_kernels(h, params["rb_conv2"], stride=1, pad=1, v=v,
+                       tile=tile, sparsity=sparsity)
+    return jnp.maximum(h + x_cnhw, 0.0)
+
+
+def resblock_fwd_jnp(params: dict, x_cnhw, masks: dict | None = None):
+    """lax-conv twin of :func:`resblock_fwd_kernels` (mask-aware)."""
+    def w(name):
+        wt = jnp.asarray(params[name], jnp.float32)
+        if masks and name in masks:
+            wt = wt * jnp.asarray(masks[name], jnp.float32)
+        return wt
+
+    h = jnp.maximum(conv2d_jnp(x_cnhw, w("rb_conv1"), 1, 1), 0.0)
+    h = conv2d_jnp(h, w("rb_conv2"), 1, 1)
+    return jnp.maximum(h + x_cnhw, 0.0)
+
+
+def resblock_operands(params: dict, *, tile: int = 8,
+                      sparsity: float = 0.5) -> list[np.ndarray]:
+    """Compressed runtime operands [c1_vals, c1_idx, c2_vals, c2_idx]."""
+    out: list[np.ndarray] = []
+    for name in ("rb_conv1", "rb_conv2"):
+        f = filter_matrix(params[name])
+        nret = max(ref.retained_for_sparsity(f.shape[1], sparsity), 1)
+        w_vals, idx, _ = pack_colwise_weights(f, tile, nret, f.shape[1])
+        out.append(w_vals)
+        out.append(idx.astype(np.float32))
+    return out
+
+
+def resblock_fwd_operands(x_cnhw, c1_vals, c1_idx, c2_vals, c2_idx, *,
+                          c: int, v: int = 32):
+    """Residual block with compressed weights as runtime operands — the
+    AOT entrypoint (arity 5)."""
+    h = conv2d_kernels_sparse(x_cnhw, c1_vals, c1_idx, c_out=c, kh=3, kw=3,
+                              stride=1, pad=1, v=v)
+    h = jnp.maximum(h, 0.0)
+    h = conv2d_kernels_sparse(h, c2_vals, c2_idx, c_out=c, kh=3, kw=3,
+                              stride=1, pad=1, v=v)
+    return jnp.maximum(h + x_cnhw, 0.0)
+
+
+# ---------------------------------------------------------------------
+# Training path (lax convs, maskable)
+
+def conv2d_jnp(x_cnhw, w_oihw, stride: int, pad: int):
+    """lax conv over CNHW activations (via NCHW internally)."""
+    x_nchw = jnp.transpose(x_cnhw, (1, 0, 2, 3))
+    y = jax.lax.conv_general_dilated(
+        x_nchw,
+        jnp.asarray(w_oihw, jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return jnp.transpose(y, (1, 0, 2, 3))
+
+
+def small_cnn_fwd_jnp(params: dict, x_nhwc, masks: dict | None = None):
+    """Training-path forward. ``masks`` maps layer name → boolean mask on
+    the *filter matrix* [C_out, K]; applied multiplicatively so gradients
+    flow only to retained weights (mask-projected fine-tuning)."""
+    x = jnp.transpose(jnp.asarray(x_nhwc, jnp.float32), (3, 0, 1, 2))
+    for name, c_in, _, k, stride, pad in LAYERS:
+        w = jnp.asarray(params[name], jnp.float32)
+        if masks and name in masks:
+            o = w.shape[0]
+            m = jnp.asarray(masks[name], jnp.float32).reshape(o, k, k, c_in)
+            # filter-matrix mask (OHWI order) back onto OIHW weights
+            w = w * jnp.transpose(m, (0, 3, 1, 2))
+        x = conv2d_jnp(x, w, stride, pad)
+        x = jnp.maximum(x, 0.0)
+    feat = x.mean(axis=(2, 3)).T
+    return feat @ jnp.asarray(params["fc_w"]).T + jnp.asarray(params["fc_b"])
+
+
+# ---------------------------------------------------------------------
+# Synthetic dataset ("synthnet"): deterministic 10-class image task
+
+def synth_batch(rng: np.random.Generator, n: int, res: int = 16):
+    """Class-conditional images: fixed per-class pattern + noise.
+
+    The patterns are drawn once from a *fixed* seed so train/test share
+    the class structure while samples differ.
+    """
+    pat_rng = np.random.default_rng(1234)
+    patterns = pat_rng.normal(0, 1, (NUM_CLASSES, res, res, 3)).astype(np.float32)
+    labels = rng.integers(0, NUM_CLASSES, n)
+    noise = rng.normal(0, 1.0, (n, res, res, 3)).astype(np.float32)
+    x = patterns[labels] + noise
+    return x.astype(np.float32), labels.astype(np.int32)
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -logp[jnp.arange(labels.shape[0]), labels].mean()
+
+
+def accuracy(logits, labels) -> float:
+    return float((jnp.argmax(logits, axis=1) == labels).mean())

@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes, tile sizes and strip widths; every kernel must
+match its reference within f32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    colwise_spmm_dense_result,
+    dense_gemm_result,
+    ref,
+    rownm_spmm_result,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 24),
+    kgroups=st.integers(1, 6),
+    cols=st.integers(1, 60),
+    v=st.sampled_from([4, 8, 16, 32]),
+    tile=st.integers(1, 8),
+    n=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_colwise_spmm_matches_ref(rows, kgroups, cols, v, tile, n, seed):
+    k = 4 * kgroups
+    w = rand((rows, k), seed)
+    a = rand((k, cols), seed + 1)
+    got = np.asarray(colwise_spmm_dense_result(w, a, tile=tile, n=n, m=4, v=v))
+    want = np.asarray(ref.spmm_colwise_ref(w, tile, n, 4, a))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 20),
+    k=st.integers(1, 40),
+    cols=st.integers(1, 50),
+    v=st.sampled_from([4, 8, 16]),
+    tile=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_dense_gemm_matches_ref(rows, k, cols, v, tile, seed):
+    w = rand((rows, k), seed)
+    a = rand((k, cols), seed + 1)
+    got = np.asarray(dense_gemm_result(w, a, tile=tile, v=v))
+    np.testing.assert_allclose(got, w @ a, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 16),
+    kgroups=st.integers(1, 5),
+    cols=st.integers(1, 40),
+    v=st.sampled_from([8, 16]),
+    tile=st.integers(1, 4),
+    n=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_rownm_spmm_matches_ref(rows, kgroups, cols, v, tile, n, seed):
+    k = 4 * kgroups
+    w = rand((rows, k), seed)
+    a = rand((k, cols), seed + 1)
+    got = np.asarray(rownm_spmm_result(w, a, n=n, m=4, tile=tile, v=v))
+    want = np.asarray(ref.spmm_rownm_ref(w, n, 4, a))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_colwise_adaptive_m_full_reduction():
+    # Adaptive M = K at 75% sparsity keeps exactly K/4 columns per tile.
+    w = rand((16, 64), 3)
+    a = rand((64, 20), 4)
+    mask, tiles = ref.prune_colwise_adaptive(w, 8, 0.75)
+    assert all(len(t["indices"]) == 16 for t in tiles)
+    got = np.asarray(
+        colwise_spmm_dense_result(w, a, tile=8, n=16, m=64, v=8)
+    )
+    want = np.asarray(ref.matmul_ref(np.where(mask, w, 0.0), a))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_colwise_idx_accepts_f32():
+    # The AOT path passes indices as f32; results must be identical.
+    from compile.kernels import colwise_spmm, pack_colwise_weights
+    import jax.numpy as jnp
+
+    w = rand((8, 16), 5)
+    a = rand((16, 24), 6)
+    w_vals, idx, _ = pack_colwise_weights(w, 4, 2, 4)
+    packed = jnp.asarray(ref.pack_data_matrix(a, 8))
+    out_i = np.asarray(colwise_spmm(packed, jnp.asarray(w_vals), jnp.asarray(idx)))
+    out_f = np.asarray(
+        colwise_spmm(packed, jnp.asarray(w_vals), jnp.asarray(idx, jnp.float32))
+    )
+    np.testing.assert_array_equal(out_i, out_f)
+
+
+@pytest.mark.parametrize("sparsity,expected", [(0.25, 3), (0.5, 2), (0.75, 1)])
+def test_retained_for_sparsity_m4(sparsity, expected):
+    assert ref.retained_for_sparsity(4, sparsity) == expected

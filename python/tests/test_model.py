@@ -1,0 +1,123 @@
+"""L2 model tests: the Pallas-kernel deployment path must agree with the
+lax training path, and the AOT operand path with both."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(5)
+    return model.synth_batch(rng, 4)
+
+
+def test_dense_paths_agree(params, batch):
+    x, _ = batch
+    jnp_logits = np.asarray(model.small_cnn_fwd_jnp(params, x))
+    kern_logits = np.asarray(model.small_cnn_fwd_kernels(params, x, v=16))
+    assert jnp_logits.shape == (4, model.NUM_CLASSES)
+    np.testing.assert_allclose(kern_logits, jnp_logits, rtol=1e-3, atol=1e-4)
+
+
+def test_sparse_kernel_path_matches_masked_jnp(params, batch):
+    x, _ = batch
+    sparsity = 0.5
+    masks = {
+        name: ref.prune_colwise_adaptive(
+            model.filter_matrix(params[name]), 8, sparsity
+        )[0]
+        for name in ("conv2", "conv3")
+    }
+    want = np.asarray(model.small_cnn_fwd_jnp(params, x, masks))
+    got = np.asarray(
+        model.small_cnn_fwd_kernels(params, x, v=16, tile=8, sparsity=sparsity)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_operand_path_matches_kernel_path(params, batch):
+    x, _ = batch
+    ops = model.small_cnn_operands(params, tile=8, sparsity=0.5)
+    got = np.asarray(model.small_cnn_fwd_operands(x, *ops, v=16, tile=8))
+    want = np.asarray(
+        model.small_cnn_fwd_kernels(params, x, v=16, tile=8, sparsity=0.5)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_first_conv_never_pruned(params):
+    ops = model.small_cnn_operands(params, sparsity=0.75)
+    conv1 = ops[0]
+    # conv1 operand is the *dense* filter matrix, untouched.
+    np.testing.assert_array_equal(conv1, model.filter_matrix(params["conv1"]))
+
+
+def test_operand_shapes(params):
+    ops = model.small_cnn_operands(params, tile=8, sparsity=0.5)
+    assert len(ops) == 7
+    conv1, c2v, c2i, c3v, c3i, fc_w, fc_b = ops
+    assert conv1.shape == (16, 27)
+    assert c2v.shape[0] == 4 and c2v.shape[1] == 8  # 32 rows / tile 8
+    assert c2i.shape == (4, c2v.shape[2])
+    assert fc_w.shape == (10, 32) and fc_b.shape == (10,)
+    # 50% sparsity → half the K columns retained.
+    assert c2v.shape[2] == 16 * 9 // 2
+
+
+def test_synth_batch_deterministic_patterns():
+    a, la = model.synth_batch(np.random.default_rng(1), 64)
+    b, lb = model.synth_batch(np.random.default_rng(1), 64)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+    # Different sample seed → different noise, same class structure.
+    c, _ = model.synth_batch(np.random.default_rng(2), 64)
+    assert not np.array_equal(a, c)
+
+
+def test_training_reduces_loss_quickly():
+    from compile.train_prune import train, evaluate
+
+    params = train(model.init_params(seed=0), steps=80, seed=3)
+    acc = evaluate(params, n=400)
+    assert acc > 0.5, f"synthetic task should be learnable fast, got {acc}"
+
+
+# ---------------------------------------------------------------------
+# Residual block (kernel path vs lax twin, operands entrypoint)
+
+def test_resblock_kernel_path_matches_jnp_when_dense():
+    rb = model.init_resblock_params(8, seed=5)
+    rng = np.random.default_rng(6)
+    x = rng.normal(0, 1, (8, 2, 10, 10)).astype(np.float32)
+    got = np.asarray(model.resblock_fwd_kernels(rb, x, v=16, sparsity=None))
+    want = np.asarray(model.resblock_fwd_jnp(rb, x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_resblock_operand_entrypoint_matches_traced_sparse():
+    rb = model.init_resblock_params(8, seed=7)
+    rng = np.random.default_rng(8)
+    x = rng.normal(0, 1, (8, 1, 12, 12)).astype(np.float32)
+    ops = model.resblock_operands(rb, tile=8, sparsity=0.5)
+    got = np.asarray(model.resblock_fwd_operands(
+        x, *[np.asarray(o) for o in ops], c=8, v=16))
+    want = np.asarray(model.resblock_fwd_kernels(rb, x, v=16, tile=8,
+                                                 sparsity=0.5))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_resblock_preserves_geometry_and_skip():
+    rb = model.init_resblock_params(4, seed=9)
+    x = np.zeros((4, 1, 6, 6), np.float32)
+    y = np.asarray(model.resblock_fwd_kernels(rb, x, v=8, sparsity=0.5))
+    assert y.shape == x.shape
+    # Zero input + relu chain -> zero output through the identity skip.
+    np.testing.assert_array_equal(y, np.zeros_like(y))

@@ -1,0 +1,96 @@
+"""Properties of the reference pruning/compression helpers (they must
+mirror rust/src/pruning exactly — the Rust side has the same tests)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 20),
+    kgroups=st.integers(1, 8),
+    tile=st.integers(1, 8),
+    n=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_colwise_mask_structure(rows, kgroups, tile, n, seed):
+    cols = 4 * kgroups
+    w = rand((rows, cols), seed)
+    mask, tiles = ref.prune_colwise(w, tile, n, 4)
+    # Exactly n columns kept per group per tile; identical across the
+    # tile's rows (the column-wise constraint).
+    for t in tiles:
+        rs, rc = t["row_start"], t["row_count"]
+        block = mask[rs:rs + rc]
+        assert (block == block[0]).all(), "rows of a tile share the mask"
+        for g in range(kgroups):
+            assert block[0, 4 * g:4 * g + 4].sum() == n
+    # Sparsity is exact for aligned groups.
+    assert abs((1 - mask.mean()) - (1 - n / 4)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    kgroups=st.integers(1, 8),
+    n=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_rownm_keeps_largest_per_group(rows, kgroups, n, seed):
+    cols = 4 * kgroups
+    w = rand((rows, cols), seed)
+    mask = ref.prune_rownm(w, n, 4)
+    for r in range(rows):
+        for g in range(kgroups):
+            grp = slice(4 * g, 4 * g + 4)
+            kept = np.abs(w[r, grp])[mask[r, grp]]
+            dropped = np.abs(w[r, grp])[~mask[r, grp]]
+            assert mask[r, grp].sum() == n
+            if len(kept) and len(dropped):
+                assert kept.min() >= dropped.max() - 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(8, 64),
+    tile=st.integers(1, 8),
+    sparsity=st.sampled_from([0.25, 0.5, 0.75]),
+    seed=st.integers(0, 10_000),
+)
+def test_adaptive_sparsity_close_to_target(rows, cols, tile, sparsity, seed):
+    w = rand((rows, cols), seed)
+    mask, _ = ref.prune_colwise_adaptive(w, tile, sparsity)
+    assert abs((1 - mask.mean()) - sparsity) < 0.1
+
+
+def test_colwise_l1_scoring_sums_tile_rows():
+    # Column 1's single large value outweighs column 0's two small ones.
+    w = np.array([[1.0, 10.0], [1.0, 0.0]], np.float32)
+    mask, tiles = ref.prune_colwise(w, 2, 1, 2)
+    np.testing.assert_array_equal(mask, [[False, True], [False, True]])
+    np.testing.assert_array_equal(tiles[0]["indices"], [1])
+
+
+def test_compress_rownm_roundtrip():
+    w = rand((6, 16), 7)
+    values, indices = ref.compress_rownm(w, 2, 4)
+    dense = np.zeros_like(w)
+    for r in range(6):
+        dense[r, indices[r]] = values[r]
+    mask = ref.prune_rownm(w, 2, 4)
+    np.testing.assert_array_equal(dense, np.where(mask, w, 0.0))
+
+
+def test_tile_one_equals_rowwise_l1():
+    # §4.5 config 1: column-wise with T=1 degenerates to per-row N:M.
+    w = rand((5, 12), 9)
+    mask_col, _ = ref.prune_colwise(w, 1, 2, 4)
+    mask_row = ref.prune_rownm(w, 2, 4)
+    np.testing.assert_array_equal(mask_col, mask_row)

@@ -1,0 +1,230 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not in
+//! the offline crate set). Warmup, adaptive iteration count targeting a
+//! wall-time budget, outlier-trimmed statistics, and markdown table
+//! output shared by every `benches/` target.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_ns, trimmed, Summary};
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup wall-time before measuring.
+    pub warmup: Duration,
+    /// Measurement wall-time budget.
+    pub measure: Duration,
+    /// Minimum / maximum sample count.
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(800),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for heavyweight end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(300),
+            min_samples: 3,
+            max_samples: 30,
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Mean nanoseconds per iteration.
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean / 1e6
+    }
+}
+
+/// Measure a closure: run it repeatedly, one timing sample per call.
+/// The result is passed through `std::hint::black_box` to defeat
+/// dead-code elimination.
+pub fn bench<T, F: FnMut() -> T>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let w0 = Instant::now();
+    while w0.elapsed() < cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let m0 = Instant::now();
+    while (m0.elapsed() < cfg.measure || samples.len() < cfg.min_samples)
+        && samples.len() < cfg.max_samples
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    // Trim 5% from each tail for robustness.
+    let robust = trimmed(&samples, 0.05);
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&robust),
+    }
+}
+
+/// A markdown results table accumulated row by row; every bench binary
+/// prints one of these so `cargo bench` output maps 1:1 onto the paper's
+/// figures/tables.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as github-flavoured markdown.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}--|", "", w = w));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format helper: nanoseconds → human string (re-export).
+pub fn fmt_time(ns: f64) -> String {
+    fmt_ns(ns)
+}
+
+/// Format a speedup ratio.
+pub fn fmt_speedup(base_ns: f64, other_ns: f64) -> String {
+    format!("{:.2}x", base_ns / other_ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 3,
+            max_samples: 50,
+        };
+        let r = bench("spin", cfg, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert!(r.summary.n >= 3);
+    }
+
+    #[test]
+    fn bench_orders_fast_before_slow() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_samples: 5,
+            max_samples: 100,
+        };
+        let fast = bench("fast", cfg, || {
+            std::hint::black_box((0..100u64).sum::<u64>())
+        });
+        let slow = bench("slow", cfg, || {
+            let mut s = 0u64;
+            for i in 0..1_000_000u64 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            s
+        });
+        // Medians: robust to scheduler noise on a loaded single core.
+        assert!(
+            slow.summary.median > fast.summary.median,
+            "slow {} !> fast {}",
+            slow.summary.median,
+            fast.summary.median
+        );
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Fig. X", &["layer", "time"]);
+        t.row(&["conv1".into(), "1.00 ms".into()]);
+        t.row(&["conv2".into(), "2.00 ms".into()]);
+        let s = t.render();
+        assert!(s.contains("## Fig. X"));
+        assert!(s.contains("| conv1"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn speedup_format() {
+        assert_eq!(fmt_speedup(200.0, 100.0), "2.00x");
+    }
+}

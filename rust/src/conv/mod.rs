@@ -1,0 +1,7 @@
+//! Convolution operators: the three execution paths the paper compares.
+
+pub mod shape;
+pub mod op;
+
+pub use op::{Conv2dDenseCnhw, Conv2dDenseNchw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath};
+pub use shape::ConvShape;

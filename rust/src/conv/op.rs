@@ -1,0 +1,286 @@
+//! The three convolution execution paths of the evaluation (§4.4–4.6):
+//!
+//! 1. **Dense NHWC** — the SiFive-XNNPACK baseline: indirection buffer +
+//!    dense GEMM over NHWC activations.
+//! 2. **Dense CNHW** — fused im2col/pack + dense packed GEMM.
+//! 3. **Sparse CNHW** — fused im2col/pack + column-wise N:M SpMM
+//!    (Algorithm 1): the paper's full pipeline.
+//!
+//! Each operator is constructed once per layer (weights packed /
+//! compressed ahead of time, off the hot path) and then invoked per
+//! request. All return CNHW or NHWC outputs matching their input layout.
+
+use std::cell::RefCell;
+
+use super::shape::ConvShape;
+use crate::gemm::threaded::{gemm_dense_parallel, spmm_colwise_parallel};
+use crate::gemm::{gemm_dense, spmm_colwise};
+use crate::im2col::{
+    conv2d_indirect_nhwc_parallel, fused_im2col_pack_cnhw_into, IndirectionBuffer, PackedMatrix,
+};
+use crate::pruning::{prune_colwise, prune_colwise_adaptive, ColwisePruned};
+use crate::tensor::layout::oihw_to_filter_matrix;
+use crate::tensor::Tensor;
+
+thread_local! {
+    /// Per-thread packed-matrix scratch reused across conv invocations
+    /// (§Perf step 3): keeps the multi-MB strip buffer's pages resident
+    /// instead of re-faulting a fresh allocation per layer.
+    static PACK_SCRATCH: RefCell<PackedMatrix> = RefCell::new(PackedMatrix::zeros(1, 1, 1));
+}
+
+/// Which execution path a layer uses (tuner output / config input).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConvPath {
+    DenseNhwc,
+    DenseCnhw,
+    SparseCnhw,
+}
+
+/// Dense NHWC conv (XNNPACK-style indirect convolution).
+pub struct Conv2dDenseNhwc {
+    pub shape: ConvShape,
+    filter: Vec<f32>,
+    ib: IndirectionBuffer,
+}
+
+impl Conv2dDenseNhwc {
+    /// Pack weights (OIHW) and build the indirection buffer.
+    pub fn new(shape: ConvShape, w_oihw: &Tensor) -> Self {
+        assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
+        Self {
+            shape,
+            filter: oihw_to_filter_matrix(w_oihw).data,
+            ib: IndirectionBuffer::build(&shape),
+        }
+    }
+
+    /// Run on an NHWC input, producing NHWC output.
+    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
+        conv2d_indirect_nhwc_parallel(x, &self.filter, &self.shape, &self.ib, threads)
+    }
+}
+
+/// Dense CNHW conv: fused im2col/pack + dense packed GEMM.
+pub struct Conv2dDenseCnhw {
+    pub shape: ConvShape,
+    pub v: usize,
+    pub tile: usize,
+    filter: Vec<f32>,
+}
+
+impl Conv2dDenseCnhw {
+    pub fn new(shape: ConvShape, w_oihw: &Tensor, v: usize, tile: usize) -> Self {
+        assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
+        Self {
+            shape,
+            v,
+            tile,
+            filter: oihw_to_filter_matrix(w_oihw).data,
+        }
+    }
+
+    /// Run on a CNHW input, producing CNHW output
+    /// `[C_out, N, H_out, W_out]`.
+    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
+        let s = &self.shape;
+        let out = PACK_SCRATCH.with(|cell| {
+            let mut packed = cell.borrow_mut();
+            fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
+            if threads > 1 {
+                gemm_dense_parallel(&self.filter, s.c_out, &packed, self.tile, threads)
+            } else {
+                gemm_dense(&self.filter, s.c_out, &packed, self.tile)
+            }
+        });
+        Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
+    }
+}
+
+/// Dense NCHW conv — the §5 alternative layout (Elsen et al. [13]):
+/// per-image fused im2col/pack (strips cannot span batches) + one dense
+/// packed GEMM per image. Exists so §5's CNHW-vs-NCHW discussion is
+/// *measured* (ablation C) rather than asserted.
+pub struct Conv2dDenseNchw {
+    pub shape: ConvShape,
+    pub v: usize,
+    pub tile: usize,
+    filter: Vec<f32>,
+}
+
+impl Conv2dDenseNchw {
+    pub fn new(shape: ConvShape, w_oihw: &Tensor, v: usize, tile: usize) -> Self {
+        assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
+        Self {
+            shape,
+            v,
+            tile,
+            filter: oihw_to_filter_matrix(w_oihw).data,
+        }
+    }
+
+    /// Run on an NCHW input `[N, C_in, H, W]`, producing NCHW output
+    /// `[N, C_out, H_out, W_out]`.
+    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
+        let s = &self.shape;
+        let (ho, wo) = (s.h_out(), s.w_out());
+        let per_image = crate::im2col::fused_im2col_pack_nchw(x, s, self.v);
+        let img_out = s.c_out * ho * wo;
+        let mut out = Tensor::zeros(&[s.n, s.c_out, ho, wo]);
+        for (n, p) in per_image.iter().enumerate() {
+            let y = if threads > 1 {
+                gemm_dense_parallel(&self.filter, s.c_out, p, self.tile, threads)
+            } else {
+                gemm_dense(&self.filter, s.c_out, p, self.tile)
+            };
+            out.data[n * img_out..(n + 1) * img_out].copy_from_slice(&y);
+        }
+        out
+    }
+}
+
+/// Sparse CNHW conv — the paper's pipeline: column-wise N:M weights +
+/// fused im2col/pack + Algorithm-1 SpMM.
+pub struct Conv2dSparseCnhw {
+    pub shape: ConvShape,
+    pub v: usize,
+    pub weights: ColwisePruned,
+}
+
+impl Conv2dSparseCnhw {
+    /// Compress OIHW weights column-wise with explicit N:M groups.
+    pub fn new(shape: ConvShape, w_oihw: &Tensor, v: usize, tile: usize, n: usize, m: usize) -> Self {
+        assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
+        let f = oihw_to_filter_matrix(w_oihw);
+        Self {
+            shape,
+            v,
+            weights: prune_colwise(&f.data, shape.c_out, shape.k(), tile, n, m),
+        }
+    }
+
+    /// Adaptive-M variant: M = K (whole reduction dim), N from sparsity.
+    pub fn new_adaptive(
+        shape: ConvShape,
+        w_oihw: &Tensor,
+        v: usize,
+        tile: usize,
+        sparsity: f64,
+    ) -> Self {
+        let f = oihw_to_filter_matrix(w_oihw);
+        Self {
+            shape,
+            v,
+            weights: prune_colwise_adaptive(&f.data, shape.c_out, shape.k(), tile, sparsity),
+        }
+    }
+
+    /// Run on a CNHW input, producing CNHW output.
+    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
+        let s = &self.shape;
+        let out = PACK_SCRATCH.with(|cell| {
+            let mut packed = cell.borrow_mut();
+            fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
+            if threads > 1 {
+                spmm_colwise_parallel(&self.weights, &packed, threads)
+            } else {
+                spmm_colwise(&self.weights, &packed)
+            }
+        });
+        Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
+    }
+
+    /// Effective sparsity of the compressed weights.
+    pub fn sparsity(&self) -> f64 {
+        self.weights.sparsity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::naive::conv2d_direct_cnhw;
+    use crate::tensor::layout::{cnhw_to_nhwc, nhwc_to_cnhw};
+    use crate::util::{allclose, XorShiftRng};
+
+    fn rand_case(seed: u64, s: ConvShape) -> (Tensor, Tensor) {
+        let mut r = XorShiftRng::new(seed);
+        let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+        let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -0.5, 0.5);
+        (x, w)
+    }
+
+    #[test]
+    fn dense_cnhw_matches_direct() {
+        for (seed, s) in [
+            (1, ConvShape::square(1, 3, 8, 5, 3, 1, 1)),
+            (2, ConvShape::square(2, 4, 9, 6, 3, 2, 1)),
+            (3, ConvShape::square(1, 2, 12, 4, 7, 2, 3)),
+            (4, ConvShape::square(2, 8, 5, 7, 1, 1, 0)),
+        ] {
+            let (x, w) = rand_case(seed, s);
+            let want = conv2d_direct_cnhw(&x, &w, &s);
+            for threads in [1, 4] {
+                let op = Conv2dDenseCnhw::new(s, &w, 16, 8);
+                let got = op.run(&x, threads);
+                assert!(
+                    allclose(&got.data, &want.data, 1e-4, 1e-5),
+                    "{s} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_nhwc_matches_dense_cnhw_modulo_layout() {
+        let s = ConvShape::square(2, 3, 7, 5, 3, 1, 1);
+        let (x_cnhw, w) = rand_case(9, s);
+        let cnhw_op = Conv2dDenseCnhw::new(s, &w, 8, 4);
+        let nhwc_op = Conv2dDenseNhwc::new(s, &w);
+        let y_cnhw = cnhw_op.run(&x_cnhw, 1);
+        let y_nhwc = nhwc_op.run(&cnhw_to_nhwc(&x_cnhw), 1);
+        let y_roundtrip = nhwc_to_cnhw(&y_nhwc);
+        assert!(allclose(&y_cnhw.data, &y_roundtrip.data, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn sparse_matches_direct_on_masked_weights() {
+        let s = ConvShape::square(1, 4, 8, 8, 3, 1, 1);
+        let (x, w) = rand_case(11, s);
+        let op = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4);
+        // Oracle: decompress the mask back to OIHW and conv directly.
+        let masked_filter = op.weights.decompress();
+        let k = s.k();
+        // filter row k-major/channel-inner -> OIHW
+        let mut w_masked = Tensor::zeros(&[s.c_out, s.c_in, s.kh, s.kw]);
+        for o in 0..s.c_out {
+            for kh in 0..s.kh {
+                for kw in 0..s.kw {
+                    for c in 0..s.c_in {
+                        let kk = (kh * s.kw + kw) * s.c_in + c;
+                        *w_masked.at_mut(&[o, c, kh, kw]) = masked_filter[o * k + kk];
+                    }
+                }
+            }
+        }
+        let want = conv2d_direct_cnhw(&x, &w_masked, &s);
+        for threads in [1, 3] {
+            let got = op.run(&x, threads);
+            assert!(allclose(&got.data, &want.data, 1e-4, 1e-5), "threads={threads}");
+        }
+        assert!((op.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_sparsity_levels() {
+        let s = ConvShape::square(1, 8, 6, 16, 3, 1, 1);
+        let (x, w) = rand_case(13, s);
+        for sp in [0.25, 0.5, 0.75] {
+            let op = Conv2dSparseCnhw::new_adaptive(s, &w, 8, 8, sp);
+            assert!((op.sparsity() - sp).abs() < 0.03, "target {sp} got {}", op.sparsity());
+            let y = op.run(&x, 1);
+            assert_eq!(y.shape, vec![16, 1, 6, 6]);
+            assert!(y.data.iter().any(|&v| v != 0.0));
+        }
+    }
+}

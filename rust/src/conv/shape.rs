@@ -1,0 +1,134 @@
+//! Convolution geometry shared by im2col, GEMM and the model zoo.
+
+/// Shape of one 2-D convolution layer instance (single dtype: f32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvShape {
+    /// Batch size.
+    pub n: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Input spatial dims.
+    pub h_in: usize,
+    pub w_in: usize,
+    /// Output channels.
+    pub c_out: usize,
+    /// Kernel spatial dims.
+    pub kh: usize,
+    pub kw: usize,
+    /// Stride (same both dims, as in all the paper's networks).
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+impl ConvShape {
+    /// Output height.
+    pub fn h_out(&self) -> usize {
+        (self.h_in + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Output width.
+    pub fn w_out(&self) -> usize {
+        (self.w_in + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// GEMM reduction dimension K = K_h·K_w·C_in.
+    pub fn k(&self) -> usize {
+        self.kh * self.kw * self.c_in
+    }
+
+    /// GEMM output columns = N·H_out·W_out (batch-spanning, CNHW §5).
+    pub fn gemm_cols(&self) -> usize {
+        self.n * self.h_out() * self.w_out()
+    }
+
+    /// Dense MACs of this layer.
+    pub fn macs(&self) -> usize {
+        self.c_out * self.k() * self.gemm_cols()
+    }
+
+    /// Dense FLOPs (2·MACs).
+    pub fn flops(&self) -> usize {
+        2 * self.macs()
+    }
+
+    /// Weight element count (dense OIHW).
+    pub fn weight_len(&self) -> usize {
+        self.c_out * self.c_in * self.kh * self.kw
+    }
+
+    /// Pointwise (1×1) convolution?
+    pub fn is_pointwise(&self) -> bool {
+        self.kh == 1 && self.kw == 1
+    }
+
+    /// Convenience constructor with square kernel / input.
+    pub fn square(
+        n: usize,
+        c_in: usize,
+        hw: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Self {
+            n,
+            c_in,
+            h_in: hw,
+            w_in: hw,
+            c_out,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+        }
+    }
+}
+
+impl std::fmt::Display for ConvShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x{}x{}x{} -> {} ({}x{} s{} p{})",
+            self.n, self.c_in, self.h_in, self.w_in, self.c_out, self.kh, self.kw, self.stride,
+            self.pad
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_stem_shape() {
+        // ResNet stem: 224x224x3 -> 7x7/2 pad 3 -> 112x112x64.
+        let s = ConvShape::square(1, 3, 224, 64, 7, 2, 3);
+        assert_eq!(s.h_out(), 112);
+        assert_eq!(s.w_out(), 112);
+        assert_eq!(s.k(), 7 * 7 * 3);
+        assert_eq!(s.gemm_cols(), 112 * 112);
+    }
+
+    #[test]
+    fn same_padding_3x3() {
+        let s = ConvShape::square(2, 64, 56, 64, 3, 1, 1);
+        assert_eq!((s.h_out(), s.w_out()), (56, 56));
+        assert_eq!(s.gemm_cols(), 2 * 56 * 56);
+    }
+
+    #[test]
+    fn pointwise() {
+        let s = ConvShape::square(1, 256, 14, 1024, 1, 1, 0);
+        assert!(s.is_pointwise());
+        assert_eq!(s.k(), 256);
+        assert_eq!(s.macs(), 1024 * 256 * 14 * 14);
+    }
+
+    #[test]
+    fn strided_no_pad() {
+        let s = ConvShape::square(1, 8, 10, 16, 3, 2, 0);
+        assert_eq!((s.h_out(), s.w_out()), (4, 4));
+    }
+}

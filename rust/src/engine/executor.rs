@@ -1,0 +1,435 @@
+//! Graph executor: materialises weights, prepares per-layer conv
+//! operators according to the configured execution path and tuning
+//! choices, and runs inference.
+//!
+//! Mirrors the paper's pipeline (§4.1.2): the NHWC input is converted to
+//! CNHW before the first convolution, CNHW is kept throughout, and
+//! weights of every conv except the first are pruned (the stem has 3
+//! input channels and negligible cost).
+
+use std::collections::HashMap;
+
+use crate::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath};
+use crate::models::{Graph, Op};
+use crate::tensor::layout::nhwc_to_cnhw;
+use crate::tensor::Tensor;
+use crate::util::XorShiftRng;
+
+use super::ops;
+
+/// Per-conv-layer micro-kernel parameters: strip width `v` (= VLMAX of
+/// the chosen LMUL) and register tile height `tile` — the two knobs the
+/// tuner (§3.3) selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerChoice {
+    pub v: usize,
+    pub tile: usize,
+}
+
+impl Default for LayerChoice {
+    /// LMUL=4 (v = 32 lanes on a 256-bit machine) and T=8: the SiFive
+    /// baseline's fixed configuration (§4.4).
+    fn default() -> Self {
+        Self { v: 32, tile: 8 }
+    }
+}
+
+/// Executor configuration.
+#[derive(Clone, Debug)]
+pub struct ExecConfig {
+    /// Execution path for every conv layer.
+    pub path: ConvPath,
+    /// Column-wise adaptive sparsity ratio (SparseCnhw path only).
+    pub sparsity: f64,
+    /// Worker threads for conv GEMMs.
+    pub threads: usize,
+    /// Fallback micro-kernel parameters.
+    pub default_choice: LayerChoice,
+    /// Per-layer tuned parameters (layer name → choice).
+    pub per_layer: HashMap<String, LayerChoice>,
+    /// Weight-generation seed (stand-in for checkpoint loading).
+    pub seed: u64,
+}
+
+impl ExecConfig {
+    pub fn dense_nhwc(threads: usize) -> Self {
+        Self {
+            path: ConvPath::DenseNhwc,
+            sparsity: 0.0,
+            threads,
+            default_choice: LayerChoice::default(),
+            per_layer: HashMap::new(),
+            seed: 42,
+        }
+    }
+
+    pub fn dense_cnhw(threads: usize) -> Self {
+        Self {
+            path: ConvPath::DenseCnhw,
+            ..Self::dense_nhwc(threads)
+        }
+    }
+
+    pub fn sparse_cnhw(threads: usize, sparsity: f64) -> Self {
+        Self {
+            path: ConvPath::SparseCnhw,
+            sparsity,
+            ..Self::dense_nhwc(threads)
+        }
+    }
+
+    fn choice_for(&self, name: &str) -> LayerChoice {
+        self.per_layer
+            .get(name)
+            .copied()
+            .unwrap_or(self.default_choice)
+    }
+}
+
+enum PreparedConv {
+    Nhwc(Conv2dDenseNhwc),
+    Cnhw(Conv2dDenseCnhw),
+    Sparse(Conv2dSparseCnhw),
+}
+
+/// A compiled model: graph + materialised weights + prepared operators.
+pub struct Executor {
+    pub graph: Graph,
+    pub cfg: ExecConfig,
+    convs: HashMap<usize, PreparedConv>,
+    dw_weights: HashMap<usize, Tensor>,
+    fc_params: HashMap<usize, (Tensor, Vec<f32>)>,
+    /// For each node, the ids of nodes that consume it (buffer freeing).
+    consumers: Vec<usize>,
+}
+
+/// FNV-1a of a layer name, mixed into the weight seed so every layer
+/// gets distinct deterministic weights.
+fn name_hash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Executor {
+    /// Compile a graph: generate weights and prepare conv operators.
+    pub fn new(graph: Graph, cfg: ExecConfig) -> Self {
+        let mut convs = HashMap::new();
+        let mut dw_weights = HashMap::new();
+        let mut fc_params = HashMap::new();
+        let mut first_conv_seen = false;
+        for node in &graph.nodes {
+            match &node.op {
+                Op::Conv { shape, .. } => {
+                    let mut rng = XorShiftRng::new(cfg.seed ^ name_hash(&node.name));
+                    // He-style scale keeps activations bounded through
+                    // deep graphs (pure numerics hygiene; values don't
+                    // affect timing).
+                    let scale = (2.0 / shape.k() as f32).sqrt();
+                    let w = Tensor::from_vec(
+                        &[shape.c_out, shape.c_in, shape.kh, shape.kw],
+                        rng.normal_vec(shape.weight_len(), scale),
+                    );
+                    let choice = cfg.choice_for(&node.name);
+                    // The paper never prunes the first convolution.
+                    let prune_this = cfg.path == ConvPath::SparseCnhw && first_conv_seen;
+                    let prepared = match (cfg.path, prune_this) {
+                        (ConvPath::DenseNhwc, _) => {
+                            PreparedConv::Nhwc(Conv2dDenseNhwc::new(*shape, &w))
+                        }
+                        (_, false) => PreparedConv::Cnhw(Conv2dDenseCnhw::new(
+                            *shape, &w, choice.v, choice.tile,
+                        )),
+                        (_, true) => PreparedConv::Sparse(Conv2dSparseCnhw::new_adaptive(
+                            *shape,
+                            &w,
+                            choice.v,
+                            choice.tile,
+                            cfg.sparsity,
+                        )),
+                    };
+                    convs.insert(node.id, prepared);
+                    first_conv_seen = true;
+                }
+                Op::DepthwiseConv { c, k, .. } => {
+                    let mut rng = XorShiftRng::new(cfg.seed ^ name_hash(&node.name));
+                    let scale = (2.0 / (k * k) as f32).sqrt();
+                    dw_weights.insert(
+                        node.id,
+                        Tensor::from_vec(&[*c, *k, *k], rng.normal_vec(c * k * k, scale)),
+                    );
+                }
+                Op::Fc {
+                    in_features,
+                    out_features,
+                } => {
+                    let mut rng = XorShiftRng::new(cfg.seed ^ name_hash(&node.name));
+                    let scale = (1.0 / *in_features as f32).sqrt();
+                    let w = Tensor::from_vec(
+                        &[*out_features, *in_features],
+                        rng.normal_vec(in_features * out_features, scale),
+                    );
+                    let b = rng.normal_vec(*out_features, 0.01);
+                    fc_params.insert(node.id, (w, b));
+                }
+                _ => {}
+            }
+        }
+        let mut consumers = vec![0usize; graph.nodes.len()];
+        for node in &graph.nodes {
+            for &i in &node.inputs {
+                consumers[i] += 1;
+            }
+        }
+        Self {
+            graph,
+            cfg,
+            convs,
+            dw_weights,
+            fc_params,
+            consumers,
+        }
+    }
+
+    /// Run inference on an NHWC input `[N, H, W, C]`; returns logits
+    /// `[N, classes]`. Activations flow CNHW internally unless the path
+    /// is DenseNhwc (the paper's layout policy, §4.1.2).
+    pub fn run(&self, input_nhwc: &Tensor) -> Tensor {
+        let nhwc = self.cfg.path == ConvPath::DenseNhwc;
+        let threads = self.cfg.threads;
+        let mut acts: Vec<Option<Tensor>> = vec![None; self.graph.nodes.len()];
+        let mut remaining = self.consumers.clone();
+        // §Perf step 4: borrow input activations instead of cloning
+        // them (the clones were tens of MB of memcpy per inference).
+        fn fetch<'a>(acts: &'a [Option<Tensor>], inputs: &[usize], i: usize) -> &'a Tensor {
+            acts[inputs[i]].as_ref().expect("input already freed")
+        }
+        // Per-node wall-clock trace for profiling (§Perf): set
+        // NMPRUNE_TRACE=1 to print layer-by-layer timings to stderr.
+        let trace = std::env::var("NMPRUNE_TRACE").is_ok();
+        for node in &self.graph.nodes {
+            let t_node = std::time::Instant::now();
+            let out = match &node.op {
+                Op::Input { c, h, w } => {
+                    assert_eq!(
+                        input_nhwc.shape,
+                        vec![self.graph.batch, *h, *w, *c],
+                        "input must be NHWC [N,H,W,C]"
+                    );
+                    if nhwc {
+                        input_nhwc.clone()
+                    } else {
+                        nhwc_to_cnhw(input_nhwc)
+                    }
+                }
+                Op::Conv { relu, .. } => {
+                    let x = fetch(&acts, &node.inputs, 0);
+                    let mut y = match self.convs.get(&node.id).unwrap() {
+                        PreparedConv::Nhwc(op) => op.run(x, threads),
+                        PreparedConv::Cnhw(op) => op.run(x, threads),
+                        PreparedConv::Sparse(op) => op.run(x, threads),
+                    };
+                    if *relu {
+                        ops::relu_inplace(&mut y);
+                    }
+                    y
+                }
+                Op::DepthwiseConv {
+                    stride, pad, relu, ..
+                } => {
+                    let x = fetch(&acts, &node.inputs, 0);
+                    let w = self.dw_weights.get(&node.id).unwrap();
+                    if nhwc {
+                        ops::depthwise_nhwc(x, w, *stride, *pad, *relu)
+                    } else {
+                        ops::depthwise_cnhw(x, w, *stride, *pad, *relu)
+                    }
+                }
+                Op::MaxPool { k, stride, pad } => {
+                    let x = fetch(&acts, &node.inputs, 0);
+                    if nhwc {
+                        ops::maxpool_nhwc(x, *k, *stride, *pad)
+                    } else {
+                        ops::maxpool_cnhw(x, *k, *stride, *pad)
+                    }
+                }
+                Op::AvgPool { k, stride } => {
+                    let x = fetch(&acts, &node.inputs, 0);
+                    if nhwc {
+                        ops::avgpool_nhwc(x, *k, *stride)
+                    } else {
+                        ops::avgpool_cnhw(x, *k, *stride)
+                    }
+                }
+                Op::GlobalAvgPool => {
+                    let x = fetch(&acts, &node.inputs, 0);
+                    if nhwc {
+                        ops::gap_nhwc(x)
+                    } else {
+                        ops::gap_cnhw(x)
+                    }
+                }
+                Op::Add { relu } => {
+                    ops::add(fetch(&acts, &node.inputs, 0), fetch(&acts, &node.inputs, 1), *relu)
+                }
+                Op::Concat => {
+                    let refs: Vec<&Tensor> =
+                        (0..node.inputs.len()).map(|i| fetch(&acts, &node.inputs, i)).collect();
+                    if nhwc {
+                        ops::concat_nhwc(&refs)
+                    } else {
+                        ops::concat_cnhw(&refs)
+                    }
+                }
+                Op::Fc { .. } => {
+                    let x = fetch(&acts, &node.inputs, 0);
+                    let (w, b) = self.fc_params.get(&node.id).unwrap();
+                    ops::fc(x, w, b)
+                }
+            };
+            if trace {
+                let dt = t_node.elapsed();
+                eprintln!(
+                    "[trace] {:<20} {:>8.2} ms  {:?}",
+                    node.name,
+                    dt.as_secs_f64() * 1e3,
+                    std::mem::discriminant(&node.op)
+                );
+            }
+            // Free inputs whose consumers are exhausted (bounds peak
+            // memory on DenseNet's long concat chains).
+            for &i in &node.inputs {
+                remaining[i] -= 1;
+                if remaining[i] == 0 {
+                    acts[i] = None;
+                }
+            }
+            acts[node.id] = Some(out);
+        }
+        acts.last_mut().take().unwrap().take().unwrap()
+    }
+
+    /// Sum of conv weight memory after compression (bytes), for the
+    /// memory-footprint comparisons.
+    pub fn conv_weight_bytes(&self) -> usize {
+        self.convs
+            .values()
+            .map(|p| match p {
+                PreparedConv::Nhwc(op) => op.shape.weight_len() * 4,
+                PreparedConv::Cnhw(op) => op.shape.weight_len() * 4,
+                PreparedConv::Sparse(op) => op
+                    .weights
+                    .tiles
+                    .iter()
+                    .map(|t| t.values.len() * 4 + t.indices.len() * 4)
+                    .sum(),
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_model, ModelArch};
+    use crate::util::allclose;
+
+    fn input(batch: usize, res: usize, seed: u64) -> Tensor {
+        let mut r = XorShiftRng::new(seed);
+        Tensor::random(&[batch, res, res, 3], &mut r, 0.0, 1.0)
+    }
+
+    #[test]
+    fn resnet18_small_runs_all_paths_and_agrees_dense() {
+        let res = 32;
+        let x = input(1, res, 1);
+        let g = build_model(ModelArch::ResNet18, 1, res);
+        let e_nhwc = Executor::new(g.clone(), ExecConfig::dense_nhwc(1));
+        let e_cnhw = Executor::new(g.clone(), ExecConfig::dense_cnhw(2));
+        let y1 = e_nhwc.run(&x);
+        let y2 = e_cnhw.run(&x);
+        assert_eq!(y1.shape, vec![1, 1000]);
+        // Same weights (same seed), different layouts → same logits.
+        assert!(
+            allclose(&y1.data, &y2.data, 1e-2, 1e-3),
+            "max diff {}",
+            crate::util::max_abs_diff(&y1.data, &y2.data)
+        );
+    }
+
+    #[test]
+    fn sparse_path_runs_and_differs_bounded() {
+        let res = 32;
+        let x = input(1, res, 2);
+        let g = build_model(ModelArch::ResNet18, 1, res);
+        let dense = Executor::new(g.clone(), ExecConfig::dense_cnhw(1)).run(&x);
+        let sparse = Executor::new(g, ExecConfig::sparse_cnhw(1, 0.5)).run(&x);
+        assert_eq!(sparse.shape, vec![1, 1000]);
+        // Pruned logits differ from dense but remain finite.
+        assert!(sparse.data.iter().all(|v| v.is_finite()));
+        assert!(!allclose(&dense.data, &sparse.data, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn sparse_weights_smaller_than_dense() {
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let dense = Executor::new(g.clone(), ExecConfig::dense_cnhw(1));
+        let sparse = Executor::new(g, ExecConfig::sparse_cnhw(1, 0.75));
+        assert!(
+            (sparse.conv_weight_bytes() as f64)
+                < 0.6 * dense.conv_weight_bytes() as f64,
+            "sparse {} dense {}",
+            sparse.conv_weight_bytes(),
+            dense.conv_weight_bytes()
+        );
+    }
+
+    #[test]
+    fn mobilenet_and_densenet_run_small() {
+        let res = 32;
+        let x = input(1, res, 3);
+        for arch in [ModelArch::MobileNetV2, ModelArch::DenseNet121] {
+            let g = build_model(arch, 1, res);
+            let y = Executor::new(g, ExecConfig::dense_cnhw(2)).run(&x);
+            assert_eq!(y.shape, vec![1, 1000], "{arch:?}");
+            assert!(y.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn batch_two_consistent_with_two_singles() {
+        let res = 32;
+        let mut r = XorShiftRng::new(7);
+        let a = Tensor::random(&[1, res, res, 3], &mut r, 0.0, 1.0);
+        let b = Tensor::random(&[1, res, res, 3], &mut r, 0.0, 1.0);
+        let mut batched = Tensor::zeros(&[2, res, res, 3]);
+        batched.data[..a.data.len()].copy_from_slice(&a.data);
+        batched.data[a.data.len()..].copy_from_slice(&b.data);
+
+        let g1 = build_model(ModelArch::ResNet18, 1, res);
+        let g2 = build_model(ModelArch::ResNet18, 2, res);
+        let e1 = Executor::new(g1, ExecConfig::dense_cnhw(1));
+        let e2 = Executor::new(g2, ExecConfig::dense_cnhw(1));
+        let ya = e1.run(&a);
+        let yb = e1.run(&b);
+        let yab = e2.run(&batched);
+        assert!(allclose(&yab.data[..1000], &ya.data, 1e-2, 1e-3));
+        assert!(allclose(&yab.data[1000..], &yb.data, 1e-2, 1e-3));
+    }
+
+    #[test]
+    fn per_layer_choice_applied() {
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let mut cfg = ExecConfig::dense_cnhw(1);
+        cfg.per_layer
+            .insert("s1b0-conv1".into(), LayerChoice { v: 8, tile: 4 });
+        let x = input(1, 32, 4);
+        let y = Executor::new(g.clone(), cfg).run(&x);
+        let y_default = Executor::new(g, ExecConfig::dense_cnhw(1)).run(&x);
+        // Tuning changes execution parameters, never numerics.
+        assert!(allclose(&y.data, &y_default.data, 1e-4, 1e-5));
+    }
+}

@@ -1,0 +1,10 @@
+//! The inference engine (Layer-3 coordinator core): operator
+//! implementations, a graph executor with per-layer path/parameter
+//! configuration, and a batching request server.
+
+pub mod ops;
+pub mod executor;
+pub mod server;
+
+pub use executor::{ExecConfig, Executor, LayerChoice};
+pub use server::{Server, ServerConfig, ServerStats};

@@ -1,0 +1,424 @@
+//! Non-conv operator implementations for both activation layouts.
+//!
+//! CNHW tensors are `[C, N, H, W]`, NHWC tensors `[N, H, W, C]`.
+//! Pooling/GAP/FC/depthwise are direct implementations — they are a few
+//! percent of runtime in all seven networks, so clarity wins; conv is
+//! where the paper's optimisations (and ours) live.
+
+use crate::tensor::Tensor;
+
+/// In-place ReLU.
+pub fn relu_inplace(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Elementwise add (same shape), optionally fused ReLU.
+pub fn add(a: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+    assert_eq!(a.shape, b.shape, "residual add shape mismatch");
+    let mut out = a.clone();
+    for (o, &bv) in out.data.iter_mut().zip(&b.data) {
+        *o += bv;
+        if relu && *o < 0.0 {
+            *o = 0.0;
+        }
+    }
+    out
+}
+
+/// Max pooling over CNHW.
+pub fn maxpool_cnhw(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[c, n, ho, wo]);
+    // Flat-offset inner loops (§Perf step 5: `Tensor::at` index math per
+    // element made the stem pool the single slowest op in the graph).
+    for ci in 0..c {
+        for ni in 0..n {
+            let in_base = (ci * n + ni) * h * w;
+            let out_base = (ci * n + ni) * ho * wo;
+            for oy in 0..ho {
+                let orow = &mut out.data[out_base + oy * wo..out_base + (oy + 1) * wo];
+                orow.fill(f32::NEG_INFINITY);
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let irow = &x.data[in_base + iy as usize * w..in_base + (iy as usize + 1) * w];
+                    for (ox, o) in orow.iter_mut().enumerate() {
+                        let ix0 = (ox * stride) as isize - pad as isize;
+                        let lo = ix0.max(0) as usize;
+                        let hi = ((ix0 + k as isize).min(w as isize)) as usize;
+                        for &v in &irow[lo..hi] {
+                            if v > *o {
+                                *o = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Average pooling (no padding) over CNHW.
+pub fn avgpool_cnhw(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(&[c, n, ho, wo]);
+    let inv = 1.0 / (k * k) as f32;
+    for ci in 0..c {
+        for ni in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut sum = 0.0;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            sum += x.at(&[ci, ni, oy * stride + ky, ox * stride + kx]);
+                        }
+                    }
+                    *out.at_mut(&[ci, ni, oy, ox]) = sum * inv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool CNHW → `[N, C]`.
+pub fn gap_cnhw(x: &Tensor) -> Tensor {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    let inv = 1.0 / (h * w) as f32;
+    for ci in 0..c {
+        for ni in 0..n {
+            let base = ((ci * n + ni) * h) * w;
+            let sum: f32 = x.data[base..base + h * w].iter().sum();
+            *out.at_mut(&[ni, ci]) = sum * inv;
+        }
+    }
+    out
+}
+
+/// Depthwise k×k conv over CNHW; weights `[C, k, k]`.
+pub fn depthwise_cnhw(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: bool) -> Tensor {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let k = wt.shape[1];
+    assert_eq!(wt.shape, vec![c, k, k]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[c, n, ho, wo]);
+    for ci in 0..c {
+        for ni in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc += x.at(&[ci, ni, iy as usize, ix as usize])
+                                * wt.at(&[ci, ky, kx]);
+                        }
+                    }
+                    if relu && acc < 0.0 {
+                        acc = 0.0;
+                    }
+                    *out.at_mut(&[ci, ni, oy, ox]) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Channel concat in CNHW: channels are the outermost axis, so this is
+/// a plain buffer concatenation — one of CNHW's conveniences.
+pub fn concat_cnhw(xs: &[&Tensor]) -> Tensor {
+    assert!(!xs.is_empty());
+    let (n, h, w) = (xs[0].shape[1], xs[0].shape[2], xs[0].shape[3]);
+    let mut c_total = 0;
+    let mut data = Vec::new();
+    for x in xs {
+        assert_eq!(&x.shape[1..], &[n, h, w], "concat spatial mismatch");
+        c_total += x.shape[0];
+        data.extend_from_slice(&x.data);
+    }
+    Tensor::from_vec(&[c_total, n, h, w], data)
+}
+
+/// Fully connected: `x[N, in] · W[out, in]ᵀ + b[out]` → `[N, out]`.
+pub fn fc(x: &Tensor, wt: &Tensor, bias: &[f32]) -> Tensor {
+    let (n, fin) = (x.shape[0], x.shape[1]);
+    let fout = wt.shape[0];
+    assert_eq!(wt.shape, vec![fout, fin]);
+    assert_eq!(bias.len(), fout);
+    let mut out = Tensor::zeros(&[n, fout]);
+    for ni in 0..n {
+        for o in 0..fout {
+            let mut acc = bias[o];
+            let xr = &x.data[ni * fin..(ni + 1) * fin];
+            let wr = &wt.data[o * fin..(o + 1) * fin];
+            for (xv, wv) in xr.iter().zip(wr) {
+                acc += xv * wv;
+            }
+            *out.at_mut(&[ni, o]) = acc;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// NHWC twins (dense-NHWC baseline path)
+
+/// Max pooling over NHWC.
+pub fn maxpool_nhwc(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    // Flat-offset channel-vector inner loop (§Perf step 5, NHWC twin —
+    // the baseline gets the same treatment for a fair comparison).
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let out_base = ((ni * ho + oy) * wo + ox) * c;
+                let orow = &mut out.data[out_base..out_base + c];
+                orow.fill(f32::NEG_INFINITY);
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let in_base = ((ni * h + iy as usize) * w + ix as usize) * c;
+                        let irow = &x.data[in_base..in_base + c];
+                        for (o, &v) in orow.iter_mut().zip(irow) {
+                            if v > *o {
+                                *o = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Average pooling (no padding) over NHWC.
+pub fn avgpool_nhwc(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    let inv = 1.0 / (k * k) as f32;
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ci in 0..c {
+                    let mut sum = 0.0;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            sum += x.at(&[ni, oy * stride + ky, ox * stride + kx, ci]);
+                        }
+                    }
+                    *out.at_mut(&[ni, oy, ox, ci]) = sum * inv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool NHWC → `[N, C]`.
+pub fn gap_nhwc(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        for y in 0..h {
+            for xw in 0..w {
+                for ci in 0..c {
+                    out.data[ni * c + ci] += x.at(&[ni, y, xw, ci]);
+                }
+            }
+        }
+    }
+    for v in &mut out.data {
+        *v *= inv;
+    }
+    out
+}
+
+/// Depthwise conv over NHWC; weights `[C, k, k]`.
+pub fn depthwise_nhwc(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: bool) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let k = wt.shape[1];
+    assert_eq!(wt.shape, vec![c, k, k]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ci in 0..c {
+                    let mut acc = 0.0;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc += x.at(&[ni, iy as usize, ix as usize, ci])
+                                * wt.at(&[ci, ky, kx]);
+                        }
+                    }
+                    if relu && acc < 0.0 {
+                        acc = 0.0;
+                    }
+                    *out.at_mut(&[ni, oy, ox, ci]) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Channel concat in NHWC (innermost axis — requires interleaving).
+pub fn concat_nhwc(xs: &[&Tensor]) -> Tensor {
+    assert!(!xs.is_empty());
+    let (n, h, w) = (xs[0].shape[0], xs[0].shape[1], xs[0].shape[2]);
+    let c_total: usize = xs.iter().map(|x| x.shape[3]).sum();
+    let mut out = Tensor::zeros(&[n, h, w, c_total]);
+    let pixels = n * h * w;
+    for p in 0..pixels {
+        let mut co = 0;
+        for x in xs {
+            let c = x.shape[3];
+            out.data[p * c_total + co..p * c_total + co + c]
+                .copy_from_slice(&x.data[p * c..(p + 1) * c]);
+            co += c;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::layout::{cnhw_to_nhwc, nhwc_to_cnhw};
+    use crate::util::{allclose, XorShiftRng};
+
+    #[test]
+    fn relu_and_add() {
+        let mut t = Tensor::from_vec(&[4], vec![-1.0, 2.0, -3.0, 4.0]);
+        relu_inplace(&mut t);
+        assert_eq!(t.data, vec![0.0, 2.0, 0.0, 4.0]);
+        let s = add(&t, &t, false);
+        assert_eq!(s.data, vec![0.0, 4.0, 0.0, 8.0]);
+        let neg = Tensor::from_vec(&[4], vec![-5.0; 4]);
+        let r = add(&t, &neg, true);
+        assert_eq!(r.data, vec![0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_cnhw_basic() {
+        // 1 channel, 1 image, 4x4 ramp; 2x2/2 pool takes max of quads.
+        let x = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let y = maxpool_cnhw(&x, 2, 2, 0);
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_layout_twins_agree() {
+        let mut r = XorShiftRng::new(301);
+        let x_nhwc = Tensor::random(&[2, 7, 7, 5], &mut r, -1.0, 1.0);
+        let a = maxpool_nhwc(&x_nhwc, 3, 2, 1);
+        let b = maxpool_cnhw(&nhwc_to_cnhw(&x_nhwc), 3, 2, 1);
+        assert!(allclose(&a.data, &cnhw_to_nhwc(&b).data, 0.0, 0.0));
+    }
+
+    #[test]
+    fn avgpool_layout_twins_agree() {
+        let mut r = XorShiftRng::new(302);
+        let x_nhwc = Tensor::random(&[1, 6, 6, 4], &mut r, -1.0, 1.0);
+        let a = avgpool_nhwc(&x_nhwc, 2, 2);
+        let b = avgpool_cnhw(&nhwc_to_cnhw(&x_nhwc), 2, 2);
+        assert!(allclose(&a.data, &cnhw_to_nhwc(&b).data, 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn gap_twins_agree_and_average() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 6.0]);
+        let g = gap_cnhw(&x);
+        assert_eq!(g.shape, vec![1, 1]);
+        assert_eq!(g.data, vec![3.0]);
+        let mut r = XorShiftRng::new(303);
+        let x_nhwc = Tensor::random(&[3, 5, 4, 6], &mut r, -1.0, 1.0);
+        let a = gap_nhwc(&x_nhwc);
+        let b = gap_cnhw(&nhwc_to_cnhw(&x_nhwc));
+        assert!(allclose(&a.data, &b.data, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn depthwise_twins_agree() {
+        let mut r = XorShiftRng::new(304);
+        let x_nhwc = Tensor::random(&[2, 8, 8, 6], &mut r, -1.0, 1.0);
+        let w = Tensor::random(&[6, 3, 3], &mut r, -0.5, 0.5);
+        let a = depthwise_nhwc(&x_nhwc, &w, 2, 1, true);
+        let b = depthwise_cnhw(&nhwc_to_cnhw(&x_nhwc), &w, 2, 1, true);
+        assert!(allclose(&a.data, &cnhw_to_nhwc(&b).data, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn depthwise_identity_kernel() {
+        // 1x1 depthwise with weight 1.0 is identity.
+        let mut r = XorShiftRng::new(305);
+        let x = Tensor::random(&[3, 1, 4, 4], &mut r, -1.0, 1.0);
+        let w = Tensor::from_vec(&[3, 1, 1], vec![1.0; 3]);
+        let y = depthwise_cnhw(&x, &w, 1, 0, false);
+        assert!(allclose(&x.data, &y.data, 0.0, 0.0));
+    }
+
+    #[test]
+    fn concat_twins_agree() {
+        let mut r = XorShiftRng::new(306);
+        let a_nhwc = Tensor::random(&[2, 3, 3, 4], &mut r, -1.0, 1.0);
+        let b_nhwc = Tensor::random(&[2, 3, 3, 6], &mut r, -1.0, 1.0);
+        let cat_nhwc = concat_nhwc(&[&a_nhwc, &b_nhwc]);
+        let cat_cnhw = concat_cnhw(&[&nhwc_to_cnhw(&a_nhwc), &nhwc_to_cnhw(&b_nhwc)]);
+        assert_eq!(cat_nhwc.shape, vec![2, 3, 3, 10]);
+        assert!(allclose(&cat_nhwc.data, &cnhw_to_nhwc(&cat_cnhw).data, 0.0, 0.0));
+    }
+
+    #[test]
+    fn fc_computes_affine() {
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+        let y = fc(&x, &w, &[10.0, 20.0]);
+        assert_eq!(y.data, vec![11.0, 25.0]);
+    }
+}

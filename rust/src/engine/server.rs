@@ -1,0 +1,312 @@
+//! Batching inference server: the request-path coordinator.
+//!
+//! Clients submit single-image NHWC requests; a dispatcher thread groups
+//! them into batches (up to `max_batch`, waiting at most `batch_window`)
+//! and runs them on pre-compiled executors — one per supported batch
+//! size, mirroring how the AOT artifacts are compiled per batch shape.
+//! Per-request latency and aggregate throughput are recorded.
+
+use std::sync::mpsc::{channel, Receiver, Sender, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::models::Graph;
+use crate::tensor::Tensor;
+use crate::util::stats::Summary;
+
+use super::executor::{ExecConfig, Executor};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Supported batch sizes, ascending (executors prebuilt per size).
+    pub batch_sizes: Vec<usize>,
+    /// Max time the batcher waits to fill a batch.
+    pub batch_window: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            batch_sizes: vec![1, 2, 4],
+            batch_window: Duration::from_millis(5),
+        }
+    }
+}
+
+struct Request {
+    image: Tensor, // [H, W, C]
+    enqueued: Instant,
+    reply: Sender<Reply>,
+}
+
+/// A completed inference.
+pub struct Reply {
+    pub logits: Vec<f32>,
+    /// Queue + batching + compute latency.
+    pub latency: Duration,
+    /// Batch this request was served in.
+    pub batch: usize,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    latencies_ns: Vec<f64>,
+    batches: Vec<usize>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+    served: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub served: usize,
+    pub latency: Summary,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+}
+
+/// The serving engine.
+pub struct Server {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<StatsInner>>,
+    res: usize,
+}
+
+impl Server {
+    /// Build executors for every configured batch size and start the
+    /// dispatcher. `make_graph(batch)` supplies the model graph; `exec`
+    /// is the (shared) execution config; `res` the input resolution.
+    pub fn start<F: Fn(usize) -> Graph>(
+        make_graph: F,
+        exec: ExecConfig,
+        res: usize,
+        cfg: ServerConfig,
+    ) -> Self {
+        assert!(!cfg.batch_sizes.is_empty());
+        let mut sizes = cfg.batch_sizes.clone();
+        sizes.sort_unstable();
+        let executors: Vec<(usize, Executor)> = sizes
+            .iter()
+            .map(|&b| (b, Executor::new(make_graph(b), exec.clone())))
+            .collect();
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let stats2 = Arc::clone(&stats);
+        let window = cfg.batch_window;
+        let worker = std::thread::spawn(move || dispatcher(rx, executors, window, stats2, res));
+        Self {
+            tx: Some(tx),
+            worker: Some(worker),
+            stats,
+            res,
+        }
+    }
+
+    /// Submit one image `[H, W, C]`; returns a handle to await the reply.
+    pub fn submit(&self, image: Tensor) -> Receiver<Reply> {
+        assert_eq!(image.shape, vec![self.res, self.res, 3], "image shape");
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()
+            .unwrap()
+            .send(Request {
+                image,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .expect("server stopped");
+        reply_rx
+    }
+
+    /// Drain and stop the server, returning aggregate stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.tx.take(); // closes channel; dispatcher drains then exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let inner = self.stats.lock().unwrap();
+        let wall = match (inner.started, inner.finished) {
+            (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
+            _ => 0.0,
+        };
+        ServerStats {
+            served: inner.served,
+            latency: if inner.latencies_ns.is_empty() {
+                Summary::of(&[0.0])
+            } else {
+                Summary::of(&inner.latencies_ns)
+            },
+            throughput_rps: if wall > 0.0 {
+                inner.served as f64 / wall
+            } else {
+                0.0
+            },
+            mean_batch: if inner.batches.is_empty() {
+                0.0
+            } else {
+                inner.batches.iter().sum::<usize>() as f64 / inner.batches.len() as f64
+            },
+        }
+    }
+}
+
+fn dispatcher(
+    rx: Receiver<Request>,
+    executors: Vec<(usize, Executor)>,
+    window: Duration,
+    stats: Arc<Mutex<StatsInner>>,
+    res: usize,
+) {
+    let max_batch = executors.last().map(|(b, _)| *b).unwrap_or(1);
+    let mut pending: Vec<Request> = Vec::new();
+    let mut open = true;
+    while open || !pending.is_empty() {
+        // Fill up to max_batch within the window.
+        if open && pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        let deadline = Instant::now() + window;
+        while open && pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        // Largest supported batch ≤ pending.
+        let (batch, exec) = executors
+            .iter()
+            .rev()
+            .find(|(b, _)| *b <= pending.len())
+            .unwrap_or(&executors[0]);
+        let batch = (*batch).min(pending.len());
+        let group: Vec<Request> = pending.drain(..batch).collect();
+        // Assemble the batched NHWC input.
+        let mut input = Tensor::zeros(&[batch, res, res, 3]);
+        let per = res * res * 3;
+        for (i, r) in group.iter().enumerate() {
+            input.data[i * per..(i + 1) * per].copy_from_slice(&r.image.data);
+        }
+        {
+            let mut s = stats.lock().unwrap();
+            if s.started.is_none() {
+                s.started = Some(Instant::now());
+            }
+        }
+        let logits = exec.run(&input);
+        let done = Instant::now();
+        let classes = logits.shape[1];
+        let mut s = stats.lock().unwrap();
+        s.finished = Some(done);
+        for (i, r) in group.into_iter().enumerate() {
+            let latency = done - r.enqueued;
+            s.latencies_ns.push(latency.as_nanos() as f64);
+            s.batches.push(batch);
+            s.served += 1;
+            let _ = r.reply.send(Reply {
+                logits: logits.data[i * classes..(i + 1) * classes].to_vec(),
+                latency,
+                batch,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_model, ModelArch};
+    use crate::util::XorShiftRng;
+
+    fn image(res: usize, seed: u64) -> Tensor {
+        let mut r = XorShiftRng::new(seed);
+        Tensor::random(&[res, res, 3], &mut r, 0.0, 1.0)
+    }
+
+    #[test]
+    fn serves_requests_and_reports_stats() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::sparse_cnhw(2, 0.5),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 2],
+                batch_window: Duration::from_millis(2),
+            },
+        );
+        let replies: Vec<_> = (0..6).map(|i| server.submit(image(res, i))).collect();
+        for r in replies {
+            let reply = r.recv().expect("reply");
+            assert_eq!(reply.logits.len(), 1000);
+            assert!(reply.batch >= 1 && reply.batch <= 2);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 6);
+        assert!(stats.throughput_rps > 0.0);
+        assert!(stats.latency.mean > 0.0);
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::dense_cnhw(2),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 2, 4],
+                batch_window: Duration::from_millis(50),
+            },
+        );
+        // Burst of 8 requests: with a generous window, batches of 4 form.
+        let replies: Vec<_> = (0..8).map(|i| server.submit(image(res, i))).collect();
+        let mut max_batch = 0;
+        for r in replies {
+            max_batch = max_batch.max(r.recv().unwrap().batch);
+        }
+        let stats = server.shutdown();
+        assert!(max_batch >= 2, "expected batching, got max batch {max_batch}");
+        assert!(stats.mean_batch > 1.0);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::dense_cnhw(1),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1],
+                batch_window: Duration::from_millis(1),
+            },
+        );
+        let rxs: Vec<_> = (0..3).map(|i| server.submit(image(res, i))).collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 3);
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok());
+        }
+    }
+}

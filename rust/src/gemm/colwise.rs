@@ -1,0 +1,138 @@
+//! Algorithm 1: the column-wise N:M sparse micro-kernel.
+//!
+//! For each (strip, tile): reserve T accumulators; for each retained
+//! column `Idx[j]` of the tile, load the data row `A[Idx[j]]` **once**
+//! and `vfmacc.vf` it into all T accumulators with each row's scalar
+//! weight. Work is proportional to retained columns only; every data row
+//! fetched is reused T times; accumulators never touch memory until the
+//! final store — the three properties the paper's design targets.
+
+use crate::im2col::PackedMatrix;
+use crate::pruning::ColwisePruned;
+
+use super::dense::MAX_TILE;
+
+/// `C[rows, cols] = Wc · A`, Wc column-wise compressed, A packed.
+pub fn spmm_colwise(w: &ColwisePruned, a: &PackedMatrix) -> Vec<f32> {
+    let mut c = vec![0.0f32; w.rows * a.cols];
+    spmm_colwise_into(w, a, &mut c);
+    c
+}
+
+/// In-place variant (hot-path entry).
+pub fn spmm_colwise_into(w: &ColwisePruned, a: &PackedMatrix, c: &mut [f32]) {
+    assert_eq!(w.cols, a.k, "reduction dim mismatch");
+    assert!(c.len() >= w.rows * a.cols);
+    assert!(w.tile <= MAX_TILE, "tile {} > {}", w.tile, MAX_TILE);
+    for strip in 0..a.strips {
+        spmm_colwise_strip(w, a, strip, c);
+    }
+}
+
+/// Process a single strip across all tiles (unit of thread parallelism).
+///
+/// §Perf note: a width-monomorphised variant (const-V dispatch with
+/// array-ref FMA bodies) was tried and *regressed* ~2.3× — the
+/// per-iteration slice→array conversions defeated LLVM's existing
+/// auto-vectorisation of the `zip` loop. Kept dynamic; see
+/// EXPERIMENTS.md §Perf step 2.
+pub fn spmm_colwise_strip(w: &ColwisePruned, a: &PackedMatrix, strip: usize, c: &mut [f32]) {
+    let sdata = a.strip(strip);
+    let valid = a.strip_valid(strip);
+    let col0 = strip * a.v;
+    // One accumulator block for the whole strip; each tile zeroes only
+    // the `t × valid` region it uses (§Perf step 1: the full 8 KiB
+    // memset per tile dominated small tiles).
+    let mut acc = [[0.0f32; 64]; MAX_TILE];
+    debug_assert!(a.v <= 64);
+    for tile in &w.tiles {
+        let t = tile.row_count;
+        let nret = tile.indices.len();
+        for row in &mut acc[..t] {
+            row[..valid].fill(0.0);
+        }
+        for (j, &idx) in tile.indices.iter().enumerate() {
+            // Single load of the data row, reused across all T rows.
+            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+            for ti in 0..t {
+                let wv = tile.values[ti * nret + j]; // scalar weight
+                let accr = &mut acc[ti][..valid];
+                for (aj, xj) in accr.iter_mut().zip(arow) {
+                    *aj += wv * xj; // vfmacc.vf
+                }
+            }
+        }
+        for ti in 0..t {
+            let r = tile.row_start + ti;
+            c[r * a.cols + col0..r * a.cols + col0 + valid]
+                .copy_from_slice(&acc[ti][..valid]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_ref;
+    use crate::im2col::pack_data_matrix;
+    use crate::pruning::{prune_colwise, prune_colwise_adaptive};
+    use crate::util::{allclose, XorShiftRng};
+
+    #[test]
+    fn matches_reference_on_masked_weights() {
+        let mut r = XorShiftRng::new(71);
+        let (rows, k, cols) = (16, 32, 50);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        for (tile, n, m) in [(8, 2, 4), (4, 1, 4), (8, 3, 4), (1, 2, 4), (5, 4, 8)] {
+            let cp = prune_colwise(&w, rows, k, tile, n, m);
+            let want = matmul_ref(&cp.decompress(), &a, rows, k, cols);
+            for v in [8, 16, 32] {
+                let p = pack_data_matrix(&a, k, cols, v);
+                let got = spmm_colwise(&cp, &p);
+                assert!(
+                    allclose(&got, &want, 1e-4, 1e-5),
+                    "tile={tile} {n}:{m} v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_m_full_row_groups() {
+        let mut r = XorShiftRng::new(72);
+        let (rows, k, cols) = (8, 64, 30);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise_adaptive(&w, rows, k, 8, 0.75);
+        let p = pack_data_matrix(&a, k, cols, 16);
+        let got = spmm_colwise(&cp, &p);
+        let want = matmul_ref(&cp.decompress(), &a, rows, k, cols);
+        assert!(allclose(&got, &want, 1e-4, 1e-5));
+        // 75% sparsity → 16 of 64 columns retained per tile.
+        assert_eq!(cp.retained_per_tile(), 16);
+    }
+
+    #[test]
+    fn zero_retained_columns_outputs_zero() {
+        // 0:M is not allowed by prune API (n>=... actually n=0 allowed by
+        // prune_colwise if caller passes 0) — emulate via all-zero weights.
+        let w = vec![0.0f32; 4 * 8];
+        let cp = prune_colwise(&w, 4, 8, 2, 2, 4);
+        let a: Vec<f32> = (0..8 * 6).map(|i| i as f32).collect();
+        let p = pack_data_matrix(&a, 8, 6, 4);
+        let got = spmm_colwise(&cp, &p);
+        assert!(got.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn work_is_proportional_to_retained_columns() {
+        // structural check: each tile iterates indices.len() columns.
+        let mut r = XorShiftRng::new(73);
+        let w = r.normal_vec(8 * 16, 1.0);
+        let cp = prune_colwise(&w, 8, 16, 8, 1, 4);
+        assert_eq!(cp.retained_per_tile(), 4); // 16/4 groups * 1
+        let cp2 = prune_colwise(&w, 8, 16, 8, 3, 4);
+        assert_eq!(cp2.retained_per_tile(), 12);
+    }
+}

@@ -1,0 +1,117 @@
+//! Dense tiled GEMM over packed strips — the dense baseline kernel.
+
+use crate::im2col::PackedMatrix;
+
+/// Maximum register-tile height supported without heap-allocating
+/// accumulators (32 matches the RVV register file the paper tunes over).
+pub const MAX_TILE: usize = 32;
+
+/// `C[rows, cols] = W[rows, K] · A`, A packed in strips. `tile` output
+/// rows are produced per micro-kernel invocation with accumulators kept
+/// in a stack array (the vector-register analogue).
+pub fn gemm_dense(w: &[f32], rows: usize, a: &PackedMatrix, tile: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; rows * a.cols];
+    gemm_dense_into(w, rows, a, tile, &mut c);
+    c
+}
+
+/// In-place variant writing into a caller-provided output buffer
+/// (hot-path entry: avoids the allocation per conv layer).
+pub fn gemm_dense_into(w: &[f32], rows: usize, a: &PackedMatrix, tile: usize, c: &mut [f32]) {
+    let k = a.k;
+    assert_eq!(w.len(), rows * k, "filter shape");
+    assert!(c.len() >= rows * a.cols);
+    assert!((1..=MAX_TILE).contains(&tile));
+    // Accumulator block shared across micro-kernel invocations; each
+    // invocation zeroes only its `t × valid` region (§Perf step 1).
+    let mut acc = [[0.0f32; 64]; MAX_TILE];
+    for strip in 0..a.strips {
+        let sdata = a.strip(strip);
+        let valid = a.strip_valid(strip);
+        let col0 = strip * a.v;
+        let mut row = 0;
+        while row < rows {
+            let t = tile.min(rows - row);
+            micro_kernel_dense(w, row, t, k, sdata, a.v, valid, c, a.cols, col0, &mut acc);
+            row += t;
+        }
+    }
+}
+
+/// One (strip, row-tile) micro-kernel: T accumulator rows over V lanes.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel_dense(
+    w: &[f32],
+    row0: usize,
+    t: usize,
+    k: usize,
+    sdata: &[f32],
+    v: usize,
+    valid: usize,
+    c: &mut [f32],
+    cols: usize,
+    col0: usize,
+    acc: &mut [[f32; 64]; MAX_TILE],
+) {
+    // acc[t][v] — stack-resident, like the RVV accumulator registers.
+    debug_assert!(v <= 64);
+    for row in &mut acc[..t] {
+        row[..valid].fill(0.0);
+    }
+    for kk in 0..k {
+        let arow = &sdata[kk * v..kk * v + valid];
+        for ti in 0..t {
+            let wv = w[(row0 + ti) * k + kk];
+            let accr = &mut acc[ti][..valid];
+            for (aj, xj) in accr.iter_mut().zip(arow) {
+                *aj += wv * xj; // vfmacc.vf
+            }
+        }
+    }
+    for ti in 0..t {
+        let crow = &mut c[(row0 + ti) * cols + col0..(row0 + ti) * cols + col0 + valid];
+        crow.copy_from_slice(&acc[ti][..valid]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_ref;
+    use crate::im2col::pack_data_matrix;
+    use crate::util::{allclose, XorShiftRng};
+
+    #[test]
+    fn matches_reference_over_tiles() {
+        let mut r = XorShiftRng::new(61);
+        let (rows, k, cols) = (13, 24, 40);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let want = matmul_ref(&w, &a, rows, k, cols);
+        for v in [4, 8, 16, 32] {
+            let p = pack_data_matrix(&a, k, cols, v);
+            for tile in [1, 2, 4, 7, 8, 13, 32] {
+                let got = gemm_dense(&w, rows, &p, tile);
+                assert!(
+                    allclose(&got, &want, 1e-4, 1e-5),
+                    "v={v} tile={tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let p = pack_data_matrix(&[3.0], 1, 1, 8);
+        let got = gemm_dense(&[2.0], 1, &p, 1);
+        assert_eq!(got, vec![6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "filter shape")]
+    fn wrong_filter_len_panics() {
+        let p = pack_data_matrix(&[1.0, 2.0], 2, 1, 4);
+        gemm_dense(&[1.0], 2, &p, 1);
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiled GEMM micro-kernels over packed data strips.
+//!
+//! Every kernel computes `C[rows, cols] = W · A` where `W[rows, K]` is a
+//! (possibly compressed) filter matrix and `A[K, cols]` arrives as a
+//! [`crate::im2col::PackedMatrix`] of `V`-wide strips. One (strip,
+//! row-tile) pair is a micro-kernel invocation — the unit XNNPACK
+//! parallelises over and the unit the paper's tuner profiles.
+//!
+//! * [`dense`] — dense baseline: all K rows of the strip are streamed.
+//! * [`colwise`] — Algorithm 1: outer-product over the tile's shared
+//!   retained-column set, accumulators register-resident.
+//! * [`inner`] — conventional row-based N:M, inner-product order: each
+//!   output row gathers its own columns → data rows are re-fetched per
+//!   row (the redundant-*load* pathology, §3.1).
+//! * [`outer`] — conventional row-based N:M, outer-product order: data
+//!   rows are reused but partial sums scatter to memory (the
+//!   redundant-*store* pathology, §3.1). This is the "conventional N:M"
+//!   configuration of Fig. 5.
+//! * [`threaded`] — output-tile parallel driver shared by all kernels.
+
+pub mod dense;
+pub mod colwise;
+pub mod inner;
+pub mod outer;
+pub mod threaded;
+
+pub use colwise::spmm_colwise;
+pub use dense::gemm_dense;
+pub use inner::spmm_inner_rownm;
+pub use outer::spmm_outer_rownm;
+
+/// Reference dense matmul `C[rows, cols] = W[rows, K] · A[K, cols]`,
+/// unpacked and unoptimised — the oracle for every kernel here.
+pub fn matmul_ref(w: &[f32], a: &[f32], rows: usize, k: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(w.len(), rows * k);
+    assert_eq!(a.len(), k * cols);
+    let mut c = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for kk in 0..k {
+            let wv = w[r * k + kk];
+            if wv == 0.0 {
+                continue;
+            }
+            let arow = &a[kk * cols..(kk + 1) * cols];
+            let crow = &mut c[r * cols..(r + 1) * cols];
+            for (cj, aj) in crow.iter_mut().zip(arow) {
+                *cj += wv * aj;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::pack_data_matrix;
+    use crate::pruning::{prune_colwise, prune_rownm};
+    use crate::util::{allclose, prop};
+
+    /// All four kernels must agree with the reference on the *same*
+    /// masked weights, across random shapes/tiles/vector widths.
+    #[test]
+    fn prop_all_kernels_match_reference() {
+        prop::check_seeded(
+            0x6E44,
+            |r, size| {
+                let rows = 1 + size % 24;
+                let k = 4 * (1 + r.below(12));
+                let cols = 1 + r.below(70);
+                let v = [4, 8, 16, 32][r.below(4)];
+                let tile = 1 + r.below(8);
+                let w = r.normal_vec(rows * k, 1.0);
+                let a = r.normal_vec(k * cols, 1.0);
+                (w, a, rows, k, cols, v, tile)
+            },
+            |(w, a, rows, k, cols, v, tile)| {
+                let packed = pack_data_matrix(a, *k, *cols, *v);
+
+                // Column-wise kernel vs reference on its own mask.
+                let cp = prune_colwise(w, *rows, *k, *tile, 2, 4);
+                let got = spmm_colwise(&cp, &packed);
+                let want = matmul_ref(&cp.decompress(), a, *rows, *k, *cols);
+                if !allclose(&got, &want, 1e-4, 1e-5) {
+                    return false;
+                }
+
+                // Row-based N:M kernels vs reference on their mask.
+                let rp = prune_rownm(w, *rows, *k, 2, 4);
+                let want_r = matmul_ref(&rp.decompress(), a, *rows, *k, *cols);
+                let got_i = spmm_inner_rownm(&rp, &packed);
+                let got_o = spmm_outer_rownm(&rp, &packed);
+                if !allclose(&got_i, &want_r, 1e-4, 1e-5) {
+                    return false;
+                }
+                if !allclose(&got_o, &want_r, 1e-4, 1e-5) {
+                    return false;
+                }
+
+                // Dense kernel vs reference.
+                let got_d = gemm_dense(w, *rows, &packed, *tile);
+                let want_d = matmul_ref(w, a, *rows, *k, *cols);
+                allclose(&got_d, &want_d, 1e-4, 1e-5)
+            },
+        );
+    }
+}

@@ -1,0 +1,152 @@
+//! Outer-product row-based N:M SpMM baseline — the "conventional N:M"
+//! configuration of Fig. 5 (§3.1).
+//!
+//! Iterates the *columns* of the weight matrix so each fetched data row
+//! is reused across every output row that retains that column — fixing
+//! the inner-product kernel's redundant loads. But because row-based N:M
+//! retains irregular per-row column sets, the partial products scatter
+//! across output rows: accumulators cannot stay in registers, so partial
+//! sums are read-modify-written to the output buffer for every (column,
+//! row) hit — the redundant-store pathology that makes this kernel
+//! *slower than dense* in the paper (up to 5.4×).
+
+use crate::im2col::PackedMatrix;
+use crate::pruning::RowNmPruned;
+
+/// Column-major view of a row-based N:M matrix: for each reduction index
+/// k, the (row, value) pairs that retain column k.
+#[derive(Clone, Debug)]
+pub struct ColumnView {
+    /// offsets[k]..offsets[k+1] indexes into `hits`.
+    pub offsets: Vec<u32>,
+    /// (output row, weight value) pairs grouped by column.
+    pub hits: Vec<(u32, f32)>,
+}
+
+impl ColumnView {
+    /// Build from a row-compressed matrix (done once at weight-pack time,
+    /// off the hot path).
+    pub fn build(w: &RowNmPruned) -> Self {
+        let mut counts = vec![0u32; w.cols + 1];
+        for r in 0..w.rows {
+            for j in 0..w.per_row {
+                let v = w.values[r * w.per_row + j];
+                if v != 0.0 {
+                    counts[w.indices[r * w.per_row + j] as usize + 1] += 1;
+                }
+            }
+        }
+        let mut offsets = counts;
+        for k in 0..offsets.len() - 1 {
+            offsets[k + 1] += offsets[k];
+        }
+        let mut cursor = offsets.clone();
+        let mut hits = vec![(0u32, 0.0f32); *offsets.last().unwrap() as usize];
+        for r in 0..w.rows {
+            for j in 0..w.per_row {
+                let v = w.values[r * w.per_row + j];
+                if v != 0.0 {
+                    let k = w.indices[r * w.per_row + j] as usize;
+                    hits[cursor[k] as usize] = (r as u32, v);
+                    cursor[k] += 1;
+                }
+            }
+        }
+        Self { offsets, hits }
+    }
+}
+
+/// `C[rows, cols] = Wr · A` in outer-product order over a prebuilt
+/// [`ColumnView`].
+pub fn spmm_outer_rownm_with_view(
+    w: &RowNmPruned,
+    view: &ColumnView,
+    a: &PackedMatrix,
+) -> Vec<f32> {
+    assert_eq!(w.cols, a.k, "reduction dim mismatch");
+    let mut c = vec![0.0f32; w.rows * a.cols];
+    for strip in 0..a.strips {
+        let sdata = a.strip(strip);
+        let valid = a.strip_valid(strip);
+        let col0 = strip * a.v;
+        for k in 0..w.cols {
+            let (lo, hi) = (view.offsets[k] as usize, view.offsets[k + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            // Data row loaded once per column...
+            let arow = &sdata[k * a.v..k * a.v + valid];
+            for &(r, wv) in &view.hits[lo..hi] {
+                // ...but the partial sum goes straight to memory: a
+                // read-modify-write of the scattered output row.
+                let crow =
+                    &mut c[r as usize * a.cols + col0..r as usize * a.cols + col0 + valid];
+                for (cj, xj) in crow.iter_mut().zip(arow) {
+                    *cj += wv * xj;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Convenience wrapper building the column view on the fly.
+pub fn spmm_outer_rownm(w: &RowNmPruned, a: &PackedMatrix) -> Vec<f32> {
+    spmm_outer_rownm_with_view(w, &ColumnView::build(w), a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_ref;
+    use crate::im2col::pack_data_matrix;
+    use crate::pruning::prune_rownm;
+    use crate::util::{allclose, XorShiftRng};
+
+    #[test]
+    fn matches_reference() {
+        let mut r = XorShiftRng::new(91);
+        let (rows, k, cols) = (10, 20, 29);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        for (n, m) in [(1, 4), (2, 4), (3, 4)] {
+            let rp = prune_rownm(&w, rows, k, n, m);
+            let want = matmul_ref(&rp.decompress(), &a, rows, k, cols);
+            let p = pack_data_matrix(&a, k, cols, 8);
+            let got = spmm_outer_rownm(&rp, &p);
+            assert!(allclose(&got, &want, 1e-4, 1e-5), "{n}:{m}");
+        }
+    }
+
+    #[test]
+    fn column_view_counts_match_nnz() {
+        let mut r = XorShiftRng::new(92);
+        let w = r.normal_vec(8 * 16, 1.0);
+        let rp = prune_rownm(&w, 8, 16, 2, 4);
+        let view = ColumnView::build(&rp);
+        let nnz: usize = rp.values.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(view.hits.len(), nnz);
+        // Every hit's (row, value) must exist in the compressed form.
+        let dense = rp.decompress();
+        for k in 0..16 {
+            for &(row, val) in
+                &view.hits[view.offsets[k] as usize..view.offsets[k + 1] as usize]
+            {
+                assert_eq!(dense[row as usize * 16 + k], val);
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_inner_product_kernel() {
+        let mut r = XorShiftRng::new(93);
+        let (rows, k, cols) = (16, 32, 41);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let rp = prune_rownm(&w, rows, k, 2, 4);
+        let p = pack_data_matrix(&a, k, cols, 16);
+        let got_o = spmm_outer_rownm(&rp, &p);
+        let got_i = crate::gemm::spmm_inner_rownm(&rp, &p);
+        assert!(allclose(&got_o, &got_i, 1e-4, 1e-5));
+    }
+}

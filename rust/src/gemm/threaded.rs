@@ -1,0 +1,149 @@
+//! Multi-threaded GEMM drivers: output tiles (strips) processed in
+//! parallel, the default XNNPACK parallelisation the paper uses (§4.1.1).
+
+use crate::im2col::PackedMatrix;
+use crate::pruning::ColwisePruned;
+use crate::util::threadpool::scope_chunks;
+
+use super::colwise::spmm_colwise_strip;
+use super::dense::MAX_TILE;
+
+/// Parallel column-wise SpMM: strips are distributed over `threads`.
+pub fn spmm_colwise_parallel(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(w.cols, a.k);
+    let mut c = vec![0.0f32; w.rows * a.cols];
+    // Each strip writes a disjoint column range of C; hand each thread a
+    // raw pointer and keep ranges disjoint by construction.
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    let c_len = c.len();
+    scope_chunks(threads, a.strips, |s0, s1| {
+        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), c_len) };
+        for strip in s0..s1 {
+            spmm_colwise_strip(w, a, strip, c_slice);
+        }
+    });
+    c
+}
+
+/// Parallel dense GEMM over strips.
+pub fn gemm_dense_parallel(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(w.len(), rows * a.k);
+    assert!((1..=MAX_TILE).contains(&tile));
+    let mut c = vec![0.0f32; rows * a.cols];
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    let c_len = c.len();
+    scope_chunks(threads, a.strips, |s0, s1| {
+        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), c_len) };
+        for strip in s0..s1 {
+            dense_strip(w, rows, a, tile, strip, c_slice);
+        }
+    });
+    c
+}
+
+fn dense_strip(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    strip: usize,
+    c: &mut [f32],
+) {
+    let sdata = a.strip(strip);
+    let valid = a.strip_valid(strip);
+    let col0 = strip * a.v;
+    let k = a.k;
+    let mut row = 0;
+    while row < rows {
+        let t = tile.min(rows - row);
+        let mut acc = [[0.0f32; 64]; MAX_TILE];
+        for kk in 0..k {
+            let arow = &sdata[kk * a.v..kk * a.v + valid];
+            for ti in 0..t {
+                let wv = w[(row + ti) * k + kk];
+                for (aj, xj) in acc[ti][..valid].iter_mut().zip(arow) {
+                    *aj += wv * xj;
+                }
+            }
+        }
+        for ti in 0..t {
+            let r = row + ti;
+            c[r * a.cols + col0..r * a.cols + col0 + valid]
+                .copy_from_slice(&acc[ti][..valid]);
+        }
+        row += t;
+    }
+}
+
+/// Shareable raw pointer for disjoint-range writes across scoped threads.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{gemm_dense, matmul_ref, spmm_colwise};
+    use crate::im2col::pack_data_matrix;
+    use crate::pruning::prune_colwise;
+    use crate::util::{allclose, XorShiftRng};
+
+    #[test]
+    fn parallel_colwise_equals_serial() {
+        let mut r = XorShiftRng::new(101);
+        let (rows, k, cols) = (24, 36, 200);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+        let p = pack_data_matrix(&a, k, cols, 16);
+        let serial = spmm_colwise(&cp, &p);
+        for threads in [1, 2, 4, 8] {
+            let par = spmm_colwise_parallel(&cp, &p, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_dense_equals_serial_and_reference() {
+        let mut r = XorShiftRng::new(102);
+        let (rows, k, cols) = (17, 20, 130);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let p = pack_data_matrix(&a, k, cols, 8);
+        let want = matmul_ref(&w, &a, rows, k, cols);
+        let serial = gemm_dense(&w, rows, &p, 4);
+        let par = gemm_dense_parallel(&w, rows, &p, 4, 4);
+        assert!(allclose(&serial, &want, 1e-4, 1e-5));
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn single_strip_single_thread_degenerate() {
+        let mut r = XorShiftRng::new(103);
+        let (rows, k, cols) = (4, 8, 3);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 2, 2, 4);
+        let p = pack_data_matrix(&a, k, cols, 8);
+        assert_eq!(p.strips, 1);
+        assert_eq!(
+            spmm_colwise_parallel(&cp, &p, 8),
+            spmm_colwise(&cp, &p)
+        );
+    }
+}

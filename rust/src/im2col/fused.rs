@@ -1,0 +1,156 @@
+//! Fused im2col + data packing (Algorithm 2, Fig. 4).
+//!
+//! Moves data straight from the CNHW feature map into vector-aligned
+//! strips in one pass: no intermediate `A` matrix is ever materialised.
+//! Because W is innermost in CNHW, each (strip, kernel-tap, channel)
+//! transfer is a contiguous run along the input row for stride 1 (a
+//! single vector load/store on RVV), and a strided gather otherwise.
+//! Padding regions are *skipped*, not copied: the strip buffer starts
+//! zeroed and only valid elements are written — the paper's trick for the
+//! stride-2 stem layer (§4.3) where avoiding padded copies makes fusion
+//! faster than even a standalone im2col.
+
+use super::pack::PackedMatrix;
+use crate::conv::ConvShape;
+use crate::tensor::Tensor;
+
+/// Fused im2col+pack over a CNHW input, producing strips of width `v`.
+/// Equivalent to `pack_data_matrix(im2col_cnhw(x, s), s.k(), cols, v)`.
+pub fn fused_im2col_pack_cnhw(x: &Tensor, s: &ConvShape, v: usize) -> PackedMatrix {
+    let mut p = PackedMatrix::zeros(s.k(), s.gemm_cols(), v);
+    fill_fused(x, s, v, &mut p);
+    p
+}
+
+/// In-place variant: reuses `p`'s buffer (§Perf step 3 — avoids the
+/// multi-MB allocation + page-fault churn per conv invocation).
+pub fn fused_im2col_pack_cnhw_into(x: &Tensor, s: &ConvShape, v: usize, p: &mut PackedMatrix) {
+    p.reset(s.k(), s.gemm_cols(), v);
+    fill_fused(x, s, v, p);
+}
+
+fn fill_fused(x: &Tensor, s: &ConvShape, v: usize, p: &mut PackedMatrix) {
+    assert_eq!(
+        x.shape,
+        vec![s.c_in, s.n, s.h_in, s.w_in],
+        "input must be CNHW for {s}"
+    );
+    let (h_out, w_out) = (s.h_out(), s.w_out());
+    let k = s.k();
+
+    // Walk output columns strip by strip; inside a strip, split the lane
+    // range into segments that stay within one (n, h_out) output row so
+    // every segment maps to one contiguous (or constant-stride) input run.
+    for strip in 0..p.strips {
+        let strip_base = strip * v;
+        let valid = p.strip_valid(strip);
+        let mut lane = 0usize;
+        while lane < valid {
+            let col = strip_base + lane;
+            let n = col / (h_out * w_out);
+            let rem = col % (h_out * w_out);
+            let ho = rem / w_out;
+            let wo0 = rem % w_out;
+            // Segment length: to end of this output row or end of strip.
+            let seg = (w_out - wo0).min(valid - lane);
+            for kh in 0..s.kh {
+                let hi = (ho * s.stride + kh) as isize - s.pad as isize;
+                if hi < 0 || hi >= s.h_in as isize {
+                    continue; // zero padding row: leave zeros in place
+                }
+                let hi = hi as usize;
+                for kw in 0..s.kw {
+                    // Input column for lane j of the segment:
+                    //   wi(j) = (wo0 + j)·stride + kw − pad
+                    let wi0 = (wo0 * s.stride + kw) as isize - s.pad as isize;
+                    // Valid j range: 0 <= wi(j) < w_in.
+                    let j_lo = if wi0 >= 0 {
+                        0
+                    } else {
+                        ((-wi0) as usize).div_ceil(s.stride)
+                    };
+                    let j_hi_excl = if wi0 >= s.w_in as isize {
+                        0
+                    } else {
+                        // wi(j) <= w_in-1  →  j <= (w_in-1-wi0)/stride
+                        (((s.w_in as isize - 1 - wi0) / s.stride as isize) + 1).max(0) as usize
+                    };
+                    let j_hi_excl = j_hi_excl.min(seg);
+                    if j_lo >= j_hi_excl {
+                        continue;
+                    }
+                    for c in 0..s.c_in {
+                        let row = (kh * s.kw + kw) * s.c_in + c;
+                        let in_base = ((c * s.n + n) * s.h_in + hi) * s.w_in;
+                        let dst_base = (strip * k + row) * v + lane;
+                        if s.stride == 1 {
+                            // Contiguous run: one vector move (vle/vse).
+                            let src0 = (in_base as isize + wi0 + j_lo as isize) as usize;
+                            let len = j_hi_excl - j_lo;
+                            let (dst0, src_end) = (dst_base + j_lo, src0 + len);
+                            p.data[dst0..dst0 + len]
+                                .copy_from_slice(&x.data[src0..src_end]);
+                        } else {
+                            // Strided gather (vlse on RVV).
+                            for j in j_lo..j_hi_excl {
+                                let wi = (wi0 + (j * s.stride) as isize) as usize;
+                                p.data[dst_base + j] = x.data[in_base + wi];
+                            }
+                        }
+                    }
+                }
+            }
+            lane += seg;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::{naive::im2col_cnhw, pack::pack_data_matrix};
+    use crate::util::XorShiftRng;
+
+    fn check(s: ConvShape, v: usize, seed: u64) {
+        let mut r = XorShiftRng::new(seed);
+        let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+        let want = pack_data_matrix(&im2col_cnhw(&x, &s), s.k(), s.gemm_cols(), v);
+        let got = fused_im2col_pack_cnhw(&x, &s, v);
+        assert_eq!(got.data, want.data, "{s} v={v}");
+    }
+
+    #[test]
+    fn matches_separate_stride1_pad1() {
+        check(ConvShape::square(1, 3, 8, 4, 3, 1, 1), 8, 1);
+        check(ConvShape::square(2, 2, 7, 4, 3, 1, 1), 16, 2);
+    }
+
+    #[test]
+    fn matches_separate_stem_stride2_pad3() {
+        // ResNet stem geometry (downscaled): 7x7 stride 2 pad 3.
+        check(ConvShape::square(1, 3, 20, 4, 7, 2, 3), 32, 3);
+    }
+
+    #[test]
+    fn matches_separate_pointwise() {
+        check(ConvShape::square(2, 6, 9, 4, 1, 1, 0), 8, 4);
+    }
+
+    #[test]
+    fn matches_separate_width_not_multiple_of_v() {
+        // w_out=56-like tail handling: strip crosses output-row borders.
+        check(ConvShape::square(1, 2, 13, 4, 3, 1, 1), 32, 5);
+        check(ConvShape::square(3, 1, 5, 2, 3, 1, 1), 64, 6);
+    }
+
+    #[test]
+    fn matches_separate_stride2_no_pad() {
+        check(ConvShape::square(1, 2, 11, 4, 3, 2, 0), 8, 7);
+        check(ConvShape::square(1, 2, 11, 4, 3, 2, 1), 8, 8);
+    }
+
+    #[test]
+    fn v_larger_than_cols() {
+        check(ConvShape::square(1, 2, 4, 3, 3, 1, 1), 64, 9);
+    }
+}

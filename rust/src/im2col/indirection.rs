@@ -1,0 +1,219 @@
+//! XNNPACK-style indirection buffer for the dense NHWC baseline (§2.2).
+//!
+//! Instead of materialising the patch matrix, Indirect Convolution
+//! [Dukhan 2019] stores, for every (output position, kernel tap), an
+//! offset into the NHWC feature map pointing at a contiguous C_in-long
+//! pixel vector (NHWC keeps channels innermost). The GEMM micro-kernel
+//! then reads activations through this buffer. Padding taps point at a
+//! shared zero buffer, modelled here as `None`.
+
+use crate::conv::ConvShape;
+use crate::tensor::Tensor;
+
+/// Indirection buffer: `offsets[(out_pos, tap)]` = element offset of the
+/// `[C_in]` pixel vector in the NHWC input, or `None` for padding.
+#[derive(Clone, Debug)]
+pub struct IndirectionBuffer {
+    /// Output positions = N·H_out·W_out.
+    pub out_positions: usize,
+    /// Kernel taps = K_h·K_w.
+    pub taps: usize,
+    pub offsets: Vec<Option<usize>>,
+}
+
+impl IndirectionBuffer {
+    /// Build for a conv shape over an NHWC input `[N, H_in, W_in, C_in]`.
+    pub fn build(s: &ConvShape) -> Self {
+        let (h_out, w_out) = (s.h_out(), s.w_out());
+        let out_positions = s.n * h_out * w_out;
+        let taps = s.kh * s.kw;
+        let mut offsets = Vec::with_capacity(out_positions * taps);
+        for n in 0..s.n {
+            for ho in 0..h_out {
+                for wo in 0..w_out {
+                    for kh in 0..s.kh {
+                        for kw in 0..s.kw {
+                            let hi = (ho * s.stride + kh) as isize - s.pad as isize;
+                            let wi = (wo * s.stride + kw) as isize - s.pad as isize;
+                            if hi < 0
+                                || hi >= s.h_in as isize
+                                || wi < 0
+                                || wi >= s.w_in as isize
+                            {
+                                offsets.push(None);
+                            } else {
+                                let off = ((n * s.h_in + hi as usize) * s.w_in
+                                    + wi as usize)
+                                    * s.c_in;
+                                offsets.push(Some(off));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Self {
+            out_positions,
+            taps,
+            offsets,
+        }
+    }
+
+    /// Offset for (output position, tap).
+    #[inline]
+    pub fn at(&self, pos: usize, tap: usize) -> Option<usize> {
+        self.offsets[pos * self.taps + tap]
+    }
+
+    /// Buffer size in bytes (8-byte pointers) — the memory-overhead
+    /// metric the indirect approach trades against the patch matrix.
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Dense NHWC convolution through the indirection buffer: the
+/// XNNPACK-baseline twin. Weights are the `[C_out, K]` filter matrix with
+/// k-major/channel-inner rows (same as the CNHW path). Output NHWC
+/// `[N, H_out, W_out, C_out]`.
+pub fn conv2d_indirect_nhwc(
+    x: &Tensor,
+    filter: &[f32],
+    s: &ConvShape,
+    ib: &IndirectionBuffer,
+) -> Tensor {
+    assert_eq!(x.shape, vec![s.n, s.h_in, s.w_in, s.c_in]);
+    let k = s.k();
+    assert_eq!(filter.len(), s.c_out * k);
+    let (h_out, w_out) = (s.h_out(), s.w_out());
+    let mut out = Tensor::zeros(&[s.n, h_out, w_out, s.c_out]);
+    for pos in 0..ib.out_positions {
+        let out_base = pos * s.c_out;
+        for tap in 0..ib.taps {
+            let Some(off) = ib.at(pos, tap) else {
+                continue;
+            };
+            let pixel = &x.data[off..off + s.c_in];
+            for o in 0..s.c_out {
+                let wrow = &filter[o * k + tap * s.c_in..o * k + (tap + 1) * s.c_in];
+                let mut acc = 0.0f32;
+                for (wv, xv) in wrow.iter().zip(pixel) {
+                    acc += wv * xv;
+                }
+                out.data[out_base + o] += acc;
+            }
+        }
+    }
+    out
+}
+
+/// Multi-threaded variant parallelising over output positions (each
+/// position writes a disjoint `[C_out]` slice).
+pub fn conv2d_indirect_nhwc_parallel(
+    x: &Tensor,
+    filter: &[f32],
+    s: &ConvShape,
+    ib: &IndirectionBuffer,
+    threads: usize,
+) -> Tensor {
+    if threads <= 1 {
+        return conv2d_indirect_nhwc(x, filter, s, ib);
+    }
+    assert_eq!(x.shape, vec![s.n, s.h_in, s.w_in, s.c_in]);
+    let k = s.k();
+    assert_eq!(filter.len(), s.c_out * k);
+    let (h_out, w_out) = (s.h_out(), s.w_out());
+    let mut out = Tensor::zeros(&[s.n, h_out, w_out, s.c_out]);
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    impl SendPtr {
+        fn get(&self) -> *mut f32 {
+            self.0
+        }
+    }
+    let optr = SendPtr(out.data.as_mut_ptr());
+    let olen = out.data.len();
+    crate::util::threadpool::scope_chunks(threads, ib.out_positions, |p0, p1| {
+        let odata = unsafe { std::slice::from_raw_parts_mut(optr.get(), olen) };
+        for pos in p0..p1 {
+            let out_base = pos * s.c_out;
+            for tap in 0..ib.taps {
+                let Some(off) = ib.at(pos, tap) else {
+                    continue;
+                };
+                let pixel = &x.data[off..off + s.c_in];
+                for o in 0..s.c_out {
+                    let wrow = &filter[o * k + tap * s.c_in..o * k + (tap + 1) * s.c_in];
+                    let mut acc = 0.0f32;
+                    for (wv, xv) in wrow.iter().zip(pixel) {
+                        acc += wv * xv;
+                    }
+                    odata[out_base + o] += acc;
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::naive::conv2d_direct_cnhw;
+    use crate::tensor::layout::{nhwc_to_cnhw, cnhw_to_nhwc, oihw_to_filter_matrix};
+    use crate::util::{allclose, XorShiftRng};
+
+    #[test]
+    fn indirect_conv_matches_direct() {
+        let mut r = XorShiftRng::new(51);
+        for s in [
+            ConvShape::square(1, 3, 6, 4, 3, 1, 1),
+            ConvShape::square(2, 2, 8, 3, 3, 2, 1),
+            ConvShape::square(1, 5, 4, 2, 1, 1, 0),
+        ] {
+            let x_nhwc = Tensor::random(&[s.n, s.h_in, s.w_in, s.c_in], &mut r, -1.0, 1.0);
+            let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -1.0, 1.0);
+            let ib = IndirectionBuffer::build(&s);
+            let got = conv2d_indirect_nhwc(&x_nhwc, &oihw_to_filter_matrix(&w).data, &s, &ib);
+            let want_cnhw = conv2d_direct_cnhw(&nhwc_to_cnhw(&x_nhwc), &w, &s);
+            let want = cnhw_to_nhwc(&want_cnhw);
+            assert!(
+                allclose(&got.data, &want.data, 1e-4, 1e-5),
+                "{s}: max diff {}",
+                crate::util::max_abs_diff(&got.data, &want.data)
+            );
+        }
+    }
+
+    #[test]
+    fn padding_taps_are_none() {
+        let s = ConvShape::square(1, 1, 3, 1, 3, 1, 1);
+        let ib = IndirectionBuffer::build(&s);
+        // First output position (0,0): taps at kh=0 or kw=0 are padding.
+        assert_eq!(ib.at(0, 0), None); // (-1,-1)
+        assert_eq!(ib.at(0, 4), Some(0)); // centre tap -> pixel (0,0)
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut r = XorShiftRng::new(52);
+        let s = ConvShape::square(2, 4, 9, 6, 3, 2, 1);
+        let x = Tensor::random(&[s.n, s.h_in, s.w_in, s.c_in], &mut r, -1.0, 1.0);
+        let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -1.0, 1.0);
+        let f = oihw_to_filter_matrix(&w).data;
+        let ib = IndirectionBuffer::build(&s);
+        let serial = conv2d_indirect_nhwc(&x, &f, &s, &ib);
+        for threads in [2, 4, 8] {
+            let par = conv2d_indirect_nhwc_parallel(&x, &f, &s, &ib, threads);
+            assert_eq!(par.data, serial.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn buffer_bytes_grow_with_output() {
+        let small = IndirectionBuffer::build(&ConvShape::square(1, 8, 8, 8, 3, 1, 1));
+        let big = IndirectionBuffer::build(&ConvShape::square(1, 8, 16, 8, 3, 1, 1));
+        assert!(big.bytes() > small.bytes());
+    }
+}

@@ -1,0 +1,115 @@
+//! im2col, data packing, their fusion (Algorithm 2), and the
+//! XNNPACK-style indirection buffer used by the dense NHWC baseline.
+//!
+//! Data-matrix convention (Fig. 4): for a conv of shape `s`,
+//! `A[K, cols]` with `K = K_h·K_w·C_in` rows ordered kernel-position-major
+//! / input-channel-minor (matching [`crate::tensor::layout::oihw_to_filter_matrix`])
+//! and `cols = N·H_out·W_out` columns ordered `(n, h_out, w_out)` with
+//! `w_out` innermost — i.e. batch-spanning, which is the CNHW layout's
+//! packing advantage (§5).
+//!
+//! Packing reorganises `A` into vector-aligned *strips*: strip `s` holds
+//! columns `[s·V, (s+1)·V)` for all K rows, row-major `[K, V]`, so the
+//! GEMM micro-kernel streams rows of one strip contiguously (Fig. 2).
+
+pub mod naive;
+pub mod pack;
+pub mod fused;
+pub mod indirection;
+pub mod nchw;
+
+pub use fused::{fused_im2col_pack_cnhw, fused_im2col_pack_cnhw_into};
+pub use nchw::{fused_im2col_pack_nchw, nchw_total_strips};
+pub use indirection::{
+    conv2d_indirect_nhwc, conv2d_indirect_nhwc_parallel, IndirectionBuffer,
+};
+pub use naive::im2col_cnhw;
+pub use pack::{pack_data_matrix, PackedMatrix};
+
+use crate::conv::ConvShape;
+
+/// Logical column count of the data matrix for shape `s`.
+pub fn data_matrix_cols(s: &ConvShape) -> usize {
+    s.gemm_cols()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::{allclose, prop, XorShiftRng};
+
+    /// Cross-check: fused output must equal pack(im2col(x)) exactly,
+    /// over randomized shapes including stride/pad/tails.
+    #[test]
+    fn prop_fused_equals_separate() {
+        prop::check_seeded(
+            0xF00D,
+            |r, size| {
+                let s = ConvShape {
+                    n: 1 + size % 3,
+                    c_in: 1 + r.below(5),
+                    h_in: 3 + r.below(10),
+                    w_in: 3 + r.below(10),
+                    c_out: 1,
+                    kh: 1 + r.below(3),
+                    kw: 1 + r.below(3),
+                    stride: 1 + r.below(2),
+                    pad: r.below(2),
+                };
+                if s.h_in + 2 * s.pad < s.kh || s.w_in + 2 * s.pad < s.kw {
+                    return (s, Tensor::zeros(&[1, 1, 1, 1]), 8);
+                }
+                let x = Tensor::random(
+                    &[s.c_in, s.n, s.h_in, s.w_in],
+                    r,
+                    -1.0,
+                    1.0,
+                );
+                let v = [4, 8, 16, 32][r.below(4)];
+                (s, x, v)
+            },
+            |(s, x, v)| {
+                if x.len() == 1 {
+                    return true; // degenerate skip
+                }
+                let a = im2col_cnhw(x, s);
+                let sep = pack_data_matrix(&a, s.k(), data_matrix_cols(s), *v);
+                let fus = fused_im2col_pack_cnhw(x, s, *v);
+                sep.data == fus.data && sep.strips == fus.strips
+            },
+        );
+    }
+
+    /// The packed matrix must contain exactly the im2col values at the
+    /// strip positions, zero in the tail padding.
+    #[test]
+    fn packed_values_positionally_correct() {
+        let mut r = XorShiftRng::new(21);
+        let s = ConvShape::square(2, 3, 6, 4, 3, 1, 1);
+        let x = Tensor::random(&[3, 2, 6, 6], &mut r, -1.0, 1.0);
+        let a = im2col_cnhw(&x, &s);
+        let v = 16;
+        let p = pack_data_matrix(&a, s.k(), s.gemm_cols(), v);
+        let cols = s.gemm_cols();
+        for strip in 0..p.strips {
+            for k in 0..s.k() {
+                for j in 0..v {
+                    let col = strip * v + j;
+                    let want = if col < cols { a[k * cols + col] } else { 0.0 };
+                    assert_eq!(p.at(strip, k, j), want, "strip {strip} k {k} j {j}");
+                }
+            }
+        }
+    }
+
+    /// 1x1 stride-1 no-pad conv: the data matrix is just the reshaped input.
+    #[test]
+    fn pointwise_im2col_is_identity() {
+        let mut r = XorShiftRng::new(22);
+        let s = ConvShape::square(2, 5, 4, 7, 1, 1, 0);
+        let x = Tensor::random(&[5, 2, 4, 4], &mut r, -1.0, 1.0);
+        let a = im2col_cnhw(&x, &s);
+        assert!(allclose(&a, &x.data, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,148 @@
+//! Reference (unfused) im2col over CNHW inputs.
+
+use crate::conv::ConvShape;
+use crate::tensor::Tensor;
+
+/// im2col over a CNHW input `[C_in, N, H_in, W_in]` producing the dense
+/// data matrix `A[K, cols]`, K = K_h·K_w·C_in rows ordered (k_h, k_w)
+/// outer / channel inner; cols = N·H_out·W_out ordered (n, h_out, w_out).
+/// Out-of-bounds (padding) reads contribute 0.
+pub fn im2col_cnhw(x: &Tensor, s: &ConvShape) -> Vec<f32> {
+    assert_eq!(
+        x.shape,
+        vec![s.c_in, s.n, s.h_in, s.w_in],
+        "input must be CNHW for {s}"
+    );
+    let (h_out, w_out) = (s.h_out(), s.w_out());
+    let cols = s.n * h_out * w_out;
+    let k = s.k();
+    let mut a = vec![0.0f32; k * cols];
+    for kh in 0..s.kh {
+        for kw in 0..s.kw {
+            for c in 0..s.c_in {
+                let row = (kh * s.kw + kw) * s.c_in + c;
+                for n in 0..s.n {
+                    for ho in 0..h_out {
+                        let hi = (ho * s.stride + kh) as isize - s.pad as isize;
+                        if hi < 0 || hi >= s.h_in as isize {
+                            continue; // whole row of w_out stays zero
+                        }
+                        let hi = hi as usize;
+                        let in_base = ((c * s.n + n) * s.h_in + hi) * s.w_in;
+                        let out_base = row * cols + (n * h_out + ho) * w_out;
+                        for wo in 0..w_out {
+                            let wi = (wo * s.stride + kw) as isize - s.pad as isize;
+                            if wi < 0 || wi >= s.w_in as isize {
+                                continue;
+                            }
+                            a[out_base + wo] = x.data[in_base + wi as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    a
+}
+
+/// Fully naive direct convolution over CNHW input and OIHW weights —
+/// the ground-truth oracle every GEMM path is checked against.
+/// Returns output in CNHW `[C_out, N, H_out, W_out]`.
+pub fn conv2d_direct_cnhw(x: &Tensor, w_oihw: &Tensor, s: &ConvShape) -> Tensor {
+    assert_eq!(x.shape, vec![s.c_in, s.n, s.h_in, s.w_in]);
+    assert_eq!(w_oihw.shape, vec![s.c_out, s.c_in, s.kh, s.kw]);
+    let (h_out, w_out) = (s.h_out(), s.w_out());
+    let mut out = Tensor::zeros(&[s.c_out, s.n, h_out, w_out]);
+    for o in 0..s.c_out {
+        for n in 0..s.n {
+            for ho in 0..h_out {
+                for wo in 0..w_out {
+                    let mut acc = 0.0f32;
+                    for c in 0..s.c_in {
+                        for kh in 0..s.kh {
+                            let hi = (ho * s.stride + kh) as isize - s.pad as isize;
+                            if hi < 0 || hi >= s.h_in as isize {
+                                continue;
+                            }
+                            for kw in 0..s.kw {
+                                let wi = (wo * s.stride + kw) as isize - s.pad as isize;
+                                if wi < 0 || wi >= s.w_in as isize {
+                                    continue;
+                                }
+                                acc += x.at(&[c, n, hi as usize, wi as usize])
+                                    * w_oihw.at(&[o, c, kh, kw]);
+                            }
+                        }
+                    }
+                    *out.at_mut(&[o, n, ho, wo]) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::layout::oihw_to_filter_matrix;
+    use crate::util::{allclose, XorShiftRng};
+
+    /// A[K, cols] × filter must reproduce direct convolution:
+    /// out[o, col] = Σ_k W_f[o,k] · A[k,col].
+    #[test]
+    fn im2col_gemm_matches_direct_conv() {
+        let mut r = XorShiftRng::new(31);
+        for s in [
+            ConvShape::square(1, 2, 5, 3, 3, 1, 1),
+            ConvShape::square(2, 3, 7, 4, 3, 2, 1),
+            ConvShape::square(1, 4, 6, 2, 1, 1, 0),
+            ConvShape::square(1, 2, 9, 3, 7, 2, 3),
+        ] {
+            let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+            let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -1.0, 1.0);
+            let a = im2col_cnhw(&x, &s);
+            let f = oihw_to_filter_matrix(&w);
+            let cols = s.gemm_cols();
+            let k = s.k();
+            let mut got = vec![0.0f32; s.c_out * cols];
+            for o in 0..s.c_out {
+                for kk in 0..k {
+                    let wv = f.data[o * k + kk];
+                    for c in 0..cols {
+                        got[o * cols + c] += wv * a[kk * cols + c];
+                    }
+                }
+            }
+            let want = conv2d_direct_cnhw(&x, &w, &s);
+            assert!(
+                allclose(&got, &want.data, 1e-4, 1e-5),
+                "mismatch for {s}: max diff {}",
+                crate::util::max_abs_diff(&got, &want.data)
+            );
+        }
+    }
+
+    #[test]
+    fn padding_region_is_zero() {
+        // All-ones input; padded corners of the data matrix must be 0.
+        let s = ConvShape::square(1, 1, 3, 1, 3, 1, 1);
+        let x = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let a = im2col_cnhw(&x, &s);
+        // Row (kh=0,kw=0,c=0) column (ho=0,wo=0) reads x[-1,-1] -> 0.
+        assert_eq!(a[0], 0.0);
+        // Row (kh=1,kw=1) is the centre tap: all 9 entries are 1.
+        let centre = (1 * 3 + 1) * 1;
+        let cols = s.gemm_cols();
+        assert!(a[centre * cols..(centre + 1) * cols].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn stride_two_samples_correct_pixels() {
+        // 1x1 kernel stride 2 picks even-indexed pixels.
+        let s = ConvShape::square(1, 1, 4, 1, 1, 2, 0);
+        let x = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let a = im2col_cnhw(&x, &s);
+        assert_eq!(a, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+}

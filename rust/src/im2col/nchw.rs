@@ -1,0 +1,106 @@
+//! NCHW-layout im2col — the §5 alternative (Elsen et al. [13]).
+//!
+//! NCHW also has W innermost, so vectorised im2col works per image; the
+//! difference from CNHW is *batch-level packing*: each image yields its
+//! own `[K, H_out·W_out]` data matrix, so strips cannot span batch
+//! boundaries. With small per-image column counts this under-fills
+//! vector lanes (§5 point 2) and runs `N` separate GEMMs. The paper
+//! keeps CNHW; this module exists so the discussion's claim can be
+//! *measured* rather than asserted (ablation C / fig12).
+
+use super::fused::fused_im2col_pack_cnhw_into;
+use super::pack::PackedMatrix;
+use crate::conv::ConvShape;
+use crate::tensor::Tensor;
+
+/// Per-image fused im2col+pack over an NCHW input `[N, C, H, W]`:
+/// returns one packed matrix per image (strips never span batches).
+pub fn fused_im2col_pack_nchw(x: &Tensor, s: &ConvShape, v: usize) -> Vec<PackedMatrix> {
+    assert_eq!(
+        x.shape,
+        vec![s.n, s.c_in, s.h_in, s.w_in],
+        "input must be NCHW for {s}"
+    );
+    let image_len = s.c_in * s.h_in * s.w_in;
+    let mut single = *s;
+    single.n = 1;
+    (0..s.n)
+        .map(|n| {
+            // One image in NCHW is exactly CNHW with N=1.
+            let img = Tensor::from_vec(
+                &[s.c_in, 1, s.h_in, s.w_in],
+                x.data[n * image_len..(n + 1) * image_len].to_vec(),
+            );
+            let mut p = PackedMatrix::zeros(1, 1, 1);
+            fused_im2col_pack_cnhw_into(&img, &single, v, &mut p);
+            p
+        })
+        .collect()
+}
+
+/// Total strips across the per-image matrices — the §5 utilisation
+/// metric (CNHW needs `ceil(N·H_out·W_out / v)`, NCHW needs
+/// `N · ceil(H_out·W_out / v)`).
+pub fn nchw_total_strips(s: &ConvShape, v: usize) -> usize {
+    s.n * (s.h_out() * s.w_out()).div_ceil(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::naive::im2col_cnhw;
+    use crate::im2col::pack::pack_data_matrix;
+    use crate::tensor::layout::{cnhw_to_nhwc, nhwc_to_nchw};
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn per_image_matrices_match_single_image_cnhw() {
+        let s = ConvShape::square(3, 4, 8, 5, 3, 1, 1);
+        let mut r = XorShiftRng::new(31);
+        let x_cnhw = Tensor::random(&[4, 3, 8, 8], &mut r, -1.0, 1.0);
+        let x_nchw = nhwc_to_nchw(&cnhw_to_nhwc(&x_cnhw));
+        let per_image = fused_im2col_pack_nchw(&x_nchw, &s, 8);
+        assert_eq!(per_image.len(), 3);
+        // Each image's matrix equals a batch-1 CNHW im2col of that image.
+        let mut single = s;
+        single.n = 1;
+        for (n, p) in per_image.iter().enumerate() {
+            let mut img = Tensor::zeros(&[4, 1, 8, 8]);
+            for c in 0..4 {
+                for i in 0..64 {
+                    img.data[c * 64 + i] = x_cnhw.data[(c * 3 + n) * 64 + i];
+                }
+            }
+            let want = pack_data_matrix(&im2col_cnhw(&img, &single), single.k(), 64, 8);
+            assert_eq!(p.data, want.data, "image {n}");
+        }
+    }
+
+    #[test]
+    fn strip_count_never_beats_cnhw() {
+        // NCHW can only waste lanes relative to batch-spanning CNHW.
+        for (n, hw, v) in [(1, 7, 32), (2, 7, 32), (4, 7, 32), (4, 56, 16), (3, 5, 64)] {
+            let s = ConvShape::square(n, 8, hw, 8, 3, 1, 1);
+            let cnhw = s.gemm_cols().div_ceil(v);
+            assert!(
+                nchw_total_strips(&s, v) >= cnhw,
+                "n={n} hw={hw} v={v}"
+            );
+        }
+        // And is strictly worse when per-image cols don't fill a strip.
+        let s = ConvShape::square(4, 8, 7, 8, 3, 1, 1); // 49 cols/image
+        assert!(nchw_total_strips(&s, 32) > s.gemm_cols().div_ceil(32));
+    }
+
+    #[test]
+    fn batch1_equals_cnhw_exactly() {
+        let s = ConvShape::square(1, 2, 6, 3, 3, 1, 1);
+        let mut r = XorShiftRng::new(32);
+        let x_cnhw = Tensor::random(&[2, 1, 6, 6], &mut r, -1.0, 1.0);
+        // CNHW [C,1,H,W] and NCHW [1,C,H,W] hold identical data at N=1.
+        let x_nchw = Tensor::from_vec(&[1, 2, 6, 6], x_cnhw.data.clone());
+        let per_image = fused_im2col_pack_nchw(&x_nchw, &s, 8);
+        let whole = crate::im2col::fused_im2col_pack_cnhw(&x_cnhw, &s, 8);
+        assert_eq!(per_image[0].data, whole.data);
+    }
+}

@@ -1,0 +1,164 @@
+//! Data packing: reorganise the data matrix into vector-aligned strips
+//! (Fig. 2). Separate from im2col here; [`super::fused`] does both in one
+//! pass (Algorithm 2).
+
+/// Data matrix packed into strips of `v` columns: `data` has layout
+/// `[strips, k, v]` row-major; the tail strip is zero-padded.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedMatrix {
+    /// Strip width (vector length in elements = VLEN·LMUL / 32).
+    pub v: usize,
+    /// Reduction rows (K).
+    pub k: usize,
+    /// Logical (unpadded) column count.
+    pub cols: usize,
+    /// Number of strips = ceil(cols / v).
+    pub strips: usize,
+    pub data: Vec<f32>,
+}
+
+impl PackedMatrix {
+    /// Zero-initialised packed matrix.
+    pub fn zeros(k: usize, cols: usize, v: usize) -> Self {
+        let strips = cols.div_ceil(v).max(1);
+        Self {
+            v,
+            k,
+            cols,
+            strips,
+            data: vec![0.0; strips * k * v],
+        }
+    }
+
+    /// Re-shape an existing packed matrix for reuse, zero-filling its
+    /// buffer in place. Keeps the allocation (and its resident pages)
+    /// across conv invocations — §Perf step 3.
+    pub fn reset(&mut self, k: usize, cols: usize, v: usize) {
+        let strips = cols.div_ceil(v).max(1);
+        self.v = v;
+        self.k = k;
+        self.cols = cols;
+        self.strips = strips;
+        let len = strips * k * v;
+        self.data.clear();
+        self.data.resize(len, 0.0);
+    }
+
+    /// Element at (strip, row, lane).
+    #[inline]
+    pub fn at(&self, strip: usize, row: usize, lane: usize) -> f32 {
+        self.data[(strip * self.k + row) * self.v + lane]
+    }
+
+    /// Contiguous `[k, v]` slice of one strip.
+    #[inline]
+    pub fn strip(&self, strip: usize) -> &[f32] {
+        &self.data[strip * self.k * self.v..(strip + 1) * self.k * self.v]
+    }
+
+    /// Mutable strip slice.
+    #[inline]
+    pub fn strip_mut(&mut self, strip: usize) -> &mut [f32] {
+        &mut self.data[strip * self.k * self.v..(strip + 1) * self.k * self.v]
+    }
+
+    /// Valid (unpadded) lane count of a strip.
+    #[inline]
+    pub fn strip_valid(&self, strip: usize) -> usize {
+        if (strip + 1) * self.v <= self.cols {
+            self.v
+        } else {
+            self.cols - strip * self.v
+        }
+    }
+
+    /// Unpack back to the dense `[k, cols]` matrix (testing only).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut a = vec![0.0f32; self.k * self.cols];
+        for s in 0..self.strips {
+            let valid = self.strip_valid(s);
+            for r in 0..self.k {
+                for j in 0..valid {
+                    a[r * self.cols + s * self.v + j] = self.at(s, r, j);
+                }
+            }
+        }
+        a
+    }
+}
+
+/// Pack a dense data matrix `a[k, cols]` into strips of width `v`.
+/// This is the *separate* packing pass the paper's baseline performs
+/// after a standalone im2col.
+pub fn pack_data_matrix(a: &[f32], k: usize, cols: usize, v: usize) -> PackedMatrix {
+    assert_eq!(a.len(), k * cols, "data matrix shape");
+    assert!(v >= 1);
+    let mut p = PackedMatrix::zeros(k, cols, v);
+    for s in 0..p.strips {
+        let valid = p.strip_valid(s);
+        for r in 0..k {
+            let src = &a[r * cols + s * v..r * cols + s * v + valid];
+            let dst_base = (s * k + r) * v;
+            p.data[dst_base..dst_base + valid].copy_from_slice(src);
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, XorShiftRng};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut r = XorShiftRng::new(41);
+        for (k, cols, v) in [(3, 10, 4), (1, 1, 8), (5, 32, 32), (4, 33, 16)] {
+            let a = r.normal_vec(k * cols, 1.0);
+            let p = pack_data_matrix(&a, k, cols, v);
+            assert_eq!(p.unpack(), a, "k={k} cols={cols} v={v}");
+        }
+    }
+
+    #[test]
+    fn tail_strip_is_zero_padded() {
+        let a = vec![1.0f32; 2 * 5]; // k=2, cols=5
+        let p = pack_data_matrix(&a, 2, 5, 4);
+        assert_eq!(p.strips, 2);
+        assert_eq!(p.strip_valid(0), 4);
+        assert_eq!(p.strip_valid(1), 1);
+        // lanes 1..4 of strip 1 are padding zeros
+        for r in 0..2 {
+            assert_eq!(p.at(1, r, 0), 1.0);
+            for j in 1..4 {
+                assert_eq!(p.at(1, r, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn strip_rows_are_contiguous() {
+        // The GEMM kernel indexes strip memory as [k, v] row-major; verify.
+        let a: Vec<f32> = (0..3 * 8).map(|i| i as f32).collect(); // k=3, cols=8
+        let p = pack_data_matrix(&a, 3, 8, 4);
+        assert_eq!(p.strip(0), &[0., 1., 2., 3., 8., 9., 10., 11., 16., 17., 18., 19.]);
+        assert_eq!(p.strip(1), &[4., 5., 6., 7., 12., 13., 14., 15., 20., 21., 22., 23.]);
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_shapes() {
+        prop::check_seeded(
+            0x9ACC,
+            |r, size| {
+                let k = 1 + size % 12;
+                let cols = 1 + r.below(100);
+                let v = [1, 2, 4, 8, 16, 32, 64][r.below(7)];
+                (r.normal_vec(k * cols, 1.0), k, cols, v)
+            },
+            |(a, k, cols, v)| {
+                let p = pack_data_matrix(a, *k, *cols, *v);
+                p.unpack() == *a && p.strips == cols.div_ceil(*v)
+            },
+        );
+    }
+}

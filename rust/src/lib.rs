@@ -1,0 +1,26 @@
+//! # nmprune — Column-wise N:M pruning for vector CPUs
+//!
+//! Reproduction of *"Efficient Column-Wise N:M Pruning on RISC-V CPU"*
+//! (Chu, Hong, Wu — Academia Sinica, 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate is the Layer-3 coordinator: it owns pruning, layout
+//! transforms, the native tiled GEMM/convolution hot path, an RVV
+//! (RISC-V Vector) simulator used to reproduce the paper's L1-cache-load
+//! and cycle metrics, an AITemplate-style auto-tuner, a model zoo of the
+//! paper's CNN architectures, and a batching inference engine.  AOT
+//! compiled JAX/Pallas artifacts (HLO text) are loaded and executed via
+//! PJRT in [`runtime`].
+
+pub mod util;
+pub mod tensor;
+pub mod pruning;
+pub mod im2col;
+pub mod gemm;
+pub mod conv;
+pub mod rvv;
+pub mod models;
+pub mod tuner;
+pub mod engine;
+pub mod runtime;
+pub mod benchlib;

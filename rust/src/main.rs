@@ -1,0 +1,258 @@
+//! `nmprune` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   models                       list model zoo entries with MACs/params
+//!   run    --model M [...]       single inference, timing report
+//!   serve  --model M [...]       batching server demo with load generator
+//!   tune   --model M [...]       per-layer (T, LMUL) auto-tuning
+//!   sim    [--layer i]           RVV-simulator kernel comparison
+//!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
+
+use std::time::Instant;
+
+use nmprune::engine::{ExecConfig, Server, ServerConfig};
+use nmprune::models::{build_model, model_names, resnet50_fig5_layers, ModelArch};
+use nmprune::tensor::Tensor;
+use nmprune::tuner;
+use nmprune::util::cli::Args;
+use nmprune::util::XorShiftRng;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("models") => cmd_models(),
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "usage: nmprune <models|run|serve|tune|sim|artifacts> [options]\n\
+                 common options: --model resnet50 --batch 1 --res 224 \
+                 --threads N --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_model(args: &Args) -> ModelArch {
+    let name = args.get_or("model", "resnet50");
+    ModelArch::parse(&name).unwrap_or_else(|| {
+        eprintln!("unknown model {name:?}; available: {:?}", model_names());
+        std::process::exit(2);
+    })
+}
+
+fn parse_exec(args: &Args) -> ExecConfig {
+    let threads = args.get_parsed("threads", 4usize);
+    let sparsity = args.get_parsed("sparsity", 0.5f64);
+    match args.get_or("path", "sparse").as_str() {
+        "nhwc" => ExecConfig::dense_nhwc(threads),
+        "cnhw" => ExecConfig::dense_cnhw(threads),
+        "sparse" => ExecConfig::sparse_cnhw(threads, sparsity),
+        p => {
+            eprintln!("unknown path {p:?} (nhwc|cnhw|sparse)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_models() {
+    println!(
+        "{:<14} {:>8} {:>12} {:>10}",
+        "model", "convs", "conv GMACs", "params(M)"
+    );
+    for &name in model_names() {
+        let arch = ModelArch::parse(name).unwrap();
+        let g = build_model(arch, 1, 224);
+        println!(
+            "{:<14} {:>8} {:>12.2} {:>10.1}",
+            name,
+            g.conv_shapes().len(),
+            g.conv_macs() as f64 / 1e9,
+            g.conv_params() as f64 / 1e6,
+        );
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let arch = parse_model(args);
+    let batch = args.get_parsed("batch", 1usize);
+    let res = args.get_parsed("res", 224usize);
+    let cfg = parse_exec(args);
+    let path = cfg.path;
+    println!(
+        "building {} batch={batch} res={res} path={path:?}",
+        arch.name()
+    );
+    let t0 = Instant::now();
+    let exec = nmprune::engine::Executor::new(build_model(arch, batch, res), cfg);
+    println!("compile: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let mut rng = XorShiftRng::new(1);
+    let x = Tensor::random(&[batch, res, res, 3], &mut rng, 0.0, 1.0);
+    // One warmup + one timed run.
+    exec.run(&x);
+    let t1 = Instant::now();
+    let y = exec.run(&x);
+    let dt = t1.elapsed();
+    let top: usize = (0..1000)
+        .max_by(|&a, &b| y.data[a].partial_cmp(&y.data[b]).unwrap())
+        .unwrap();
+    println!(
+        "inference: {:.1} ms  ({:.1} img/s)  argmax={top}  weights={:.1} MiB",
+        dt.as_secs_f64() * 1e3,
+        batch as f64 / dt.as_secs_f64(),
+        exec.conv_weight_bytes() as f64 / (1 << 20) as f64,
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let arch = parse_model(args);
+    let res = args.get_parsed("res", 224usize);
+    let cfg = parse_exec(args);
+    let requests = args.get_parsed("requests", 32usize);
+    let max_batch = args.get_parsed("max-batch", 4usize);
+    let server = Server::start(
+        |b| build_model(arch, b, res),
+        cfg,
+        res,
+        ServerConfig {
+            batch_sizes: (0..)
+                .map(|i| 1usize << i)
+                .take_while(|&b| b <= max_batch)
+                .collect(),
+            batch_window: std::time::Duration::from_millis(
+                args.get_parsed("window-ms", 5u64),
+            ),
+        },
+    );
+    println!("serving {requests} requests on {} @{res} ...", arch.name());
+    let mut rng = XorShiftRng::new(7);
+    let handles: Vec<_> = (0..requests)
+        .map(|_| server.submit(Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0)))
+        .collect();
+    for h in handles {
+        h.recv().expect("reply");
+    }
+    let stats = server.shutdown();
+    println!(
+        "served={}  throughput={:.2} req/s  mean_batch={:.2}\n\
+         latency: mean={:.1} ms  p50={:.1} ms  p95={:.1} ms",
+        stats.served,
+        stats.throughput_rps,
+        stats.mean_batch,
+        stats.latency.mean / 1e6,
+        stats.latency.median / 1e6,
+        stats.latency.p95 / 1e6,
+    );
+}
+
+fn cmd_tune(args: &Args) {
+    let arch = parse_model(args);
+    let batch = args.get_parsed("batch", 1usize);
+    let res = args.get_parsed("res", 224usize);
+    let sparsity = args.get_parsed("sparsity", 0.5f64);
+    let tile_cap = args.get_parsed("tile-cap", 16usize);
+    let use_sim = !args.has_flag("native");
+    let cache_path = args.get_or("cache", "artifacts/tune_cache.tsv");
+    let mut cache = tuner::TuneCache::load(&cache_path);
+    let g = build_model(arch, batch, res);
+    println!(
+        "tuning {} layers of {} ({}); cache: {cache_path}",
+        g.conv_shapes().len(),
+        arch.name(),
+        if use_sim { "sim cycles" } else { "native wall-clock" }
+    );
+    println!("{:<16} {:>6} {:>6} {:>14}", "layer", "LMUL", "T", "score");
+    for (name, shape) in g.conv_shapes() {
+        let key = tuner::cache_key(&shape, Some(sparsity));
+        cache.get_or_tune(key, || {
+            let r = if use_sim {
+                tuner::tune_sim_colwise(&shape, sparsity, tile_cap)
+            } else {
+                tuner::tune_native(&shape, Some(sparsity), 1, tile_cap)
+            };
+            println!(
+                "{:<16} {:>6} {:>6} {:>14.0}",
+                name, r.best.lmul, r.best.tile, r.best.score
+            );
+            r.choice()
+        });
+    }
+    cache.save(&cache_path).expect("save cache");
+    println!("saved {} entries", cache.entries.len());
+}
+
+fn cmd_sim(args: &Args) {
+    use nmprune::im2col::pack_data_matrix;
+    use nmprune::pruning::{prune_colwise_adaptive, prune_rownm};
+    use nmprune::rvv::kernels::{
+        sim_gemm_dense, sim_spmm_colwise, sim_spmm_outer_rownm,
+    };
+    use nmprune::rvv::RvvMachine;
+    use nmprune::tensor::layout::oihw_to_filter_matrix;
+
+    let layers = resnet50_fig5_layers(1);
+    let li = args.get_parsed("layer", 1usize).min(layers.len() - 1);
+    let l = &layers[li];
+    let lmul = args.get_parsed("lmul", 2usize);
+    let sparsity = args.get_parsed("sparsity", 0.5f64);
+    let s = l.shape;
+    println!(
+        "simulating {} {} at sparsity {sparsity}, LMUL={lmul}",
+        l.name, s
+    );
+
+    let mut rng = XorShiftRng::new(3);
+    let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+    let f = oihw_to_filter_matrix(&w);
+    // Bounded columns for a quick CLI demo.
+    let m0 = RvvMachine::k1();
+    let v = m0.vlmax(lmul);
+    let cols = s.gemm_cols().min(16 * v);
+    let a = rng.normal_vec(s.k() * cols, 1.0);
+    let packed = pack_data_matrix(&a, s.k(), cols, v);
+
+    let n = nmprune::pruning::retained_for_sparsity(4, sparsity);
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}",
+        "kernel", "L1 loads", "instrs", "cycles"
+    );
+    let mut m = RvvMachine::k1();
+    let (_, dense) = sim_gemm_dense(&mut m, &f.data, s.c_out, &packed, 8, lmul);
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}",
+        "dense", dense.l1_loads, dense.instructions, dense.cycles
+    );
+    let rp = prune_rownm(&f.data, s.c_out, s.k(), n, 4);
+    let mut m = RvvMachine::k1();
+    let (_, outer) = sim_spmm_outer_rownm(&mut m, &rp, &packed, lmul);
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}",
+        "conventional N:M", outer.l1_loads, outer.instructions, outer.cycles
+    );
+    let cp = prune_colwise_adaptive(&f.data, s.c_out, s.k(), 8, sparsity);
+    let mut m = RvvMachine::k1();
+    let (_, col) = sim_spmm_colwise(&mut m, &cp, &packed, lmul);
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}",
+        "column-wise (ours)", col.l1_loads, col.instructions, col.cycles
+    );
+    println!(
+        "\nspeedup vs dense: conventional {:.2}x, column-wise {:.2}x",
+        dense.cycles as f64 / outer.cycles as f64,
+        dense.cycles as f64 / col.cycles as f64
+    );
+}
+
+fn cmd_artifacts(args: &Args) {
+    let manifest = args.get_or("manifest", "artifacts/manifest.tsv");
+    let rt = nmprune::runtime::PjrtRuntime::cpu().expect("pjrt client");
+    println!("platform: {}", rt.platform());
+    let names = rt
+        .load_manifest(std::path::Path::new(&manifest))
+        .expect("load manifest (run `make artifacts` first)");
+    println!("loaded {} artifacts: {names:?}", names.len());
+}

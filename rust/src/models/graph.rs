@@ -1,0 +1,263 @@
+//! Minimal dataflow graph IR for CNN inference.
+//!
+//! Nodes are appended in topological order by the zoo builders; each
+//! node records its logical output geometry (c, h, w) for a fixed batch
+//! size so the executor can pre-allocate and the tuner can enumerate
+//! conv shapes without running anything.
+
+use crate::conv::ConvShape;
+
+/// Operator kinds. Convolution weights are not stored in the graph —
+/// the executor materialises them (seeded) per node at load time, as a
+/// stand-in for checkpoint loading.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Graph input: `[N, c, h, w]` logical activation.
+    Input { c: usize, h: usize, w: usize },
+    /// 2-D convolution (+ folded bias/BN omitted: inference-time BN is
+    /// fused multiplicatively and does not change kernel cost shape).
+    Conv { shape: ConvShape, relu: bool },
+    /// Depthwise 3×3 convolution (MobileNet-V2).
+    DepthwiseConv {
+        c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+    },
+    /// Max pooling.
+    MaxPool { k: usize, stride: usize, pad: usize },
+    /// Average pooling (DenseNet transitions).
+    AvgPool { k: usize, stride: usize },
+    /// Global average pool to `[c]` per image.
+    GlobalAvgPool,
+    /// Elementwise residual add (two inputs).
+    Add { relu: bool },
+    /// Channel concatenation (DenseNet).
+    Concat,
+    /// Fully connected classifier head.
+    Fc { in_features: usize, out_features: usize },
+}
+
+/// One graph node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub op: Op,
+    /// Producer node ids.
+    pub inputs: Vec<usize>,
+    /// Output geometry (channels, height, width); h=w=0 after GAP/FC.
+    pub out_c: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+/// A CNN inference graph for a fixed batch size.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub batch: usize,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str, batch: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            batch,
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Append a node; returns its id. Output geometry is derived from
+    /// the op and its inputs.
+    pub fn add(&mut self, name: &str, op: Op, inputs: &[usize]) -> usize {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "inputs must precede node (topo order)");
+        }
+        let (out_c, out_h, out_w) = self.infer_shape(&op, inputs);
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            op,
+            inputs: inputs.to_vec(),
+            out_c,
+            out_h,
+            out_w,
+        });
+        id
+    }
+
+    fn infer_shape(&self, op: &Op, inputs: &[usize]) -> (usize, usize, usize) {
+        let input = |i: usize| {
+            let n = &self.nodes[inputs[i]];
+            (n.out_c, n.out_h, n.out_w)
+        };
+        match op {
+            Op::Input { c, h, w } => (*c, *h, *w),
+            Op::Conv { shape, .. } => {
+                let (c, h, w) = input(0);
+                assert_eq!(
+                    (c, h, w),
+                    (shape.c_in, shape.h_in, shape.w_in),
+                    "conv input geometry mismatch"
+                );
+                assert_eq!(shape.n, self.batch);
+                (shape.c_out, shape.h_out(), shape.w_out())
+            }
+            Op::DepthwiseConv { c, k, stride, pad, .. } => {
+                let (ci, h, w) = input(0);
+                assert_eq!(ci, *c);
+                (
+                    *c,
+                    (h + 2 * pad - k) / stride + 1,
+                    (w + 2 * pad - k) / stride + 1,
+                )
+            }
+            Op::MaxPool { k, stride, pad } => {
+                let (c, h, w) = input(0);
+                (
+                    c,
+                    (h + 2 * pad - k) / stride + 1,
+                    (w + 2 * pad - k) / stride + 1,
+                )
+            }
+            Op::AvgPool { k, stride } => {
+                let (c, h, w) = input(0);
+                (c, (h - k) / stride + 1, (w - k) / stride + 1)
+            }
+            Op::GlobalAvgPool => {
+                let (c, _, _) = input(0);
+                (c, 0, 0)
+            }
+            Op::Add { .. } => {
+                let a = input(0);
+                let b = input(1);
+                assert_eq!(a, b, "residual add shape mismatch");
+                a
+            }
+            Op::Concat => {
+                let mut c_total = 0;
+                let (_, h0, w0) = input(0);
+                for i in 0..inputs.len() {
+                    let (c, h, w) = input(i);
+                    assert_eq!((h, w), (h0, w0), "concat spatial mismatch");
+                    c_total += c;
+                }
+                (c_total, h0, w0)
+            }
+            Op::Fc { in_features, out_features } => {
+                let (c, h, w) = input(0);
+                let feat = if h == 0 { c } else { c * h * w };
+                assert_eq!(feat, *in_features, "fc input features");
+                (*out_features, 0, 0)
+            }
+        }
+    }
+
+    /// All convolution shapes in the graph (for tuning / stats).
+    pub fn conv_shapes(&self) -> Vec<(String, ConvShape)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Conv { shape, .. } => Some((n.name.clone(), *shape)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total dense conv MACs.
+    pub fn conv_macs(&self) -> usize {
+        self.conv_shapes().iter().map(|(_, s)| s.macs()).sum()
+    }
+
+    /// Total conv weight parameters.
+    pub fn conv_params(&self) -> usize {
+        self.conv_shapes().iter().map(|(_, s)| s.weight_len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_propagate() {
+        let mut g = Graph::new("t", 1);
+        let x = g.add("in", Op::Input { c: 3, h: 8, w: 8 }, &[]);
+        let c1 = g.add(
+            "c1",
+            Op::Conv {
+                shape: ConvShape::square(1, 3, 8, 16, 3, 1, 1),
+                relu: true,
+            },
+            &[x],
+        );
+        let p = g.add(
+            "pool",
+            Op::MaxPool {
+                k: 2,
+                stride: 2,
+                pad: 0,
+            },
+            &[c1],
+        );
+        let gap = g.add("gap", Op::GlobalAvgPool, &[p]);
+        let fc = g.add(
+            "fc",
+            Op::Fc {
+                in_features: 16,
+                out_features: 10,
+            },
+            &[gap],
+        );
+        assert_eq!(
+            (g.nodes[c1].out_c, g.nodes[c1].out_h, g.nodes[c1].out_w),
+            (16, 8, 8)
+        );
+        assert_eq!((g.nodes[p].out_h, g.nodes[p].out_w), (4, 4));
+        assert_eq!(g.nodes[gap].out_c, 16);
+        assert_eq!(g.nodes[fc].out_c, 10);
+        assert_eq!(g.conv_shapes().len(), 1);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut g = Graph::new("t", 1);
+        let x = g.add("in", Op::Input { c: 4, h: 4, w: 4 }, &[]);
+        let y = g.add(
+            "c",
+            Op::Conv {
+                shape: ConvShape::square(1, 4, 4, 8, 1, 1, 0),
+                relu: false,
+            },
+            &[x],
+        );
+        let cat = g.add("cat", Op::Concat, &[x, y]);
+        assert_eq!(g.nodes[cat].out_c, 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv input geometry mismatch")]
+    fn bad_conv_shape_panics() {
+        let mut g = Graph::new("t", 1);
+        let x = g.add("in", Op::Input { c: 3, h: 8, w: 8 }, &[]);
+        g.add(
+            "c",
+            Op::Conv {
+                shape: ConvShape::square(1, 4, 8, 16, 3, 1, 1),
+                relu: false,
+            },
+            &[x],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "topo order")]
+    fn forward_reference_panics() {
+        let mut g = Graph::new("t", 1);
+        g.add("bad", Op::GlobalAvgPool, &[3]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Representative ResNet-50 layer tables used by the figure benchmarks.
+//!
+//! §4.2: "ResNet-50 comprises four stages, each containing three
+//! representative convolution layers. We select these layers with
+//! varying shapes for evaluation, excluding the downsampling layers."
+//! §4.3 uses the stem + the 3×3 conv2 of each stage; Fig. 10 adds the
+//! downsampling convs.
+
+use crate::conv::ConvShape;
+
+/// A named conv layer instance.
+#[derive(Clone, Copy, Debug)]
+pub struct NamedConv {
+    pub name: &'static str,
+    pub shape: ConvShape,
+}
+
+fn c(name: &'static str, n: usize, c_in: usize, hw: usize, c_out: usize, k: usize, stride: usize, pad: usize) -> NamedConv {
+    NamedConv {
+        name,
+        shape: ConvShape::square(n, c_in, hw, c_out, k, stride, pad),
+    }
+}
+
+/// The 12 Fig. 5 layers: conv1/conv2/conv3 of the first block of each
+/// stage (torchvision ResNet-50 geometry, batch `n`).
+pub fn resnet50_fig5_layers(n: usize) -> Vec<NamedConv> {
+    vec![
+        // Stage 1 @56×56
+        c("Stage1-conv1", n, 64, 56, 64, 1, 1, 0),
+        c("Stage1-conv2", n, 64, 56, 64, 3, 1, 1),
+        c("Stage1-conv3", n, 64, 56, 256, 1, 1, 0),
+        // Stage 2: conv1 @56, stride-2 conv2 →28
+        c("Stage2-conv1", n, 256, 56, 128, 1, 1, 0),
+        c("Stage2-conv2", n, 128, 56, 128, 3, 2, 1),
+        c("Stage2-conv3", n, 128, 28, 512, 1, 1, 0),
+        // Stage 3
+        c("Stage3-conv1", n, 512, 28, 256, 1, 1, 0),
+        c("Stage3-conv2", n, 256, 28, 256, 3, 2, 1),
+        c("Stage3-conv3", n, 256, 14, 1024, 1, 1, 0),
+        // Stage 4
+        c("Stage4-conv1", n, 1024, 14, 512, 1, 1, 0),
+        c("Stage4-conv2", n, 512, 14, 512, 3, 2, 1),
+        c("Stage4-conv3", n, 512, 7, 2048, 1, 1, 0),
+    ]
+}
+
+/// The Fig. 6/7/8 layers: stem (7×7) + the 3×3 conv2 of each stage —
+/// the layers where im2col overhead matters.
+pub fn resnet50_fig6_layers(n: usize) -> Vec<NamedConv> {
+    vec![
+        c("Stem-conv", n, 3, 224, 64, 7, 2, 3),
+        c("Stage1-conv2", n, 64, 56, 64, 3, 1, 1),
+        c("Stage2-conv2", n, 128, 56, 128, 3, 2, 1),
+        c("Stage3-conv2", n, 256, 28, 256, 3, 2, 1),
+        c("Stage4-conv2", n, 512, 14, 512, 3, 2, 1),
+    ]
+}
+
+/// Fig. 10's layer set: Fig. 5's layers plus the per-stage downsampling
+/// convs (1×1 stride-2 projections).
+pub fn resnet50_fig10_layers(n: usize) -> Vec<NamedConv> {
+    let mut layers = resnet50_fig5_layers(n);
+    layers.push(c("Stage1-down", n, 64, 56, 256, 1, 1, 0));
+    layers.push(c("Stage2-down", n, 256, 56, 512, 1, 2, 0));
+    layers.push(c("Stage3-down", n, 512, 28, 1024, 1, 2, 0));
+    layers.push(c("Stage4-down", n, 1024, 14, 2048, 1, 2, 0));
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_model, ModelArch};
+
+    /// Every Fig. 5 layer must actually occur in the ResNet-50 graph.
+    #[test]
+    fn fig5_layers_exist_in_resnet50() {
+        let g = build_model(ModelArch::ResNet50, 1, 224);
+        let shapes: Vec<ConvShape> = g.conv_shapes().into_iter().map(|(_, s)| s).collect();
+        for layer in resnet50_fig5_layers(1) {
+            assert!(
+                shapes.contains(&layer.shape),
+                "{} {:?} not found in graph",
+                layer.name,
+                layer.shape
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_downsampling_layers_exist() {
+        let g = build_model(ModelArch::ResNet50, 1, 224);
+        let shapes: Vec<ConvShape> = g.conv_shapes().into_iter().map(|(_, s)| s).collect();
+        for layer in resnet50_fig10_layers(1) {
+            assert!(shapes.contains(&layer.shape), "{}", layer.name);
+        }
+    }
+
+    #[test]
+    fn fig6_layers_are_spatial_kernels() {
+        for l in resnet50_fig6_layers(1) {
+            assert!(l.shape.kh >= 3, "{} must be a spatial conv", l.name);
+        }
+    }
+
+    #[test]
+    fn output_geometry_sane() {
+        for l in resnet50_fig5_layers(2) {
+            assert!(l.shape.h_out() > 0 && l.shape.w_out() > 0);
+            assert_eq!(l.shape.n, 2);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Model zoo: the seven CNNs of the paper's evaluation (§4.1.2), as
+//! layer graphs with exact ImageNet geometry, plus the representative
+//! per-layer shape tables used by Figs. 5–10.
+
+pub mod graph;
+pub mod zoo;
+pub mod layers;
+
+pub use graph::{Graph, Node, Op};
+pub use layers::{resnet50_fig5_layers, resnet50_fig6_layers, resnet50_fig10_layers, NamedConv};
+pub use zoo::{build_model, model_names, ModelArch};

@@ -1,0 +1,364 @@
+//! Builders for the paper's seven evaluation networks (§4.1.2), with
+//! torchvision-faithful ImageNet geometry: ResNet-18/34 (BasicBlock),
+//! ResNet-50/101/152 (Bottleneck), MobileNet-V2 (inverted residuals),
+//! DenseNet-121 (dense blocks + transitions).
+
+use super::graph::{Graph, Op};
+use crate::conv::ConvShape;
+
+/// Architectures in the evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelArch {
+    ResNet18,
+    ResNet34,
+    ResNet50,
+    ResNet101,
+    ResNet152,
+    MobileNetV2,
+    DenseNet121,
+}
+
+impl ModelArch {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "resnet18" | "resnet-18" => Self::ResNet18,
+            "resnet34" | "resnet-34" => Self::ResNet34,
+            "resnet50" | "resnet-50" => Self::ResNet50,
+            "resnet101" | "resnet-101" => Self::ResNet101,
+            "resnet152" | "resnet-152" => Self::ResNet152,
+            "mobilenetv2" | "mobilenet-v2" | "mobilenet_v2" => Self::MobileNetV2,
+            "densenet121" | "densenet-121" => Self::DenseNet121,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::ResNet18 => "resnet18",
+            Self::ResNet34 => "resnet34",
+            Self::ResNet50 => "resnet50",
+            Self::ResNet101 => "resnet101",
+            Self::ResNet152 => "resnet152",
+            Self::MobileNetV2 => "mobilenet_v2",
+            Self::DenseNet121 => "densenet121",
+        }
+    }
+}
+
+/// All model names (Table 2 / Fig. 12 order).
+pub fn model_names() -> &'static [&'static str] {
+    &[
+        "resnet18",
+        "resnet34",
+        "resnet50",
+        "resnet101",
+        "resnet152",
+        "mobilenet_v2",
+        "densenet121",
+    ]
+}
+
+/// Build a model graph for a batch size. `res` is the input resolution
+/// (224 for the paper's ImageNet setting; smaller for quick tests).
+pub fn build_model(arch: ModelArch, batch: usize, res: usize) -> Graph {
+    match arch {
+        ModelArch::ResNet18 => resnet_basic(arch.name(), batch, res, &[2, 2, 2, 2]),
+        ModelArch::ResNet34 => resnet_basic(arch.name(), batch, res, &[3, 4, 6, 3]),
+        ModelArch::ResNet50 => resnet_bottleneck(arch.name(), batch, res, &[3, 4, 6, 3]),
+        ModelArch::ResNet101 => resnet_bottleneck(arch.name(), batch, res, &[3, 4, 23, 3]),
+        ModelArch::ResNet152 => resnet_bottleneck(arch.name(), batch, res, &[3, 8, 36, 3]),
+        ModelArch::MobileNetV2 => mobilenet_v2(batch, res),
+        ModelArch::DenseNet121 => densenet121(batch, res),
+    }
+}
+
+fn conv(g: &mut Graph, name: &str, from: usize, c_out: usize, k: usize, stride: usize, pad: usize, relu: bool) -> usize {
+    let n = &g.nodes[from];
+    let shape = ConvShape {
+        n: g.batch,
+        c_in: n.out_c,
+        h_in: n.out_h,
+        w_in: n.out_w,
+        c_out,
+        kh: k,
+        kw: k,
+        stride,
+        pad,
+    };
+    g.add(name, Op::Conv { shape, relu }, &[from])
+}
+
+/// Shared ResNet stem: 7×7/2 conv + 3×3/2 maxpool.
+fn resnet_stem(g: &mut Graph, res: usize) -> usize {
+    let x = g.add("input", Op::Input { c: 3, h: res, w: res }, &[]);
+    let c = conv(g, "stem-conv", x, 64, 7, 2, 3, true);
+    g.add(
+        "stem-pool",
+        Op::MaxPool {
+            k: 3,
+            stride: 2,
+            pad: 1,
+        },
+        &[c],
+    )
+}
+
+fn resnet_head(g: &mut Graph, from: usize, in_features: usize) -> usize {
+    let gap = g.add("gap", Op::GlobalAvgPool, &[from]);
+    g.add(
+        "fc",
+        Op::Fc {
+            in_features,
+            out_features: 1000,
+        },
+        &[gap],
+    )
+}
+
+/// ResNet-18/34 (BasicBlock: two 3×3 convs).
+fn resnet_basic(name: &str, batch: usize, res: usize, blocks: &[usize; 4]) -> Graph {
+    let mut g = Graph::new(name, batch);
+    let mut cur = resnet_stem(&mut g, res);
+    let widths = [64usize, 128, 256, 512];
+    for (stage, (&w, &nblocks)) in widths.iter().zip(blocks).enumerate() {
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let pre = format!("s{}b{}", stage + 1, b);
+            let identity = cur;
+            let c1 = conv(&mut g, &format!("{pre}-conv1"), cur, w, 3, stride, 1, true);
+            let c2 = conv(&mut g, &format!("{pre}-conv2"), c1, w, 3, 1, 1, false);
+            let skip = if stride != 1 || g.nodes[identity].out_c != w {
+                conv(&mut g, &format!("{pre}-down"), identity, w, 1, stride, 0, false)
+            } else {
+                identity
+            };
+            cur = g.add(&format!("{pre}-add"), Op::Add { relu: true }, &[c2, skip]);
+        }
+    }
+    resnet_head(&mut g, cur, 512);
+    g
+}
+
+/// ResNet-50/101/152 (Bottleneck: 1×1 reduce, 3×3, 1×1 expand ×4).
+fn resnet_bottleneck(name: &str, batch: usize, res: usize, blocks: &[usize; 4]) -> Graph {
+    let mut g = Graph::new(name, batch);
+    let mut cur = resnet_stem(&mut g, res);
+    let widths = [64usize, 128, 256, 512];
+    for (stage, (&w, &nblocks)) in widths.iter().zip(blocks).enumerate() {
+        for b in 0..nblocks {
+            // torchvision: stride lives on the 3×3 conv of the first
+            // block of stages 2–4.
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let pre = format!("s{}b{}", stage + 1, b);
+            let identity = cur;
+            let c1 = conv(&mut g, &format!("{pre}-conv1"), cur, w, 1, 1, 0, true);
+            let c2 = conv(&mut g, &format!("{pre}-conv2"), c1, w, 3, stride, 1, true);
+            let c3 = conv(&mut g, &format!("{pre}-conv3"), c2, 4 * w, 1, 1, 0, false);
+            let skip = if stride != 1 || g.nodes[identity].out_c != 4 * w {
+                conv(&mut g, &format!("{pre}-down"), identity, 4 * w, 1, stride, 0, false)
+            } else {
+                identity
+            };
+            cur = g.add(&format!("{pre}-add"), Op::Add { relu: true }, &[c3, skip]);
+        }
+    }
+    resnet_head(&mut g, cur, 2048);
+    g
+}
+
+/// MobileNet-V2 inverted residual settings: (expand t, out c, repeat n,
+/// stride s) per the paper.
+const MBV2_CFG: &[(usize, usize, usize, usize)] = &[
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+fn mobilenet_v2(batch: usize, res: usize) -> Graph {
+    let mut g = Graph::new("mobilenet_v2", batch);
+    let x = g.add("input", Op::Input { c: 3, h: res, w: res }, &[]);
+    let mut cur = conv(&mut g, "stem-conv", x, 32, 3, 2, 1, true);
+    let mut block = 0;
+    for &(t, c, n, s) in MBV2_CFG {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let pre = format!("b{block}");
+            let in_c = g.nodes[cur].out_c;
+            let identity = cur;
+            let mut h = cur;
+            if t != 1 {
+                h = conv(&mut g, &format!("{pre}-expand"), h, in_c * t, 1, 1, 0, true);
+            }
+            h = g.add(
+                &format!("{pre}-dw"),
+                Op::DepthwiseConv {
+                    c: g.nodes[h].out_c,
+                    k: 3,
+                    stride,
+                    pad: 1,
+                    relu: true,
+                },
+                &[h],
+            );
+            h = conv(&mut g, &format!("{pre}-project"), h, c, 1, 1, 0, false);
+            cur = if stride == 1 && in_c == c {
+                g.add(&format!("{pre}-add"), Op::Add { relu: false }, &[h, identity])
+            } else {
+                h
+            };
+            block += 1;
+        }
+    }
+    let last = conv(&mut g, "head-conv", cur, 1280, 1, 1, 0, true);
+    let gap = g.add("gap", Op::GlobalAvgPool, &[last]);
+    g.add(
+        "fc",
+        Op::Fc {
+            in_features: 1280,
+            out_features: 1000,
+        },
+        &[gap],
+    );
+    g
+}
+
+/// DenseNet-121: growth 32, block config (6, 12, 24, 16), bottleneck
+/// 4×growth, transitions halve channels + 2×2 avgpool.
+fn densenet121(batch: usize, res: usize) -> Graph {
+    let growth = 32usize;
+    let mut g = Graph::new("densenet121", batch);
+    let x = g.add("input", Op::Input { c: 3, h: res, w: res }, &[]);
+    let c = conv(&mut g, "stem-conv", x, 64, 7, 2, 3, true);
+    let mut cur = g.add(
+        "stem-pool",
+        Op::MaxPool {
+            k: 3,
+            stride: 2,
+            pad: 1,
+        },
+        &[c],
+    );
+    for (bi, &layers) in [6usize, 12, 24, 16].iter().enumerate() {
+        for l in 0..layers {
+            let pre = format!("d{}l{}", bi + 1, l);
+            // Dense layer: 1×1 bottleneck to 4·growth, then 3×3 growth.
+            let b = conv(&mut g, &format!("{pre}-bottleneck"), cur, 4 * growth, 1, 1, 0, true);
+            let n = conv(&mut g, &format!("{pre}-conv"), b, growth, 3, 1, 1, true);
+            cur = g.add(&format!("{pre}-cat"), Op::Concat, &[cur, n]);
+        }
+        if bi < 3 {
+            let half = g.nodes[cur].out_c / 2;
+            let t = conv(&mut g, &format!("t{}-conv", bi + 1), cur, half, 1, 1, 0, true);
+            cur = g.add(
+                &format!("t{}-pool", bi + 1),
+                Op::AvgPool { k: 2, stride: 2 },
+                &[t],
+            );
+        }
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, &[cur]);
+    g.add(
+        "fc",
+        Op::Fc {
+            in_features: 1024,
+            out_features: 1000,
+        },
+        &[gap],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_macs_match_published() {
+        // torchvision ResNet-50 @224: ~4.09 GMACs of conv (+2M fc).
+        let g = build_model(ModelArch::ResNet50, 1, 224);
+        let gmacs = g.conv_macs() as f64 / 1e9;
+        assert!((3.9..4.3).contains(&gmacs), "got {gmacs} GMACs");
+        // 53 conv layers (incl. stem + 4 downsample).
+        assert_eq!(g.conv_shapes().len(), 53);
+    }
+
+    #[test]
+    fn resnet18_geometry() {
+        let g = build_model(ModelArch::ResNet18, 1, 224);
+        let gmacs = g.conv_macs() as f64 / 1e9;
+        assert!((1.6..1.9).contains(&gmacs), "got {gmacs}");
+        assert_eq!(g.conv_shapes().len(), 20);
+        // Final feature map before GAP is 7×7×512.
+        let gap = g.nodes.iter().find(|n| n.name == "gap").unwrap();
+        let pre = &g.nodes[gap.inputs[0]];
+        assert_eq!((pre.out_c, pre.out_h, pre.out_w), (512, 7, 7));
+    }
+
+    #[test]
+    fn resnet101_and_152_layer_counts() {
+        assert_eq!(
+            build_model(ModelArch::ResNet101, 1, 224).conv_shapes().len(),
+            104
+        );
+        assert_eq!(
+            build_model(ModelArch::ResNet152, 1, 224).conv_shapes().len(),
+            155
+        );
+    }
+
+    #[test]
+    fn mobilenet_v2_params_and_macs() {
+        let g = build_model(ModelArch::MobileNetV2, 1, 224);
+        let gmacs = g.conv_macs() as f64 / 1e9;
+        // ~0.3 GMACs total; our conv_macs excludes depthwise (counted as
+        // Op::DepthwiseConv), so slightly lower.
+        assert!((0.2..0.35).contains(&gmacs), "got {gmacs}");
+        let fc = g.nodes.last().unwrap();
+        assert_eq!(fc.out_c, 1000);
+    }
+
+    #[test]
+    fn densenet121_channel_growth() {
+        let g = build_model(ModelArch::DenseNet121, 1, 224);
+        // Final dense block output: 512 + 16*32 = 1024 channels.
+        let gap = g.nodes.iter().find(|n| n.name == "gap").unwrap();
+        let pre = &g.nodes[gap.inputs[0]];
+        assert_eq!(pre.out_c, 1024);
+        assert_eq!((pre.out_h, pre.out_w), (7, 7));
+        let gmacs = g.conv_macs() as f64 / 1e9;
+        assert!((2.5..3.1).contains(&gmacs), "got {gmacs}");
+    }
+
+    #[test]
+    fn batch_propagates_to_conv_shapes() {
+        let g = build_model(ModelArch::ResNet18, 4, 224);
+        for (_, s) in g.conv_shapes() {
+            assert_eq!(s.n, 4);
+        }
+    }
+
+    #[test]
+    fn smaller_resolution_builds() {
+        for arch in [
+            ModelArch::ResNet18,
+            ModelArch::ResNet50,
+            ModelArch::MobileNetV2,
+            ModelArch::DenseNet121,
+        ] {
+            let g = build_model(arch, 1, 64);
+            assert!(g.nodes.len() > 10, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        for &n in model_names() {
+            assert!(ModelArch::parse(n).is_some(), "{n}");
+        }
+        assert!(ModelArch::parse("vgg16").is_none());
+    }
+}

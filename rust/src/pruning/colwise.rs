@@ -1,0 +1,328 @@
+//! Column-wise N:M pruning — the paper's contribution (§3.1, Fig. 3c).
+//!
+//! The weight matrix `W[rows, cols]` is split into tiles of `T` rows.
+//! Within a tile, each *column* (T elements) is a pruning unit scored by
+//! its L1 norm. Inside every aligned group of `M` consecutive columns the
+//! `N` highest-scoring columns are retained; the rest are zeroed. All
+//! rows of the tile therefore share one retained-column index set, so the
+//! micro-kernel can load a data-matrix row once and reuse it across all T
+//! accumulators (Algorithm 1).
+//!
+//! `M` may span the whole reduction dimension ("adaptive M", §3.1/§4.5
+//! configs 3–4), which approaches unstructured pruning accuracy while
+//! keeping the structured execution pattern.
+
+use super::mask::top_n_indices;
+use super::retained_for_sparsity;
+
+/// One T-row tile of a column-wise pruned matrix.
+#[derive(Clone, Debug)]
+pub struct ColTile {
+    /// First row of this tile in the original matrix.
+    pub row_start: usize,
+    /// Rows in this tile (== T except possibly the last tile).
+    pub row_count: usize,
+    /// Retained column indices, ascending. Shared by every row of the tile.
+    pub indices: Vec<u32>,
+    /// Retained values, row-major `[row_count, indices.len()]`.
+    pub values: Vec<f32>,
+}
+
+impl ColTile {
+    /// Value of retained column slot `j` in tile-local row `t`.
+    #[inline]
+    pub fn value(&self, t: usize, j: usize) -> f32 {
+        self.values[t * self.indices.len() + j]
+    }
+}
+
+/// Column-wise N:M compressed weight matrix (tile size T).
+#[derive(Clone, Debug)]
+pub struct ColwisePruned {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile: usize,
+    pub n: usize,
+    pub m: usize,
+    pub tiles: Vec<ColTile>,
+}
+
+impl ColwisePruned {
+    /// Reconstruct the dense (masked) matrix.
+    pub fn decompress(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for tile in &self.tiles {
+            for t in 0..tile.row_count {
+                let r = tile.row_start + t;
+                for (j, &c) in tile.indices.iter().enumerate() {
+                    out[r * self.cols + c as usize] = tile.value(t, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of weights removed.
+    pub fn sparsity(&self) -> f64 {
+        let kept: usize = self
+            .tiles
+            .iter()
+            .map(|t| t.indices.len() * t.row_count)
+            .sum();
+        1.0 - kept as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Retained columns per tile (uniform across tiles for aligned M).
+    pub fn retained_per_tile(&self) -> usize {
+        self.tiles.first().map(|t| t.indices.len()).unwrap_or(0)
+    }
+
+    /// FLOPs of the sparse GEMM against a `[cols, v]` data matrix:
+    /// 2·(retained columns)·rows·v.
+    pub fn gemm_flops(&self, v: usize) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| 2 * t.indices.len() * t.row_count * v)
+            .sum()
+    }
+}
+
+/// Prune `w[rows, cols]` column-wise with groups of `M` consecutive
+/// columns keeping `N` per group, scored by the tile-local column L1 norm.
+pub fn prune_colwise(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    tile: usize,
+    n: usize,
+    m: usize,
+) -> ColwisePruned {
+    assert_eq!(w.len(), rows * cols);
+    assert!(n <= m && m >= 1, "invalid N:M = {n}:{m}");
+    assert!(tile >= 1);
+    let mut tiles = Vec::with_capacity(rows.div_ceil(tile));
+    let groups = cols.div_ceil(m);
+    for row_start in (0..rows).step_by(tile) {
+        let row_count = tile.min(rows - row_start);
+        // Column L1 norms over this tile's rows.
+        let mut keep_cols: Vec<u32> = Vec::with_capacity(groups * n);
+        for g in 0..groups {
+            let start = g * m;
+            let width = m.min(cols - start);
+            let scores: Vec<f32> = (start..start + width)
+                .map(|c| {
+                    (0..row_count)
+                        .map(|t| w[(row_start + t) * cols + c].abs())
+                        .sum()
+                })
+                .collect();
+            for k in top_n_indices(&scores, n.min(width)) {
+                keep_cols.push((start + k) as u32);
+            }
+        }
+        let mut values = Vec::with_capacity(row_count * keep_cols.len());
+        for t in 0..row_count {
+            for &c in &keep_cols {
+                values.push(w[(row_start + t) * cols + c as usize]);
+            }
+        }
+        tiles.push(ColTile {
+            row_start,
+            row_count,
+            indices: keep_cols,
+            values,
+        });
+    }
+    ColwisePruned {
+        rows,
+        cols,
+        tile,
+        n,
+        m,
+        tiles,
+    }
+}
+
+/// Adaptive-M column-wise pruning: `M = cols` (the whole reduction
+/// dimension) and `N = round((1-sparsity)·M)` — configs 3/4 in §4.5.
+pub fn prune_colwise_adaptive(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    tile: usize,
+    sparsity: f64,
+) -> ColwisePruned {
+    let n = retained_for_sparsity(cols, sparsity).max(1);
+    prune_colwise(w, rows, cols, tile, n, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, XorShiftRng};
+
+    #[test]
+    fn whole_columns_pruned_within_tile() {
+        // 2 rows, 4 cols, tile=2, 1:2 → within each column pair, the pair
+        // with larger L1 survives whole.
+        #[rustfmt::skip]
+        let w = [
+            1.0, 9.0, 2.0, 0.1,
+            1.0, 9.0, 2.0, 0.1,
+        ];
+        let p = prune_colwise(&w, 2, 4, 2, 1, 2);
+        let d = p.decompress();
+        #[rustfmt::skip]
+        assert_eq!(d, vec![
+            0.0, 9.0, 2.0, 0.0,
+            0.0, 9.0, 2.0, 0.0,
+        ]);
+        assert_eq!(p.tiles.len(), 1);
+        assert_eq!(p.tiles[0].indices, vec![1, 2]);
+    }
+
+    #[test]
+    fn l1_scoring_sums_over_tile_rows() {
+        // Column 0 has small values in both rows (L1=2), column 1 has one
+        // big value (L1=10) → column 1 wins even though row 1's entry is 0.
+        #[rustfmt::skip]
+        let w = [
+            1.0, 10.0,
+            1.0,  0.0,
+        ];
+        let p = prune_colwise(&w, 2, 2, 2, 1, 2);
+        assert_eq!(p.tiles[0].indices, vec![1]);
+        assert_eq!(p.decompress(), vec![0.0, 10.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn tiles_prune_independently() {
+        // tile=1 reduces to per-row N:M with L1 = |w| (row-based special
+        // case, as §4.5 config 1 notes: "equivalent to ... tile size of 1").
+        #[rustfmt::skip]
+        let w = [
+            5.0, 1.0,
+            1.0, 5.0,
+        ];
+        let p = prune_colwise(&w, 2, 2, 1, 1, 2);
+        assert_eq!(p.decompress(), vec![5.0, 0.0, 0.0, 5.0]);
+        assert_eq!(p.tiles.len(), 2);
+    }
+
+    #[test]
+    fn tail_tile_and_tail_group() {
+        let mut r = XorShiftRng::new(4);
+        // rows=5 with tile=2 → tiles of 2,2,1; cols=6 with M=4 → groups 4+2.
+        let w = r.normal_vec(5 * 6, 1.0);
+        let p = prune_colwise(&w, 5, 6, 2, 2, 4);
+        assert_eq!(p.tiles.len(), 3);
+        assert_eq!(p.tiles[2].row_count, 1);
+        // group 0 keeps 2 of 4, tail group keeps 2 of 2 → 4 indices.
+        assert_eq!(p.retained_per_tile(), 4);
+        let d = p.decompress();
+        // Retained values must match original exactly.
+        for tile in &p.tiles {
+            for t in 0..tile.row_count {
+                for (j, &c) in tile.indices.iter().enumerate() {
+                    let r_ = tile.row_start + t;
+                    assert_eq!(tile.value(t, j), w[r_ * 6 + c as usize]);
+                    assert_eq!(d[r_ * 6 + c as usize], w[r_ * 6 + c as usize]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_m_hits_target_sparsity() {
+        let mut r = XorShiftRng::new(9);
+        let (rows, cols) = (16, 64);
+        let w = r.normal_vec(rows * cols, 1.0);
+        for s in [0.25, 0.5, 0.75] {
+            let p = prune_colwise_adaptive(&w, rows, cols, 8, s);
+            assert!(
+                (p.sparsity() - s).abs() < 0.02,
+                "target {s}, got {}",
+                p.sparsity()
+            );
+        }
+    }
+
+    #[test]
+    fn prop_indices_sorted_unique_and_l1_optimal_per_group() {
+        prop::check_seeded(
+            0xC01,
+            |r, size| {
+                let rows = 1 + size % 9;
+                let cols = 4 * (1 + size % 8);
+                let tile = 1 + size % 5;
+                let w = r.normal_vec(rows * cols, 1.0);
+                (w, rows, cols, tile)
+            },
+            |(w, rows, cols, tile)| {
+                let p = prune_colwise(w, *rows, *cols, *tile, 2, 4);
+                for t in &p.tiles {
+                    // sorted + unique indices
+                    if !t.indices.windows(2).all(|p| p[0] < p[1]) {
+                        return false;
+                    }
+                    // within each group, kept column L1 >= dropped column L1
+                    for g in 0..cols / 4 {
+                        let l1 = |c: usize| -> f32 {
+                            (0..t.row_count)
+                                .map(|tr| w[(t.row_start + tr) * cols + c].abs())
+                                .sum()
+                        };
+                        let kept: Vec<usize> = t
+                            .indices
+                            .iter()
+                            .map(|&c| c as usize)
+                            .filter(|&c| c / 4 == g)
+                            .collect();
+                        if kept.len() != 2 {
+                            return false;
+                        }
+                        let kept_min = kept.iter().map(|&c| l1(c)).fold(f32::INFINITY, f32::min);
+                        let drop_max = (g * 4..g * 4 + 4)
+                            .filter(|c| !kept.contains(c))
+                            .map(l1)
+                            .fold(0.0f32, f32::max);
+                        if drop_max > kept_min + 1e-5 {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn prop_decompress_recompress_fixpoint() {
+        // Pruning an already-pruned matrix with the same params must be
+        // the identity (idempotence).
+        prop::check_seeded(
+            0xC02,
+            |r, size| {
+                let rows = 2 + size % 10;
+                let cols = 8 * (1 + size % 4);
+                let w = r.normal_vec(rows * cols, 1.0);
+                (w, rows, cols)
+            },
+            |(w, rows, cols)| {
+                let p1 = prune_colwise(w, *rows, *cols, 4, 2, 8);
+                let d1 = p1.decompress();
+                let p2 = prune_colwise(&d1, *rows, *cols, 4, 2, 8);
+                p2.decompress() == d1
+            },
+        );
+    }
+
+    #[test]
+    fn flops_scale_with_sparsity() {
+        let mut r = XorShiftRng::new(10);
+        let w = r.normal_vec(32 * 64, 1.0);
+        let dense_flops = 2 * 32 * 64 * 16;
+        let p = prune_colwise(&w, 32, 64, 8, 2, 4);
+        assert_eq!(p.gemm_flops(16), dense_flops / 2);
+    }
+}

@@ -1,0 +1,143 @@
+//! Unstructured magnitude pruning in CSR — the flexibility upper bound
+//! (§2.1) against which the structured formats are compared.
+
+/// Compressed Sparse Row matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer array, len rows+1.
+    pub indptr: Vec<u32>,
+    /// Column index of each stored value.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, storing all non-zeros.
+    pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = w[r * cols + c];
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(values.len() as u32);
+        }
+        Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Reconstruct the dense matrix.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.indptr[r] as usize..self.indptr[r + 1] as usize {
+                out[r * self.cols + self.indices[k] as usize] = self.values[k];
+            }
+        }
+        out
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// CSR·dense SpMM: `C[rows, v] = self · B[cols, v]` (reference only;
+    /// the paper's kernels never materialise CSR on the hot path).
+    pub fn spmm(&self, b: &[f32], v: usize) -> Vec<f32> {
+        assert_eq!(b.len(), self.cols * v);
+        let mut c = vec![0.0f32; self.rows * v];
+        for r in 0..self.rows {
+            for k in self.indptr[r] as usize..self.indptr[r + 1] as usize {
+                let col = self.indices[k] as usize;
+                let w = self.values[k];
+                let brow = &b[col * v..(col + 1) * v];
+                let crow = &mut c[r * v..(r + 1) * v];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += w * bj;
+                }
+            }
+        }
+        c
+    }
+}
+
+/// Global unstructured magnitude pruning to a target sparsity: zero the
+/// smallest-|w| elements across the whole matrix.
+pub fn prune_unstructured(w: &[f32], sparsity: f64) -> Vec<f32> {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let mut order: Vec<usize> = (0..w.len()).collect();
+    order.sort_by(|&a, &b| w[a].abs().partial_cmp(&w[b].abs()).unwrap());
+    let drop = (w.len() as f64 * sparsity).round() as usize;
+    let mut out = w.to_vec();
+    for &i in &order[..drop] {
+        out[i] = 0.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask::sparsity_of;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn csr_roundtrip() {
+        let w = [0.0, 1.0, 0.0, 2.0, 0.0, 0.0, 3.0, 0.0, 4.0];
+        let c = Csr::from_dense(&w, 3, 3);
+        assert_eq!(c.nnz(), 4);
+        assert_eq!(c.to_dense(), w.to_vec());
+        assert_eq!(c.indptr, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let mut r = XorShiftRng::new(5);
+        let (m, k, v) = (7, 9, 5);
+        let w = prune_unstructured(&r.normal_vec(m * k, 1.0), 0.6);
+        let b = r.normal_vec(k * v, 1.0);
+        let csr = Csr::from_dense(&w, m, k);
+        let got = csr.spmm(&b, v);
+        let mut want = vec![0.0f32; m * v];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..v {
+                    want[i * v + j] += w[i * k + kk] * b[kk * v + j];
+                }
+            }
+        }
+        assert!(crate::util::allclose(&got, &want, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn unstructured_hits_exact_sparsity() {
+        let mut r = XorShiftRng::new(6);
+        let w = r.normal_vec(1000, 1.0);
+        for s in [0.25, 0.5, 0.75, 0.9] {
+            let p = prune_unstructured(&w, s);
+            assert!((sparsity_of(&p) - s).abs() < 2e-3, "s={s}");
+        }
+    }
+
+    #[test]
+    fn unstructured_keeps_largest() {
+        let w = [0.1, -5.0, 0.2, 3.0];
+        let p = prune_unstructured(&w, 0.5);
+        assert_eq!(p, vec![0.0, -5.0, 0.0, 3.0]);
+    }
+}

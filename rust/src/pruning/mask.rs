@@ -1,0 +1,75 @@
+//! Pruning-mask utilities shared by every format.
+
+/// Apply a boolean mask to a weight slice (element-wise zeroing).
+pub fn apply_mask(w: &mut [f32], mask: &[bool]) {
+    assert_eq!(w.len(), mask.len());
+    for (x, &keep) in w.iter_mut().zip(mask) {
+        if !keep {
+            *x = 0.0;
+        }
+    }
+}
+
+/// Fraction of exactly-zero elements.
+pub fn sparsity_of(w: &[f32]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.iter().filter(|x| **x == 0.0).count() as f64 / w.len() as f64
+}
+
+/// Indices of the `n` largest values in `scores` (ties broken by lower
+/// index), returned in ascending index order. O(len·n) selection — group
+/// sizes are small (M ≤ a few thousand).
+pub fn top_n_indices(scores: &[f32], n: usize) -> Vec<usize> {
+    let n = n.min(scores.len());
+    let mut picked = vec![false; scores.len()];
+    for _ in 0..n {
+        let mut best: Option<usize> = None;
+        for (i, &s) in scores.iter().enumerate() {
+            if picked[i] {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) if s > scores[b] => best = Some(i),
+                _ => {}
+            }
+        }
+        picked[best.unwrap()] = true;
+    }
+    (0..scores.len()).filter(|&i| picked[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_mask_zeroes() {
+        let mut w = vec![1.0, 2.0, 3.0, 4.0];
+        apply_mask(&mut w, &[true, false, true, false]);
+        assert_eq!(w, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        assert_eq!(sparsity_of(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(sparsity_of(&[]), 0.0);
+        assert_eq!(sparsity_of(&[0.0; 4]), 1.0);
+    }
+
+    #[test]
+    fn top_n_picks_largest_sorted() {
+        let s = [0.5, 3.0, 1.0, 2.0];
+        assert_eq!(top_n_indices(&s, 2), vec![1, 3]);
+        assert_eq!(top_n_indices(&s, 0), Vec::<usize>::new());
+        assert_eq!(top_n_indices(&s, 10), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn top_n_tie_break_lower_index() {
+        let s = [1.0, 1.0, 1.0];
+        assert_eq!(top_n_indices(&s, 2), vec![0, 1]);
+    }
+}

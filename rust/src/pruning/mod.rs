@@ -1,0 +1,49 @@
+//! N:M weight pruning: formats, scoring and compression.
+//!
+//! The GEMM view of a conv layer multiplies a weight (filter) matrix
+//! `W[C_out, K]` (K = K_h·K_w·C_in) with the im2col'd data matrix. The
+//! paper compares three sparsity formats over that weight matrix:
+//!
+//! * [`rownm`] — conventional row-based N:M: within each row, every group
+//!   of M consecutive elements keeps at most N (Fig. 1/3b).
+//! * [`colwise`] — the paper's contribution: at the tile level (T rows),
+//!   whole *columns* are grouped and pruned/retained as a unit, scored by
+//!   L1 norm (Fig. 3c). All rows of a tile then share a single retained
+//!   column index set, which is what enables the register-resident
+//!   outer-product micro-kernel (Algorithm 1).
+//! * [`csr`] — unstructured magnitude pruning in CSR, the format used by
+//!   the related-work discussion, included as a baseline.
+
+pub mod mask;
+pub mod rownm;
+pub mod colwise;
+pub mod csr;
+
+pub use colwise::{prune_colwise, prune_colwise_adaptive, ColTile, ColwisePruned};
+pub use mask::{apply_mask, sparsity_of};
+pub use rownm::{prune_rownm, RowNmPruned};
+pub use csr::{prune_unstructured, Csr};
+
+/// Number of retained elements per group for a target sparsity ratio:
+/// `N = round((1 - sparsity) * M)`, clamped to [0, M] (§3.1).
+pub fn retained_for_sparsity(m: usize, sparsity: f64) -> usize {
+    assert!((0.0..=1.0).contains(&sparsity), "sparsity {sparsity}");
+    (((1.0 - sparsity) * m as f64).round() as usize).min(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retained_matches_paper_configs() {
+        // 2:4 = 50%, 1:4 = 75%, 3:4 = 25% (Table 1).
+        assert_eq!(retained_for_sparsity(4, 0.50), 2);
+        assert_eq!(retained_for_sparsity(4, 0.75), 1);
+        assert_eq!(retained_for_sparsity(4, 0.25), 3);
+        // Adaptive-M example: C_in*Kh*Kw = 576 at 75%.
+        assert_eq!(retained_for_sparsity(576, 0.75), 144);
+        assert_eq!(retained_for_sparsity(8, 1.0), 0);
+        assert_eq!(retained_for_sparsity(8, 0.0), 8);
+    }
+}

@@ -1,0 +1,198 @@
+//! Conventional row-based N:M pruning (Fig. 1, Fig. 3b).
+//!
+//! Within each row of `W[rows, cols]`, every aligned group of `M`
+//! consecutive elements keeps the `N` largest-magnitude values. The
+//! compressed form stores, per row, the retained values plus a parallel
+//! index array of their column positions — the format GPU sparse tensor
+//! cores (and the paper's inner/outer-product CPU baselines) consume.
+
+use super::mask::top_n_indices;
+
+/// Row-based N:M compressed weight matrix.
+#[derive(Clone, Debug)]
+pub struct RowNmPruned {
+    pub rows: usize,
+    pub cols: usize,
+    pub n: usize,
+    pub m: usize,
+    /// Retained values, row-major `[rows, retained_per_row]`.
+    pub values: Vec<f32>,
+    /// Column index of each retained value, same shape as `values`.
+    pub indices: Vec<u32>,
+    /// Retained elements per row (= #groups·N, tail group may keep fewer
+    /// slots but is padded with explicit zeros at valid indices).
+    pub per_row: usize,
+}
+
+impl RowNmPruned {
+    /// Reconstruct the dense (masked) matrix.
+    pub fn decompress(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for j in 0..self.per_row {
+                let v = self.values[r * self.per_row + j];
+                // Zero-valued pad slots may alias a retained index (tail
+                // groups); never let them overwrite a real value.
+                if v != 0.0 {
+                    let c = self.indices[r * self.per_row + j] as usize;
+                    out[r * self.cols + c] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of weights removed.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - (self.per_row as f64 / self.cols as f64)
+    }
+}
+
+/// Prune `w[rows, cols]` with row-based N:M magnitude pruning.
+///
+/// Groups are aligned: columns `[g*M, (g+1)*M)`. A tail group narrower
+/// than `M` keeps `min(N, width)` elements so the compressed row stays
+/// rectangular only when `cols % M == 0`; otherwise the tail keeps
+/// proportionally fewer and the row is padded with zero-valued entries
+/// pointing at the first tail column (harmless to GEMM).
+pub fn prune_rownm(w: &[f32], rows: usize, cols: usize, n: usize, m: usize) -> RowNmPruned {
+    assert_eq!(w.len(), rows * cols);
+    assert!(n <= m && m >= 1, "invalid N:M = {n}:{m}");
+    let groups = cols.div_ceil(m);
+    let per_row = groups * n;
+    let mut values = vec![0.0f32; rows * per_row];
+    let mut indices = vec![0u32; rows * per_row];
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut slot = 0usize;
+        for g in 0..groups {
+            let start = g * m;
+            let width = m.min(cols - start);
+            let scores: Vec<f32> = row[start..start + width].iter().map(|x| x.abs()).collect();
+            let keep = top_n_indices(&scores, n.min(width));
+            for &k in &keep {
+                values[r * per_row + slot] = row[start + k];
+                indices[r * per_row + slot] = (start + k) as u32;
+                slot += 1;
+            }
+            // Pad any unfilled slots (tail group narrower than N).
+            for _ in keep.len()..n {
+                values[r * per_row + slot] = 0.0;
+                indices[r * per_row + slot] = start as u32;
+                slot += 1;
+            }
+        }
+    }
+    RowNmPruned {
+        rows,
+        cols,
+        n,
+        m,
+        values,
+        indices,
+        per_row,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask::sparsity_of;
+    use crate::util::{prop, XorShiftRng};
+
+    #[test]
+    fn keeps_largest_in_each_group() {
+        // One row, two groups of 4, 2:4.
+        let w = [1.0, -5.0, 2.0, 0.5, 0.1, 0.2, -0.3, 0.4];
+        let p = prune_rownm(&w, 1, 8, 2, 4);
+        let d = p.decompress();
+        assert_eq!(d, vec![0.0, -5.0, 2.0, 0.0, 0.0, 0.0, -0.3, 0.4]);
+        assert_eq!(p.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn group_alignment_is_per_m_columns() {
+        // 1:2 over 4 cols: groups [0,1] and [2,3].
+        let w = [3.0, 1.0, 1.0, 3.0];
+        let p = prune_rownm(&w, 1, 4, 1, 2);
+        assert_eq!(p.decompress(), vec![3.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn tail_group_handled() {
+        // cols=5, M=4: tail group has width 1, keeps min(2,1)=1.
+        let w = [1.0, 2.0, 3.0, 4.0, 9.0];
+        let p = prune_rownm(&w, 1, 5, 2, 4);
+        let d = p.decompress();
+        assert_eq!(d, vec![0.0, 0.0, 3.0, 4.0, 9.0]);
+    }
+
+    #[test]
+    fn multi_row_independent() {
+        let w = [5.0, 1.0, 1.0, 5.0];
+        let p = prune_rownm(&w, 2, 2, 1, 2);
+        assert_eq!(p.decompress(), vec![5.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn prop_decompress_zero_pattern_and_magnitude() {
+        // Property: (a) sparsity ≈ 1 - N/M, (b) every retained element
+        // appears unchanged at its original position, (c) within each
+        // aligned group, every dropped |w| <= every kept |w|.
+        prop::check_seeded(
+            0xA11CE,
+            |r, size| {
+                let rows = 1 + size % 7;
+                let cols = 4 * (1 + size % 9);
+                let w = r.normal_vec(rows * cols, 1.0);
+                (w, rows, cols)
+            },
+            |(w, rows, cols)| {
+                let p = prune_rownm(w, *rows, *cols, 2, 4);
+                let d = p.decompress();
+                if sparsity_of(&d) < 0.49 {
+                    return false;
+                }
+                for r in 0..*rows {
+                    for g in 0..cols / 4 {
+                        let orig = &w[r * cols + g * 4..r * cols + g * 4 + 4];
+                        let got = &d[r * cols + g * 4..r * cols + g * 4 + 4];
+                        let kept_min = orig
+                            .iter()
+                            .zip(got)
+                            .filter(|(_, &y)| y != 0.0)
+                            .map(|(&x, _)| x.abs())
+                            .fold(f32::INFINITY, f32::min);
+                        let drop_max = orig
+                            .iter()
+                            .zip(got)
+                            .filter(|(_, &y)| y == 0.0)
+                            .map(|(&x, _)| x.abs())
+                            .fold(0.0f32, f32::max);
+                        if drop_max > kept_min {
+                            return false;
+                        }
+                        if !orig.iter().zip(got).all(|(&x, &y)| y == 0.0 || y == x) {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn randomized_sparsity_exact_for_aligned() {
+        let mut r = XorShiftRng::new(77);
+        for _ in 0..20 {
+            for (n, m) in [(1, 4), (2, 4), (3, 4), (4, 8)] {
+                let rows = 1 + r.below(16);
+                let cols = m * (1 + r.below(16)); // aligned: m divides cols
+                let w = r.normal_vec(rows * cols, 1.0);
+                let p = prune_rownm(&w, rows, cols, n, m);
+                assert!((p.sparsity() - (1.0 - n as f64 / m as f64)).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! execute them from the Rust request path.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `python/compile/aot.py`).
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only place the compiled graphs are touched at runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One artifact entry from `artifacts/manifest.tsv`:
+/// `name \t file \t input_arity \t description`.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_arity: usize,
+    pub description: String,
+}
+
+/// Parse a manifest file.
+pub fn read_manifest(path: &Path) -> Result<Vec<ArtifactEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {path:?}"))?;
+    let dir = path.parent().unwrap_or(Path::new("."));
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let name = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line {i}: missing name"))?;
+        let file = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line {i}: missing file"))?;
+        let arity: usize = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line {i}: missing arity"))?
+            .parse()
+            .with_context(|| format!("manifest line {i}: bad arity"))?;
+        let description = parts.next().unwrap_or("").to_string();
+        out.push(ArtifactEntry {
+            name: name.to_string(),
+            file: dir.join(file),
+            input_arity: arity,
+            description,
+        });
+    }
+    Ok(out)
+}
+
+/// Parse the flat-f32 text format written by `aot.py`'s `save_flat`:
+/// dims (space-separated) on line 1, then one value per line. Returns
+/// `(dims, data)`.
+pub fn load_flat_f32(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading flat f32 {path:?}"))?;
+    let mut lines = text.lines();
+    let dims: Vec<usize> = lines
+        .next()
+        .ok_or_else(|| anyhow!("{path:?}: empty file"))?
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|e| anyhow!("{path:?}: bad dim: {e}")))
+        .collect::<Result<_>>()?;
+    let data: Vec<f32> = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            l.trim()
+                .parse()
+                .map_err(|e| anyhow!("{path:?}: bad f32: {e}"))
+        })
+        .collect::<Result<_>>()?;
+    if dims.iter().product::<usize>() != data.len() {
+        return Err(anyhow!(
+            "{path:?}: dims {:?} disagree with {} values",
+            dims,
+            data.len()
+        ));
+    }
+    Ok((dims, data))
+}
+
+/// A loaded-and-compiled executable plus its metadata.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    arity: usize,
+}
+
+/// The PJRT CPU runtime: compiles HLO-text artifacts once, caches the
+/// executables, and runs them with f32 inputs.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    loaded: Mutex<HashMap<String, Loaded>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Self {
+            client,
+            loaded: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Backend platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text file under `name`.
+    pub fn load_hlo_text(&self, name: &str, path: &Path, arity: usize) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.loaded
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Loaded { exe, arity });
+        Ok(())
+    }
+
+    /// Load every artifact in a manifest.
+    pub fn load_manifest(&self, manifest: &Path) -> Result<Vec<String>> {
+        let entries = read_manifest(manifest)?;
+        let mut names = Vec::new();
+        for e in &entries {
+            self.load_hlo_text(&e.name, &e.file, e.input_arity)?;
+            names.push(e.name.clone());
+        }
+        Ok(names)
+    }
+
+    /// Is an executable loaded?
+    pub fn has(&self, name: &str) -> bool {
+        self.loaded.lock().unwrap().contains_key(name)
+    }
+
+    /// Execute `name` with f32 inputs (data, dims). Returns the flattened
+    /// f32 outputs of the (tuple) result, in order.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let guard = self.loaded.lock().unwrap();
+        let loaded = guard
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name:?} not loaded"))?;
+        if loaded.arity != inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                loaded.arity,
+                inputs.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn manifest_parses_and_skips_comments() {
+        let dir = std::env::temp_dir().join("nmprune_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.tsv");
+        let mut f = std::fs::File::create(&p).unwrap();
+        writeln!(f, "# comment").unwrap();
+        writeln!(f, "conv_s1\tconv_s1.hlo.txt\t2\tstage1 conv").unwrap();
+        writeln!(f).unwrap();
+        writeln!(f, "model\tmodel.hlo.txt\t1\tfull fwd").unwrap();
+        let entries = read_manifest(&p).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "conv_s1");
+        assert_eq!(entries[0].input_arity, 2);
+        assert!(entries[1].file.ends_with("model.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(read_manifest(Path::new("/nonexistent/manifest.tsv")).is_err());
+    }
+
+    #[test]
+    fn execute_unknown_name_errors() {
+        let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+        assert!(rt.execute_f32("nope", &[]).is_err());
+        assert!(!rt.has("nope"));
+    }
+
+    /// Full AOT round-trip against real artifacts — exercised when
+    /// `make artifacts` has run (CI path); skipped silently otherwise.
+    #[test]
+    fn roundtrip_artifacts_if_present() {
+        let manifest = Path::new("artifacts/manifest.tsv");
+        if !manifest.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let names = rt.load_manifest(manifest).unwrap();
+        assert!(!names.is_empty());
+    }
+}

@@ -1,0 +1,282 @@
+//! Set-associative L1-D cache model with LRU replacement.
+//!
+//! Word-addressed (one f32 = one address unit); line size is given in
+//! words. Defaults model the SpacemiT K1's 32 KiB, 8-way, 64-byte-line
+//! L1-D cache.
+
+/// Cache geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Total capacity in f32 words (32 KiB = 8192 words).
+    pub capacity_words: usize,
+    /// Associativity (ways per set).
+    pub ways: usize,
+    /// Line size in f32 words (64 B = 16 words).
+    pub line_words: usize,
+    /// Next-line prefetch on loads (the K1's L1-D stream prefetcher):
+    /// a load touching line L warms L+1, so unit-stride streams miss
+    /// only on the first line while large-stride streams get no help —
+    /// the locality difference data packing exists to exploit.
+    pub prefetch: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            capacity_words: 8192,
+            ways: 8,
+            line_words: 16,
+            prefetch: true,
+        }
+    }
+}
+
+/// LRU set-associative cache. Tracks hits/misses for loads and stores
+/// separately (write-allocate, write-back — dirty state not modelled
+/// because only traffic counts matter here).
+#[derive(Clone, Debug)]
+pub struct Cache {
+    pub cfg: CacheConfig,
+    sets: usize,
+    /// tags[set * ways + way] = Some(tag), ordered by recency per set
+    /// (index 0 = MRU) — simple vector-shift LRU, fine for 8 ways.
+    tags: Vec<Option<usize>>,
+    pub load_accesses: u64,
+    pub load_misses: u64,
+    pub store_accesses: u64,
+    pub store_misses: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        assert!(cfg.line_words.is_power_of_two());
+        assert!(cfg.capacity_words % (cfg.line_words * cfg.ways) == 0);
+        let sets = cfg.capacity_words / (cfg.line_words * cfg.ways);
+        Self {
+            cfg,
+            sets,
+            tags: vec![None; sets * cfg.ways],
+            load_accesses: 0,
+            load_misses: 0,
+            store_accesses: 0,
+            store_misses: 0,
+        }
+    }
+
+    fn set_and_tag(&self, line: usize) -> (usize, usize) {
+        (line % self.sets, line / self.sets)
+    }
+
+    /// Access one line; returns true on hit. Updates LRU and counters.
+    fn touch_line(&mut self, line: usize, is_store: bool) -> bool {
+        let (set, tag) = self.set_and_tag(line);
+        let base = set * self.cfg.ways;
+        let ways = &mut self.tags[base..base + self.cfg.ways];
+        let hit_way = ways.iter().position(|t| *t == Some(tag));
+        let hit = hit_way.is_some();
+        match hit_way {
+            Some(w) => {
+                // Move to MRU.
+                ways[..=w].rotate_right(1);
+                ways[0] = Some(tag);
+            }
+            None => {
+                // Evict LRU (last), insert at MRU.
+                ways.rotate_right(1);
+                ways[0] = Some(tag);
+            }
+        }
+        if is_store {
+            self.store_accesses += 1;
+            if !hit {
+                self.store_misses += 1;
+            }
+        } else {
+            self.load_accesses += 1;
+            if !hit {
+                self.load_misses += 1;
+            }
+        }
+        hit
+    }
+
+    /// Load access covering `[addr, addr+words)`. Returns the number of
+    /// lines touched and how many of them missed.
+    pub fn load(&mut self, addr: usize, words: usize) -> (u64, u64) {
+        self.span(addr, words, false)
+    }
+
+    /// Store access covering `[addr, addr+words)`.
+    pub fn store(&mut self, addr: usize, words: usize) -> (u64, u64) {
+        self.span(addr, words, true)
+    }
+
+    fn span(&mut self, addr: usize, words: usize, is_store: bool) -> (u64, u64) {
+        if words == 0 {
+            return (0, 0);
+        }
+        let first = addr / self.cfg.line_words;
+        let last = (addr + words - 1) / self.cfg.line_words;
+        let mut misses = 0;
+        for line in first..=last {
+            if !self.touch_line(line, is_store) {
+                misses += 1;
+            }
+        }
+        // Next-line prefetch: warm line last+1 without counting an
+        // access or a miss (the fill happens off the critical path).
+        if self.cfg.prefetch && !is_store {
+            self.warm_line(last + 1);
+        }
+        ((last - first + 1) as u64, misses)
+    }
+
+    /// Insert a line at MRU without touching counters (prefetch fill).
+    fn warm_line(&mut self, line: usize) {
+        let (set, tag) = self.set_and_tag(line);
+        let base = set * self.cfg.ways;
+        let ways = &mut self.tags[base..base + self.cfg.ways];
+        match ways.iter().position(|t| *t == Some(tag)) {
+            Some(w) => {
+                ways[..=w].rotate_right(1);
+                ways[0] = Some(tag);
+            }
+            None => {
+                ways.rotate_right(1);
+                ways[0] = Some(tag);
+            }
+        }
+    }
+
+    /// Reset counters (keep cache contents — useful for warm-cache runs).
+    pub fn reset_counters(&mut self) {
+        self.load_accesses = 0;
+        self.load_misses = 0;
+        self.store_accesses = 0;
+        self.store_misses = 0;
+    }
+
+    /// Flush contents and counters.
+    pub fn flush(&mut self) {
+        self.tags.fill(None);
+        self.reset_counters();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        // 4 sets x 2 ways x 4-word lines = 32 words. Prefetch off so the
+        // LRU/mapping tests below stay exact.
+        Cache::new(CacheConfig {
+            capacity_words: 32,
+            ways: 2,
+            line_words: 4,
+            prefetch: false,
+        })
+    }
+
+    fn small_prefetch() -> Cache {
+        Cache::new(CacheConfig {
+            capacity_words: 32,
+            ways: 2,
+            line_words: 4,
+            prefetch: true,
+        })
+    }
+
+    #[test]
+    fn prefetch_hides_sequential_stream_misses() {
+        let mut c = small_prefetch();
+        // Sequential lines 0..4: only line 0 misses; 1..3 were warmed.
+        for line in 0..4 {
+            c.load(line * 4, 4);
+        }
+        assert_eq!(c.load_accesses, 4);
+        assert_eq!(c.load_misses, 1);
+    }
+
+    #[test]
+    fn prefetch_does_not_help_large_strides() {
+        let mut c = small_prefetch();
+        // Stride 2 lines: warmed line L+1 is never used.
+        for i in 0..3 {
+            c.load(i * 8, 4); // lines 0, 2, 4
+        }
+        assert_eq!(c.load_misses, 3);
+    }
+
+    #[test]
+    fn prefetch_not_triggered_by_stores() {
+        let mut c = small_prefetch();
+        c.store(0, 4); // line 0; must NOT warm line 1
+        c.load(4, 4); // line 1 → miss
+        assert_eq!(c.load_misses, 1);
+    }
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = small();
+        c.load(0, 4); // miss
+        c.load(0, 4); // hit
+        c.load(2, 1); // same line, hit
+        assert_eq!(c.load_accesses, 3);
+        assert_eq!(c.load_misses, 1);
+    }
+
+    #[test]
+    fn span_counts_lines() {
+        let mut c = small();
+        let (lines, misses) = c.load(2, 8); // words 2..10 → lines 0,1,2
+        assert_eq!(lines, 3);
+        assert_eq!(misses, 3);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut c = small(); // 4 sets; lines mapping to set 0: 0, 4, 8...
+        c.load(0, 1); // line 0 -> set 0
+        c.load(16, 1); // line 4 -> set 0
+        c.load(0, 1); // hit, line 0 becomes MRU
+        c.load(32, 1); // line 8 -> set 0, evicts line 4 (LRU)
+        c.load(0, 1); // still resident: hit
+        c.load(16, 1); // evicted: miss
+        assert_eq!(c.load_misses, 4);
+    }
+
+    #[test]
+    fn stores_counted_separately() {
+        let mut c = small();
+        c.store(0, 4);
+        c.store(0, 4);
+        assert_eq!(c.store_accesses, 2);
+        assert_eq!(c.store_misses, 1);
+        assert_eq!(c.load_accesses, 0);
+    }
+
+    #[test]
+    fn store_then_load_same_line_hits() {
+        let mut c = small();
+        c.store(0, 4);
+        c.load(0, 4);
+        assert_eq!(c.load_misses, 0);
+    }
+
+    #[test]
+    fn flush_clears_contents() {
+        let mut c = small();
+        c.load(0, 4);
+        c.flush();
+        c.load(0, 4);
+        assert_eq!(c.load_misses, 1);
+        assert_eq!(c.load_accesses, 1);
+    }
+
+    #[test]
+    fn default_is_32kib_8way() {
+        let c = Cache::new(CacheConfig::default());
+        assert_eq!(c.sets, 64);
+    }
+}

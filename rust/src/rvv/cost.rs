@@ -1,0 +1,91 @@
+//! Per-instruction cycle cost model for the simulated RVV core.
+//!
+//! Calibrated to the shape of an in-order dual-issue embedded RVV core
+//! like the SpacemiT K1's X60: a 256-bit vector unit that processes one
+//! 256-bit beat per cycle, so an LMUL=m vector op retires in m beats;
+//! loads pay an issue cost plus a per-line cost, and L1 misses stall for
+//! a fixed penalty. Absolute cycles are a model — only *ratios* between
+//! kernels are claimed, matching how EXPERIMENTS.md reports results.
+
+/// Cycle costs per instruction class.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// vsetvli and scalar ALU ops.
+    pub scalar_op: u64,
+    /// Scalar load/store issue (hit).
+    pub scalar_mem: u64,
+    /// Vector instruction base issue cost.
+    pub vector_issue: u64,
+    /// Per-256-bit-beat cost of a vector ALU op (×LMUL per instr).
+    pub vector_beat: u64,
+    /// Per-cache-line cost of a vector load/store (hit).
+    pub vector_mem_line: u64,
+    /// Extra cost per element of a *strided* load (vlse splits into
+    /// element accesses on the K1).
+    pub strided_elem: u64,
+    /// L1 miss penalty per line (LPDDR4x ~ 30 core cycles to L2).
+    pub miss_penalty: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            scalar_op: 1,
+            scalar_mem: 2,
+            vector_issue: 1,
+            vector_beat: 1,
+            vector_mem_line: 2,
+            strided_elem: 1,
+            miss_penalty: 30,
+        }
+    }
+}
+
+impl CostModel {
+    /// Cycles for a vector ALU op at a given LMUL (beats = LMUL).
+    pub fn valu(&self, lmul: usize) -> u64 {
+        self.vector_issue + self.vector_beat * lmul as u64
+    }
+
+    /// Cycles for a unit-stride vector memory op touching `lines` lines
+    /// of which `misses` missed.
+    pub fn vmem(&self, lines: u64, misses: u64) -> u64 {
+        self.vector_issue + self.vector_mem_line * lines + self.miss_penalty * misses
+    }
+
+    /// Cycles for a strided vector load of `elems` elements with
+    /// `misses` line misses.
+    pub fn vmem_strided(&self, elems: u64, misses: u64) -> u64 {
+        self.vector_issue + self.strided_elem * elems + self.miss_penalty * misses
+    }
+
+    /// Cycles for a scalar load/store with `misses` (0 or 1) misses.
+    pub fn smem(&self, misses: u64) -> u64 {
+        self.scalar_mem + self.miss_penalty * misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lmul_scales_alu_cost() {
+        let m = CostModel::default();
+        assert!(m.valu(8) > m.valu(1));
+        assert_eq!(m.valu(8) - m.valu(1), 7 * m.vector_beat);
+    }
+
+    #[test]
+    fn misses_dominate() {
+        let m = CostModel::default();
+        assert!(m.vmem(1, 1) > 10 * m.vmem(1, 0) / 2);
+    }
+
+    #[test]
+    fn strided_more_expensive_than_unit_for_long_vectors() {
+        let m = CostModel::default();
+        // 64 elements = 16 words/line → 4 lines unit-stride.
+        assert!(m.vmem_strided(64, 0) > m.vmem(4, 0));
+    }
+}

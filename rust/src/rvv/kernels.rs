@@ -1,0 +1,727 @@
+//! The paper's micro-kernels, written against the RVV machine.
+//!
+//! Each kernel is the instruction-level twin of a native implementation
+//! in [`crate::gemm`] / [`crate::im2col`]; unit tests check the simulated
+//! f32 results against the native ones, so the counter reports describe
+//! kernels that are *provably computing the right thing*.
+//!
+//! Register allocation convention: logical register `i` (at the current
+//! LMUL) is physical register `i·LMUL`. Algorithm 1 uses logical regs
+//! `0..T` as accumulators and logical reg `T` as the data register, which
+//! requires `(T+1)·LMUL ≤ 32` — the register-pressure constraint the
+//! tuner (§3.3) navigates.
+
+use crate::conv::ConvShape;
+use crate::gemm::outer::ColumnView;
+use crate::im2col::PackedMatrix;
+use crate::pruning::{ColwisePruned, RowNmPruned};
+
+use super::machine::RvvMachine;
+
+/// Counter snapshot for one simulated kernel run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimReport {
+    /// L1 load accesses at cache-line granularity (`perf` L1-loads twin).
+    pub l1_loads: u64,
+    pub l1_load_misses: u64,
+    pub l1_stores: u64,
+    pub l1_store_misses: u64,
+    pub instructions: u64,
+    pub cycles: u64,
+}
+
+impl SimReport {
+    fn capture(m: &RvvMachine) -> Self {
+        Self {
+            l1_loads: m.cache.load_accesses,
+            l1_load_misses: m.cache.load_misses,
+            l1_stores: m.cache.store_accesses,
+            l1_store_misses: m.cache.store_misses,
+            instructions: m.ctr.instructions(),
+            cycles: m.ctr.cycles,
+        }
+    }
+}
+
+/// Maximum tile size T for a given LMUL on a 32-register machine:
+/// T accumulators + 1 data register.
+pub fn max_tile_for_lmul(m: &RvvMachine, lmul: usize) -> usize {
+    m.logical_regs(lmul).saturating_sub(1)
+}
+
+// ----------------------------------------------------------------------
+// Algorithm 1: column-wise N:M sparse GEMM
+
+/// Simulate Algorithm 1 over compressed weights `w` and packed data `a`.
+/// `a.v` must equal VLMAX(lmul). Returns (output `[rows, cols]`, report).
+pub fn sim_spmm_colwise(
+    m: &mut RvvMachine,
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    lmul: usize,
+) -> (Vec<f32>, SimReport) {
+    assert_eq!(w.cols, a.k, "reduction dim mismatch");
+    assert_eq!(a.v, m.vlmax(lmul), "strip width must equal VLMAX(lmul)");
+    assert!(
+        w.tile + 1 <= m.logical_regs(lmul),
+        "tile {} + data reg exceed {} logical regs at LMUL={lmul}",
+        w.tile,
+        m.logical_regs(lmul)
+    );
+    // Lay the operands out in simulator memory.
+    let a_addr = m.alloc(&a.data);
+    let out_addr = m.alloc_zeros(w.rows * a.cols);
+    // Weights: per tile, a value block [row_count, nret] and an index
+    // array (stored as f32 for the scalar load path).
+    let tile_meta: Vec<(usize, usize)> = w
+        .tiles
+        .iter()
+        .map(|t| {
+            let vals = m.alloc(&t.values);
+            let idxf: Vec<f32> = t.indices.iter().map(|&i| i as f32).collect();
+            let idxs = m.alloc(&idxf);
+            (vals, idxs)
+        })
+        .collect();
+    m.reset_counters();
+
+    let data_reg = |t: usize, lmul: usize| t * lmul; // logical -> physical
+    for strip in 0..a.strips {
+        let valid = a.strip_valid(strip);
+        let col0 = strip * a.v;
+        for (tile, &(vals_addr, idx_addr)) in w.tiles.iter().zip(&tile_meta) {
+            let t = tile.row_count;
+            let nret = tile.indices.len();
+            m.vsetvli(valid, lmul);
+            for ti in 0..t {
+                m.vfmv_v_f(data_reg(ti, lmul), 0.0); // acc_t ← 0
+            }
+            let va = data_reg(t, lmul); // the single data register
+            for j in 0..nret {
+                let idx = m.flw(idx_addr + j) as usize; // Idx[n]
+                m.scalar_ops(1); // address computation A + Idx[n]·V
+                m.vle32(va, a_addr + (strip * a.k + idx) * a.v);
+                for ti in 0..t {
+                    let wv = m.flw(vals_addr + ti * nret + j); // scalar weight
+                    m.vfmacc_vf(data_reg(ti, lmul), wv, va);
+                }
+            }
+            for ti in 0..t {
+                let r = tile.row_start + ti;
+                m.scalar_ops(1);
+                m.vse32(data_reg(ti, lmul), out_addr + r * a.cols + col0);
+            }
+        }
+    }
+    let report = SimReport::capture(m);
+    (m.read(out_addr, w.rows * a.cols).to_vec(), report)
+}
+
+// ----------------------------------------------------------------------
+// Dense tiled GEMM (dense baseline of Fig. 5 / Fig. 10)
+
+/// Simulate the dense packed GEMM at tile size `tile`.
+pub fn sim_gemm_dense(
+    m: &mut RvvMachine,
+    filter: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    lmul: usize,
+) -> (Vec<f32>, SimReport) {
+    assert_eq!(filter.len(), rows * a.k);
+    assert_eq!(a.v, m.vlmax(lmul));
+    assert!(tile + 1 <= m.logical_regs(lmul));
+    let a_addr = m.alloc(&a.data);
+    let w_addr = m.alloc(filter);
+    let out_addr = m.alloc_zeros(rows * a.cols);
+    m.reset_counters();
+
+    let lreg = |i: usize| i * lmul;
+    for strip in 0..a.strips {
+        let valid = a.strip_valid(strip);
+        let col0 = strip * a.v;
+        let mut row = 0;
+        while row < rows {
+            let t = tile.min(rows - row);
+            m.vsetvli(valid, lmul);
+            for ti in 0..t {
+                m.vfmv_v_f(lreg(ti), 0.0);
+            }
+            let va = lreg(t);
+            for k in 0..a.k {
+                m.scalar_ops(1);
+                m.vle32(va, a_addr + (strip * a.k + k) * a.v);
+                for ti in 0..t {
+                    let wv = m.flw(w_addr + (row + ti) * a.k + k);
+                    m.vfmacc_vf(lreg(ti), wv, va);
+                }
+            }
+            for ti in 0..t {
+                m.scalar_ops(1);
+                m.vse32(lreg(ti), out_addr + (row + ti) * a.cols + col0);
+            }
+            row += t;
+        }
+    }
+    let report = SimReport::capture(m);
+    (m.read(out_addr, rows * a.cols).to_vec(), report)
+}
+
+/// Dense tiled GEMM over an *unpacked* row-major `A[k, cols]` resident at
+/// `a_addr` — the "no data packing" configuration of Fig. 8a. The loop
+/// structure matches [`sim_gemm_dense`]; only the A addressing differs:
+/// successive reduction steps of one strip touch addresses `cols` apart
+/// instead of `v` apart, so the strip's working set spans `k` distinct
+/// line groups and cache locality collapses for large `cols`.
+pub fn sim_gemm_dense_unpacked(
+    m: &mut RvvMachine,
+    filter: &[f32],
+    rows: usize,
+    a_addr: usize,
+    k: usize,
+    cols: usize,
+    tile: usize,
+    lmul: usize,
+) -> (Vec<f32>, SimReport) {
+    assert_eq!(filter.len(), rows * k);
+    let v = m.vlmax(lmul);
+    assert!(tile + 1 <= m.logical_regs(lmul));
+    let strips = cols.div_ceil(v).max(1);
+    let w_addr = m.alloc(filter);
+    let out_addr = m.alloc_zeros(rows * cols);
+    m.reset_counters();
+
+    let lreg = |i: usize| i * lmul;
+    for strip in 0..strips {
+        let col0 = strip * v;
+        let valid = v.min(cols.saturating_sub(col0));
+        if valid == 0 {
+            continue;
+        }
+        let mut row = 0;
+        while row < rows {
+            let t = tile.min(rows - row);
+            m.vsetvli(valid, lmul);
+            for ti in 0..t {
+                m.vfmv_v_f(lreg(ti), 0.0);
+            }
+            let va = lreg(t);
+            for kk in 0..k {
+                m.scalar_ops(1);
+                // Row-major A: stride `cols` between reduction rows.
+                m.vle32(va, a_addr + kk * cols + col0);
+                for ti in 0..t {
+                    let wv = m.flw(w_addr + (row + ti) * k + kk);
+                    m.vfmacc_vf(lreg(ti), wv, va);
+                }
+            }
+            for ti in 0..t {
+                m.scalar_ops(1);
+                m.vse32(lreg(ti), out_addr + (row + ti) * cols + col0);
+            }
+            row += t;
+        }
+    }
+    let report = SimReport::capture(m);
+    (m.read(out_addr, rows * cols).to_vec(), report)
+}
+
+// ----------------------------------------------------------------------
+// Conventional row-based N:M baselines (§3.1)
+
+/// Inner-product row-based N:M SpMM: redundant data-row loads.
+pub fn sim_spmm_inner_rownm(
+    m: &mut RvvMachine,
+    w: &RowNmPruned,
+    a: &PackedMatrix,
+    lmul: usize,
+) -> (Vec<f32>, SimReport) {
+    assert_eq!(w.cols, a.k);
+    assert_eq!(a.v, m.vlmax(lmul));
+    let a_addr = m.alloc(&a.data);
+    let vals_addr = m.alloc(&w.values);
+    let idxf: Vec<f32> = w.indices.iter().map(|&i| i as f32).collect();
+    let idx_addr = m.alloc(&idxf);
+    let out_addr = m.alloc_zeros(w.rows * a.cols);
+    m.reset_counters();
+
+    let (acc, va) = (0, lmul); // logical regs 0 and 1
+    for strip in 0..a.strips {
+        let valid = a.strip_valid(strip);
+        let col0 = strip * a.v;
+        for r in 0..w.rows {
+            m.vsetvli(valid, lmul);
+            m.vfmv_v_f(acc, 0.0);
+            for j in 0..w.per_row {
+                let idx = m.flw(idx_addr + r * w.per_row + j) as usize;
+                let wv = m.flw(vals_addr + r * w.per_row + j);
+                m.scalar_ops(1);
+                // Every output row re-fetches its data rows: no reuse
+                // across rows because each row's index set differs.
+                m.vle32(va, a_addr + (strip * a.k + idx) * a.v);
+                m.vfmacc_vf(acc, wv, va);
+            }
+            m.scalar_ops(1);
+            m.vse32(acc, out_addr + r * a.cols + col0);
+        }
+    }
+    let report = SimReport::capture(m);
+    (m.read(out_addr, w.rows * a.cols).to_vec(), report)
+}
+
+/// Outer-product row-based N:M SpMM — the "conventional N:M" of Fig. 5:
+/// data rows are reused, but partial sums are read-modify-written to the
+/// scattered output rows through memory.
+pub fn sim_spmm_outer_rownm(
+    m: &mut RvvMachine,
+    w: &RowNmPruned,
+    a: &PackedMatrix,
+    lmul: usize,
+) -> (Vec<f32>, SimReport) {
+    assert_eq!(w.cols, a.k);
+    assert_eq!(a.v, m.vlmax(lmul));
+    let view = ColumnView::build(w);
+    let a_addr = m.alloc(&a.data);
+    let out_addr = m.alloc_zeros(w.rows * a.cols);
+    // Column-view hit arrays in memory: rows and values per column.
+    let rowsf: Vec<f32> = view.hits.iter().map(|&(r, _)| r as f32).collect();
+    let valsf: Vec<f32> = view.hits.iter().map(|&(_, v)| v).collect();
+    let rows_addr = m.alloc(&rowsf);
+    let vals_addr = m.alloc(&valsf);
+    m.reset_counters();
+
+    let (va, part) = (0, lmul); // logical regs 0 and 1
+    for strip in 0..a.strips {
+        let valid = a.strip_valid(strip);
+        let col0 = strip * a.v;
+        for k in 0..w.cols {
+            let (lo, hi) = (view.offsets[k] as usize, view.offsets[k + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            m.vsetvli(valid, lmul);
+            // Data row loaded once per column (the reuse win)…
+            m.scalar_ops(1);
+            m.vle32(va, a_addr + (strip * a.k + k) * a.v);
+            for h in lo..hi {
+                let r = m.flw(rows_addr + h) as usize;
+                let wv = m.flw(vals_addr + h);
+                m.scalar_ops(1);
+                // …but the accumulator lives in memory: load partial,
+                // FMA, store back — the redundant-store pathology.
+                m.vle32(part, out_addr + r * a.cols + col0);
+                m.vfmacc_vf(part, wv, va);
+                m.vse32(part, out_addr + r * a.cols + col0);
+            }
+        }
+    }
+    let report = SimReport::capture(m);
+    (m.read(out_addr, w.rows * a.cols).to_vec(), report)
+}
+
+// ----------------------------------------------------------------------
+// Algorithm 2: fused im2col + data packing, and the separate baseline
+
+/// Simulate the fused im2col+pack pass (Algorithm 2) over a CNHW input
+/// already resident at `x_addr`. Returns (packed address, report); the
+/// packed layout matches [`PackedMatrix`] with `v = VLMAX(lmul)`.
+pub fn sim_fused_im2col_pack(
+    m: &mut RvvMachine,
+    x_addr: usize,
+    s: &ConvShape,
+    lmul: usize,
+) -> (usize, SimReport) {
+    let v = m.vlmax(lmul);
+    let (h_out, w_out) = (s.h_out(), s.w_out());
+    let cols = s.n * h_out * w_out;
+    let k = s.k();
+    let strips = cols.div_ceil(v).max(1);
+    let out_addr = m.alloc_zeros(strips * k * v);
+    m.reset_counters();
+    sim_strip_moves(m, x_addr, s, lmul, v, strips, cols, |strip, row, lane| {
+        (strip * k + row) * v + lane + out_addr
+    });
+    let report = SimReport::capture(m);
+    (out_addr, report)
+}
+
+/// Simulate a standalone im2col producing the dense `A[k, cols]` matrix.
+pub fn sim_im2col(
+    m: &mut RvvMachine,
+    x_addr: usize,
+    s: &ConvShape,
+    lmul: usize,
+) -> (usize, SimReport) {
+    let v = m.vlmax(lmul);
+    let cols = s.gemm_cols();
+    let k = s.k();
+    let strips = cols.div_ceil(v).max(1);
+    let a_addr = m.alloc_zeros(k * cols);
+    m.reset_counters();
+    // Same source traversal, but the destination is the row-major A
+    // matrix (strip decomposition only segments the loop).
+    sim_strip_moves(m, x_addr, s, lmul, v, strips, cols, |strip, row, lane| {
+        row * cols + strip * v + lane + a_addr
+    });
+    let report = SimReport::capture(m);
+    (a_addr, report)
+}
+
+/// Simulate the standalone packing pass over an existing `A[k, cols]`.
+pub fn sim_pack(
+    m: &mut RvvMachine,
+    a_addr: usize,
+    k: usize,
+    cols: usize,
+    lmul: usize,
+) -> (usize, SimReport) {
+    let v = m.vlmax(lmul);
+    let strips = cols.div_ceil(v).max(1);
+    let out_addr = m.alloc_zeros(strips * k * v);
+    m.reset_counters();
+    for strip in 0..strips {
+        let valid = v.min(cols - (strip * v).min(cols));
+        if valid == 0 {
+            continue;
+        }
+        for row in 0..k {
+            m.vsetvli(valid, lmul);
+            m.scalar_ops(1);
+            m.vle32(0, a_addr + row * cols + strip * v);
+            m.vse32(0, out_addr + (strip * k + row) * v);
+        }
+    }
+    let report = SimReport::capture(m);
+    (out_addr, report)
+}
+
+/// Separate im2col followed by packing — the baseline of §4.3. Returns
+/// (packed address, combined report).
+pub fn sim_separate_im2col_pack(
+    m: &mut RvvMachine,
+    x_addr: usize,
+    s: &ConvShape,
+    lmul: usize,
+) -> (usize, SimReport) {
+    let (a_addr, r1) = sim_im2col(m, x_addr, s, lmul);
+    let (p_addr, r2) = sim_pack(m, a_addr, s.k(), s.gemm_cols(), lmul);
+    let combined = SimReport {
+        l1_loads: r1.l1_loads + r2.l1_loads,
+        l1_load_misses: r1.l1_load_misses + r2.l1_load_misses,
+        l1_stores: r1.l1_stores + r2.l1_stores,
+        l1_store_misses: r1.l1_store_misses + r2.l1_store_misses,
+        instructions: r1.instructions + r2.instructions,
+        cycles: r1.cycles + r2.cycles,
+    };
+    (p_addr, combined)
+}
+
+/// Shared source-traversal for the im2col family: walks (strip, segment,
+/// tap, channel) and issues one vector move per valid run, exactly like
+/// the native [`crate::im2col::fused_im2col_pack_cnhw`]. `dst` maps
+/// (strip, data-matrix row, lane) to a destination address.
+#[allow(clippy::too_many_arguments)]
+fn sim_strip_moves<F: Fn(usize, usize, usize) -> usize>(
+    m: &mut RvvMachine,
+    x_addr: usize,
+    s: &ConvShape,
+    lmul: usize,
+    v: usize,
+    strips: usize,
+    cols: usize,
+    dst: F,
+) {
+    let (h_out, w_out) = (s.h_out(), s.w_out());
+    for strip in 0..strips {
+        let strip_base = strip * v;
+        let valid = v.min(cols.saturating_sub(strip_base));
+        let mut lane = 0usize;
+        while lane < valid {
+            let col = strip_base + lane;
+            let n = col / (h_out * w_out);
+            let rem = col % (h_out * w_out);
+            let ho = rem / w_out;
+            let wo0 = rem % w_out;
+            let seg = (w_out - wo0).min(valid - lane);
+            m.scalar_ops(2); // segment decomposition arithmetic
+            for kh in 0..s.kh {
+                let hi = (ho * s.stride + kh) as isize - s.pad as isize;
+                if hi < 0 || hi >= s.h_in as isize {
+                    continue; // padding: skipped, not copied (§4.3)
+                }
+                let hi = hi as usize;
+                for kw in 0..s.kw {
+                    let wi0 = (wo0 * s.stride + kw) as isize - s.pad as isize;
+                    let j_lo = if wi0 >= 0 {
+                        0
+                    } else {
+                        ((-wi0) as usize).div_ceil(s.stride)
+                    };
+                    let j_hi = if wi0 >= s.w_in as isize {
+                        0
+                    } else {
+                        (((s.w_in as isize - 1 - wi0) / s.stride as isize) + 1).max(0) as usize
+                    }
+                    .min(seg);
+                    if j_lo >= j_hi {
+                        continue;
+                    }
+                    for c in 0..s.c_in {
+                        let row = (kh * s.kw + kw) * s.c_in + c;
+                        let in_base = ((c * s.n + n) * s.h_in + hi) * s.w_in;
+                        let len = j_hi - j_lo;
+                        // Dynamic VL: exactly the valid run (§3.2 — no
+                        // masked loads, no padded copies).
+                        m.vsetvli(len, lmul);
+                        m.scalar_ops(1);
+                        let src0 =
+                            (in_base as isize + wi0 + (j_lo * s.stride) as isize) as usize;
+                        if s.stride == 1 {
+                            m.vle32(0, x_addr + src0);
+                        } else {
+                            m.vlse32(0, x_addr + src0, s.stride);
+                        }
+                        m.vse32(0, dst(strip, row, lane + j_lo));
+                    }
+                }
+            }
+            lane += seg;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{gemm_dense, matmul_ref, spmm_colwise, spmm_inner_rownm, spmm_outer_rownm};
+    use crate::im2col::{fused_im2col_pack_cnhw, im2col_cnhw, pack_data_matrix};
+    use crate::pruning::{prune_colwise, prune_rownm};
+    use crate::tensor::Tensor;
+    use crate::util::{allclose, XorShiftRng};
+
+    fn machine() -> RvvMachine {
+        RvvMachine::k1()
+    }
+
+    #[test]
+    fn sim_colwise_matches_native() {
+        let mut r = XorShiftRng::new(201);
+        let (rows, k, cols) = (8, 16, 40);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        for lmul in [1, 2, 4] {
+            let mut m = machine();
+            let v = m.vlmax(lmul);
+            let cp = prune_colwise(&w, rows, k, 4, 2, 4);
+            let p = pack_data_matrix(&a, k, cols, v);
+            let native = spmm_colwise(&cp, &p);
+            let (got, rep) = sim_spmm_colwise(&mut m, &cp, &p, lmul);
+            assert!(allclose(&got, &native, 1e-5, 1e-6), "lmul={lmul}");
+            assert!(rep.l1_loads > 0 && rep.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn sim_dense_matches_native() {
+        let mut r = XorShiftRng::new(202);
+        let (rows, k, cols) = (9, 12, 25);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let mut m = machine();
+        let v = m.vlmax(2);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let native = gemm_dense(&w, rows, &p, 4);
+        let (got, _) = sim_gemm_dense(&mut m, &w, rows, &p, 4, 2);
+        assert!(allclose(&got, &native, 1e-5, 1e-6));
+        assert!(allclose(&got, &matmul_ref(&w, &a, rows, k, cols), 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn sim_dense_unpacked_matches_reference_and_loads_more_lines() {
+        let mut r = XorShiftRng::new(208);
+        let (rows, k, cols) = (8, 24, 200);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let lmul = 2;
+        let mut m = machine();
+        let a_addr = m.alloc(&a);
+        let (got, rep_un) =
+            sim_gemm_dense_unpacked(&mut m, &w, rows, a_addr, k, cols, 4, lmul);
+        assert!(allclose(
+            &got,
+            &matmul_ref(&w, &a, rows, k, cols),
+            1e-4,
+            1e-5
+        ));
+        // Same arithmetic against packed A: identical results, but the
+        // packed layout must not miss more than the strided one.
+        let mut m2 = machine();
+        let v = m2.vlmax(lmul);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let (got_p, rep_pk) = sim_gemm_dense(&mut m2, &w, rows, &p, 4, lmul);
+        assert!(allclose(&got, &got_p, 1e-5, 1e-6));
+        assert!(
+            rep_pk.l1_load_misses <= rep_un.l1_load_misses,
+            "packed {} vs unpacked {} misses",
+            rep_pk.l1_load_misses,
+            rep_un.l1_load_misses
+        );
+    }
+
+    #[test]
+    fn sim_inner_and_outer_match_native() {
+        let mut r = XorShiftRng::new(203);
+        let (rows, k, cols) = (10, 20, 30);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let rp = prune_rownm(&w, rows, k, 2, 4);
+        let mut m = machine();
+        let v = m.vlmax(1);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let native_i = spmm_inner_rownm(&rp, &p);
+        let native_o = spmm_outer_rownm(&rp, &p);
+        let (got_i, _) = sim_spmm_inner_rownm(&mut m, &rp, &p, 1);
+        let mut m2 = machine();
+        let (got_o, _) = sim_spmm_outer_rownm(&mut m2, &rp, &p, 1);
+        assert!(allclose(&got_i, &native_i, 1e-5, 1e-6));
+        assert!(allclose(&got_o, &native_o, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn sim_fused_matches_native_packing() {
+        let mut r = XorShiftRng::new(204);
+        for (s, lmul) in [
+            (ConvShape::square(1, 3, 8, 4, 3, 1, 1), 1),
+            (ConvShape::square(2, 2, 9, 4, 3, 2, 1), 2),
+            (ConvShape::square(1, 2, 12, 4, 7, 2, 3), 4),
+        ] {
+            let mut m = machine();
+            let v = m.vlmax(lmul);
+            let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+            let native = fused_im2col_pack_cnhw(&x, &s, v);
+            let x_addr = m.alloc(&x.data);
+            let (p_addr, rep) = sim_fused_im2col_pack(&mut m, x_addr, &s, lmul);
+            let got = m.read(p_addr, native.data.len());
+            assert!(allclose(got, &native.data, 0.0, 0.0), "{s} lmul={lmul}");
+            assert!(rep.instructions > 0);
+        }
+    }
+
+    #[test]
+    fn sim_separate_produces_same_bits_as_fused() {
+        let mut r = XorShiftRng::new(205);
+        let s = ConvShape::square(1, 3, 10, 4, 3, 1, 1);
+        let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+        let lmul = 2;
+        let mut m1 = machine();
+        let xa1 = m1.alloc(&x.data);
+        let (pf, _) = sim_fused_im2col_pack(&mut m1, xa1, &s, lmul);
+        let mut m2 = machine();
+        let xa2 = m2.alloc(&x.data);
+        let (ps, _) = sim_separate_im2col_pack(&mut m2, xa2, &s, lmul);
+        let v = m1.vlmax(lmul);
+        let len = s.gemm_cols().div_ceil(v) * s.k() * v;
+        assert_eq!(m1.read(pf, len), m2.read(ps, len));
+    }
+
+    #[test]
+    fn sim_im2col_matches_native_a_matrix() {
+        let mut r = XorShiftRng::new(206);
+        let s = ConvShape::square(1, 2, 7, 3, 3, 1, 1);
+        let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+        let native = im2col_cnhw(&x, &s);
+        let mut m = machine();
+        let xa = m.alloc(&x.data);
+        let (aa, _) = sim_im2col(&mut m, xa, &s, 2);
+        assert_eq!(m.read(aa, native.len()), &native[..]);
+    }
+
+    // ---------------- paper-shape sanity checks ----------------
+
+    #[test]
+    fn fusion_reduces_l1_loads() {
+        // Fig. 7's claim: fused im2col+pack touches memory once.
+        let mut r = XorShiftRng::new(207);
+        let s = ConvShape::square(1, 8, 14, 8, 3, 1, 1);
+        let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+        for lmul in [1, 2, 4, 8] {
+            let mut m1 = machine();
+            let xa = m1.alloc(&x.data);
+            let (_, fused) = sim_fused_im2col_pack(&mut m1, xa, &s, lmul);
+            let mut m2 = machine();
+            let xa2 = m2.alloc(&x.data);
+            let (_, sep) = sim_separate_im2col_pack(&mut m2, xa2, &s, lmul);
+            assert!(
+                fused.l1_loads < sep.l1_loads,
+                "lmul={lmul}: fused {} !< separate {}",
+                fused.l1_loads,
+                sep.l1_loads
+            );
+            assert!(fused.cycles < sep.cycles, "lmul={lmul}");
+        }
+    }
+
+    #[test]
+    fn colwise_beats_outer_product_and_dense_in_cycles() {
+        // Fig. 5's ordering at 50% sparsity: colwise < dense < outer.
+        let mut r = XorShiftRng::new(208);
+        let (rows, k, cols) = (32, 64, 256);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let lmul = 2;
+        let mut m = machine();
+        let v = m.vlmax(lmul);
+        let p = pack_data_matrix(&a, k, cols, v);
+
+        let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+        let (_, rep_col) = sim_spmm_colwise(&mut m, &cp, &p, lmul);
+
+        let mut m2 = machine();
+        let (_, rep_dense) = sim_gemm_dense(&mut m2, &w, rows, &p, 8, lmul);
+
+        let rp = prune_rownm(&w, rows, k, 2, 4);
+        let mut m3 = machine();
+        let (_, rep_outer) = sim_spmm_outer_rownm(&mut m3, &rp, &p, lmul);
+
+        assert!(
+            rep_col.cycles < rep_dense.cycles,
+            "colwise {} !< dense {}",
+            rep_col.cycles,
+            rep_dense.cycles
+        );
+        assert!(
+            rep_outer.cycles > rep_dense.cycles,
+            "outer {} !> dense {} (paper: conventional N:M is *slower*)",
+            rep_outer.cycles,
+            rep_dense.cycles
+        );
+    }
+
+    #[test]
+    fn inner_product_reloads_more_than_colwise() {
+        let mut r = XorShiftRng::new(209);
+        let (rows, k, cols) = (32, 32, 128);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let lmul = 1;
+        let mut m = machine();
+        let v = m.vlmax(lmul);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+        let (_, rep_col) = sim_spmm_colwise(&mut m, &cp, &p, lmul);
+        let rp = prune_rownm(&w, rows, k, 2, 4);
+        let mut m2 = machine();
+        let (_, rep_inner) = sim_spmm_inner_rownm(&mut m2, &rp, &p, lmul);
+        // Same FLOPs, but inner-product re-fetches data rows per output
+        // row while colwise fetches once per tile.
+        assert!(rep_col.l1_loads < rep_inner.l1_loads);
+    }
+
+    #[test]
+    fn max_tile_respects_register_file() {
+        let m = machine();
+        assert_eq!(max_tile_for_lmul(&m, 1), 31);
+        assert_eq!(max_tile_for_lmul(&m, 8), 3);
+    }
+}

@@ -1,0 +1,392 @@
+//! The RVV machine: register file, vector instructions, memory + cache.
+//!
+//! Functional *and* counting: instructions move real f32 data (so kernel
+//! results are checked against the native implementations) while every
+//! instruction updates counters and the cost model. Word-addressed
+//! memory (1 address = 1 f32); "bytes" never appear.
+
+use super::cache::{Cache, CacheConfig};
+use super::cost::CostModel;
+
+/// Architectural vector register index (0..num_regs). With grouping, a
+/// logical register at LMUL=m occupies physical regs `v, v+1, …, v+m-1`
+/// and `v` must be a multiple of m (RVV 1.0 constraint).
+pub type VReg = usize;
+
+/// Machine configuration. Defaults model the SpacemiT K1 (§4.1.1).
+#[derive(Clone, Copy, Debug)]
+pub struct RvvConfig {
+    /// Vector register width in bits (K1: 256).
+    pub vlen_bits: usize,
+    /// Number of architectural vector registers (RVV: 32).
+    pub num_regs: usize,
+    pub cache: CacheConfig,
+    pub cost: CostModel,
+}
+
+impl Default for RvvConfig {
+    fn default() -> Self {
+        Self {
+            vlen_bits: 256,
+            num_regs: 32,
+            cache: CacheConfig::default(),
+            cost: CostModel::default(),
+        }
+    }
+}
+
+/// Instruction-count counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    pub vsetvli: u64,
+    /// Unit-stride vector loads (vle32.v).
+    pub vle: u64,
+    /// Strided vector loads (vlse32.v).
+    pub vlse: u64,
+    /// Unit-stride vector stores (vse32.v).
+    pub vse: u64,
+    /// Scalar-vector fused multiply-accumulate (vfmacc.vf).
+    pub vfmacc: u64,
+    /// Vector move/splat (vmv.v.x / vfmv.v.f).
+    pub vmv: u64,
+    pub scalar_loads: u64,
+    pub scalar_stores: u64,
+    pub scalar_ops: u64,
+    /// Cost-model cycles.
+    pub cycles: u64,
+}
+
+impl Counters {
+    /// Total dynamic instruction count.
+    pub fn instructions(&self) -> u64 {
+        self.vsetvli
+            + self.vle
+            + self.vlse
+            + self.vse
+            + self.vfmacc
+            + self.vmv
+            + self.scalar_loads
+            + self.scalar_stores
+            + self.scalar_ops
+    }
+}
+
+/// The simulated machine.
+pub struct RvvMachine {
+    pub cfg: RvvConfig,
+    /// Register file: `num_regs` physical registers × lanes each,
+    /// flattened; a register group is a contiguous slice.
+    regfile: Vec<f32>,
+    /// Current vector length (elements), set by vsetvli.
+    pub vl: usize,
+    /// Current register-group multiplier.
+    pub lmul: usize,
+    /// Flat word-addressed memory.
+    pub mem: Vec<f32>,
+    pub cache: Cache,
+    pub ctr: Counters,
+}
+
+impl RvvMachine {
+    pub fn new(cfg: RvvConfig) -> Self {
+        assert!(cfg.vlen_bits % 32 == 0);
+        let lanes = cfg.vlen_bits / 32;
+        Self {
+            cfg,
+            regfile: vec![0.0; cfg.num_regs * lanes],
+            vl: 0,
+            lmul: 1,
+            mem: Vec::new(),
+            cache: Cache::new(cfg.cache),
+            ctr: Counters::default(),
+        }
+    }
+
+    /// Machine with K1 defaults.
+    pub fn k1() -> Self {
+        Self::new(RvvConfig::default())
+    }
+
+    /// f32 lanes per physical register.
+    pub fn lanes_per_reg(&self) -> usize {
+        self.cfg.vlen_bits / 32
+    }
+
+    /// VLMAX for a given LMUL (elements per logical register).
+    pub fn vlmax(&self, lmul: usize) -> usize {
+        self.lanes_per_reg() * lmul
+    }
+
+    /// Number of logical registers available at a given LMUL.
+    pub fn logical_regs(&self, lmul: usize) -> usize {
+        self.cfg.num_regs / lmul
+    }
+
+    // ------------------------------------------------------------------
+    // Memory management (host-side; not counted)
+
+    /// Copy `data` into simulator memory; returns its base address.
+    pub fn alloc(&mut self, data: &[f32]) -> usize {
+        let addr = self.mem.len();
+        self.mem.extend_from_slice(data);
+        addr
+    }
+
+    /// Reserve `len` zeroed words; returns the base address.
+    pub fn alloc_zeros(&mut self, len: usize) -> usize {
+        let addr = self.mem.len();
+        self.mem.resize(addr + len, 0.0);
+        addr
+    }
+
+    /// Host-side read-back (not counted).
+    pub fn read(&self, addr: usize, len: usize) -> &[f32] {
+        &self.mem[addr..addr + len]
+    }
+
+    // ------------------------------------------------------------------
+    // Register helpers
+
+    fn check_group(&self, v: VReg) {
+        assert!(
+            v % self.lmul == 0 && v + self.lmul <= self.cfg.num_regs,
+            "register v{v} invalid for LMUL={}",
+            self.lmul
+        );
+    }
+
+    fn reg_range(&self, v: VReg) -> std::ops::Range<usize> {
+        let lanes = self.lanes_per_reg();
+        v * lanes..v * lanes + self.vl
+    }
+
+    /// Inspect a logical register's active lanes (testing).
+    pub fn reg(&self, v: VReg) -> &[f32] {
+        self.check_group(v);
+        &self.regfile[self.reg_range(v)]
+    }
+
+    // ------------------------------------------------------------------
+    // Instructions
+
+    /// `vsetvli`: request `avl` elements at `lmul`; returns granted VL =
+    /// min(avl, VLMAX).
+    pub fn vsetvli(&mut self, avl: usize, lmul: usize) -> usize {
+        assert!(
+            matches!(lmul, 1 | 2 | 4 | 8),
+            "integer LMUL only (paper restricts to 1,2,4,8)"
+        );
+        self.lmul = lmul;
+        self.vl = avl.min(self.vlmax(lmul));
+        self.ctr.vsetvli += 1;
+        self.ctr.cycles += self.cfg.cost.scalar_op;
+        self.vl
+    }
+
+    /// `vle32.v vd, (addr)`: unit-stride load of VL elements.
+    pub fn vle32(&mut self, vd: VReg, addr: usize) {
+        self.check_group(vd);
+        let vl = self.vl;
+        let (lines, misses) = self.cache.load(addr, vl);
+        let src = &self.mem[addr..addr + vl];
+        let range = self.reg_range(vd);
+        self.regfile[range].copy_from_slice(src);
+        self.ctr.vle += 1;
+        self.ctr.cycles += self.cfg.cost.vmem(lines, misses);
+    }
+
+    /// `vlse32.v vd, (addr), stride`: strided load (stride in words).
+    pub fn vlse32(&mut self, vd: VReg, addr: usize, stride: usize) {
+        self.check_group(vd);
+        let vl = self.vl;
+        let mut misses = 0u64;
+        for i in 0..vl {
+            let a = addr + i * stride;
+            let (_, m) = self.cache.load(a, 1);
+            misses += m;
+            let lanes = self.lanes_per_reg();
+            self.regfile[vd * lanes + i] = self.mem[a];
+        }
+        self.ctr.vlse += 1;
+        self.ctr.cycles += self.cfg.cost.vmem_strided(vl as u64, misses);
+    }
+
+    /// `vse32.v vs, (addr)`: unit-stride store of VL elements.
+    pub fn vse32(&mut self, vs: VReg, addr: usize) {
+        self.check_group(vs);
+        let vl = self.vl;
+        let (lines, misses) = self.cache.store(addr, vl);
+        let range = self.reg_range(vs);
+        let src: Vec<f32> = self.regfile[range].to_vec();
+        self.mem[addr..addr + vl].copy_from_slice(&src);
+        self.ctr.vse += 1;
+        self.ctr.cycles += self.cfg.cost.vmem(lines, misses);
+    }
+
+    /// `vfmv.v.f vd, f`: splat a scalar into all active lanes.
+    pub fn vfmv_v_f(&mut self, vd: VReg, f: f32) {
+        self.check_group(vd);
+        let range = self.reg_range(vd);
+        self.regfile[range].fill(f);
+        self.ctr.vmv += 1;
+        self.ctr.cycles += self.cfg.cost.valu(self.lmul);
+    }
+
+    /// `vfmacc.vf vd, rs1, vs2`: `vd[i] += rs1 · vs2[i]` — the paper's
+    /// workhorse instruction (§3.1 footnote 2).
+    pub fn vfmacc_vf(&mut self, vd: VReg, rs1: f32, vs2: VReg) {
+        self.check_group(vd);
+        self.check_group(vs2);
+        let lanes = self.lanes_per_reg();
+        let (d0, s0) = (vd * lanes, vs2 * lanes);
+        for i in 0..self.vl {
+            self.regfile[d0 + i] += rs1 * self.regfile[s0 + i];
+        }
+        self.ctr.vfmacc += 1;
+        self.ctr.cycles += self.cfg.cost.valu(self.lmul);
+    }
+
+    /// `flw`: scalar f32 load (counted, cached).
+    pub fn flw(&mut self, addr: usize) -> f32 {
+        let (_, misses) = self.cache.load(addr, 1);
+        self.ctr.scalar_loads += 1;
+        self.ctr.cycles += self.cfg.cost.smem(misses);
+        self.mem[addr]
+    }
+
+    /// `fsw`: scalar f32 store.
+    pub fn fsw(&mut self, addr: usize, val: f32) {
+        let (_, misses) = self.cache.store(addr, 1);
+        self.ctr.scalar_stores += 1;
+        self.ctr.cycles += self.cfg.cost.smem(misses);
+        self.mem[addr] = val;
+    }
+
+    /// Account `n` scalar ALU ops (address arithmetic, loop control).
+    pub fn scalar_ops(&mut self, n: u64) {
+        self.ctr.scalar_ops += n;
+        self.ctr.cycles += n * self.cfg.cost.scalar_op;
+    }
+
+    /// Snapshot of the load-access counter (the `perf` L1-loads analogue).
+    pub fn l1_loads(&self) -> u64 {
+        self.cache.load_accesses
+    }
+
+    /// Reset counters and cache counters (keep memory + cache contents).
+    pub fn reset_counters(&mut self) {
+        self.ctr = Counters::default();
+        self.cache.reset_counters();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vsetvli_clamps_to_vlmax() {
+        let mut m = RvvMachine::k1();
+        assert_eq!(m.vsetvli(100, 1), 8); // 256/32 = 8 lanes
+        assert_eq!(m.vsetvli(100, 8), 64);
+        assert_eq!(m.vsetvli(3, 4), 3);
+        assert_eq!(m.ctr.vsetvli, 3);
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let mut m = RvvMachine::k1();
+        let a = m.alloc(&[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let b = m.alloc_zeros(8);
+        m.vsetvli(8, 1);
+        m.vle32(0, a);
+        m.vse32(0, b);
+        assert_eq!(m.read(b, 8), &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        assert_eq!(m.ctr.vle, 1);
+        assert_eq!(m.ctr.vse, 1);
+    }
+
+    #[test]
+    fn lmul_grouping_loads_wide() {
+        let mut m = RvvMachine::k1();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let a = m.alloc(&data);
+        m.vsetvli(64, 8);
+        m.vle32(0, a); // v0..v7 as one logical register
+        assert_eq!(m.reg(0), &data[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid for LMUL")]
+    fn misaligned_group_panics() {
+        let mut m = RvvMachine::k1();
+        m.vsetvli(16, 4);
+        m.vfmv_v_f(2, 1.0); // v2 not a multiple of LMUL=4
+    }
+
+    #[test]
+    fn vfmacc_computes_fma() {
+        let mut m = RvvMachine::k1();
+        let a = m.alloc(&[1., 2., 3., 4.]);
+        m.vsetvli(4, 1);
+        m.vfmv_v_f(1, 10.0); // acc = 10
+        m.vle32(2, a);
+        m.vfmacc_vf(1, 2.0, 2); // acc += 2*a
+        assert_eq!(m.reg(1), &[12., 14., 16., 18.]);
+    }
+
+    #[test]
+    fn strided_load_gathers() {
+        let mut m = RvvMachine::k1();
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let a = m.alloc(&data);
+        m.vsetvli(4, 1);
+        m.vlse32(0, a + 1, 4);
+        assert_eq!(m.reg(0), &[1., 5., 9., 13.]);
+        assert_eq!(m.ctr.vlse, 1);
+    }
+
+    #[test]
+    fn partial_vl_only_touches_active_lanes() {
+        let mut m = RvvMachine::k1();
+        let a = m.alloc(&[9., 9., 9., 9., 9., 9., 9., 9.]);
+        m.vsetvli(8, 1);
+        m.vfmv_v_f(0, 1.0);
+        m.vsetvli(3, 1); // shrink VL
+        m.vle32(0, a); // overwrites lanes 0..3 only
+        m.vsetvli(8, 1);
+        assert_eq!(m.reg(0), &[9., 9., 9., 1., 1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn cycles_accumulate_and_misses_cost_more() {
+        let mut m = RvvMachine::k1();
+        let data = vec![0.0f32; 1024];
+        let a = m.alloc(&data);
+        m.vsetvli(8, 1);
+        m.vle32(0, a); // cold miss
+        let cold = m.ctr.cycles;
+        m.reset_counters();
+        m.vsetvli(8, 1);
+        m.vle32(0, a); // warm hit
+        let warm = m.ctr.cycles;
+        assert!(cold > warm);
+    }
+
+    #[test]
+    fn l1_loads_counts_line_accesses() {
+        let mut m = RvvMachine::k1();
+        let data = vec![0.0f32; 128];
+        let a = m.alloc(&data);
+        m.vsetvli(64, 8); // 64 words = 4 lines of 16 words
+        m.vle32(0, a);
+        assert_eq!(m.l1_loads(), 4);
+    }
+
+    #[test]
+    fn logical_reg_count() {
+        let m = RvvMachine::k1();
+        assert_eq!(m.logical_regs(1), 32);
+        assert_eq!(m.logical_regs(8), 4);
+    }
+}

@@ -1,0 +1,28 @@
+//! RISC-V Vector (RVV 1.0) functional simulator with an L1-D cache and a
+//! cycle cost model.
+//!
+//! This substrate replaces the paper's Banana Pi BPI-F3 / SpacemiT K1
+//! testbed (§4.1.1: VLEN = 256 bit, 32 vector registers, RVV 1.0). The
+//! paper's headline metrics — `perf` L1-cache loads, relative kernel
+//! speedups, LMUL trade-offs — are memory-traffic and instruction-count
+//! phenomena, so a trace-driven cache + per-instruction cost model
+//! reproduces them without the board. Every micro-kernel of the paper
+//! (Algorithm 1, Algorithm 2, and all baselines) is written against this
+//! machine in [`kernels`], computing *real* f32 results that are checked
+//! against the native [`crate::gemm`] implementations, while the machine
+//! counts instructions, cache-line accesses, misses and model cycles.
+//!
+//! Counter definitions:
+//! * `l1_load_accesses` — cache-line-granularity load accesses, the
+//!   analogue of `perf`'s L1-dcache-loads on a core that splits vector
+//!   loads into per-line μops (as the K1 does).
+//! * `cycles` — cost-model cycles; see [`cost`] for the per-class costs.
+
+pub mod machine;
+pub mod cache;
+pub mod cost;
+pub mod kernels;
+
+pub use cache::{Cache, CacheConfig};
+pub use cost::CostModel;
+pub use machine::{Counters, RvvConfig, RvvMachine, VReg};

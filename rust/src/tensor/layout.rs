@@ -1,0 +1,133 @@
+//! Activation and weight layout conversions.
+//!
+//! §5 of the paper: NHWC → CNHW is exactly one transpose (move C to the
+//! front); CNHW back to NHWC is the inverse. NCHW is implemented too for
+//! the layout-comparison discussion (Elsen et al. use NCHW).
+
+use super::Tensor;
+
+/// Activation (feature-map) layouts used in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActLayout {
+    /// Batch, Height, Width, Channels — XNNPACK's dense CPU default.
+    Nhwc,
+    /// Channels, Batch, Height, Width — the paper's layout: W contiguous
+    /// and a channel's rows span the whole batch (better strip packing).
+    Cnhw,
+    /// Batch, Channels, Height, Width — Elsen et al. alternative.
+    Nchw,
+}
+
+/// Weight layouts. Frameworks store OIHW; the paper's kernels consume the
+/// flattened `[C_out, K_h*K_w*C_in]` filter matrix in OHWI order so that
+/// the reduction dimension matches the im2col patch order (k-major, then
+/// input channel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WeightLayout {
+    /// Out-channels, In-channels, Kernel-H, Kernel-W (torch default).
+    Oihw,
+    /// Out-channels, Kernel-H, Kernel-W, In-channels (paper Fig. 4).
+    Ohwi,
+}
+
+/// Convert an activation tensor of shape `[N, H, W, C]` (NHWC) into CNHW
+/// `[C, N, H, W]`. One permutation — the cheap conversion §5 argues for.
+pub fn nhwc_to_cnhw(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 4, "activation must be rank 4");
+    x.permute(&[3, 0, 1, 2])
+}
+
+/// CNHW `[C, N, H, W]` back to NHWC `[N, H, W, C]`.
+pub fn cnhw_to_nhwc(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    x.permute(&[1, 2, 3, 0])
+}
+
+/// NHWC `[N, H, W, C]` to NCHW `[N, C, H, W]`.
+pub fn nhwc_to_nchw(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    x.permute(&[0, 3, 1, 2])
+}
+
+/// NCHW `[N, C, H, W]` to NHWC `[N, H, W, C]`.
+pub fn nchw_to_nhwc(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    x.permute(&[0, 2, 3, 1])
+}
+
+/// OIHW weights `[O, I, Kh, Kw]` to the flattened GEMM filter matrix
+/// `[O, Kh*Kw*I]` with k-major ordering (kernel position outer, input
+/// channel inner) matching the fused im2col output row order (Fig. 4).
+pub fn oihw_to_filter_matrix(w: &Tensor) -> Tensor {
+    assert_eq!(w.rank(), 4, "weights must be rank 4 (OIHW)");
+    let ohwi = w.permute(&[0, 2, 3, 1]); // [O, Kh, Kw, I]
+    let (o, kh, kw, i) = (
+        ohwi.shape[0],
+        ohwi.shape[1],
+        ohwi.shape[2],
+        ohwi.shape[3],
+    );
+    ohwi.reshape(&[o, kh * kw * i])
+}
+
+impl ActLayout {
+    /// Shape of a tensor holding `[n, h, w, c]` logical dims in this layout.
+    pub fn shape(&self, n: usize, h: usize, w: usize, c: usize) -> Vec<usize> {
+        match self {
+            ActLayout::Nhwc => vec![n, h, w, c],
+            ActLayout::Cnhw => vec![c, n, h, w],
+            ActLayout::Nchw => vec![n, c, h, w],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn nhwc_cnhw_roundtrip() {
+        let mut r = XorShiftRng::new(1);
+        let x = Tensor::random(&[2, 4, 5, 3], &mut r, -1.0, 1.0);
+        let c = nhwc_to_cnhw(&x);
+        assert_eq!(c.shape, vec![3, 2, 4, 5]);
+        let back = cnhw_to_nhwc(&c);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn nhwc_nchw_roundtrip() {
+        let mut r = XorShiftRng::new(2);
+        let x = Tensor::random(&[2, 4, 5, 3], &mut r, -1.0, 1.0);
+        let n = nhwc_to_nchw(&x);
+        assert_eq!(n.shape, vec![2, 3, 4, 5]);
+        assert_eq!(nchw_to_nhwc(&n), x);
+    }
+
+    #[test]
+    fn cnhw_element_mapping() {
+        // x[n,h,w,c] must land at c[c,n,h,w].
+        let mut x = Tensor::zeros(&[2, 3, 4, 5]);
+        *x.at_mut(&[1, 2, 3, 4]) = 9.0;
+        let c = nhwc_to_cnhw(&x);
+        assert_eq!(c.at(&[4, 1, 2, 3]), 9.0);
+    }
+
+    #[test]
+    fn filter_matrix_order_is_khwi() {
+        // O=1, I=2, Kh=1, Kw=2: OIHW data [o0i0k00, o0i0k01, o0i1k00, o0i1k01]
+        let w = Tensor::from_vec(&[1, 2, 1, 2], vec![1., 2., 3., 4.]);
+        let f = oihw_to_filter_matrix(&w);
+        assert_eq!(f.shape, vec![1, 4]);
+        // k-major, channel-inner: (k=0,i=0)=1, (k=0,i=1)=3, (k=1,i=0)=2, (k=1,i=1)=4
+        assert_eq!(f.data, vec![1., 3., 2., 4.]);
+    }
+
+    #[test]
+    fn layout_shapes() {
+        assert_eq!(ActLayout::Nhwc.shape(1, 2, 3, 4), vec![1, 2, 3, 4]);
+        assert_eq!(ActLayout::Cnhw.shape(1, 2, 3, 4), vec![4, 1, 2, 3]);
+        assert_eq!(ActLayout::Nchw.shape(1, 2, 3, 4), vec![1, 4, 2, 3]);
+    }
+}

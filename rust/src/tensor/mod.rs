@@ -1,0 +1,215 @@
+//! Dense f32 tensors with explicit data layouts.
+//!
+//! The paper's pipeline converts activations NHWC → CNHW at model entry,
+//! keeps CNHW through all conv layers, and converts back at the end
+//! (§4.1.2, §5). Weights arrive OIHW (framework order) and are flattened
+//! to the `[C_out, K_h*K_w*C_in]` GEMM filter matrix. This module owns
+//! those shapes and conversions.
+
+pub mod layout;
+
+pub use layout::{ActLayout, WeightLayout};
+
+/// A dense, row-major f32 tensor of arbitrary rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    /// Tensor from data; checks element count.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Tensor filled with uniform random values from `rng` in [lo, hi).
+    pub fn random(shape: &[usize], rng: &mut crate::util::XorShiftRng, lo: f32, hi: f32) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: rng.uniform_vec(n, lo, hi),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rank (number of dimensions).
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides of the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.shape[i + 1];
+        }
+        strides
+    }
+
+    /// Flat index of a multi-dimensional coordinate (debug-checked).
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        idx.iter()
+            .zip(&strides)
+            .zip(&self.shape)
+            .map(|((&i, &s), &d)| {
+                debug_assert!(i < d, "index {i} out of bound {d}");
+                i * s
+            })
+            .sum()
+    }
+
+    /// Element access by coordinate.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat(idx)]
+    }
+
+    /// Mutable element access by coordinate.
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let i = self.flat(idx);
+        &mut self.data[i]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// General permutation of axes (out-of-place).
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.rank());
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            assert!(p < perm.len() && !seen[p], "bad permutation {perm:?}");
+            seen[p] = true;
+        }
+        let out_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        let in_strides = self.strides();
+        let mut out = Tensor::zeros(&out_shape);
+        let out_strides = out.strides();
+        // Iterate over output coordinates via a mixed-radix counter.
+        let mut coord = vec![0usize; out_shape.len()];
+        for out_flat in 0..out.data.len() {
+            let mut in_flat = 0;
+            for (d, &c) in coord.iter().enumerate() {
+                in_flat += c * in_strides[perm[d]];
+            }
+            out.data[out_flat] = self.data[in_flat];
+            // increment coord
+            for d in (0..coord.len()).rev() {
+                coord[d] += 1;
+                if coord[d] < out_shape[d] {
+                    break;
+                }
+                coord[d] = 0;
+            }
+        }
+        debug_assert_eq!(out.strides(), out_strides);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.rank(), 3);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn flat_index_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data, t.data);
+        assert_eq!(r.shape, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape")]
+    fn reshape_bad_count_panics() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn permute_transposes_matrix() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = t.permute(&[1, 0]);
+        assert_eq!(p.shape, vec![3, 2]);
+        assert_eq!(p.data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn permute_identity_is_noop() {
+        let mut r = XorShiftRng::new(2);
+        let t = Tensor::random(&[3, 4, 5], &mut r, -1.0, 1.0);
+        assert_eq!(t.permute(&[0, 1, 2]).data, t.data);
+    }
+
+    #[test]
+    fn permute_composes_to_identity() {
+        let mut r = XorShiftRng::new(3);
+        let t = Tensor::random(&[2, 3, 4, 5], &mut r, -1.0, 1.0);
+        let p = t.permute(&[3, 1, 0, 2]);
+        // inverse of [3,1,0,2] is [2,1,3,0]
+        let back = p.permute(&[2, 1, 3, 0]);
+        assert_eq!(back.data, t.data);
+        assert_eq!(back.shape, t.shape);
+    }
+
+    #[test]
+    fn at_mut_writes() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        *t.at_mut(&[1, 1]) = 7.0;
+        assert_eq!(t.at(&[1, 1]), 7.0);
+        assert_eq!(t.data[3], 7.0);
+    }
+}

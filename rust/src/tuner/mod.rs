@@ -1,0 +1,309 @@
+//! AITemplate-style auto-tuner (§3.3): enumerate micro-kernel template
+//! candidates — tile size `T ∈ 1..=31` and `LMUL ∈ {1,2,4,8}` — profile
+//! each on the target, and select the fastest per conv layer.
+//!
+//! Two profiling backends:
+//! * **native** — wall-clock of the native Rust conv path on this host
+//!   (what a deployment would use);
+//! * **sim** — deterministic cycle counts from the RVV simulator (what
+//!   reproduces the paper's K1 numbers; used by the figure benches).
+//!
+//! Results are memoised in a [`TuneCache`] persisted as TSV, mirroring
+//! AITemplate's profiling cache.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::time::Duration;
+
+use crate::benchlib::{bench, BenchConfig};
+use crate::conv::{Conv2dDenseCnhw, Conv2dSparseCnhw, ConvShape};
+use crate::engine::LayerChoice;
+use crate::im2col::pack_data_matrix;
+use crate::pruning::prune_colwise_adaptive;
+use crate::rvv::kernels::{max_tile_for_lmul, sim_spmm_colwise};
+use crate::rvv::RvvMachine;
+use crate::tensor::Tensor;
+use crate::util::XorShiftRng;
+
+/// The LMUL values the paper profiles (§3.3: fractional LMULs excluded).
+pub const LMULS: [usize; 4] = [1, 2, 4, 8];
+
+/// One profiled candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub lmul: usize,
+    /// Strip width = VLMAX(lmul) on the 256-bit machine.
+    pub v: usize,
+    pub tile: usize,
+    /// Profiling score (ns for native, cycles for sim) — lower is better.
+    pub score: f64,
+}
+
+/// Tuning outcome for one layer.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: Candidate,
+    pub candidates: Vec<Candidate>,
+}
+
+/// Candidate space for a 256-bit/32-register RVV machine: for each LMUL,
+/// tiles 1..=min(cap, 32/LMUL − 1). `tile_cap` trims the sweep (the
+/// paper profiles up to 32; most optima are ≤ 16).
+pub fn candidate_space(tile_cap: usize) -> Vec<(usize, usize)> {
+    let m = RvvMachine::k1();
+    let mut out = Vec::new();
+    for lmul in LMULS {
+        let max_t = max_tile_for_lmul(&m, lmul).min(tile_cap);
+        for t in 1..=max_t {
+            out.push((lmul, t));
+        }
+    }
+    out
+}
+
+/// Profile the *simulated* column-wise sparse kernel for `shape` at
+/// `sparsity` across the candidate space; deterministic.
+pub fn tune_sim_colwise(shape: &ConvShape, sparsity: f64, tile_cap: usize) -> TuneResult {
+    let mut rng = XorShiftRng::new(0x7CE ^ shape.c_out as u64);
+    let rows = shape.c_out;
+    let k = shape.k();
+    // Profile on a bounded column count: kernel cost per strip is
+    // identical across strips, so a few strips suffice (and keep the
+    // sweep fast) — same trick AITemplate uses with reduced problem
+    // sizes.
+    let w = rng.normal_vec(rows * k, 1.0);
+    let a_cols_full = shape.gemm_cols();
+    let mut candidates = Vec::new();
+    for (lmul, tile) in candidate_space(tile_cap) {
+        let mut m = RvvMachine::k1();
+        let v = m.vlmax(lmul);
+        let cols = a_cols_full.min(4 * v); // ≥ 4 strips worth (or all)
+        let a = rng.normal_vec(k * cols, 1.0);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let cp = prune_colwise_adaptive(&w, rows, k, tile, sparsity);
+        let (_, rep) = sim_spmm_colwise(&mut m, &cp, &p, lmul);
+        // Scale cycles to the full column count.
+        let scale = a_cols_full as f64 / cols as f64;
+        candidates.push(Candidate {
+            lmul,
+            v,
+            tile,
+            score: rep.cycles as f64 * scale,
+        });
+    }
+    pick(candidates)
+}
+
+/// Profile the *native* conv operator (dense or sparse CNHW path) by
+/// wall clock.
+pub fn tune_native(
+    shape: &ConvShape,
+    sparsity: Option<f64>,
+    threads: usize,
+    tile_cap: usize,
+) -> TuneResult {
+    let mut rng = XorShiftRng::new(0xAA7 ^ shape.c_out as u64);
+    let x = Tensor::random(
+        &[shape.c_in, shape.n, shape.h_in, shape.w_in],
+        &mut rng,
+        -1.0,
+        1.0,
+    );
+    let w = Tensor::random(
+        &[shape.c_out, shape.c_in, shape.kh, shape.kw],
+        &mut rng,
+        -0.5,
+        0.5,
+    );
+    let cfg = BenchConfig {
+        warmup: Duration::from_millis(5),
+        measure: Duration::from_millis(40),
+        min_samples: 3,
+        max_samples: 20,
+    };
+    let mut candidates = Vec::new();
+    for (lmul, tile) in candidate_space(tile_cap) {
+        let v = 8 * lmul;
+        let score = match sparsity {
+            None => {
+                let op = Conv2dDenseCnhw::new(*shape, &w, v, tile);
+                bench("cand", cfg, || op.run(&x, threads)).mean_ns()
+            }
+            Some(s) => {
+                let op = Conv2dSparseCnhw::new_adaptive(*shape, &w, v, tile, s);
+                bench("cand", cfg, || op.run(&x, threads)).mean_ns()
+            }
+        };
+        candidates.push(Candidate {
+            lmul,
+            v,
+            tile,
+            score,
+        });
+    }
+    pick(candidates)
+}
+
+fn pick(candidates: Vec<Candidate>) -> TuneResult {
+    let best = *candidates
+        .iter()
+        .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+        .expect("empty candidate space");
+    TuneResult { best, candidates }
+}
+
+impl TuneResult {
+    pub fn choice(&self) -> LayerChoice {
+        LayerChoice {
+            v: self.best.v,
+            tile: self.best.tile,
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Persistent tuning cache (AITemplate's profiling cache analogue)
+
+/// Key → tuned choice, persisted as TSV at `path`.
+#[derive(Clone, Debug, Default)]
+pub struct TuneCache {
+    pub entries: BTreeMap<String, LayerChoice>,
+}
+
+/// Cache key for a layer configuration.
+pub fn cache_key(shape: &ConvShape, sparsity: Option<f64>) -> String {
+    format!(
+        "{}x{}x{}x{}_co{}_k{}x{}_s{}_p{}_sp{}",
+        shape.n,
+        shape.c_in,
+        shape.h_in,
+        shape.w_in,
+        shape.c_out,
+        shape.kh,
+        shape.kw,
+        shape.stride,
+        shape.pad,
+        sparsity.map(|s| format!("{s:.2}")).unwrap_or_else(|| "dense".into())
+    )
+}
+
+impl TuneCache {
+    /// Load from a TSV file (missing file → empty cache).
+    pub fn load(path: &str) -> Self {
+        let mut entries = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for line in text.lines() {
+                let mut parts = line.split('\t');
+                if let (Some(k), Some(v), Some(t)) =
+                    (parts.next(), parts.next(), parts.next())
+                {
+                    if let (Ok(v), Ok(t)) = (v.parse(), t.parse()) {
+                        entries.insert(k.to_string(), LayerChoice { v, tile: t });
+                    }
+                }
+            }
+        }
+        Self { entries }
+    }
+
+    /// Persist as TSV.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for (k, c) in &self.entries {
+            writeln!(f, "{k}\t{}\t{}", c.v, c.tile)?;
+        }
+        Ok(())
+    }
+
+    /// Lookup or compute via `f`, inserting on miss.
+    pub fn get_or_tune<F: FnOnce() -> LayerChoice>(
+        &mut self,
+        key: String,
+        f: F,
+    ) -> LayerChoice {
+        if let Some(c) = self.entries.get(&key) {
+            return *c;
+        }
+        let c = f();
+        self.entries.insert(key, c);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_space_respects_register_file() {
+        let space = candidate_space(31);
+        // LMUL=8 allows at most 3 accumulators (+1 data reg = 4 logical).
+        assert!(space.iter().filter(|(l, _)| *l == 8).count() == 3);
+        assert!(space.iter().filter(|(l, _)| *l == 1).count() == 31);
+        assert!(space.iter().all(|&(l, t)| t >= 1 && LMULS.contains(&l)));
+    }
+
+    #[test]
+    fn sim_tuning_picks_minimum() {
+        let shape = ConvShape::square(1, 16, 14, 32, 3, 1, 1);
+        let r = tune_sim_colwise(&shape, 0.5, 8);
+        for c in &r.candidates {
+            assert!(r.best.score <= c.score);
+        }
+        assert!(r.best.tile >= 1);
+    }
+
+    #[test]
+    fn sim_tuning_larger_tiles_amortise_loads() {
+        // At fixed LMUL, tile 8 must beat tile 1 in cycles: the data row
+        // is reused 8× per load (the core Algorithm-1 effect).
+        let shape = ConvShape::square(1, 16, 14, 32, 3, 1, 1);
+        let r = tune_sim_colwise(&shape, 0.5, 8);
+        let score = |lmul: usize, tile: usize| {
+            r.candidates
+                .iter()
+                .find(|c| c.lmul == lmul && c.tile == tile)
+                .unwrap()
+                .score
+        };
+        assert!(score(1, 8) < score(1, 1));
+        assert!(score(2, 8) < score(2, 1));
+    }
+
+    #[test]
+    fn native_tuning_runs_quickly_and_picks() {
+        let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
+        let r = tune_native(&shape, Some(0.5), 1, 4);
+        assert!(!r.candidates.is_empty());
+        assert!(r.best.score > 0.0);
+        let c = r.choice();
+        assert_eq!(c.v, 8 * r.best.lmul);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let mut cache = TuneCache::default();
+        let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
+        let key = cache_key(&shape, Some(0.5));
+        let choice = cache.get_or_tune(key.clone(), || LayerChoice { v: 16, tile: 4 });
+        assert_eq!(choice, LayerChoice { v: 16, tile: 4 });
+        // hit path
+        let hit = cache.get_or_tune(key.clone(), || panic!("must not re-tune"));
+        assert_eq!(hit, choice);
+        let path = "/tmp/nmprune_tune_cache_test.tsv";
+        cache.save(path).unwrap();
+        let loaded = TuneCache::load(path);
+        assert_eq!(loaded.entries.get(&key), Some(&choice));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cache_key_distinguishes_sparsity() {
+        let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
+        assert_ne!(cache_key(&shape, None), cache_key(&shape, Some(0.5)));
+        assert_ne!(cache_key(&shape, Some(0.25)), cache_key(&shape, Some(0.5)));
+    }
+}

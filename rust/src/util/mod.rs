@@ -1,0 +1,69 @@
+//! General-purpose substrates hand-rolled for the offline environment:
+//! PRNG, statistics, thread pool, CLI parsing and a small property-test
+//! driver (the vendored crate set has no rand/rayon/clap/proptest).
+
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod cli;
+pub mod prop;
+
+pub use rng::XorShiftRng;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;
+
+/// Numerical comparison with combined absolute + relative tolerance,
+/// mirroring `numpy.allclose` so Rust- and Python-side checks agree.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+/// Maximum absolute elementwise difference (0 for empty slices).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allclose_basic() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.1], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn ceil_div_and_round_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(10, 8), 16);
+        assert_eq!(round_up(16, 8), 16);
+        assert_eq!(round_up(0, 8), 0);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Miniature property-testing driver (no proptest offline).
+//!
+//! `check` runs a property over `cases` randomly generated inputs and, on
+//! failure, performs a simple halving shrink over the generator's size
+//! parameter to report a smaller counterexample.
+
+use super::rng::XorShiftRng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Upper bound for the size hint handed to the generator.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn by `gen`. `gen` receives the
+/// RNG and a size hint that ramps from 1 to `max_size` across cases, so
+/// early cases are small. On failure the size is halved repeatedly to
+/// look for a smaller failing input; panics with both the original and
+/// the shrunk counterexample context.
+pub fn check<T: std::fmt::Debug, G, P>(cfg: Config, mut gen: G, prop: P)
+where
+    G: FnMut(&mut XorShiftRng, usize) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = XorShiftRng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let size = 1 + case * cfg.max_size / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // Shrink: try smaller sizes with fresh draws.
+            let mut shrunk: Option<T> = None;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut found = false;
+                for _ in 0..16 {
+                    let cand = gen(&mut rng, s);
+                    if !prop(&cand) {
+                        shrunk = Some(cand);
+                        found = true;
+                        break;
+                    }
+                }
+                if !found {
+                    break;
+                }
+                s /= 2;
+            }
+            match shrunk {
+                Some(small) => panic!(
+                    "property failed at case {case} (size {size}).\n  original: {input:?}\n  shrunk:   {small:?}"
+                ),
+                None => panic!("property failed at case {case} (size {size}): {input:?}"),
+            }
+        }
+    }
+}
+
+/// Shorthand with default config but explicit seed (each property should
+/// use a distinct seed so failures are independent).
+pub fn check_seeded<T: std::fmt::Debug, G, P>(seed: u64, gen: G, prop: P)
+where
+    G: FnMut(&mut XorShiftRng, usize) -> T,
+    P: Fn(&T) -> bool,
+{
+    check(
+        Config {
+            seed,
+            ..Config::default()
+        },
+        gen,
+        prop,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            Config::default(),
+            |r, size| {
+                count += 1;
+                r.uniform_vec(size, -1.0, 1.0)
+            },
+            |v| v.iter().all(|x| x.abs() <= 1.0),
+        );
+        assert_eq!(count, Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        check_seeded(
+            1,
+            |r, size| r.uniform_vec(size.max(8), 0.0, 1.0),
+            |v| v.len() < 4, // fails once size >= 4
+        );
+    }
+}

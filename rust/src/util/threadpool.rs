@@ -1,0 +1,211 @@
+//! Minimal fixed-size thread pool with scoped parallel-for.
+//!
+//! XNNPACK parallelises GEMM over output tiles with a static chunking
+//! scheme; we mirror that here. No rayon/tokio offline, so the pool is a
+//! classic channel-of-boxed-closures design plus a `scope_chunks` helper
+//! that parallelises index ranges without requiring 'static captures.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are `FnOnce() + Send`. Dropping the pool
+/// joins all workers after draining the queue.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool of `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..size)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            let (lock, cvar) = &*pending;
+                            let mut p = lock.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                cvar.notify_all();
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            pending,
+            size,
+        }
+    }
+
+    /// Pool with one worker per available hardware thread.
+    pub fn with_default_size() -> Self {
+        Self::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        )
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job (fire and forget; use [`ThreadPool::wait`] to sync).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cvar.wait(p).unwrap();
+        }
+    }
+
+    /// Parallel-for over `0..n` in contiguous chunks, using scoped threads
+    /// so `f` may borrow from the caller. `f(start, end)` handles
+    /// `[start, end)`. Uses its own scoped threads (not pool workers) so a
+    /// stack-borrowing body is safe; the pool's size sets the parallelism.
+    pub fn scope_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        scope_chunks(self.size, n, f)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Free-standing parallel-for over `0..n` split into `threads` contiguous
+/// chunks, with dynamic work stealing on a shared atomic cursor at `grain`
+/// granularity. `f(start, end)` must be safe to call concurrently on
+/// disjoint ranges.
+pub fn scope_chunks<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    // Grain: aim for ~4 chunks per thread so stragglers rebalance.
+    let grain = (n / (threads * 4)).max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                f(start, end);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait();
+    }
+
+    #[test]
+    fn scope_chunks_covers_range_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        scope_chunks(8, 1000, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scope_chunks_zero_and_one() {
+        scope_chunks(4, 0, |_, _| panic!("must not be called"));
+        let hit = AtomicU64::new(0);
+        scope_chunks(4, 1, |s, e| {
+            assert_eq!((s, e), (0, 1));
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn pool_scope_chunks_borrows_stack() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..512).collect();
+        let sum = AtomicU64::new(0);
+        pool.scope_chunks(data.len(), |s, e| {
+            let part: u64 = data[s..e].iter().sum();
+            sum.fetch_add(part, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 512 * 511 / 2);
+    }
+}

@@ -1,0 +1,100 @@
+//! Integration test: AOT numerics parity across the language boundary.
+//!
+//! For every artifact in `artifacts/manifest.tsv`, load the HLO text,
+//! compile on the PJRT CPU client, execute with the sample input
+//! `aot.py` saved, and compare against the Python-side expected output.
+//! This is the proof that the three layers compose: Pallas kernels (L1)
+//! inside the jax model (L2) produce the same numbers when run from the
+//! Rust request path (L3).
+//!
+//! Skips silently (with a note) when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+
+use nmprune::runtime::{read_manifest, PjrtRuntime};
+use nmprune::util::allclose;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Parse the flat-f32 text format written by aot.py: dims line, then
+/// one value per line.
+fn load_flat(path: &Path) -> (Vec<usize>, Vec<f32>) {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    let mut lines = text.lines();
+    let dims: Vec<usize> = lines
+        .next()
+        .expect("dims line")
+        .split_whitespace()
+        .map(|t| t.parse().expect("dim"))
+        .collect();
+    let data: Vec<f32> = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse().expect("f32"))
+        .collect();
+    assert_eq!(dims.iter().product::<usize>(), data.len(), "{path:?}");
+    (dims, data)
+}
+
+#[test]
+fn every_artifact_matches_python_expected_output() {
+    let dir = artifacts_dir();
+    let manifest = dir.join("manifest.tsv");
+    if !manifest.exists() {
+        eprintln!("skipping AOT parity test: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let entries = read_manifest(&manifest).expect("manifest");
+    assert!(!entries.is_empty());
+    for e in &entries {
+        rt.load_hlo_text(&e.name, &e.file, e.input_arity)
+            .unwrap_or_else(|err| panic!("{}: {err}", e.name));
+        // Gather inputs.
+        let inputs: Vec<(Vec<usize>, Vec<f32>)> = (0..e.input_arity)
+            .map(|i| load_flat(&dir.join(format!("{}.input{i}.txt", e.name))))
+            .collect();
+        let input_refs: Vec<(&[f32], &[usize])> = inputs
+            .iter()
+            .map(|(dims, data)| (data.as_slice(), dims.as_slice()))
+            .collect();
+        let outputs = rt
+            .execute_f32(&e.name, &input_refs)
+            .unwrap_or_else(|err| panic!("{}: {err}", e.name));
+        // Compare each output against the Python-side expectation.
+        for (i, got) in outputs.iter().enumerate() {
+            let (_, want) = load_flat(&dir.join(format!("{}.expected{i}.txt", e.name)));
+            assert!(
+                allclose(got, &want, 1e-4, 1e-5),
+                "{} output {i}: max diff {}",
+                e.name,
+                nmprune::util::max_abs_diff(got, &want)
+            );
+        }
+        println!("{}: OK ({} outputs)", e.name, outputs.len());
+    }
+}
+
+#[test]
+fn artifact_reexecution_is_deterministic() {
+    let dir = artifacts_dir();
+    let manifest = dir.join("manifest.tsv");
+    if !manifest.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let entries = read_manifest(&manifest).expect("manifest");
+    let e = &entries[0];
+    rt.load_hlo_text(&e.name, &e.file, e.input_arity).unwrap();
+    let inputs: Vec<(Vec<usize>, Vec<f32>)> = (0..e.input_arity)
+        .map(|i| load_flat(&dir.join(format!("{}.input{i}.txt", e.name))))
+        .collect();
+    let input_refs: Vec<(&[f32], &[usize])> = inputs
+        .iter()
+        .map(|(dims, data)| (data.as_slice(), dims.as_slice()))
+        .collect();
+    let run = || rt.execute_f32(&e.name, &input_refs).unwrap();
+    assert_eq!(run(), run(), "same input must give identical output");
+}

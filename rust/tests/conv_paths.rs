@@ -1,0 +1,296 @@
+//! Cross-path equivalence: every execution path the paper compares must
+//! compute the same convolution. Property tests over random geometry
+//! (kernel/stride/pad/batch/V/T), plus the edge cases the fused
+//! im2col+pack kernel's tail handling exists for.
+
+use nmprune::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvShape};
+use nmprune::gemm::{gemm_dense, matmul_ref, spmm_colwise, spmm_inner_rownm, spmm_outer_rownm};
+use nmprune::im2col::naive::conv2d_direct_cnhw;
+use nmprune::im2col::{fused_im2col_pack_cnhw, im2col_cnhw, pack_data_matrix};
+use nmprune::pruning::{prune_colwise_adaptive, prune_rownm};
+use nmprune::rvv::kernels::sim_spmm_colwise;
+use nmprune::rvv::RvvMachine;
+use nmprune::tensor::layout::{cnhw_to_nhwc, nhwc_to_cnhw, oihw_to_filter_matrix};
+use nmprune::tensor::Tensor;
+use nmprune::util::{allclose, prop, XorShiftRng};
+
+/// Draw a random-but-valid conv shape. `size` scales the channel count.
+fn random_shape(r: &mut XorShiftRng, size: usize) -> ConvShape {
+    let k = [1, 3, 5, 7][r.below(4)];
+    let stride = 1 + r.below(2);
+    let pad = r.below(k / 2 + 2).min(k); // sometimes > k/2, sometimes 0
+    let hw = (k + stride + r.below(12)).max(4);
+    ConvShape {
+        n: 1 + r.below(3),
+        c_in: 1 + r.below(size.max(2)),
+        h_in: hw,
+        w_in: (k + r.below(17)).max(3), // non-square, often not %V
+        c_out: 1 + r.below(size.max(2)),
+        kh: k,
+        kw: k,
+        stride,
+        pad,
+    }
+}
+
+#[test]
+fn prop_dense_cnhw_equals_direct_conv() {
+    prop::check_seeded(
+        0xA110,
+        |r, size| {
+            let s = random_shape(r, size);
+            let v = [4, 8, 16, 32][r.below(4)];
+            let tile = 1 + r.below(10);
+            (s, v, tile, r.next_u64())
+        },
+        |&(s, v, tile, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
+            let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+            let got = Conv2dDenseCnhw::new(s, &w, v, tile).run(&x, 1);
+            let want = conv2d_direct_cnhw(&x, &w, &s);
+            allclose(&got.data, &want.data, 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_dense_nhwc_agrees_with_cnhw_path() {
+    prop::check_seeded(
+        0xA111,
+        |r, size| {
+            let s = random_shape(r, size);
+            (s, r.next_u64())
+        },
+        |&(s, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let x_nhwc = Tensor::random(&[s.n, s.h_in, s.w_in, s.c_in], &mut rng, -1.0, 1.0);
+            let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+            let y_nhwc = Conv2dDenseNhwc::new(s, &w).run(&x_nhwc, 1);
+            let x_cnhw = nhwc_to_cnhw(&x_nhwc);
+            let y_cnhw = Conv2dDenseCnhw::new(s, &w, 16, 4).run(&x_cnhw, 1);
+            allclose(&y_nhwc.data, &cnhw_to_nhwc(&y_cnhw).data, 1e-4, 1e-5)
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_equals_masked_dense_reference() {
+    prop::check_seeded(
+        0xA112,
+        |r, size| {
+            let s = random_shape(r, size);
+            let v = [8, 16, 32][r.below(3)];
+            let tile = 1 + r.below(8);
+            let sparsity = [0.25, 0.5, 0.75][r.below(3)];
+            (s, v, tile, sparsity, r.next_u64())
+        },
+        |&(s, v, tile, sparsity, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
+            let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+            let op = Conv2dSparseCnhw::new_adaptive(s, &w, v, tile, sparsity);
+            let got = op.run(&x, 1);
+            // Reference: masked filter matrix × im2col data matrix.
+            let masked = op.weights.decompress();
+            let a = im2col_cnhw(&x, &s);
+            let want = matmul_ref(&masked, &a, s.c_out, s.k(), s.gemm_cols());
+            allclose(&got.data, &want, 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_fused_pack_equals_separate_passes() {
+    prop::check_seeded(
+        0xA113,
+        |r, size| {
+            let s = random_shape(r, size);
+            let v = [4, 8, 16, 32, 64][r.below(5)];
+            (s, v, r.next_u64())
+        },
+        |&(s, v, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
+            let fused = fused_im2col_pack_cnhw(&x, &s, v);
+            let separate = pack_data_matrix(&im2col_cnhw(&x, &s), s.k(), s.gemm_cols(), v);
+            fused.data == separate.data
+                && fused.k == separate.k
+                && fused.cols == separate.cols
+        },
+    );
+}
+
+#[test]
+fn prop_threading_is_result_invariant() {
+    prop::check_seeded(
+        0xA114,
+        |r, size| {
+            let s = random_shape(r, size);
+            let threads = 2 + r.below(5);
+            (s, threads, r.next_u64())
+        },
+        |&(s, threads, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
+            let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+            let sp = Conv2dSparseCnhw::new_adaptive(s, &w, 16, 4, 0.5);
+            let single = sp.run(&x, 1);
+            let multi = sp.run(&x, threads);
+            // Bitwise: identical per-tile arithmetic, only dispatch differs.
+            single.data == multi.data
+        },
+    );
+}
+
+#[test]
+fn prop_rvv_sim_matches_native_across_lmul_and_tails() {
+    prop::check_seeded(
+        0xA115,
+        |r, size| {
+            let rows = 1 + r.below(12);
+            let k = 1 + r.below(size.max(4));
+            let lmul = [1usize, 2, 4, 8][r.below(4)];
+            // Deliberately non-multiple-of-V cols to exercise tails.
+            let cols = 1 + r.below(70);
+            let tile = 1 + r.below((32 / lmul - 1).min(8));
+            (rows, k, cols, lmul, tile, r.next_u64())
+        },
+        |&(rows, k, cols, lmul, tile, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let w = rng.normal_vec(rows * k, 1.0);
+            let a = rng.normal_vec(k * cols, 1.0);
+            let mut m = RvvMachine::k1();
+            let v = m.vlmax(lmul);
+            let p = pack_data_matrix(&a, k, cols, v);
+            let cp = prune_colwise_adaptive(&w, rows, k, tile, 0.5);
+            let native = spmm_colwise(&cp, &p);
+            let (sim, rep) = sim_spmm_colwise(&mut m, &cp, &p, lmul);
+            allclose(&sim, &native, 1e-5, 1e-6) && rep.instructions > 0
+        },
+    );
+}
+
+#[test]
+fn prop_row_nm_kernels_agree_on_shared_mask() {
+    prop::check_seeded(
+        0xA116,
+        |r, size| {
+            let rows = 1 + r.below(16);
+            let m = [4usize, 8][r.below(2)];
+            let groups = 1 + r.below(size.max(2));
+            let n = 1 + r.below(m);
+            let cols = 1 + r.below(50);
+            (rows, m, groups, n, cols, r.next_u64())
+        },
+        |&(rows, m, groups, n, cols, seed)| {
+            let k = m * groups;
+            let mut rng = XorShiftRng::new(seed);
+            let w = rng.normal_vec(rows * k, 1.0);
+            let a = rng.normal_vec(k * cols, 1.0);
+            let rp = prune_rownm(&w, rows, k, n, m);
+            let p = pack_data_matrix(&a, k, cols, 16);
+            let inner = spmm_inner_rownm(&rp, &p);
+            let outer = spmm_outer_rownm(&rp, &p);
+            let want = matmul_ref(&rp.decompress(), &a, rows, k, cols);
+            allclose(&inner, &want, 1e-4, 1e-5) && allclose(&outer, &want, 1e-4, 1e-5)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Edge cases the random generator hits only occasionally — pinned.
+
+fn run_both(s: ConvShape) {
+    let mut rng = XorShiftRng::new(1);
+    let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
+    let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+    let got = Conv2dDenseCnhw::new(s, &w, 32, 8).run(&x, 1);
+    let want = conv2d_direct_cnhw(&x, &w, &s);
+    assert!(
+        allclose(&got.data, &want.data, 1e-3, 1e-3),
+        "mismatch for {s}"
+    );
+}
+
+#[test]
+fn edge_input_narrower_than_strip() {
+    // W_out (3) ≪ V (32): a single ragged tail strip.
+    run_both(ConvShape::square(1, 4, 5, 3, 3, 1, 1));
+}
+
+#[test]
+fn edge_1x1_kernel_stride_2() {
+    run_both(ConvShape::square(2, 8, 9, 4, 1, 2, 0));
+}
+
+#[test]
+fn edge_7x7_stride_2_pad_3_stem() {
+    run_both(ConvShape::square(1, 3, 21, 8, 7, 2, 3));
+}
+
+#[test]
+fn edge_single_output_pixel() {
+    // H_out = W_out = 1.
+    run_both(ConvShape::square(1, 6, 3, 5, 3, 1, 0));
+}
+
+#[test]
+fn edge_pad_wider_than_kernel_half() {
+    run_both(ConvShape::square(1, 2, 6, 3, 3, 1, 2));
+}
+
+#[test]
+fn edge_batch_spans_strip_boundary() {
+    // cols = n·h_out·w_out = 3·4·4 = 48, V = 32: strip 1 crosses batches.
+    run_both(ConvShape::square(3, 4, 4, 4, 3, 1, 1));
+}
+
+#[test]
+fn edge_dense_gemm_tile_larger_than_rows() {
+    let mut rng = XorShiftRng::new(2);
+    let (rows, k, cols) = (3usize, 8usize, 20usize);
+    let w = rng.normal_vec(rows * k, 1.0);
+    let a = rng.normal_vec(k * cols, 1.0);
+    let p = pack_data_matrix(&a, k, cols, 16);
+    let got = gemm_dense(&w, rows, &p, 8); // tile 8 > rows 3
+    assert!(allclose(&got, &matmul_ref(&w, &a, rows, k, cols), 1e-4, 1e-5));
+}
+
+#[test]
+fn prop_dense_nchw_agrees_with_nhwc_path() {
+    use nmprune::conv::Conv2dDenseNchw;
+    use nmprune::tensor::layout::{nchw_to_nhwc, nhwc_to_nchw};
+    prop::check_seeded(
+        0xA117,
+        |r, size| {
+            let s = random_shape(r, size);
+            (s, r.next_u64())
+        },
+        |&(s, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let x_nhwc = Tensor::random(&[s.n, s.h_in, s.w_in, s.c_in], &mut rng, -1.0, 1.0);
+            let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
+            let y_nhwc = Conv2dDenseNhwc::new(s, &w).run(&x_nhwc, 1);
+            let y_nchw = Conv2dDenseNchw::new(s, &w, 16, 4).run(&nhwc_to_nchw(&x_nhwc), 1);
+            allclose(&y_nhwc.data, &nchw_to_nhwc(&y_nchw).data, 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn edge_filter_matrix_roundtrip_orientation() {
+    // The OIHW→filter-matrix permutation must match the im2col row
+    // order: a conv with a delta filter extracts the right channel.
+    let s = ConvShape::square(1, 3, 4, 1, 1, 1, 0);
+    let mut w = Tensor::zeros(&[1, 3, 1, 1]);
+    w.data[2] = 1.0; // select input channel 2
+    let mut rng = XorShiftRng::new(3);
+    let x = Tensor::random(&[3, 1, 4, 4], &mut rng, -1.0, 1.0);
+    let y = Conv2dDenseCnhw::new(s, &w, 8, 2).run(&x, 1);
+    let want = &x.data[2 * 16..3 * 16];
+    assert!(allclose(&y.data, want, 1e-6, 1e-7));
+    // And the flattened matrix has the 1.0 at column 2 (k-major, ch inner).
+    let f = oihw_to_filter_matrix(&w);
+    assert_eq!(f.data[2], 1.0);
+}

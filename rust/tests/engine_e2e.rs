@@ -1,0 +1,222 @@
+//! Engine-level integration: executor path agreement on whole graphs,
+//! batching-server correctness under load, tuner cache behaviour, and
+//! failure injection.
+
+use std::time::Duration;
+
+use nmprune::engine::{ExecConfig, Executor, Server, ServerConfig};
+use nmprune::models::{build_model, ModelArch};
+use nmprune::tensor::Tensor;
+use nmprune::tuner::{cache_key, TuneCache};
+use nmprune::util::{allclose, XorShiftRng};
+
+fn tiny_resnet(batch: usize) -> nmprune::models::Graph {
+    build_model(ModelArch::ResNet18, batch, 32)
+}
+
+/// The two dense layout paths share deterministic weights (seeded by
+/// layer name), so whole-graph outputs must agree.
+#[test]
+fn dense_nhwc_and_cnhw_executors_agree_end_to_end() {
+    let mut rng = XorShiftRng::new(5);
+    let x = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
+    let y_nhwc = Executor::new(tiny_resnet(1), ExecConfig::dense_nhwc(1)).run(&x);
+    let y_cnhw = Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(1)).run(&x);
+    assert_eq!(y_nhwc.shape, vec![1, 1000]);
+    assert!(
+        allclose(&y_nhwc.data, &y_cnhw.data, 1e-3, 1e-4),
+        "layout paths diverged"
+    );
+}
+
+/// Sparse at 0% sparsity must equal the dense CNHW path exactly: the
+/// compressed format with every column retained is a dense GEMM.
+#[test]
+fn sparse_at_zero_sparsity_equals_dense() {
+    let mut rng = XorShiftRng::new(6);
+    let x = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
+    let y_dense = Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(1)).run(&x);
+    let y_s0 = Executor::new(tiny_resnet(1), ExecConfig::sparse_cnhw(1, 0.0)).run(&x);
+    assert!(allclose(&y_dense.data, &y_s0.data, 1e-4, 1e-5));
+}
+
+/// Thread count must not change executor results.
+#[test]
+fn executor_threading_invariant() {
+    let mut rng = XorShiftRng::new(7);
+    let x = Tensor::random(&[2, 32, 32, 3], &mut rng, 0.0, 1.0);
+    let y1 = Executor::new(tiny_resnet(2), ExecConfig::sparse_cnhw(1, 0.5)).run(&x);
+    let y4 = Executor::new(tiny_resnet(2), ExecConfig::sparse_cnhw(4, 0.5)).run(&x);
+    assert_eq!(y1.data, y4.data, "thread count changed results");
+}
+
+/// Batch composition must not change per-image results: running images
+/// separately equals running them in one batch.
+#[test]
+fn batch_invariance_of_executor() {
+    let mut rng = XorShiftRng::new(8);
+    let a = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
+    let b = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
+    let exec1 = Executor::new(tiny_resnet(1), ExecConfig::sparse_cnhw(1, 0.5));
+    let ya = exec1.run(&a);
+    let yb = exec1.run(&b);
+    // Batched input [2, 32, 32, 3].
+    let mut xb = Vec::new();
+    xb.extend_from_slice(&a.data);
+    xb.extend_from_slice(&b.data);
+    let exec2 = Executor::new(tiny_resnet(2), ExecConfig::sparse_cnhw(1, 0.5));
+    let y2 = exec2.run(&Tensor::from_vec(&[2, 32, 32, 3], xb));
+    assert!(allclose(&y2.data[..1000], &ya.data, 1e-3, 1e-4));
+    assert!(allclose(&y2.data[1000..], &yb.data, 1e-3, 1e-4));
+}
+
+/// The server's batched replies must equal direct executor runs.
+#[test]
+fn server_replies_match_direct_execution() {
+    let res = 32;
+    let server = Server::start(
+        tiny_resnet,
+        ExecConfig::sparse_cnhw(1, 0.5),
+        res,
+        ServerConfig {
+            batch_sizes: vec![1, 2, 4],
+            batch_window: Duration::from_millis(20),
+        },
+    );
+    let mut rng = XorShiftRng::new(9);
+    let images: Vec<Tensor> = (0..6)
+        .map(|_| Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0))
+        .collect();
+    let handles: Vec<_> = images.iter().map(|im| server.submit(im.clone())).collect();
+    let replies: Vec<_> = handles.into_iter().map(|h| h.recv().unwrap()).collect();
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 6);
+
+    let exec = Executor::new(tiny_resnet(1), ExecConfig::sparse_cnhw(1, 0.5));
+    for (im, reply) in images.iter().zip(&replies) {
+        let mut x = Tensor::from_vec(
+            &[1, res, res, 3],
+            im.data.clone(),
+        );
+        x.shape = vec![1, res, res, 3];
+        let want = exec.run(&x);
+        assert_eq!(reply.logits.len(), 1000);
+        assert!(
+            allclose(&reply.logits, &want.data, 1e-3, 1e-4),
+            "batched reply diverged from direct run"
+        );
+        assert!(reply.batch >= 1 && reply.batch <= 4);
+    }
+}
+
+/// Stats must be internally consistent after a burst.
+#[test]
+fn server_stats_consistency() {
+    let res = 32;
+    let server = Server::start(
+        tiny_resnet,
+        ExecConfig::dense_cnhw(1),
+        res,
+        ServerConfig::default(),
+    );
+    let mut rng = XorShiftRng::new(10);
+    let handles: Vec<_> = (0..5)
+        .map(|_| server.submit(Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0)))
+        .collect();
+    for h in handles {
+        h.recv().unwrap();
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 5);
+    assert!(stats.throughput_rps > 0.0);
+    assert!(stats.mean_batch >= 1.0 && stats.mean_batch <= 4.0);
+    assert!(stats.latency.p95 >= stats.latency.median);
+}
+
+/// Failure injection: a wrong-shaped image must be rejected at submit.
+#[test]
+fn server_rejects_bad_image_shape() {
+    let server = Server::start(
+        tiny_resnet,
+        ExecConfig::dense_cnhw(1),
+        32,
+        ServerConfig::default(),
+    );
+    let bad = Tensor::zeros(&[16, 16, 3]);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        server.submit(bad);
+    }));
+    assert!(result.is_err(), "mis-shaped submit must panic");
+    drop(server.shutdown());
+}
+
+/// Failure injection: executor must reject a wrong-shaped input tensor.
+#[test]
+fn executor_rejects_bad_input() {
+    let exec = Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(1));
+    let bad = Tensor::zeros(&[1, 16, 16, 3]); // graph built for 32×32
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec.run(&bad);
+    }));
+    assert!(result.is_err(), "mis-shaped input must panic");
+}
+
+/// Tuner cache: save → load roundtrip, and memoisation short-circuits
+/// the expensive closure.
+#[test]
+fn tune_cache_roundtrip_and_memoisation() {
+    use nmprune::conv::ConvShape;
+    let dir = std::env::temp_dir().join("nmprune_tunecache_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cache.tsv");
+    let path_s = path.to_str().unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let shape = ConvShape::square(1, 8, 14, 16, 3, 1, 1);
+    let key = cache_key(&shape, Some(0.5));
+    let mut cache = TuneCache::load(path_s);
+    let mut calls = 0;
+    let c1 = cache.get_or_tune(key.clone(), || {
+        calls += 1;
+        nmprune::engine::LayerChoice { v: 16, tile: 4 }
+    });
+    assert_eq!((c1.v, c1.tile), (16, 4));
+    let c2 = cache.get_or_tune(key.clone(), || {
+        calls += 1;
+        nmprune::engine::LayerChoice { v: 8, tile: 2 }
+    });
+    assert_eq!((c2.v, c2.tile), (16, 4), "memoised value must win");
+    assert_eq!(calls, 1);
+    cache.save(path_s).unwrap();
+
+    let mut reloaded = TuneCache::load(path_s);
+    let c3 = reloaded.get_or_tune(key, || panic!("must hit the persisted cache"));
+    assert_eq!((c3.v, c3.tile), (16, 4));
+}
+
+/// Different sparsity must produce different cache keys.
+#[test]
+fn tune_cache_keys_distinguish_sparsity() {
+    use nmprune::conv::ConvShape;
+    let s = ConvShape::square(1, 8, 14, 16, 3, 1, 1);
+    assert_ne!(cache_key(&s, Some(0.5)), cache_key(&s, Some(0.75)));
+    assert_ne!(cache_key(&s, Some(0.5)), cache_key(&s, None));
+}
+
+/// MobileNet (depthwise) and DenseNet (concat) exercise the non-conv
+/// ops across both layouts; outputs must agree.
+#[test]
+fn exotic_archs_agree_across_layouts() {
+    for arch in [ModelArch::MobileNetV2, ModelArch::DenseNet121] {
+        let mut rng = XorShiftRng::new(12);
+        let x = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
+        let g1 = build_model(arch, 1, 32);
+        let g2 = build_model(arch, 1, 32);
+        let y_nhwc = Executor::new(g1, ExecConfig::dense_nhwc(1)).run(&x);
+        let y_cnhw = Executor::new(g2, ExecConfig::dense_cnhw(1)).run(&x);
+        assert!(
+            allclose(&y_nhwc.data, &y_cnhw.data, 1e-3, 1e-4),
+            "{arch:?} layout paths diverged"
+        );
+    }
+}
