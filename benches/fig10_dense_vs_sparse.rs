@@ -9,7 +9,7 @@
 //! Stage4-down / Stage4-conv1) because its per-run weight packing data
 //! movement grows with C_in×C_out.
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw};
 use nmprune::models::resnet50_fig10_layers;
 use nmprune::tensor::Tensor;
@@ -56,17 +56,19 @@ fn main() {
         let x_cnhw = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
         let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
 
-        // Auto-tune (T, LMUL) for the sparse path — §3.3 mechanism.
-        let tr = tuner::tune_native(&s, Some(SPARSITY), THREADS, if quick { 4 } else { 8 });
+        // Auto-tune (T, LMUL) for the sparse path — §3.3 mechanism —
+        // profiling on the same persistent pool the measurement uses.
+        let pool = bench_pool(THREADS);
+        let tr = tuner::tune_native(&s, Some(SPARSITY), &pool, if quick { 4 } else { 8 });
         let (vt, tt) = (tr.best.v, tr.best.tile);
 
         let nhwc = Conv2dDenseNhwc::new(s, &w);
         let cnhw = Conv2dDenseCnhw::new(s, &w, V_LMUL4, 7); // (7+1)·4 = 32 regs
         let sparse = Conv2dSparseCnhw::new_adaptive(s, &w, vt, tt, SPARSITY);
 
-        let bn = bench("nhwc", cfg, || nhwc.run(&x_nhwc, THREADS));
-        let bc = bench("cnhw", cfg, || cnhw.run(&x_cnhw, THREADS));
-        let bs = bench("sparse", cfg, || sparse.run(&x_cnhw, THREADS));
+        let bn = bench("nhwc", cfg, || nhwc.run(&x_nhwc, &pool));
+        let bc = bench("cnhw", cfg, || cnhw.run(&x_cnhw, &pool));
+        let bs = bench("sparse", cfg, || sparse.run(&x_cnhw, &pool));
 
         let vs_cnhw = bc.mean_ns() / bs.mean_ns();
         let vs_nhwc = bn.mean_ns() / bs.mean_ns();

@@ -9,7 +9,7 @@
 //! `NMPRUNE_BENCH_QUICK=1` drops the resolution to 112 to keep CI fast;
 //! the full run uses the paper's 224×224 ImageNet geometry.
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::engine::{ExecConfig, Executor};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::tensor::Tensor;
@@ -42,13 +42,14 @@ fn main() {
     );
 
     let mut rng = XorShiftRng::new(0xF11);
+    let pool = bench_pool(THREADS);
     for &b in batches {
         let variants: Vec<(String, ExecConfig)> = vec![
-            ("nhwc".into(), ExecConfig::dense_nhwc(THREADS)),
-            ("cnhw".into(), ExecConfig::dense_cnhw(THREADS)),
-            ("s25".into(), ExecConfig::sparse_cnhw(THREADS, 0.25)),
-            ("s50".into(), ExecConfig::sparse_cnhw(THREADS, 0.5)),
-            ("s75".into(), ExecConfig::sparse_cnhw(THREADS, 0.75)),
+            ("nhwc".into(), ExecConfig::dense_nhwc(pool.clone())),
+            ("cnhw".into(), ExecConfig::dense_cnhw(pool.clone())),
+            ("s25".into(), ExecConfig::sparse_cnhw(pool.clone(), 0.25)),
+            ("s50".into(), ExecConfig::sparse_cnhw(pool.clone(), 0.5)),
+            ("s75".into(), ExecConfig::sparse_cnhw(pool.clone(), 0.75)),
         ];
         let x = Tensor::random(&[b, res, res, 3], &mut rng, 0.0, 1.0);
         let mut ms = Vec::new();

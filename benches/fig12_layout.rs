@@ -8,7 +8,7 @@
 //! MobileNet-V2, and ≈1× (slight loss) for DenseNet-121, whose weight
 //! tensors are smaller than its feature maps.
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::engine::{ExecConfig, Executor};
 use nmprune::models::{build_model, model_names, ModelArch};
 use nmprune::tensor::Tensor;
@@ -32,6 +32,7 @@ fn main() {
     );
 
     let mut rng = XorShiftRng::new(0xF12);
+    let pool = bench_pool(THREADS);
     for &name in model_names() {
         if quick && matches!(name, "resnet101" | "resnet152") {
             continue; // trimmed in quick mode; full run covers all seven
@@ -39,10 +40,16 @@ fn main() {
         let arch = ModelArch::parse(name).unwrap();
         let x = Tensor::random(&[1, res, res, 3], &mut rng, 0.0, 1.0);
 
-        let en = Executor::new(build_model(arch, 1, res), ExecConfig::dense_nhwc(THREADS));
+        let en = Executor::new(
+            build_model(arch, 1, res),
+            ExecConfig::dense_nhwc(pool.clone()),
+        );
         let bn = bench("nhwc", cfg, || en.run(&x));
         drop(en);
-        let ec = Executor::new(build_model(arch, 1, res), ExecConfig::dense_cnhw(THREADS));
+        let ec = Executor::new(
+            build_model(arch, 1, res),
+            ExecConfig::dense_cnhw(pool.clone()),
+        );
         let bc = bench("cnhw", cfg, || ec.run(&x));
 
         t.row(&[

@@ -11,7 +11,7 @@
 //! template parameters: at LMUL=8 only T ≤ 3 fits, so wider vectors
 //! trade away accumulator rows exactly as on the K1.
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::conv::Conv2dSparseCnhw;
 use nmprune::models::resnet50_fig5_layers;
 use nmprune::pruning::prune_colwise_adaptive;
@@ -47,13 +47,14 @@ fn main() {
         let f = oihw_to_filter_matrix(&w);
 
         // --- native wall-clock across v = 8·LMUL ---
+        let pool = bench_pool(THREADS);
         let mut cells = vec![l.name.to_string()];
         let mut times = Vec::new();
         for &lmul in &LMULS {
             let v = 8 * lmul;
             let tile = (32 / lmul - 1).min(8);
             let op = Conv2dSparseCnhw::new_adaptive(s, &w, v, tile, SPARSITY);
-            let b = bench("conv", cfg, || op.run(&x, THREADS));
+            let b = bench("conv", cfg, || op.run(&x, &pool));
             times.push(b.mean_ns());
             cells.push(format!("{:.3}", b.mean_ms()));
         }

@@ -3,7 +3,7 @@
 //! optimization step). GFLOP/s is effective (counting pruned-away FLOPs
 //! for sparse kernels would flatter them; we count executed MACs ×2).
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
 use nmprune::gemm::{gemm_dense, spmm_colwise};
 use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix};
@@ -69,11 +69,14 @@ fn main() {
         format!("{:.2} GB/s out", bytes / r.mean_ns()),
     ]);
 
-    // Whole sparse conv (pack + GEMM + alloc), 1 and 4 threads.
+    // Whole sparse conv (pack + GEMM + alloc) on persistent pools of 1
+    // and 4 workers — the measured loop never spawns a thread.
     let wt = Tensor::random(&[64, 64, 3, 3], &mut rng, -0.5, 0.5);
     let op = Conv2dSparseCnhw::new_adaptive(s, &wt, v, tile, 0.5);
-    let r1 = bench("conv1t", cfg, || op.run(&x, 1));
-    let r4 = bench("conv4t", cfg, || op.run(&x, 4));
+    let pool1 = bench_pool(1);
+    let pool4 = bench_pool(4);
+    let r1 = bench("conv1t", cfg, || op.run(&x, &pool1));
+    let r4 = bench("conv4t", cfg, || op.run(&x, &pool4));
     t.row(&[
         "conv sparse 1thr".into(),
         format!("{s}"),

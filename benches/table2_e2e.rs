@@ -8,7 +8,7 @@
 //! `artifacts/accuracy_table.md`) and this bench reprints those numbers
 //! when present.
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::engine::{ExecConfig, Executor};
 use nmprune::models::{build_model, model_names, ModelArch};
 use nmprune::tensor::Tensor;
@@ -39,6 +39,7 @@ fn main() {
     );
 
     let mut rng = XorShiftRng::new(0x7B2);
+    let pool = bench_pool(THREADS);
     for &name in model_names() {
         if quick && matches!(name, "resnet101" | "resnet152" | "densenet121") {
             continue;
@@ -50,10 +51,10 @@ fn main() {
             let exec = Executor::new(build_model(arch, 1, res), cfg_exec);
             bench(name, cfg, || exec.run(&x)).mean_ms()
         };
-        let dense = run(ExecConfig::dense_nhwc(THREADS));
-        let r25 = run(ExecConfig::sparse_cnhw(THREADS, 0.25));
-        let r50 = run(ExecConfig::sparse_cnhw(THREADS, 0.5));
-        let r75 = run(ExecConfig::sparse_cnhw(THREADS, 0.75));
+        let dense = run(ExecConfig::dense_nhwc(pool.clone()));
+        let r25 = run(ExecConfig::sparse_cnhw(pool.clone(), 0.25));
+        let r50 = run(ExecConfig::sparse_cnhw(pool.clone(), 0.5));
+        let r75 = run(ExecConfig::sparse_cnhw(pool.clone(), 0.75));
 
         t.row(&[
             name.into(),

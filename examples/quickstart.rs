@@ -13,7 +13,7 @@ use nmprune::conv::{Conv2dDenseCnhw, Conv2dSparseCnhw, ConvShape};
 use nmprune::gemm::matmul_ref;
 use nmprune::im2col::im2col_cnhw;
 use nmprune::tensor::Tensor;
-use nmprune::util::{allclose, XorShiftRng};
+use nmprune::util::{allclose, ThreadPool, XorShiftRng};
 
 fn main() {
     // A ResNet-ish 3×3 layer: 64→64 channels on a 56×56 map, batch 1.
@@ -34,14 +34,15 @@ fn main() {
         shape.k()
     );
 
-    // Warmup + timed runs, single thread.
-    let y_dense = dense.run(&x, 1);
-    let y_sparse = sparse.run(&x, 1);
+    // Warmup + timed runs on a single persistent worker (serial path).
+    let pool = ThreadPool::new(1);
+    let y_dense = dense.run(&x, &pool);
+    let y_sparse = sparse.run(&x, &pool);
     let t0 = Instant::now();
-    let _ = dense.run(&x, 1);
+    let _ = dense.run(&x, &pool);
     let t_dense = t0.elapsed();
     let t1 = Instant::now();
-    let _ = sparse.run(&x, 1);
+    let _ = sparse.run(&x, &pool);
     let t_sparse = t1.elapsed();
 
     // Correctness: the sparse path must equal a reference GEMM with the

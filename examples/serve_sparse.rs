@@ -11,7 +11,7 @@ use nmprune::engine::{ExecConfig, Server, ServerConfig};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::tensor::Tensor;
 use nmprune::util::cli::Args;
-use nmprune::util::XorShiftRng;
+use nmprune::util::{ThreadPool, XorShiftRng};
 
 fn drive(label: &str, cfg: ExecConfig, res: usize, requests: usize) {
     let server = Server::start(
@@ -51,10 +51,12 @@ fn main() {
     let requests = args.get_parsed("requests", 24usize);
     let res = args.get_parsed("res", 112usize);
     let threads = args.get_parsed("threads", 2usize);
+    // One persistent pool serves every configuration below.
+    let pool = ThreadPool::shared(threads);
     println!("serving ResNet-18 @{res}, {requests} requests per config\n");
-    drive("sparse 50%", ExecConfig::sparse_cnhw(threads, 0.5), res, requests);
-    drive("sparse 75%", ExecConfig::sparse_cnhw(threads, 0.75), res, requests);
-    drive("dense CNHW", ExecConfig::dense_cnhw(threads), res, requests);
-    drive("dense NHWC", ExecConfig::dense_nhwc(threads), res, requests);
+    drive("sparse 50%", ExecConfig::sparse_cnhw(pool.clone(), 0.5), res, requests);
+    drive("sparse 75%", ExecConfig::sparse_cnhw(pool.clone(), 0.75), res, requests);
+    drive("dense CNHW", ExecConfig::dense_cnhw(pool.clone()), res, requests);
+    drive("dense NHWC", ExecConfig::dense_nhwc(pool), res, requests);
     println!("\n(paper Table 2: sparse ResNet-18 up to 4.0x over the dense NHWC baseline)");
 }

@@ -19,7 +19,7 @@ use nmprune::models::resnet50_fig5_layers;
 use nmprune::tensor::Tensor;
 use nmprune::tuner::{candidate_space, tune_native, tune_sim_colwise};
 use nmprune::util::cli::Args;
-use nmprune::util::XorShiftRng;
+use nmprune::util::{ThreadPool, XorShiftRng};
 
 fn main() {
     let args = Args::from_env();
@@ -45,12 +45,13 @@ fn main() {
     );
 
     let cfg = BenchConfig::quick();
+    let pool = ThreadPool::shared(threads);
     let mut agree = 0usize;
     let layers = resnet50_fig5_layers(1);
     for l in &layers {
         let s = l.shape;
         let rs = tune_sim_colwise(&s, sparsity, tile_cap);
-        let rn = tune_native(&s, Some(sparsity), threads, tile_cap);
+        let rn = tune_native(&s, Some(sparsity), &pool, tile_cap);
 
         let mut rng = XorShiftRng::new(0x7E ^ s.c_out as u64);
         let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
@@ -58,8 +59,8 @@ fn main() {
 
         let tuned = Conv2dSparseCnhw::new_adaptive(s, &w, rn.best.v, rn.best.tile, sparsity);
         let fixed = Conv2dSparseCnhw::new_adaptive(s, &w, 32, 7, sparsity);
-        let bt = bench("tuned", cfg, || tuned.run(&x, threads));
-        let bf = bench("static", cfg, || fixed.run(&x, threads));
+        let bt = bench("tuned", cfg, || tuned.run(&x, &pool));
+        let bf = bench("static", cfg, || fixed.run(&x, &pool));
 
         let same = rs.best.lmul == rn.best.lmul && rs.best.tile == rn.best.tile;
         agree += same as usize;

@@ -3,9 +3,20 @@
 //! wall-time budget, outlier-trimmed statistics, and markdown table
 //! output shared by every `benches/` target.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{fmt_ns, trimmed, Summary};
+use crate::util::threadpool::ThreadPool;
+
+/// Persistent, per-size worker pools shared by every bench target.
+/// Benches sweeping thread counts must route through this so that no
+/// pool (and no OS thread) is ever constructed inside a measured loop —
+/// the measurement then covers exactly the steady-state dispatch cost a
+/// long-lived server pays.
+pub fn bench_pool(threads: usize) -> Arc<ThreadPool> {
+    ThreadPool::shared(threads)
+}
 
 /// Measurement configuration.
 #[derive(Clone, Copy, Debug)]

@@ -8,19 +8,21 @@
 //!
 //! Each operator is constructed once per layer (weights packed /
 //! compressed ahead of time, off the hot path) and then invoked per
-//! request. All return CNHW or NHWC outputs matching their input layout.
+//! request with a caller-supplied persistent [`ThreadPool`] — the run
+//! methods never spawn threads, and a pool of size 1 executes the
+//! identical strip arithmetic serially on the calling thread.
 
 use std::cell::RefCell;
 
 use super::shape::ConvShape;
 use crate::gemm::threaded::{gemm_dense_parallel, spmm_colwise_parallel};
-use crate::gemm::{gemm_dense, spmm_colwise};
 use crate::im2col::{
     conv2d_indirect_nhwc_parallel, fused_im2col_pack_cnhw_into, IndirectionBuffer, PackedMatrix,
 };
 use crate::pruning::{prune_colwise, prune_colwise_adaptive, ColwisePruned};
 use crate::tensor::layout::oihw_to_filter_matrix;
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 thread_local! {
     /// Per-thread packed-matrix scratch reused across conv invocations
@@ -56,8 +58,8 @@ impl Conv2dDenseNhwc {
     }
 
     /// Run on an NHWC input, producing NHWC output.
-    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
-        conv2d_indirect_nhwc_parallel(x, &self.filter, &self.shape, &self.ib, threads)
+    pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        conv2d_indirect_nhwc_parallel(x, &self.filter, &self.shape, &self.ib, pool)
     }
 }
 
@@ -82,16 +84,12 @@ impl Conv2dDenseCnhw {
 
     /// Run on a CNHW input, producing CNHW output
     /// `[C_out, N, H_out, W_out]`.
-    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
+    pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
         let s = &self.shape;
         let out = PACK_SCRATCH.with(|cell| {
             let mut packed = cell.borrow_mut();
             fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
-            if threads > 1 {
-                gemm_dense_parallel(&self.filter, s.c_out, &packed, self.tile, threads)
-            } else {
-                gemm_dense(&self.filter, s.c_out, &packed, self.tile)
-            }
+            gemm_dense_parallel(&self.filter, s.c_out, &packed, self.tile, pool)
         });
         Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
     }
@@ -121,18 +119,14 @@ impl Conv2dDenseNchw {
 
     /// Run on an NCHW input `[N, C_in, H, W]`, producing NCHW output
     /// `[N, C_out, H_out, W_out]`.
-    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
+    pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
         let s = &self.shape;
         let (ho, wo) = (s.h_out(), s.w_out());
         let per_image = crate::im2col::fused_im2col_pack_nchw(x, s, self.v);
         let img_out = s.c_out * ho * wo;
         let mut out = Tensor::zeros(&[s.n, s.c_out, ho, wo]);
         for (n, p) in per_image.iter().enumerate() {
-            let y = if threads > 1 {
-                gemm_dense_parallel(&self.filter, s.c_out, p, self.tile, threads)
-            } else {
-                gemm_dense(&self.filter, s.c_out, p, self.tile)
-            };
+            let y = gemm_dense_parallel(&self.filter, s.c_out, p, self.tile, pool);
             out.data[n * img_out..(n + 1) * img_out].copy_from_slice(&y);
         }
         out
@@ -149,6 +143,7 @@ pub struct Conv2dSparseCnhw {
 
 impl Conv2dSparseCnhw {
     /// Compress OIHW weights column-wise with explicit N:M groups.
+    /// `m` must divide `shape.k()` (see [`prune_colwise`]'s contract).
     pub fn new(shape: ConvShape, w_oihw: &Tensor, v: usize, tile: usize, n: usize, m: usize) -> Self {
         assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
         let f = oihw_to_filter_matrix(w_oihw);
@@ -176,16 +171,12 @@ impl Conv2dSparseCnhw {
     }
 
     /// Run on a CNHW input, producing CNHW output.
-    pub fn run(&self, x: &Tensor, threads: usize) -> Tensor {
+    pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
         let s = &self.shape;
         let out = PACK_SCRATCH.with(|cell| {
             let mut packed = cell.borrow_mut();
             fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
-            if threads > 1 {
-                spmm_colwise_parallel(&self.weights, &packed, threads)
-            } else {
-                spmm_colwise(&self.weights, &packed)
-            }
+            spmm_colwise_parallel(&self.weights, &packed, pool)
         });
         Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
     }
@@ -221,8 +212,9 @@ mod tests {
             let (x, w) = rand_case(seed, s);
             let want = conv2d_direct_cnhw(&x, &w, &s);
             for threads in [1, 4] {
+                let pool = ThreadPool::new(threads);
                 let op = Conv2dDenseCnhw::new(s, &w, 16, 8);
-                let got = op.run(&x, threads);
+                let got = op.run(&x, &pool);
                 assert!(
                     allclose(&got.data, &want.data, 1e-4, 1e-5),
                     "{s} threads={threads}"
@@ -235,10 +227,11 @@ mod tests {
     fn dense_nhwc_matches_dense_cnhw_modulo_layout() {
         let s = ConvShape::square(2, 3, 7, 5, 3, 1, 1);
         let (x_cnhw, w) = rand_case(9, s);
+        let pool = ThreadPool::new(1);
         let cnhw_op = Conv2dDenseCnhw::new(s, &w, 8, 4);
         let nhwc_op = Conv2dDenseNhwc::new(s, &w);
-        let y_cnhw = cnhw_op.run(&x_cnhw, 1);
-        let y_nhwc = nhwc_op.run(&cnhw_to_nhwc(&x_cnhw), 1);
+        let y_cnhw = cnhw_op.run(&x_cnhw, &pool);
+        let y_nhwc = nhwc_op.run(&cnhw_to_nhwc(&x_cnhw), &pool);
         let y_roundtrip = nhwc_to_cnhw(&y_nhwc);
         assert!(allclose(&y_cnhw.data, &y_roundtrip.data, 1e-4, 1e-5));
     }
@@ -265,7 +258,8 @@ mod tests {
         }
         let want = conv2d_direct_cnhw(&x, &w_masked, &s);
         for threads in [1, 3] {
-            let got = op.run(&x, threads);
+            let pool = ThreadPool::new(threads);
+            let got = op.run(&x, &pool);
             assert!(allclose(&got.data, &want.data, 1e-4, 1e-5), "threads={threads}");
         }
         assert!((op.sparsity() - 0.5).abs() < 1e-9);
@@ -275,10 +269,11 @@ mod tests {
     fn adaptive_sparsity_levels() {
         let s = ConvShape::square(1, 8, 6, 16, 3, 1, 1);
         let (x, w) = rand_case(13, s);
+        let pool = ThreadPool::new(1);
         for sp in [0.25, 0.5, 0.75] {
             let op = Conv2dSparseCnhw::new_adaptive(s, &w, 8, 8, sp);
             assert!((op.sparsity() - sp).abs() < 0.03, "target {sp} got {}", op.sparsity());
-            let y = op.run(&x, 1);
+            let y = op.run(&x, &pool);
             assert_eq!(y.shape, vec![16, 1, 6, 6]);
             assert!(y.data.iter().any(|&v| v != 0.0));
         }

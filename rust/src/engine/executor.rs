@@ -8,11 +8,13 @@
 //! input channels and negligible cost).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath};
 use crate::models::{Graph, Op};
 use crate::tensor::layout::nhwc_to_cnhw;
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 use crate::util::XorShiftRng;
 
 use super::ops;
@@ -34,15 +36,19 @@ impl Default for LayerChoice {
     }
 }
 
-/// Executor configuration.
+/// Executor configuration. Pool-aware: instead of a raw `threads`
+/// count, the config carries a shared handle to the persistent
+/// [`ThreadPool`] every conv GEMM of this executor runs on. Cloning the
+/// config (as the server does per batch-size executor) clones the
+/// handle, so one pool serves the whole process.
 #[derive(Clone, Debug)]
 pub struct ExecConfig {
     /// Execution path for every conv layer.
     pub path: ConvPath,
     /// Column-wise adaptive sparsity ratio (SparseCnhw path only).
     pub sparsity: f64,
-    /// Worker threads for conv GEMMs.
-    pub threads: usize,
+    /// Persistent worker pool for conv GEMMs.
+    pub pool: Arc<ThreadPool>,
     /// Fallback micro-kernel parameters.
     pub default_choice: LayerChoice,
     /// Per-layer tuned parameters (layer name → choice).
@@ -52,29 +58,29 @@ pub struct ExecConfig {
 }
 
 impl ExecConfig {
-    pub fn dense_nhwc(threads: usize) -> Self {
+    pub fn dense_nhwc(pool: Arc<ThreadPool>) -> Self {
         Self {
             path: ConvPath::DenseNhwc,
             sparsity: 0.0,
-            threads,
+            pool,
             default_choice: LayerChoice::default(),
             per_layer: HashMap::new(),
             seed: 42,
         }
     }
 
-    pub fn dense_cnhw(threads: usize) -> Self {
+    pub fn dense_cnhw(pool: Arc<ThreadPool>) -> Self {
         Self {
             path: ConvPath::DenseCnhw,
-            ..Self::dense_nhwc(threads)
+            ..Self::dense_nhwc(pool)
         }
     }
 
-    pub fn sparse_cnhw(threads: usize, sparsity: f64) -> Self {
+    pub fn sparse_cnhw(pool: Arc<ThreadPool>, sparsity: f64) -> Self {
         Self {
             path: ConvPath::SparseCnhw,
             sparsity,
-            ..Self::dense_nhwc(threads)
+            ..Self::dense_nhwc(pool)
         }
     }
 
@@ -199,7 +205,7 @@ impl Executor {
     /// is DenseNhwc (the paper's layout policy, §4.1.2).
     pub fn run(&self, input_nhwc: &Tensor) -> Tensor {
         let nhwc = self.cfg.path == ConvPath::DenseNhwc;
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool.as_ref();
         let mut acts: Vec<Option<Tensor>> = vec![None; self.graph.nodes.len()];
         let mut remaining = self.consumers.clone();
         // §Perf step 4: borrow input activations instead of cloning
@@ -228,9 +234,9 @@ impl Executor {
                 Op::Conv { relu, .. } => {
                     let x = fetch(&acts, &node.inputs, 0);
                     let mut y = match self.convs.get(&node.id).unwrap() {
-                        PreparedConv::Nhwc(op) => op.run(x, threads),
-                        PreparedConv::Cnhw(op) => op.run(x, threads),
-                        PreparedConv::Sparse(op) => op.run(x, threads),
+                        PreparedConv::Nhwc(op) => op.run(x, pool),
+                        PreparedConv::Cnhw(op) => op.run(x, pool),
+                        PreparedConv::Sparse(op) => op.run(x, pool),
                     };
                     if *relu {
                         ops::relu_inplace(&mut y);
@@ -347,8 +353,8 @@ mod tests {
         let res = 32;
         let x = input(1, res, 1);
         let g = build_model(ModelArch::ResNet18, 1, res);
-        let e_nhwc = Executor::new(g.clone(), ExecConfig::dense_nhwc(1));
-        let e_cnhw = Executor::new(g.clone(), ExecConfig::dense_cnhw(2));
+        let e_nhwc = Executor::new(g.clone(), ExecConfig::dense_nhwc(ThreadPool::shared(1)));
+        let e_cnhw = Executor::new(g.clone(), ExecConfig::dense_cnhw(ThreadPool::shared(2)));
         let y1 = e_nhwc.run(&x);
         let y2 = e_cnhw.run(&x);
         assert_eq!(y1.shape, vec![1, 1000]);
@@ -365,8 +371,9 @@ mod tests {
         let res = 32;
         let x = input(1, res, 2);
         let g = build_model(ModelArch::ResNet18, 1, res);
-        let dense = Executor::new(g.clone(), ExecConfig::dense_cnhw(1)).run(&x);
-        let sparse = Executor::new(g, ExecConfig::sparse_cnhw(1, 0.5)).run(&x);
+        let dense = Executor::new(g.clone(), ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
+        let sparse =
+            Executor::new(g, ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5)).run(&x);
         assert_eq!(sparse.shape, vec![1, 1000]);
         // Pruned logits differ from dense but remain finite.
         assert!(sparse.data.iter().all(|v| v.is_finite()));
@@ -376,8 +383,8 @@ mod tests {
     #[test]
     fn sparse_weights_smaller_than_dense() {
         let g = build_model(ModelArch::ResNet18, 1, 32);
-        let dense = Executor::new(g.clone(), ExecConfig::dense_cnhw(1));
-        let sparse = Executor::new(g, ExecConfig::sparse_cnhw(1, 0.75));
+        let dense = Executor::new(g.clone(), ExecConfig::dense_cnhw(ThreadPool::shared(1)));
+        let sparse = Executor::new(g, ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.75));
         assert!(
             (sparse.conv_weight_bytes() as f64)
                 < 0.6 * dense.conv_weight_bytes() as f64,
@@ -393,7 +400,7 @@ mod tests {
         let x = input(1, res, 3);
         for arch in [ModelArch::MobileNetV2, ModelArch::DenseNet121] {
             let g = build_model(arch, 1, res);
-            let y = Executor::new(g, ExecConfig::dense_cnhw(2)).run(&x);
+            let y = Executor::new(g, ExecConfig::dense_cnhw(ThreadPool::shared(2))).run(&x);
             assert_eq!(y.shape, vec![1, 1000], "{arch:?}");
             assert!(y.data.iter().all(|v| v.is_finite()));
         }
@@ -411,8 +418,8 @@ mod tests {
 
         let g1 = build_model(ModelArch::ResNet18, 1, res);
         let g2 = build_model(ModelArch::ResNet18, 2, res);
-        let e1 = Executor::new(g1, ExecConfig::dense_cnhw(1));
-        let e2 = Executor::new(g2, ExecConfig::dense_cnhw(1));
+        let e1 = Executor::new(g1, ExecConfig::dense_cnhw(ThreadPool::shared(1)));
+        let e2 = Executor::new(g2, ExecConfig::dense_cnhw(ThreadPool::shared(1)));
         let ya = e1.run(&a);
         let yb = e1.run(&b);
         let yab = e2.run(&batched);
@@ -423,12 +430,13 @@ mod tests {
     #[test]
     fn per_layer_choice_applied() {
         let g = build_model(ModelArch::ResNet18, 1, 32);
-        let mut cfg = ExecConfig::dense_cnhw(1);
+        let mut cfg = ExecConfig::dense_cnhw(ThreadPool::shared(1));
         cfg.per_layer
             .insert("s1b0-conv1".into(), LayerChoice { v: 8, tile: 4 });
         let x = input(1, 32, 4);
         let y = Executor::new(g.clone(), cfg).run(&x);
-        let y_default = Executor::new(g, ExecConfig::dense_cnhw(1)).run(&x);
+        let y_default =
+            Executor::new(g, ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
         // Tuning changes execution parameters, never numerics.
         assert!(allclose(&y.data, &y_default.data, 1e-4, 1e-5));
     }

@@ -236,7 +236,7 @@ fn dispatcher(
 mod tests {
     use super::*;
     use crate::models::{build_model, ModelArch};
-    use crate::util::XorShiftRng;
+    use crate::util::{ThreadPool, XorShiftRng};
 
     fn image(res: usize, seed: u64) -> Tensor {
         let mut r = XorShiftRng::new(seed);
@@ -248,7 +248,7 @@ mod tests {
         let res = 32;
         let server = Server::start(
             |b| build_model(ModelArch::ResNet18, b, res),
-            ExecConfig::sparse_cnhw(2, 0.5),
+            ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
             res,
             ServerConfig {
                 batch_sizes: vec![1, 2],
@@ -272,7 +272,7 @@ mod tests {
         let res = 32;
         let server = Server::start(
             |b| build_model(ModelArch::ResNet18, b, res),
-            ExecConfig::dense_cnhw(2),
+            ExecConfig::dense_cnhw(ThreadPool::shared(2)),
             res,
             ServerConfig {
                 batch_sizes: vec![1, 2, 4],
@@ -295,7 +295,7 @@ mod tests {
         let res = 32;
         let server = Server::start(
             |b| build_model(ModelArch::ResNet18, b, res),
-            ExecConfig::dense_cnhw(1),
+            ExecConfig::dense_cnhw(ThreadPool::shared(1)),
             res,
             ServerConfig {
                 batch_sizes: vec![1],

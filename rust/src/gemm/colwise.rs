@@ -7,7 +7,7 @@
 //! fetched is reused T times; accumulators never touch memory until the
 //! final store — the three properties the paper's design targets.
 
-use crate::im2col::PackedMatrix;
+use crate::im2col::{PackedMatrix, MAX_STRIP_WIDTH};
 use crate::pruning::ColwisePruned;
 
 use super::dense::MAX_TILE;
@@ -37,14 +37,44 @@ pub fn spmm_colwise_into(w: &ColwisePruned, a: &PackedMatrix, c: &mut [f32]) {
 /// auto-vectorisation of the `zip` loop. Kept dynamic; see
 /// EXPERIMENTS.md §Perf step 2.
 pub fn spmm_colwise_strip(w: &ColwisePruned, a: &PackedMatrix, strip: usize, c: &mut [f32]) {
+    assert!(c.len() >= w.rows * a.cols);
+    // SAFETY: `c` is a unique borrow covering the whole output, so the
+    // raw variant's disjoint-write requirement holds trivially.
+    unsafe { spmm_colwise_strip_raw(w, a, strip, c.as_mut_ptr(), c.len()) }
+}
+
+/// Raw-pointer strip kernel used by the parallel driver. Writing through
+/// the pointer (never through a `&mut [f32]` spanning the shared output)
+/// keeps concurrent strip workers free of overlapping exclusive
+/// references — range-disjoint raw-pointer writes are sound where
+/// overlapping `&mut` slices are not.
+///
+/// # Safety
+/// `c` must be valid for reads and writes of `c_len >= w.rows * a.cols`
+/// f32s, and no other thread may concurrently access this strip's output
+/// ranges (`[r*a.cols + strip*a.v, … + strip_valid)` for each row `r`).
+pub(crate) unsafe fn spmm_colwise_strip_raw(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    // Hard bound, not debug_assert: packing validates too, but the
+    // PackedMatrix fields are public, and an oversized strip would
+    // overrun the fixed accumulator block below in release builds.
+    assert!(
+        a.v <= MAX_STRIP_WIDTH,
+        "strip width {} exceeds accumulator capacity {MAX_STRIP_WIDTH}",
+        a.v
+    );
     let sdata = a.strip(strip);
     let valid = a.strip_valid(strip);
     let col0 = strip * a.v;
     // One accumulator block for the whole strip; each tile zeroes only
     // the `t × valid` region it uses (§Perf step 1: the full 8 KiB
     // memset per tile dominated small tiles).
-    let mut acc = [[0.0f32; 64]; MAX_TILE];
-    debug_assert!(a.v <= 64);
+    let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
     for tile in &w.tiles {
         let t = tile.row_count;
         let nret = tile.indices.len();
@@ -64,8 +94,9 @@ pub fn spmm_colwise_strip(w: &ColwisePruned, a: &PackedMatrix, strip: usize, c: 
         }
         for ti in 0..t {
             let r = tile.row_start + ti;
-            c[r * a.cols + col0..r * a.cols + col0 + valid]
-                .copy_from_slice(&acc[ti][..valid]);
+            let off = r * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
         }
     }
 }
@@ -114,9 +145,26 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "accumulator capacity")]
+    fn oversized_strip_width_rejected_at_kernel() {
+        // The packing layer refuses v > MAX_STRIP_WIDTH, but the struct
+        // fields are public — a hand-built matrix must still be caught
+        // before it overruns the fixed accumulators.
+        let w = prune_colwise(&[1.0], 1, 1, 1, 1, 1);
+        let a = PackedMatrix {
+            v: 128,
+            k: 1,
+            cols: 128,
+            strips: 1,
+            data: vec![0.0; 128],
+        };
+        spmm_colwise(&w, &a);
+    }
+
+    #[test]
     fn zero_retained_columns_outputs_zero() {
-        // 0:M is not allowed by prune API (n>=... actually n=0 allowed by
-        // prune_colwise if caller passes 0) — emulate via all-zero weights.
+        // 0:M (n = 0) is rejected by prune_colwise — emulate an all-kept
+        // tile whose retained values happen to be zero instead.
         let w = vec![0.0f32; 4 * 8];
         let cp = prune_colwise(&w, 4, 8, 2, 2, 4);
         let a: Vec<f32> = (0..8 * 6).map(|i| i as f32).collect();

@@ -1,6 +1,6 @@
 //! Dense tiled GEMM over packed strips — the dense baseline kernel.
 
-use crate::im2col::PackedMatrix;
+use crate::im2col::{PackedMatrix, MAX_STRIP_WIDTH};
 
 /// Maximum register-tile height supported without heap-allocating
 /// accumulators (32 matches the RVV register file the paper tunes over).
@@ -22,9 +22,14 @@ pub fn gemm_dense_into(w: &[f32], rows: usize, a: &PackedMatrix, tile: usize, c:
     assert_eq!(w.len(), rows * k, "filter shape");
     assert!(c.len() >= rows * a.cols);
     assert!((1..=MAX_TILE).contains(&tile));
+    assert!(
+        a.v <= MAX_STRIP_WIDTH,
+        "strip width {} exceeds accumulator capacity {MAX_STRIP_WIDTH}",
+        a.v
+    );
     // Accumulator block shared across micro-kernel invocations; each
     // invocation zeroes only its `t × valid` region (§Perf step 1).
-    let mut acc = [[0.0f32; 64]; MAX_TILE];
+    let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
     for strip in 0..a.strips {
         let sdata = a.strip(strip);
         let valid = a.strip_valid(strip);
@@ -52,10 +57,10 @@ fn micro_kernel_dense(
     c: &mut [f32],
     cols: usize,
     col0: usize,
-    acc: &mut [[f32; 64]; MAX_TILE],
+    acc: &mut [[f32; MAX_STRIP_WIDTH]; MAX_TILE],
 ) {
     // acc[t][v] — stack-resident, like the RVV accumulator registers.
-    debug_assert!(v <= 64);
+    debug_assert!(v <= MAX_STRIP_WIDTH);
     for row in &mut acc[..t] {
         row[..valid].fill(0.0);
     }

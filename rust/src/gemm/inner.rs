@@ -7,21 +7,25 @@
 //! correct; the cost shows up in the RVV simulator's L1 counters and in
 //! wall-clock on real caches.
 
-use crate::im2col::PackedMatrix;
+use crate::im2col::{PackedMatrix, MAX_STRIP_WIDTH};
 use crate::pruning::RowNmPruned;
 
 /// `C[rows, cols] = Wr · A`, Wr row-based N:M compressed, A packed.
 /// Inner-product order: per output row, accumulate over its indices.
 pub fn spmm_inner_rownm(w: &RowNmPruned, a: &PackedMatrix) -> Vec<f32> {
     assert_eq!(w.cols, a.k, "reduction dim mismatch");
+    assert!(
+        a.v <= MAX_STRIP_WIDTH,
+        "strip width {} exceeds accumulator capacity {MAX_STRIP_WIDTH}",
+        a.v
+    );
     let mut c = vec![0.0f32; w.rows * a.cols];
     for strip in 0..a.strips {
         let sdata = a.strip(strip);
         let valid = a.strip_valid(strip);
         let col0 = strip * a.v;
         for r in 0..w.rows {
-            let mut acc = [0.0f32; 64];
-            debug_assert!(a.v <= 64);
+            let mut acc = [0.0f32; MAX_STRIP_WIDTH];
             for j in 0..w.per_row {
                 let idx = w.indices[r * w.per_row + j] as usize;
                 let wv = w.values[r * w.per_row + j];

@@ -1,29 +1,41 @@
 //! Multi-threaded GEMM drivers: output tiles (strips) processed in
 //! parallel, the default XNNPACK parallelisation the paper uses (§4.1.1).
+//!
+//! All parallelism runs on a caller-supplied persistent
+//! [`ThreadPool`] — nothing here spawns threads, so the per-call cost
+//! in a long-lived server is just the pool's chunk dispatch. A pool of
+//! size 1 degenerates to the serial kernels with no synchronisation,
+//! and the strip-wise arithmetic is identical either way, so results
+//! are bit-for-bit equal across pool sizes.
 
 use crate::im2col::PackedMatrix;
 use crate::pruning::ColwisePruned;
-use crate::util::threadpool::scope_chunks;
+use crate::util::threadpool::ThreadPool;
 
-use super::colwise::spmm_colwise_strip;
+use super::colwise::spmm_colwise_strip_raw;
 use super::dense::MAX_TILE;
+use crate::im2col::MAX_STRIP_WIDTH;
 
-/// Parallel column-wise SpMM: strips are distributed over `threads`.
+/// Parallel column-wise SpMM: strips are distributed over the pool's
+/// workers (plus the calling thread).
 pub fn spmm_colwise_parallel(
     w: &ColwisePruned,
     a: &PackedMatrix,
-    threads: usize,
+    pool: &ThreadPool,
 ) -> Vec<f32> {
     assert_eq!(w.cols, a.k);
     let mut c = vec![0.0f32; w.rows * a.cols];
-    // Each strip writes a disjoint column range of C; hand each thread a
-    // raw pointer and keep ranges disjoint by construction.
+    // Each strip writes a disjoint column range of C. Workers write
+    // through a shared raw pointer — never through a `&mut [f32]` over
+    // the whole buffer, which would create overlapping exclusive
+    // references across threads (UB even with disjoint writes).
     let c_ptr = SendPtr(c.as_mut_ptr());
     let c_len = c.len();
-    scope_chunks(threads, a.strips, |s0, s1| {
-        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), c_len) };
+    pool.parallel_for(a.strips, |s0, s1| {
         for strip in s0..s1 {
-            spmm_colwise_strip(w, a, strip, c_slice);
+            // SAFETY: strip output ranges are disjoint by construction,
+            // and `c` outlives the parallel_for barrier.
+            unsafe { spmm_colwise_strip_raw(w, a, strip, c_ptr.get(), c_len) };
         }
     });
     c
@@ -35,30 +47,40 @@ pub fn gemm_dense_parallel(
     rows: usize,
     a: &PackedMatrix,
     tile: usize,
-    threads: usize,
+    pool: &ThreadPool,
 ) -> Vec<f32> {
     assert_eq!(w.len(), rows * a.k);
     assert!((1..=MAX_TILE).contains(&tile));
     let mut c = vec![0.0f32; rows * a.cols];
     let c_ptr = SendPtr(c.as_mut_ptr());
     let c_len = c.len();
-    scope_chunks(threads, a.strips, |s0, s1| {
-        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), c_len) };
+    pool.parallel_for(a.strips, |s0, s1| {
         for strip in s0..s1 {
-            dense_strip(w, rows, a, tile, strip, c_slice);
+            // SAFETY: as above — disjoint strip ranges, caller blocks
+            // until all workers finish.
+            unsafe { dense_strip_raw(w, rows, a, tile, strip, c_ptr.get(), c_len) };
         }
     });
     c
 }
 
-fn dense_strip(
+/// Raw-pointer dense strip kernel (see [`spmm_colwise_strip_raw`] for
+/// the aliasing rationale).
+///
+/// # Safety
+/// `c` must be valid for reads and writes of `c_len >= rows * a.cols`
+/// f32s, and no other thread may concurrently access this strip's
+/// output ranges.
+unsafe fn dense_strip_raw(
     w: &[f32],
     rows: usize,
     a: &PackedMatrix,
     tile: usize,
     strip: usize,
-    c: &mut [f32],
+    c: *mut f32,
+    c_len: usize,
 ) {
+    assert!(a.v <= MAX_STRIP_WIDTH, "strip width {} exceeds {}", a.v, MAX_STRIP_WIDTH);
     let sdata = a.strip(strip);
     let valid = a.strip_valid(strip);
     let col0 = strip * a.v;
@@ -66,7 +88,7 @@ fn dense_strip(
     let mut row = 0;
     while row < rows {
         let t = tile.min(rows - row);
-        let mut acc = [[0.0f32; 64]; MAX_TILE];
+        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
         for kk in 0..k {
             let arow = &sdata[kk * a.v..kk * a.v + valid];
             for ti in 0..t {
@@ -78,14 +100,15 @@ fn dense_strip(
         }
         for ti in 0..t {
             let r = row + ti;
-            c[r * a.cols + col0..r * a.cols + col0 + valid]
-                .copy_from_slice(&acc[ti][..valid]);
+            let off = r * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
         }
         row += t;
     }
 }
 
-/// Shareable raw pointer for disjoint-range writes across scoped threads.
+/// Shareable raw pointer for disjoint-range writes across pool workers.
 struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
@@ -113,7 +136,8 @@ mod tests {
         let p = pack_data_matrix(&a, k, cols, 16);
         let serial = spmm_colwise(&cp, &p);
         for threads in [1, 2, 4, 8] {
-            let par = spmm_colwise_parallel(&cp, &p, threads);
+            let pool = ThreadPool::new(threads);
+            let par = spmm_colwise_parallel(&cp, &p, &pool);
             assert_eq!(par, serial, "threads={threads}");
         }
     }
@@ -127,7 +151,8 @@ mod tests {
         let p = pack_data_matrix(&a, k, cols, 8);
         let want = matmul_ref(&w, &a, rows, k, cols);
         let serial = gemm_dense(&w, rows, &p, 4);
-        let par = gemm_dense_parallel(&w, rows, &p, 4, 4);
+        let pool = ThreadPool::new(4);
+        let par = gemm_dense_parallel(&w, rows, &p, 4, &pool);
         assert!(allclose(&serial, &want, 1e-4, 1e-5));
         assert_eq!(par, serial);
     }
@@ -141,9 +166,29 @@ mod tests {
         let cp = prune_colwise(&w, rows, k, 2, 2, 4);
         let p = pack_data_matrix(&a, k, cols, 8);
         assert_eq!(p.strips, 1);
+        let pool = ThreadPool::new(8);
         assert_eq!(
-            spmm_colwise_parallel(&cp, &p, 8),
+            spmm_colwise_parallel(&cp, &p, &pool),
             spmm_colwise(&cp, &p)
         );
+    }
+
+    #[test]
+    fn repeated_calls_reuse_one_pool() {
+        // The serving pattern in miniature: one persistent pool, many
+        // sequential GEMMs, no per-call thread spawns (the pool has no
+        // way to grow — `size()` is fixed at construction).
+        let mut r = XorShiftRng::new(104);
+        let (rows, k, cols) = (16, 24, 150);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 4, 2, 4);
+        let p = pack_data_matrix(&a, k, cols, 16);
+        let serial = spmm_colwise(&cp, &p);
+        let pool = ThreadPool::new(4);
+        for i in 0..50 {
+            assert_eq!(spmm_colwise_parallel(&cp, &p, &pool), serial, "call {i}");
+        }
+        assert_eq!(pool.size(), 4);
     }
 }

@@ -108,15 +108,16 @@ pub fn conv2d_indirect_nhwc(
 }
 
 /// Multi-threaded variant parallelising over output positions (each
-/// position writes a disjoint `[C_out]` slice).
+/// position writes a disjoint `[C_out]` slice). Runs on the persistent
+/// worker pool — no threads are spawned per call.
 pub fn conv2d_indirect_nhwc_parallel(
     x: &Tensor,
     filter: &[f32],
     s: &ConvShape,
     ib: &IndirectionBuffer,
-    threads: usize,
+    pool: &crate::util::threadpool::ThreadPool,
 ) -> Tensor {
-    if threads <= 1 {
+    if pool.size() <= 1 {
         return conv2d_indirect_nhwc(x, filter, s, ib);
     }
     assert_eq!(x.shape, vec![s.n, s.h_in, s.w_in, s.c_in]);
@@ -133,9 +134,7 @@ pub fn conv2d_indirect_nhwc_parallel(
         }
     }
     let optr = SendPtr(out.data.as_mut_ptr());
-    let olen = out.data.len();
-    crate::util::threadpool::scope_chunks(threads, ib.out_positions, |p0, p1| {
-        let odata = unsafe { std::slice::from_raw_parts_mut(optr.get(), olen) };
+    pool.parallel_for(ib.out_positions, |p0, p1| {
         for pos in p0..p1 {
             let out_base = pos * s.c_out;
             for tap in 0..ib.taps {
@@ -149,7 +148,10 @@ pub fn conv2d_indirect_nhwc_parallel(
                     for (wv, xv) in wrow.iter().zip(pixel) {
                         acc += wv * xv;
                     }
-                    odata[out_base + o] += acc;
+                    // SAFETY: each output position owns its disjoint
+                    // `[C_out]` range; writing through the raw pointer
+                    // avoids overlapping `&mut` slices across workers.
+                    unsafe { *optr.get().add(out_base + o) += acc };
                 }
             }
         }
@@ -197,6 +199,7 @@ mod tests {
 
     #[test]
     fn parallel_matches_serial() {
+        use crate::util::ThreadPool;
         let mut r = XorShiftRng::new(52);
         let s = ConvShape::square(2, 4, 9, 6, 3, 2, 1);
         let x = Tensor::random(&[s.n, s.h_in, s.w_in, s.c_in], &mut r, -1.0, 1.0);
@@ -205,7 +208,8 @@ mod tests {
         let ib = IndirectionBuffer::build(&s);
         let serial = conv2d_indirect_nhwc(&x, &f, &s, &ib);
         for threads in [2, 4, 8] {
-            let par = conv2d_indirect_nhwc_parallel(&x, &f, &s, &ib, threads);
+            let pool = ThreadPool::new(threads);
+            let par = conv2d_indirect_nhwc_parallel(&x, &f, &s, &ib, &pool);
             assert_eq!(par.data, serial.data, "threads={threads}");
         }
     }

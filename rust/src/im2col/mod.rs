@@ -24,7 +24,7 @@ pub use indirection::{
     conv2d_indirect_nhwc, conv2d_indirect_nhwc_parallel, IndirectionBuffer,
 };
 pub use naive::im2col_cnhw;
-pub use pack::{pack_data_matrix, PackedMatrix};
+pub use pack::{pack_data_matrix, PackedMatrix, MAX_STRIP_WIDTH};
 
 use crate::conv::ConvShape;
 

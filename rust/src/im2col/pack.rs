@@ -2,6 +2,13 @@
 //! (Fig. 2). Separate from im2col here; [`super::fused`] does both in one
 //! pass (Algorithm 2).
 
+/// Maximum supported strip width in f32 lanes. The GEMM micro-kernels
+/// hold one strip row in fixed `[f32; MAX_STRIP_WIDTH]` accumulators
+/// (the VLMAX of LMUL=8 on the 256-bit target), so wider strips would
+/// silently truncate in release builds — every packing entry point
+/// rejects them up front.
+pub const MAX_STRIP_WIDTH: usize = 64;
+
 /// Data matrix packed into strips of `v` columns: `data` has layout
 /// `[strips, k, v]` row-major; the tail strip is zero-padded.
 #[derive(Clone, Debug, PartialEq)]
@@ -20,6 +27,10 @@ pub struct PackedMatrix {
 impl PackedMatrix {
     /// Zero-initialised packed matrix.
     pub fn zeros(k: usize, cols: usize, v: usize) -> Self {
+        assert!(
+            (1..=MAX_STRIP_WIDTH).contains(&v),
+            "strip width {v} outside 1..={MAX_STRIP_WIDTH} (accumulator capacity)"
+        );
         let strips = cols.div_ceil(v).max(1);
         Self {
             v,
@@ -34,6 +45,10 @@ impl PackedMatrix {
     /// buffer in place. Keeps the allocation (and its resident pages)
     /// across conv invocations — §Perf step 3.
     pub fn reset(&mut self, k: usize, cols: usize, v: usize) {
+        assert!(
+            (1..=MAX_STRIP_WIDTH).contains(&v),
+            "strip width {v} outside 1..={MAX_STRIP_WIDTH} (accumulator capacity)"
+        );
         let strips = cols.div_ceil(v).max(1);
         self.v = v;
         self.k = k;
@@ -92,7 +107,6 @@ impl PackedMatrix {
 /// after a standalone im2col.
 pub fn pack_data_matrix(a: &[f32], k: usize, cols: usize, v: usize) -> PackedMatrix {
     assert_eq!(a.len(), k * cols, "data matrix shape");
-    assert!(v >= 1);
     let mut p = PackedMatrix::zeros(k, cols, v);
     for s in 0..p.strips {
         let valid = p.strip_valid(s);
@@ -143,6 +157,23 @@ mod tests {
         let p = pack_data_matrix(&a, 3, 8, 4);
         assert_eq!(p.strip(0), &[0., 1., 2., 3., 8., 9., 10., 11., 16., 17., 18., 19.]);
         assert_eq!(p.strip(1), &[4., 5., 6., 7., 12., 13., 14., 15., 20., 21., 22., 23.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulator capacity")]
+    fn strip_width_beyond_accumulators_rejected() {
+        // v = 128 > MAX_STRIP_WIDTH: in the seed this was only a
+        // debug_assert at kernel level and release builds overflowed the
+        // fixed accumulator block; now packing rejects it outright.
+        let a = vec![0.0f32; 2 * 128];
+        pack_data_matrix(&a, 2, 128, 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulator capacity")]
+    fn reset_rejects_oversized_strip_width() {
+        let mut p = PackedMatrix::zeros(1, 1, 1);
+        p.reset(2, 256, 65);
     }
 
     #[test]

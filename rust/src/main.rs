@@ -15,7 +15,7 @@ use nmprune::models::{build_model, model_names, resnet50_fig5_layers, ModelArch}
 use nmprune::tensor::Tensor;
 use nmprune::tuner;
 use nmprune::util::cli::Args;
-use nmprune::util::XorShiftRng;
+use nmprune::util::{ThreadPool, XorShiftRng};
 
 fn main() {
     let args = Args::from_env();
@@ -30,7 +30,8 @@ fn main() {
             eprintln!(
                 "usage: nmprune <models|run|serve|tune|sim|artifacts> [options]\n\
                  common options: --model resnet50 --batch 1 --res 224 \
-                 --threads N --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
+                 --threads N (default: all hardware threads, or NMPRUNE_THREADS) \
+                 --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
             );
             std::process::exit(2);
         }
@@ -46,12 +47,19 @@ fn parse_model(args: &Args) -> ModelArch {
 }
 
 fn parse_exec(args: &Args) -> ExecConfig {
-    let threads = args.get_parsed("threads", 4usize);
+    // One persistent pool per process: `--threads N` pins the size
+    // (N = 0 clamps to 1, i.e. serial, matching the seed CLI); with the
+    // flag absent, the global pool (NMPRUNE_THREADS or all hardware
+    // threads) serves the process.
+    let pool = match args.get("threads") {
+        None => ThreadPool::global(),
+        Some(_) => ThreadPool::shared(args.get_parsed("threads", 1)),
+    };
     let sparsity = args.get_parsed("sparsity", 0.5f64);
     match args.get_or("path", "sparse").as_str() {
-        "nhwc" => ExecConfig::dense_nhwc(threads),
-        "cnhw" => ExecConfig::dense_cnhw(threads),
-        "sparse" => ExecConfig::sparse_cnhw(threads, sparsity),
+        "nhwc" => ExecConfig::dense_nhwc(pool),
+        "cnhw" => ExecConfig::dense_cnhw(pool),
+        "sparse" => ExecConfig::sparse_cnhw(pool, sparsity),
         p => {
             eprintln!("unknown path {p:?} (nhwc|cnhw|sparse)");
             std::process::exit(2);
@@ -166,13 +174,16 @@ fn cmd_tune(args: &Args) {
         if use_sim { "sim cycles" } else { "native wall-clock" }
     );
     println!("{:<16} {:>6} {:>6} {:>14}", "layer", "LMUL", "T", "score");
+    // Native profiling runs serially per candidate so scores isolate the
+    // kernel; the pool is still the persistent shared one.
+    let profile_pool = ThreadPool::shared(1);
     for (name, shape) in g.conv_shapes() {
         let key = tuner::cache_key(&shape, Some(sparsity));
         cache.get_or_tune(key, || {
             let r = if use_sim {
                 tuner::tune_sim_colwise(&shape, sparsity, tile_cap)
             } else {
-                tuner::tune_native(&shape, Some(sparsity), 1, tile_cap)
+                tuner::tune_native(&shape, Some(sparsity), &profile_pool, tile_cap)
             };
             println!(
                 "{:<16} {:>6} {:>6} {:>14.0}",

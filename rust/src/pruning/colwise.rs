@@ -88,7 +88,15 @@ impl ColwisePruned {
 }
 
 /// Prune `w[rows, cols]` column-wise with groups of `M` consecutive
-/// columns keeping `N` per group, scored by the tile-local column L1 norm.
+/// columns keeping `N` per group, scored by the tile-local column L1
+/// norm.
+///
+/// Parameter contract (violations panic — release builds included):
+/// `1 <= N <= M` and `M` must divide `cols`, so every tile's column
+/// range decomposes into whole aligned groups. `N = 0` would retain
+/// nothing (use [`prune_colwise_adaptive`] with a sparsity target
+/// instead); a ragged tail group would silently change the effective
+/// sparsity and mis-align the kernel's shared index set.
 pub fn prune_colwise(
     w: &[f32],
     rows: usize,
@@ -98,25 +106,33 @@ pub fn prune_colwise(
     m: usize,
 ) -> ColwisePruned {
     assert_eq!(w.len(), rows * cols);
-    assert!(n <= m && m >= 1, "invalid N:M = {n}:{m}");
+    assert!(
+        n >= 1,
+        "invalid N:M = {n}:{m}: N must be >= 1 (N = 0 retains nothing)"
+    );
+    assert!(m >= 1 && n <= m, "invalid N:M = {n}:{m}");
+    assert!(
+        cols % m == 0,
+        "invalid N:M = {n}:{m}: M must divide the reduction dimension \
+         ({cols} columns) so groups stay aligned"
+    );
     assert!(tile >= 1);
     let mut tiles = Vec::with_capacity(rows.div_ceil(tile));
-    let groups = cols.div_ceil(m);
+    let groups = cols / m;
     for row_start in (0..rows).step_by(tile) {
         let row_count = tile.min(rows - row_start);
         // Column L1 norms over this tile's rows.
         let mut keep_cols: Vec<u32> = Vec::with_capacity(groups * n);
         for g in 0..groups {
             let start = g * m;
-            let width = m.min(cols - start);
-            let scores: Vec<f32> = (start..start + width)
+            let scores: Vec<f32> = (start..start + m)
                 .map(|c| {
                     (0..row_count)
                         .map(|t| w[(row_start + t) * cols + c].abs())
                         .sum()
                 })
                 .collect();
-            for k in top_n_indices(&scores, n.min(width)) {
+            for k in top_n_indices(&scores, n) {
                 keep_cols.push((start + k) as u32);
             }
         }
@@ -210,14 +226,15 @@ mod tests {
     }
 
     #[test]
-    fn tail_tile_and_tail_group() {
+    fn tail_tile_retains_exactly() {
         let mut r = XorShiftRng::new(4);
-        // rows=5 with tile=2 → tiles of 2,2,1; cols=6 with M=4 → groups 4+2.
+        // rows=5 with tile=2 → tiles of 2,2,1 (row tails are fine; only
+        // column groups must be aligned). cols=6 with M=3 → 2 groups.
         let w = r.normal_vec(5 * 6, 1.0);
-        let p = prune_colwise(&w, 5, 6, 2, 2, 4);
+        let p = prune_colwise(&w, 5, 6, 2, 2, 3);
         assert_eq!(p.tiles.len(), 3);
         assert_eq!(p.tiles[2].row_count, 1);
-        // group 0 keeps 2 of 4, tail group keeps 2 of 2 → 4 indices.
+        // Each of the 2 groups keeps 2 of 3 → 4 indices.
         assert_eq!(p.retained_per_tile(), 4);
         let d = p.decompress();
         // Retained values must match original exactly.
@@ -230,6 +247,33 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "N must be >= 1")]
+    fn rejects_n_zero() {
+        // The seed accepted n = 0 and produced tiles that retained
+        // nothing — downstream kernels then emitted silent zeros.
+        prune_colwise(&[1.0; 8], 2, 4, 2, 0, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid N:M = 5:4")]
+    fn rejects_n_greater_than_m() {
+        prune_colwise(&[1.0; 8], 2, 4, 2, 5, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide the reduction dimension")]
+    fn rejects_m_not_dividing_cols() {
+        // cols = 6 with M = 4 would leave a ragged tail group.
+        prune_colwise(&[1.0; 12], 2, 6, 2, 2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid N:M")]
+    fn rejects_m_zero() {
+        prune_colwise(&[1.0; 8], 2, 4, 2, 1, 0);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::pruning::prune_colwise_adaptive;
 use crate::rvv::kernels::{max_tile_for_lmul, sim_spmm_colwise};
 use crate::rvv::RvvMachine;
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 use crate::util::XorShiftRng;
 
 /// The LMUL values the paper profiles (§3.3: fractional LMULs excluded).
@@ -95,11 +96,12 @@ pub fn tune_sim_colwise(shape: &ConvShape, sparsity: f64, tile_cap: usize) -> Tu
 }
 
 /// Profile the *native* conv operator (dense or sparse CNHW path) by
-/// wall clock.
+/// wall clock, running candidates on the caller's persistent pool so
+/// profiling measures the same dispatch the deployment uses.
 pub fn tune_native(
     shape: &ConvShape,
     sparsity: Option<f64>,
-    threads: usize,
+    pool: &ThreadPool,
     tile_cap: usize,
 ) -> TuneResult {
     let mut rng = XorShiftRng::new(0xAA7 ^ shape.c_out as u64);
@@ -127,11 +129,11 @@ pub fn tune_native(
         let score = match sparsity {
             None => {
                 let op = Conv2dDenseCnhw::new(*shape, &w, v, tile);
-                bench("cand", cfg, || op.run(&x, threads)).mean_ns()
+                bench("cand", cfg, || op.run(&x, pool)).mean_ns()
             }
             Some(s) => {
                 let op = Conv2dSparseCnhw::new_adaptive(*shape, &w, v, tile, s);
-                bench("cand", cfg, || op.run(&x, threads)).mean_ns()
+                bench("cand", cfg, || op.run(&x, pool)).mean_ns()
             }
         };
         candidates.push(Candidate {
@@ -276,7 +278,8 @@ mod tests {
     #[test]
     fn native_tuning_runs_quickly_and_picks() {
         let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
-        let r = tune_native(&shape, Some(0.5), 1, 4);
+        let pool = ThreadPool::new(1);
+        let r = tune_native(&shape, Some(0.5), &pool, 4);
         assert!(!r.candidates.is_empty());
         assert!(r.best.score > 0.0);
         let c = r.choice();

@@ -1,25 +1,71 @@
-//! Minimal fixed-size thread pool with scoped parallel-for.
+//! Persistent fixed-size thread pool with a pool-backed scoped
+//! parallel-for.
 //!
 //! XNNPACK parallelises GEMM over output tiles with a static chunking
 //! scheme; we mirror that here. No rayon/tokio offline, so the pool is a
-//! classic channel-of-boxed-closures design plus a `scope_chunks` helper
-//! that parallelises index ranges without requiring 'static captures.
+//! classic channel-of-boxed-closures design. The hot-path primitive is
+//! [`ThreadPool::parallel_for`]: a scoped parallel-for that runs on the
+//! pool's *persistent* workers — steady-state serving spawns zero
+//! threads per GEMM call (the seed tree used `std::thread::scope` and
+//! paid thread-creation syscalls on every conv layer).
+//!
+//! Panic safety: a panicking job decrements the pending count through a
+//! drop guard (so [`ThreadPool::wait`] can never hang) and is contained
+//! with `catch_unwind` (so the worker survives); `parallel_for`
+//! re-raises the panic on the calling thread once every outstanding
+//! chunk has finished.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pending-job bookkeeping. The hot path touches only the atomic: the
+/// mutex/condvar pair exists solely so `wait()` can park, and is locked
+/// by a decrementer only at the zero-crossing (quiescence) — keeping
+/// per-job dispatch free of cross-core lock traffic.
+struct Pending {
+    count: AtomicUsize,
+    lock: Mutex<()>,
+    cvar: Condvar,
+}
+
+/// Decrements the pool's pending-job count when dropped — including
+/// during unwinding — so a panicking job cannot strand `wait()`.
+struct PendingGuard<'a>(&'a Pending);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        if self.0.count.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Take the lock before notifying so a waiter between its
+            // count check and its `wait()` cannot miss the wake-up.
+            drop(self.0.lock.lock().unwrap());
+            self.0.cvar.notify_all();
+        }
+    }
+}
 
 /// Fixed-size worker pool. Jobs are `FnOnce() + Send`. Dropping the pool
 /// joins all workers after draining the queue.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, Condvar)>,
+    pending: Arc<Pending>,
     size: usize,
 }
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("size", &self.size).finish()
+    }
+}
+
+static GLOBAL_POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+static SIZED_POOLS: OnceLock<Mutex<HashMap<usize, Arc<ThreadPool>>>> = OnceLock::new();
 
 impl ThreadPool {
     /// Create a pool of `size` workers (min 1).
@@ -27,7 +73,11 @@ impl ThreadPool {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let pending = Arc::new(Pending {
+            count: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            cvar: Condvar::new(),
+        });
         let workers = (0..size)
             .map(|_| {
                 let rx = Arc::clone(&rx);
@@ -39,13 +89,10 @@ impl ThreadPool {
                     };
                     match job {
                         Ok(job) => {
-                            job();
-                            let (lock, cvar) = &*pending;
-                            let mut p = lock.lock().unwrap();
-                            *p -= 1;
-                            if *p == 0 {
-                                cvar.notify_all();
-                            }
+                            // Guard first: even if the job panics, the
+                            // pending count is decremented on unwind.
+                            let _pending = PendingGuard(&pending);
+                            let _ = catch_unwind(AssertUnwindSafe(job));
                         }
                         Err(_) => break,
                     }
@@ -60,12 +107,35 @@ impl ThreadPool {
         }
     }
 
-    /// Pool with one worker per available hardware thread.
-    pub fn with_default_size() -> Self {
-        Self::new(
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4),
+    /// The process-wide default pool: sized by `NMPRUNE_THREADS` if set,
+    /// else one worker per available hardware thread. Created on first
+    /// use and reused by every caller for the lifetime of the process —
+    /// the "one pool serves the whole process" handle.
+    pub fn global() -> Arc<ThreadPool> {
+        Arc::clone(GLOBAL_POOL.get_or_init(|| {
+            let size = std::env::var("NMPRUNE_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(4)
+                });
+            Arc::new(ThreadPool::new(size))
+        }))
+    }
+
+    /// A process-shared pool of exactly `size` workers, memoised per
+    /// size. Tests and benches that sweep thread counts go through this
+    /// so repeated configuration never re-spawns workers.
+    pub fn shared(size: usize) -> Arc<ThreadPool> {
+        let pools = SIZED_POOLS.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut pools = pools.lock().unwrap();
+        Arc::clone(
+            pools
+                .entry(size.max(1))
+                .or_insert_with(|| Arc::new(ThreadPool::new(size))),
         )
     }
 
@@ -76,10 +146,7 @@ impl ThreadPool {
 
     /// Submit a job (fire and forget; use [`ThreadPool::wait`] to sync).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        {
-            let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
-        }
+        self.pending.count.fetch_add(1, Ordering::SeqCst);
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -87,24 +154,73 @@ impl ThreadPool {
             .expect("worker channel closed");
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished (or panicked — the
+    /// drop guard in the worker loop decrements `pending` either way).
     pub fn wait(&self) {
-        let (lock, cvar) = &*self.pending;
-        let mut p = lock.lock().unwrap();
-        while *p > 0 {
-            p = cvar.wait(p).unwrap();
+        let mut guard = self.pending.lock.lock().unwrap();
+        while self.pending.count.load(Ordering::SeqCst) > 0 {
+            guard = self.pending.cvar.wait(guard).unwrap();
         }
+        drop(guard);
     }
 
-    /// Parallel-for over `0..n` in contiguous chunks, using scoped threads
-    /// so `f` may borrow from the caller. `f(start, end)` handles
-    /// `[start, end)`. Uses its own scoped threads (not pool workers) so a
-    /// stack-borrowing body is safe; the pool's size sets the parallelism.
-    pub fn scope_chunks<F>(&self, n: usize, f: F)
+    /// Scoped parallel-for over `0..n` on the pool's persistent workers,
+    /// with dynamic work stealing on a shared atomic cursor. `f(start,
+    /// end)` handles `[start, end)` and may borrow from the caller's
+    /// stack; it must be safe to call concurrently on disjoint ranges.
+    ///
+    /// The calling thread participates in the loop, so the range always
+    /// completes even when every worker is busy with other tasks, and a
+    /// pool of size 1 degenerates to a plain serial call with no
+    /// synchronisation. Blocks until all chunks are done; a panic in any
+    /// chunk is re-raised here after the barrier.
+    ///
+    /// Must be called from *outside* the pool: invoking it from within a
+    /// job running on this same pool can deadlock the completion barrier
+    /// (all workers parked waiting on jobs only they could run). Kernel
+    /// bodies passed to `parallel_for` must therefore never re-enter the
+    /// pool — none in this crate do.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
     where
         F: Fn(usize, usize) + Sync,
     {
-        scope_chunks(self.size, n, f)
+        if n == 0 {
+            return;
+        }
+        let workers = self.size.min(n);
+        if workers <= 1 {
+            f(0, n);
+            return;
+        }
+        let state = Arc::new(ForState {
+            cursor: AtomicUsize::new(0),
+            n,
+            // Aim for ~4 chunks per worker so stragglers rebalance.
+            grain: (n / (workers * 4)).max(1),
+            outstanding: Mutex::new(workers - 1),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        // Lifetime erasure: pool jobs require 'static, but `f` borrows
+        // the caller's stack. Sound because this function blocks (the
+        // `wait_workers` barrier below) until every submitted job has
+        // finished touching `f` and `state`, and panics on either side
+        // are contained until after that barrier.
+        let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        for _ in 0..workers - 1 {
+            let st = Arc::clone(&state);
+            self.execute(move || st.run_chunks(f_static));
+        }
+        let caller = catch_unwind(AssertUnwindSafe(|| drain_chunks(&state, f_ref)));
+        state.wait_workers();
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if state.panicked.load(Ordering::Relaxed) {
+            panic!("ThreadPool::parallel_for: a worker chunk panicked");
+        }
     }
 }
 
@@ -117,37 +233,49 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Free-standing parallel-for over `0..n` split into `threads` contiguous
-/// chunks, with dynamic work stealing on a shared atomic cursor at `grain`
-/// granularity. `f(start, end)` must be safe to call concurrently on
-/// disjoint ranges.
-pub fn scope_chunks<F>(threads: usize, n: usize, f: F)
-where
-    F: Fn(usize, usize) + Sync,
-{
-    if n == 0 {
-        return;
-    }
-    let threads = threads.max(1).min(n);
-    if threads == 1 {
-        f(0, n);
-        return;
-    }
-    // Grain: aim for ~4 chunks per thread so stragglers rebalance.
-    let grain = (n / (threads * 4)).max(1);
-    let cursor = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let start = cursor.fetch_add(grain, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + grain).min(n);
-                f(start, end);
-            });
+/// Shared state of one `parallel_for` invocation.
+struct ForState {
+    cursor: AtomicUsize,
+    n: usize,
+    grain: usize,
+    /// Pool jobs still holding a reference into the caller's stack.
+    outstanding: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ForState {
+    /// Worker-side entry: drain chunks, record panics, then release the
+    /// caller. The decrement must be last — it is the caller's licence
+    /// to return (and invalidate the borrowed closure).
+    fn run_chunks(&self, f: &(dyn Fn(usize, usize) + Sync)) {
+        if catch_unwind(AssertUnwindSafe(|| drain_chunks(self, f))).is_err() {
+            self.panicked.store(true, Ordering::Relaxed);
         }
-    });
+        let mut left = self.outstanding.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait_workers(&self) {
+        let mut left = self.outstanding.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// Pull `[cursor, cursor+grain)` chunks until the range is exhausted.
+fn drain_chunks(st: &ForState, f: &(dyn Fn(usize, usize) + Sync)) {
+    loop {
+        let start = st.cursor.fetch_add(st.grain, Ordering::Relaxed);
+        if start >= st.n {
+            break;
+        }
+        f(start, (start + st.grain).min(st.n));
+    }
 }
 
 #[cfg(test)]
@@ -175,10 +303,36 @@ mod tests {
         pool.wait();
     }
 
+    /// Regression: a panicking job used to leave `pending` incremented
+    /// forever, deadlocking `wait()`. The drop guard decrements on
+    /// unwind and `catch_unwind` keeps the worker alive.
     #[test]
-    fn scope_chunks_covers_range_exactly_once() {
+    fn wait_returns_after_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.execute(|| panic!("job panic (expected in this test)"));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait(); // must not hang
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        // The pool stays fully usable afterwards.
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
+    fn parallel_for_covers_range_exactly_once() {
+        let pool = ThreadPool::new(8);
         let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
-        scope_chunks(8, 1000, |s, e| {
+        pool.parallel_for(1000, |s, e| {
             for i in s..e {
                 hits[i].fetch_add(1, Ordering::SeqCst);
             }
@@ -187,10 +341,11 @@ mod tests {
     }
 
     #[test]
-    fn scope_chunks_zero_and_one() {
-        scope_chunks(4, 0, |_, _| panic!("must not be called"));
+    fn parallel_for_zero_and_one() {
+        let pool = ThreadPool::new(4);
+        pool.parallel_for(0, |_, _| panic!("must not be called"));
         let hit = AtomicU64::new(0);
-        scope_chunks(4, 1, |s, e| {
+        pool.parallel_for(1, |s, e| {
             assert_eq!((s, e), (0, 1));
             hit.fetch_add(1, Ordering::SeqCst);
         });
@@ -198,14 +353,74 @@ mod tests {
     }
 
     #[test]
-    fn pool_scope_chunks_borrows_stack() {
+    fn parallel_for_borrows_stack() {
         let pool = ThreadPool::new(4);
         let data: Vec<u64> = (0..512).collect();
         let sum = AtomicU64::new(0);
-        pool.scope_chunks(data.len(), |s, e| {
+        pool.parallel_for(data.len(), |s, e| {
             let part: u64 = data[s..e].iter().sum();
             sum.fetch_add(part, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 512 * 511 / 2);
+    }
+
+    #[test]
+    fn parallel_for_reuses_workers_across_many_calls() {
+        // The serving pattern: many GEMM-sized parallel-fors against one
+        // pool. Every call must complete with full coverage.
+        let pool = ThreadPool::new(4);
+        for round in 0..100u64 {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(64, |s, e| {
+                sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 64, "round {round}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk panicked")]
+    fn parallel_for_propagates_worker_panic() {
+        let pool = ThreadPool::new(4);
+        // Every chunk panics, so whichever side (caller-resumed payload
+        // or the worker-flag message) surfaces, the shared "chunk
+        // panicked" suffix matches.
+        pool.parallel_for(1000, |_s, _e| panic!("injected chunk panicked"));
+    }
+
+    #[test]
+    fn pool_usable_after_parallel_for_panic() {
+        let pool = ThreadPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(100, |_, _| panic!("boom (expected in this test)"));
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // Workers survived; the next parallel-for runs normally.
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(256, |s, e| {
+            sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 256);
+    }
+
+    #[test]
+    fn shared_pools_are_memoised_per_size() {
+        let a = ThreadPool::shared(3);
+        let b = ThreadPool::shared(3);
+        assert!(Arc::ptr_eq(&a, &b), "same size must reuse one pool");
+        assert_eq!(a.size(), 3);
+        let c = ThreadPool::shared(5);
+        assert!(!Arc::ptr_eq(&a, &c));
+        // Size 0 clamps to 1 and shares the size-1 pool.
+        assert_eq!(ThreadPool::shared(0).size(), 1);
+        assert!(Arc::ptr_eq(&ThreadPool::shared(0), &ThreadPool::shared(1)));
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = ThreadPool::global();
+        let b = ThreadPool::global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.size() >= 1);
     }
 }

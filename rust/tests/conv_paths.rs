@@ -12,7 +12,7 @@ use nmprune::rvv::kernels::sim_spmm_colwise;
 use nmprune::rvv::RvvMachine;
 use nmprune::tensor::layout::{cnhw_to_nhwc, nhwc_to_cnhw, oihw_to_filter_matrix};
 use nmprune::tensor::Tensor;
-use nmprune::util::{allclose, prop, XorShiftRng};
+use nmprune::util::{allclose, prop, ThreadPool, XorShiftRng};
 
 /// Draw a random-but-valid conv shape. `size` scales the channel count.
 fn random_shape(r: &mut XorShiftRng, size: usize) -> ConvShape {
@@ -35,6 +35,7 @@ fn random_shape(r: &mut XorShiftRng, size: usize) -> ConvShape {
 
 #[test]
 fn prop_dense_cnhw_equals_direct_conv() {
+    let pool = ThreadPool::shared(1);
     prop::check_seeded(
         0xA110,
         |r, size| {
@@ -47,7 +48,7 @@ fn prop_dense_cnhw_equals_direct_conv() {
             let mut rng = XorShiftRng::new(seed);
             let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
             let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
-            let got = Conv2dDenseCnhw::new(s, &w, v, tile).run(&x, 1);
+            let got = Conv2dDenseCnhw::new(s, &w, v, tile).run(&x, &pool);
             let want = conv2d_direct_cnhw(&x, &w, &s);
             allclose(&got.data, &want.data, 1e-3, 1e-3)
         },
@@ -56,6 +57,7 @@ fn prop_dense_cnhw_equals_direct_conv() {
 
 #[test]
 fn prop_dense_nhwc_agrees_with_cnhw_path() {
+    let pool = ThreadPool::shared(1);
     prop::check_seeded(
         0xA111,
         |r, size| {
@@ -66,9 +68,9 @@ fn prop_dense_nhwc_agrees_with_cnhw_path() {
             let mut rng = XorShiftRng::new(seed);
             let x_nhwc = Tensor::random(&[s.n, s.h_in, s.w_in, s.c_in], &mut rng, -1.0, 1.0);
             let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
-            let y_nhwc = Conv2dDenseNhwc::new(s, &w).run(&x_nhwc, 1);
+            let y_nhwc = Conv2dDenseNhwc::new(s, &w).run(&x_nhwc, &pool);
             let x_cnhw = nhwc_to_cnhw(&x_nhwc);
-            let y_cnhw = Conv2dDenseCnhw::new(s, &w, 16, 4).run(&x_cnhw, 1);
+            let y_cnhw = Conv2dDenseCnhw::new(s, &w, 16, 4).run(&x_cnhw, &pool);
             allclose(&y_nhwc.data, &cnhw_to_nhwc(&y_cnhw).data, 1e-4, 1e-5)
         },
     );
@@ -90,7 +92,7 @@ fn prop_sparse_equals_masked_dense_reference() {
             let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
             let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
             let op = Conv2dSparseCnhw::new_adaptive(s, &w, v, tile, sparsity);
-            let got = op.run(&x, 1);
+            let got = op.run(&x, &ThreadPool::shared(1));
             // Reference: masked filter matrix × im2col data matrix.
             let masked = op.weights.decompress();
             let a = im2col_cnhw(&x, &s);
@@ -135,8 +137,8 @@ fn prop_threading_is_result_invariant() {
             let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
             let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
             let sp = Conv2dSparseCnhw::new_adaptive(s, &w, 16, 4, 0.5);
-            let single = sp.run(&x, 1);
-            let multi = sp.run(&x, threads);
+            let single = sp.run(&x, &ThreadPool::shared(1));
+            let multi = sp.run(&x, &ThreadPool::shared(threads));
             // Bitwise: identical per-tile arithmetic, only dispatch differs.
             single.data == multi.data
         },
@@ -205,7 +207,7 @@ fn run_both(s: ConvShape) {
     let mut rng = XorShiftRng::new(1);
     let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
     let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
-    let got = Conv2dDenseCnhw::new(s, &w, 32, 8).run(&x, 1);
+    let got = Conv2dDenseCnhw::new(s, &w, 32, 8).run(&x, &ThreadPool::shared(1));
     let want = conv2d_direct_cnhw(&x, &w, &s);
     assert!(
         allclose(&got.data, &want.data, 1e-3, 1e-3),
@@ -261,6 +263,7 @@ fn edge_dense_gemm_tile_larger_than_rows() {
 fn prop_dense_nchw_agrees_with_nhwc_path() {
     use nmprune::conv::Conv2dDenseNchw;
     use nmprune::tensor::layout::{nchw_to_nhwc, nhwc_to_nchw};
+    let pool = ThreadPool::shared(1);
     prop::check_seeded(
         0xA117,
         |r, size| {
@@ -271,8 +274,9 @@ fn prop_dense_nchw_agrees_with_nhwc_path() {
             let mut rng = XorShiftRng::new(seed);
             let x_nhwc = Tensor::random(&[s.n, s.h_in, s.w_in, s.c_in], &mut rng, -1.0, 1.0);
             let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
-            let y_nhwc = Conv2dDenseNhwc::new(s, &w).run(&x_nhwc, 1);
-            let y_nchw = Conv2dDenseNchw::new(s, &w, 16, 4).run(&nhwc_to_nchw(&x_nhwc), 1);
+            let y_nhwc = Conv2dDenseNhwc::new(s, &w).run(&x_nhwc, &pool);
+            let y_nchw =
+                Conv2dDenseNchw::new(s, &w, 16, 4).run(&nhwc_to_nchw(&x_nhwc), &pool);
             allclose(&y_nhwc.data, &nchw_to_nhwc(&y_nchw).data, 1e-3, 1e-3)
         },
     );
@@ -287,7 +291,7 @@ fn edge_filter_matrix_roundtrip_orientation() {
     w.data[2] = 1.0; // select input channel 2
     let mut rng = XorShiftRng::new(3);
     let x = Tensor::random(&[3, 1, 4, 4], &mut rng, -1.0, 1.0);
-    let y = Conv2dDenseCnhw::new(s, &w, 8, 2).run(&x, 1);
+    let y = Conv2dDenseCnhw::new(s, &w, 8, 2).run(&x, &ThreadPool::shared(1));
     let want = &x.data[2 * 16..3 * 16];
     assert!(allclose(&y.data, want, 1e-6, 1e-7));
     // And the flattened matrix has the 1.0 at column 2 (k-major, ch inner).

@@ -8,7 +8,7 @@ use nmprune::engine::{ExecConfig, Executor, Server, ServerConfig};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::tensor::Tensor;
 use nmprune::tuner::{cache_key, TuneCache};
-use nmprune::util::{allclose, XorShiftRng};
+use nmprune::util::{allclose, ThreadPool, XorShiftRng};
 
 fn tiny_resnet(batch: usize) -> nmprune::models::Graph {
     build_model(ModelArch::ResNet18, batch, 32)
@@ -20,8 +20,10 @@ fn tiny_resnet(batch: usize) -> nmprune::models::Graph {
 fn dense_nhwc_and_cnhw_executors_agree_end_to_end() {
     let mut rng = XorShiftRng::new(5);
     let x = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
-    let y_nhwc = Executor::new(tiny_resnet(1), ExecConfig::dense_nhwc(1)).run(&x);
-    let y_cnhw = Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(1)).run(&x);
+    let y_nhwc =
+        Executor::new(tiny_resnet(1), ExecConfig::dense_nhwc(ThreadPool::shared(1))).run(&x);
+    let y_cnhw =
+        Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
     assert_eq!(y_nhwc.shape, vec![1, 1000]);
     assert!(
         allclose(&y_nhwc.data, &y_cnhw.data, 1e-3, 1e-4),
@@ -35,8 +37,13 @@ fn dense_nhwc_and_cnhw_executors_agree_end_to_end() {
 fn sparse_at_zero_sparsity_equals_dense() {
     let mut rng = XorShiftRng::new(6);
     let x = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
-    let y_dense = Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(1)).run(&x);
-    let y_s0 = Executor::new(tiny_resnet(1), ExecConfig::sparse_cnhw(1, 0.0)).run(&x);
+    let y_dense =
+        Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
+    let y_s0 = Executor::new(
+        tiny_resnet(1),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.0),
+    )
+    .run(&x);
     assert!(allclose(&y_dense.data, &y_s0.data, 1e-4, 1e-5));
 }
 
@@ -45,8 +52,16 @@ fn sparse_at_zero_sparsity_equals_dense() {
 fn executor_threading_invariant() {
     let mut rng = XorShiftRng::new(7);
     let x = Tensor::random(&[2, 32, 32, 3], &mut rng, 0.0, 1.0);
-    let y1 = Executor::new(tiny_resnet(2), ExecConfig::sparse_cnhw(1, 0.5)).run(&x);
-    let y4 = Executor::new(tiny_resnet(2), ExecConfig::sparse_cnhw(4, 0.5)).run(&x);
+    let y1 = Executor::new(
+        tiny_resnet(2),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+    )
+    .run(&x);
+    let y4 = Executor::new(
+        tiny_resnet(2),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(4), 0.5),
+    )
+    .run(&x);
     assert_eq!(y1.data, y4.data, "thread count changed results");
 }
 
@@ -57,14 +72,20 @@ fn batch_invariance_of_executor() {
     let mut rng = XorShiftRng::new(8);
     let a = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
     let b = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
-    let exec1 = Executor::new(tiny_resnet(1), ExecConfig::sparse_cnhw(1, 0.5));
+    let exec1 = Executor::new(
+        tiny_resnet(1),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+    );
     let ya = exec1.run(&a);
     let yb = exec1.run(&b);
     // Batched input [2, 32, 32, 3].
     let mut xb = Vec::new();
     xb.extend_from_slice(&a.data);
     xb.extend_from_slice(&b.data);
-    let exec2 = Executor::new(tiny_resnet(2), ExecConfig::sparse_cnhw(1, 0.5));
+    let exec2 = Executor::new(
+        tiny_resnet(2),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+    );
     let y2 = exec2.run(&Tensor::from_vec(&[2, 32, 32, 3], xb));
     assert!(allclose(&y2.data[..1000], &ya.data, 1e-3, 1e-4));
     assert!(allclose(&y2.data[1000..], &yb.data, 1e-3, 1e-4));
@@ -76,7 +97,7 @@ fn server_replies_match_direct_execution() {
     let res = 32;
     let server = Server::start(
         tiny_resnet,
-        ExecConfig::sparse_cnhw(1, 0.5),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
         res,
         ServerConfig {
             batch_sizes: vec![1, 2, 4],
@@ -92,7 +113,10 @@ fn server_replies_match_direct_execution() {
     let stats = server.shutdown();
     assert_eq!(stats.served, 6);
 
-    let exec = Executor::new(tiny_resnet(1), ExecConfig::sparse_cnhw(1, 0.5));
+    let exec = Executor::new(
+        tiny_resnet(1),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+    );
     for (im, reply) in images.iter().zip(&replies) {
         let mut x = Tensor::from_vec(
             &[1, res, res, 3],
@@ -115,7 +139,7 @@ fn server_stats_consistency() {
     let res = 32;
     let server = Server::start(
         tiny_resnet,
-        ExecConfig::dense_cnhw(1),
+        ExecConfig::dense_cnhw(ThreadPool::shared(1)),
         res,
         ServerConfig::default(),
     );
@@ -138,7 +162,7 @@ fn server_stats_consistency() {
 fn server_rejects_bad_image_shape() {
     let server = Server::start(
         tiny_resnet,
-        ExecConfig::dense_cnhw(1),
+        ExecConfig::dense_cnhw(ThreadPool::shared(1)),
         32,
         ServerConfig::default(),
     );
@@ -153,7 +177,7 @@ fn server_rejects_bad_image_shape() {
 /// Failure injection: executor must reject a wrong-shaped input tensor.
 #[test]
 fn executor_rejects_bad_input() {
-    let exec = Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(1));
+    let exec = Executor::new(tiny_resnet(1), ExecConfig::dense_cnhw(ThreadPool::shared(1)));
     let bad = Tensor::zeros(&[1, 16, 16, 3]); // graph built for 32×32
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         exec.run(&bad);
@@ -212,8 +236,10 @@ fn exotic_archs_agree_across_layouts() {
         let x = Tensor::random(&[1, 32, 32, 3], &mut rng, 0.0, 1.0);
         let g1 = build_model(arch, 1, 32);
         let g2 = build_model(arch, 1, 32);
-        let y_nhwc = Executor::new(g1, ExecConfig::dense_nhwc(1)).run(&x);
-        let y_cnhw = Executor::new(g2, ExecConfig::dense_cnhw(1)).run(&x);
+        let y_nhwc =
+            Executor::new(g1, ExecConfig::dense_nhwc(ThreadPool::shared(1))).run(&x);
+        let y_cnhw =
+            Executor::new(g2, ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
         assert!(
             allclose(&y_nhwc.data, &y_cnhw.data, 1e-3, 1e-4),
             "{arch:?} layout paths diverged"

@@ -1,0 +1,130 @@
+//! Persistent-pool execution guarantees:
+//!
+//! * the parallel kernels (`spmm_colwise_parallel`, `gemm_dense_parallel`)
+//!   are bit-for-bit equal to the serial kernels across pool sizes
+//!   {1, 2, 8}, including strip counts that do not divide evenly among
+//!   workers;
+//! * a long-lived engine runs an entire request stream (100 sequential
+//!   inferences) against one `ThreadPool` whose worker set never grows —
+//!   the "zero threads spawned per GEMM call" acceptance property.
+
+use std::sync::Arc;
+
+use nmprune::conv::ConvShape;
+use nmprune::engine::{ExecConfig, Executor};
+use nmprune::gemm::threaded::{gemm_dense_parallel, spmm_colwise_parallel};
+use nmprune::gemm::{gemm_dense, spmm_colwise};
+use nmprune::im2col::pack_data_matrix;
+use nmprune::models::{Graph, Op};
+use nmprune::pruning::prune_colwise;
+use nmprune::tensor::Tensor;
+use nmprune::util::{ThreadPool, XorShiftRng};
+
+/// Bit-for-bit parity of parallel vs serial kernels across pool sizes,
+/// with strip counts chosen to leave ragged remainders for every worker
+/// count tested.
+#[test]
+fn parallel_kernels_match_serial_bitwise_across_pool_sizes() {
+    let mut r = XorShiftRng::new(7);
+    for (cols, v) in [
+        (205usize, 16usize), // 13 strips: 13 % 2 = 1, 13 % 8 = 5
+        (31, 8),             // 4 strips tail-padded: 4 % 8 != 0
+        (7, 16),             // single ragged strip
+    ] {
+        let (rows, k) = (24usize, 36usize);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let serial_sparse = spmm_colwise(&cp, &p);
+        let serial_dense = gemm_dense(&w, rows, &p, 8);
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            assert_eq!(
+                spmm_colwise_parallel(&cp, &p, &pool),
+                serial_sparse,
+                "sparse kernel diverged: cols={cols} v={v} threads={threads}"
+            );
+            assert_eq!(
+                gemm_dense_parallel(&w, rows, &p, 8, &pool),
+                serial_dense,
+                "dense kernel diverged: cols={cols} v={v} threads={threads}"
+            );
+        }
+    }
+}
+
+/// A small but real conv graph (two convs + GAP + FC) so 100 inferences
+/// stay fast in debug builds while still exercising the sparse GEMM and
+/// fused-pack hot path on every request.
+fn tiny_graph(batch: usize) -> Graph {
+    let mut g = Graph::new("tiny", batch);
+    let x = g.add("in", Op::Input { c: 3, h: 8, w: 8 }, &[]);
+    let c1 = g.add(
+        "c1",
+        Op::Conv {
+            shape: ConvShape::square(batch, 3, 8, 8, 3, 1, 1),
+            relu: true,
+        },
+        &[x],
+    );
+    let c2 = g.add(
+        "c2",
+        Op::Conv {
+            shape: ConvShape::square(batch, 8, 8, 8, 3, 1, 1),
+            relu: true,
+        },
+        &[c1],
+    );
+    let gap = g.add("gap", Op::GlobalAvgPool, &[c2]);
+    g.add(
+        "fc",
+        Op::Fc {
+            in_features: 8,
+            out_features: 10,
+        },
+        &[gap],
+    );
+    g
+}
+
+/// Acceptance: 100 sequential engine inferences against ONE pool. The
+/// pool's worker count is fixed at construction (there is no grow path),
+/// so every conv GEMM of every request reuses the same OS threads; the
+/// run also checks determinism across the stream.
+#[test]
+fn hundred_sequential_inferences_reuse_one_pool() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let exec = Executor::new(tiny_graph(1), ExecConfig::sparse_cnhw(Arc::clone(&pool), 0.5));
+    let mut rng = XorShiftRng::new(21);
+    let x = Tensor::random(&[1, 8, 8, 3], &mut rng, 0.0, 1.0);
+    let first = exec.run(&x);
+    assert_eq!(first.shape, vec![1, 10]);
+    assert!(first.data.iter().all(|v| v.is_finite()));
+    for i in 0..99 {
+        let y = exec.run(&x);
+        assert_eq!(y.data, first.data, "inference {i} diverged");
+    }
+    assert_eq!(pool.size(), 4, "worker set must never grow");
+    // The config clones share the same pool (one pool per process).
+    assert!(Arc::ptr_eq(&pool, &exec.cfg.pool));
+}
+
+/// The dense paths run the same stream against the same shared pool.
+#[test]
+fn dense_paths_share_the_pool_across_requests() {
+    let pool = ThreadPool::shared(2);
+    for cfg in [
+        ExecConfig::dense_cnhw(Arc::clone(&pool)),
+        ExecConfig::dense_nhwc(Arc::clone(&pool)),
+    ] {
+        let exec = Executor::new(tiny_graph(1), cfg);
+        let mut rng = XorShiftRng::new(22);
+        let x = Tensor::random(&[1, 8, 8, 3], &mut rng, 0.0, 1.0);
+        let first = exec.run(&x);
+        for _ in 0..20 {
+            assert_eq!(exec.run(&x).data, first.data);
+        }
+    }
+    assert_eq!(pool.size(), 2);
+}
