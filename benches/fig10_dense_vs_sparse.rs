@@ -64,7 +64,8 @@ fn main() {
 
         let nhwc = Conv2dDenseNhwc::new(s, &w);
         let cnhw = Conv2dDenseCnhw::new(s, &w, V_LMUL4, 7); // (7+1)·4 = 32 regs
-        let sparse = Conv2dSparseCnhw::new_adaptive(s, &w, vt, tt, SPARSITY);
+        let sparse = Conv2dSparseCnhw::new_adaptive(s, &w, vt, tt, SPARSITY)
+            .with_thread_cap(tr.best.threads); // replay the full tuned choice
 
         let bn = bench("nhwc", cfg, || nhwc.run(&x_nhwc, &pool));
         let bc = bench("cnhw", cfg, || cnhw.run(&x_cnhw, &pool));

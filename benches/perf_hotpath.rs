@@ -5,6 +5,7 @@
 
 use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
+use nmprune::gemm::threaded::spmm_colwise_parallel_capped;
 use nmprune::gemm::{gemm_dense, spmm_colwise};
 use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix};
 use nmprune::pruning::prune_colwise_adaptive;
@@ -90,5 +91,44 @@ fn main() {
         format!("{:.2}", 0.5 * flops / r4.mean_ns()),
     ]);
 
+    // Per-layer parallelism caps on a *small* GEMM (late-stage conv
+    // geometry: big K, few output columns → few strips): pool-wide
+    // dispatch pays chunk/barrier traffic for work that fits on one or
+    // two workers. The acceptance check is that a capped dispatch is no
+    // slower than waking the whole pool.
+    let (srows, sk, scols) = (64usize, 576usize, 4 * v);
+    let sw = rng.normal_vec(srows * sk, 1.0);
+    let sa = rng.normal_vec(sk * scols, 1.0);
+    let sp = pack_data_matrix(&sa, sk, scols, v);
+    let scp = prune_colwise_adaptive(&sw, srows, sk, tile, 0.5);
+    let sflops = 0.5 * 2.0 * srows as f64 * sk as f64 * scols as f64;
+    let rw = bench("small-wide", cfg, || {
+        spmm_colwise_parallel_capped(&scp, &sp, &pool4, None)
+    });
+    let rc = bench("small-capped", cfg, || {
+        spmm_colwise_parallel_capped(&scp, &sp, &pool4, Some(2))
+    });
+    t.row(&[
+        "small spmm pool-wide".into(),
+        format!("{srows}x{sk}x{scols} v{v} 4thr"),
+        format!("{:.3} ms", rw.mean_ms()),
+        format!("{:.2}", sflops / rw.mean_ns()),
+    ]);
+    t.row(&[
+        "small spmm cap=2".into(),
+        format!("{srows}x{sk}x{scols} v{v} 4thr"),
+        format!("{:.3} ms", rc.mean_ms()),
+        format!("{:.2}", sflops / rc.mean_ns()),
+    ]);
     t.print();
+    println!(
+        "small-layer dispatch: cap=2 {:.3} ms vs pool-wide {:.3} ms ({})",
+        rc.mean_ms(),
+        rw.mean_ms(),
+        if rc.summary.median <= rw.summary.median * 1.05 {
+            "capped is no slower — per-layer caps pay off"
+        } else {
+            "pool-wide won here — tuner would keep the full pool for this layer"
+        }
+    );
 }

@@ -18,6 +18,14 @@ const THREADS: usize = 4;
 
 fn main() {
     let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
+    // NMPRUNE_THREAD_CAP=N caps every layer's GEMM at N pool workers
+    // (0 / unset = pool-wide), exposing the per-layer parallelism knob
+    // end-to-end without re-tuning: batch-1 late-stage layers are small
+    // enough that modest caps can match pool-wide dispatch.
+    let thread_cap = std::env::var("NMPRUNE_THREAD_CAP")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0);
     let res = if quick { 112 } else { 224 };
     let cfg = BenchConfig {
         warmup: std::time::Duration::from_millis(0),
@@ -27,7 +35,14 @@ fn main() {
     };
 
     let mut t = Table::new(
-        &format!("Table 2 — end-to-end time (ms) @{res}, batch 1, 4 threads"),
+        &format!(
+            "Table 2 — end-to-end time (ms) @{res}, batch 1, 4 threads{}",
+            if thread_cap > 0 {
+                format!(", per-layer cap {thread_cap}")
+            } else {
+                String::new()
+            }
+        ),
         &[
             "model",
             "dense NHWC",
@@ -47,7 +62,8 @@ fn main() {
         let arch = ModelArch::parse(name).unwrap();
         let x = Tensor::random(&[1, res, res, 3], &mut rng, 0.0, 1.0);
 
-        let run = |cfg_exec: ExecConfig| -> f64 {
+        let run = |mut cfg_exec: ExecConfig| -> f64 {
+            cfg_exec.default_choice.threads = thread_cap;
             let exec = Executor::new(build_model(arch, 1, res), cfg_exec);
             bench(name, cfg, || exec.run(&x)).mean_ms()
         };

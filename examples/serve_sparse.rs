@@ -5,7 +5,13 @@
 //! reports throughput, mean batch size, and the latency distribution —
 //! then repeats with the dense NHWC baseline for comparison.
 //!
-//! Run: `cargo run --release --example serve_sparse -- [--requests 24] [--res 112]`
+//! `--executors N` runs N concurrent batch executors against the one
+//! shared pool (the server slices per-layer parallelism caps so they
+//! never oversubscribe it) — with >1, one batch computes while the
+//! next forms.
+//!
+//! Run: `cargo run --release --example serve_sparse -- [--requests 24]
+//!       [--res 112] [--threads 2] [--executors 2]`
 
 use nmprune::engine::{ExecConfig, Server, ServerConfig};
 use nmprune::models::{build_model, ModelArch};
@@ -13,7 +19,7 @@ use nmprune::tensor::Tensor;
 use nmprune::util::cli::Args;
 use nmprune::util::{ThreadPool, XorShiftRng};
 
-fn drive(label: &str, cfg: ExecConfig, res: usize, requests: usize) {
+fn drive(label: &str, cfg: ExecConfig, res: usize, requests: usize, executors: usize) {
     let server = Server::start(
         |b| build_model(ModelArch::ResNet18, b, res),
         cfg,
@@ -21,6 +27,7 @@ fn drive(label: &str, cfg: ExecConfig, res: usize, requests: usize) {
         ServerConfig {
             batch_sizes: vec![1, 2, 4],
             batch_window: std::time::Duration::from_millis(10),
+            executors,
         },
     );
     let mut rng = XorShiftRng::new(99);
@@ -51,12 +58,17 @@ fn main() {
     let requests = args.get_parsed("requests", 24usize);
     let res = args.get_parsed("res", 112usize);
     let threads = args.get_parsed("threads", 2usize);
-    // One persistent pool serves every configuration below.
+    let executors = args.get_parsed("executors", 2usize);
+    // One persistent pool serves every configuration below; the
+    // executors share it without oversubscription (per-run caps).
     let pool = ThreadPool::shared(threads);
-    println!("serving ResNet-18 @{res}, {requests} requests per config\n");
-    drive("sparse 50%", ExecConfig::sparse_cnhw(pool.clone(), 0.5), res, requests);
-    drive("sparse 75%", ExecConfig::sparse_cnhw(pool.clone(), 0.75), res, requests);
-    drive("dense CNHW", ExecConfig::dense_cnhw(pool.clone()), res, requests);
-    drive("dense NHWC", ExecConfig::dense_nhwc(pool), res, requests);
+    println!(
+        "serving ResNet-18 @{res}, {requests} requests per config, \
+         {executors} batch executors on one {threads}-worker pool\n"
+    );
+    drive("sparse 50%", ExecConfig::sparse_cnhw(pool.clone(), 0.5), res, requests, executors);
+    drive("sparse 75%", ExecConfig::sparse_cnhw(pool.clone(), 0.75), res, requests, executors);
+    drive("dense CNHW", ExecConfig::dense_cnhw(pool.clone()), res, requests, executors);
+    drive("dense NHWC", ExecConfig::dense_nhwc(pool), res, requests, executors);
     println!("\n(paper Table 2: sparse ResNet-18 up to 4.0x over the dense NHWC baseline)");
 }

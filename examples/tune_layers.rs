@@ -32,11 +32,11 @@ fn main() {
     );
 
     let mut t = Table::new(
-        "Per-layer tuning: sim-chosen vs native-chosen (LMUL, T), and the native win",
+        "Per-layer tuning: sim-chosen (LMUL, T) vs native-chosen (LMUL, T, P), and the native win",
         &[
             "layer",
             "sim (LMUL,T)",
-            "native (LMUL,T)",
+            "native (LMUL,T,P)",
             "native tuned ms",
             "static (4,7) ms",
             "tuned gain",
@@ -57,7 +57,11 @@ fn main() {
         let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut rng, -1.0, 1.0);
         let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut rng, -0.5, 0.5);
 
-        let tuned = Conv2dSparseCnhw::new_adaptive(s, &w, rn.best.v, rn.best.tile, sparsity);
+        // The tuned operator replays the full native choice — including
+        // the per-layer parallelism degree; the static baseline always
+        // wakes the whole pool.
+        let tuned = Conv2dSparseCnhw::new_adaptive(s, &w, rn.best.v, rn.best.tile, sparsity)
+            .with_thread_cap(rn.best.threads);
         let fixed = Conv2dSparseCnhw::new_adaptive(s, &w, 32, 7, sparsity);
         let bt = bench("tuned", cfg, || tuned.run(&x, &pool));
         let bf = bench("static", cfg, || fixed.run(&x, &pool));
@@ -67,7 +71,7 @@ fn main() {
         t.row(&[
             l.name.into(),
             format!("({},{})", rs.best.lmul, rs.best.tile),
-            format!("({},{})", rn.best.lmul, rn.best.tile),
+            format!("({},{},{})", rn.best.lmul, rn.best.tile, rn.best.threads),
             format!("{:.3}", bt.mean_ms()),
             format!("{:.3}", bf.mean_ms()),
             format!("{:.2}x", bf.mean_ns() / bt.mean_ns()),

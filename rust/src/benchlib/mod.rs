@@ -51,6 +51,18 @@ impl BenchConfig {
             max_samples: 30,
         }
     }
+
+    /// The auto-tuner's per-candidate profile: short enough that the
+    /// `(LMUL, T, P)` sweep stays interactive across a whole model,
+    /// long enough to rank candidates on a quiet machine.
+    pub fn tuning() -> Self {
+        Self {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(40),
+            min_samples: 3,
+            max_samples: 20,
+        }
+    }
 }
 
 /// One benchmark result.

@@ -11,13 +11,20 @@
 //! request with a caller-supplied persistent [`ThreadPool`] — the run
 //! methods never spawn threads, and a pool of size 1 executes the
 //! identical strip arithmetic serially on the calling thread.
+//!
+//! Every operator carries a per-layer parallelism cap `threads`
+//! (0 = occupy the whole pool): the third knob the tuner selects, set
+//! via [`Conv2dDenseCnhw::with_thread_cap`] and friends, and applied to
+//! the pool dispatch on every `run`. Caps never change the strip
+//! arithmetic, so outputs are identical across caps.
 
 use std::cell::RefCell;
 
 use super::shape::ConvShape;
-use crate::gemm::threaded::{gemm_dense_parallel, spmm_colwise_parallel};
+use crate::gemm::threaded::{gemm_dense_parallel_capped, spmm_colwise_parallel_capped};
 use crate::im2col::{
-    conv2d_indirect_nhwc_parallel, fused_im2col_pack_cnhw_into, IndirectionBuffer, PackedMatrix,
+    conv2d_indirect_nhwc_parallel_capped, fused_im2col_pack_cnhw_into, IndirectionBuffer,
+    PackedMatrix,
 };
 use crate::pruning::{prune_colwise, prune_colwise_adaptive, ColwisePruned};
 use crate::tensor::layout::oihw_to_filter_matrix;
@@ -39,9 +46,22 @@ pub enum ConvPath {
     SparseCnhw,
 }
 
+/// Per-layer parallelism cap encoding shared by the conv operators:
+/// `0` means "no cap — whole pool", anything else is the max number of
+/// pool participants a `run` may occupy.
+fn cap_of(threads: usize) -> Option<usize> {
+    if threads == 0 {
+        None
+    } else {
+        Some(threads)
+    }
+}
+
 /// Dense NHWC conv (XNNPACK-style indirect convolution).
 pub struct Conv2dDenseNhwc {
     pub shape: ConvShape,
+    /// Parallelism cap (0 = whole pool).
+    pub threads: usize,
     filter: Vec<f32>,
     ib: IndirectionBuffer,
 }
@@ -52,14 +72,28 @@ impl Conv2dDenseNhwc {
         assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
         Self {
             shape,
+            threads: 0,
             filter: oihw_to_filter_matrix(w_oihw).data,
             ib: IndirectionBuffer::build(&shape),
         }
     }
 
+    /// Set the per-layer parallelism cap (0 = whole pool).
+    pub fn with_thread_cap(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// Run on an NHWC input, producing NHWC output.
     pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
-        conv2d_indirect_nhwc_parallel(x, &self.filter, &self.shape, &self.ib, pool)
+        conv2d_indirect_nhwc_parallel_capped(
+            x,
+            &self.filter,
+            &self.shape,
+            &self.ib,
+            pool,
+            cap_of(self.threads),
+        )
     }
 }
 
@@ -68,6 +102,8 @@ pub struct Conv2dDenseCnhw {
     pub shape: ConvShape,
     pub v: usize,
     pub tile: usize,
+    /// Parallelism cap (0 = whole pool).
+    pub threads: usize,
     filter: Vec<f32>,
 }
 
@@ -78,8 +114,15 @@ impl Conv2dDenseCnhw {
             shape,
             v,
             tile,
+            threads: 0,
             filter: oihw_to_filter_matrix(w_oihw).data,
         }
+    }
+
+    /// Set the per-layer parallelism cap (0 = whole pool).
+    pub fn with_thread_cap(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     /// Run on a CNHW input, producing CNHW output
@@ -89,7 +132,14 @@ impl Conv2dDenseCnhw {
         let out = PACK_SCRATCH.with(|cell| {
             let mut packed = cell.borrow_mut();
             fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
-            gemm_dense_parallel(&self.filter, s.c_out, &packed, self.tile, pool)
+            gemm_dense_parallel_capped(
+                &self.filter,
+                s.c_out,
+                &packed,
+                self.tile,
+                pool,
+                cap_of(self.threads),
+            )
         });
         Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
     }
@@ -103,6 +153,8 @@ pub struct Conv2dDenseNchw {
     pub shape: ConvShape,
     pub v: usize,
     pub tile: usize,
+    /// Parallelism cap (0 = whole pool).
+    pub threads: usize,
     filter: Vec<f32>,
 }
 
@@ -113,8 +165,15 @@ impl Conv2dDenseNchw {
             shape,
             v,
             tile,
+            threads: 0,
             filter: oihw_to_filter_matrix(w_oihw).data,
         }
+    }
+
+    /// Set the per-layer parallelism cap (0 = whole pool).
+    pub fn with_thread_cap(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     /// Run on an NCHW input `[N, C_in, H, W]`, producing NCHW output
@@ -126,7 +185,14 @@ impl Conv2dDenseNchw {
         let img_out = s.c_out * ho * wo;
         let mut out = Tensor::zeros(&[s.n, s.c_out, ho, wo]);
         for (n, p) in per_image.iter().enumerate() {
-            let y = gemm_dense_parallel(&self.filter, s.c_out, p, self.tile, pool);
+            let y = gemm_dense_parallel_capped(
+                &self.filter,
+                s.c_out,
+                p,
+                self.tile,
+                pool,
+                cap_of(self.threads),
+            );
             out.data[n * img_out..(n + 1) * img_out].copy_from_slice(&y);
         }
         out
@@ -138,6 +204,8 @@ impl Conv2dDenseNchw {
 pub struct Conv2dSparseCnhw {
     pub shape: ConvShape,
     pub v: usize,
+    /// Parallelism cap (0 = whole pool).
+    pub threads: usize,
     pub weights: ColwisePruned,
 }
 
@@ -150,6 +218,7 @@ impl Conv2dSparseCnhw {
         Self {
             shape,
             v,
+            threads: 0,
             weights: prune_colwise(&f.data, shape.c_out, shape.k(), tile, n, m),
         }
     }
@@ -166,8 +235,15 @@ impl Conv2dSparseCnhw {
         Self {
             shape,
             v,
+            threads: 0,
             weights: prune_colwise_adaptive(&f.data, shape.c_out, shape.k(), tile, sparsity),
         }
+    }
+
+    /// Set the per-layer parallelism cap (0 = whole pool).
+    pub fn with_thread_cap(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     /// Run on a CNHW input, producing CNHW output.
@@ -176,7 +252,7 @@ impl Conv2dSparseCnhw {
         let out = PACK_SCRATCH.with(|cell| {
             let mut packed = cell.borrow_mut();
             fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
-            spmm_colwise_parallel(&self.weights, &packed, pool)
+            spmm_colwise_parallel_capped(&self.weights, &packed, pool, cap_of(self.threads))
         });
         Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
     }
@@ -263,6 +339,30 @@ mod tests {
             assert!(allclose(&got.data, &want.data, 1e-4, 1e-5), "threads={threads}");
         }
         assert!((op.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thread_caps_never_change_conv_outputs() {
+        let s = ConvShape::square(1, 4, 8, 8, 3, 1, 1);
+        let (x, w) = rand_case(17, s);
+        let pool = ThreadPool::new(4);
+        let base_sparse = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4).run(&x, &pool);
+        let base_dense = Conv2dDenseCnhw::new(s, &w, 16, 4).run(&x, &pool);
+        let base_nhwc = Conv2dDenseNhwc::new(s, &w).run(&cnhw_to_nhwc(&x), &pool);
+        for cap in [1usize, 2, 3, 4, 7] {
+            let sp = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4).with_thread_cap(cap);
+            assert_eq!(sp.run(&x, &pool).data, base_sparse.data, "sparse cap={cap}");
+            let de = Conv2dDenseCnhw::new(s, &w, 16, 4).with_thread_cap(cap);
+            assert_eq!(de.run(&x, &pool).data, base_dense.data, "dense cap={cap}");
+            let nh = Conv2dDenseNhwc::new(s, &w).with_thread_cap(cap);
+            // NHWC accumulates in the same order per output position
+            // regardless of worker count, so this is bitwise too.
+            assert_eq!(
+                nh.run(&cnhw_to_nhwc(&x), &pool).data,
+                base_nhwc.data,
+                "nhwc cap={cap}"
+            );
+        }
     }
 
     #[test]

@@ -20,19 +20,27 @@ use crate::util::XorShiftRng;
 use super::ops;
 
 /// Per-conv-layer micro-kernel parameters: strip width `v` (= VLMAX of
-/// the chosen LMUL) and register tile height `tile` — the two knobs the
-/// tuner (§3.3) selects.
+/// the chosen LMUL), register tile height `tile`, and the parallelism
+/// cap `threads` — the three knobs the tuner (§3.3, extended) selects.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerChoice {
     pub v: usize,
     pub tile: usize,
+    /// Max pool participants this layer's GEMM may occupy per call;
+    /// 0 = uncapped (whole pool). Small layers where dispatch overhead
+    /// dominates tune to small caps.
+    pub threads: usize,
 }
 
 impl Default for LayerChoice {
     /// LMUL=4 (v = 32 lanes on a 256-bit machine) and T=8: the SiFive
-    /// baseline's fixed configuration (§4.4).
+    /// baseline's fixed configuration (§4.4); uncapped parallelism.
     fn default() -> Self {
-        Self { v: 32, tile: 8 }
+        Self {
+            v: 32,
+            tile: 8,
+            threads: 0,
+        }
     }
 }
 
@@ -41,6 +49,12 @@ impl Default for LayerChoice {
 /// [`ThreadPool`] every conv GEMM of this executor runs on. Cloning the
 /// config (as the server does per batch-size executor) clones the
 /// handle, so one pool serves the whole process.
+///
+/// Per-layer parallelism caps: set `default_choice.threads` to bound
+/// every layer, or insert a `LayerChoice` into `per_layer` (keyed by
+/// layer name) to override one layer — the tuner's `TuneResult::choice`
+/// produces such entries, `threads` included. `threads == 0` means the
+/// layer may occupy the whole pool.
 #[derive(Clone, Debug)]
 pub struct ExecConfig {
     /// Execution path for every conv layer.
@@ -143,19 +157,23 @@ impl Executor {
                     // The paper never prunes the first convolution.
                     let prune_this = cfg.path == ConvPath::SparseCnhw && first_conv_seen;
                     let prepared = match (cfg.path, prune_this) {
-                        (ConvPath::DenseNhwc, _) => {
-                            PreparedConv::Nhwc(Conv2dDenseNhwc::new(*shape, &w))
-                        }
-                        (_, false) => PreparedConv::Cnhw(Conv2dDenseCnhw::new(
-                            *shape, &w, choice.v, choice.tile,
-                        )),
-                        (_, true) => PreparedConv::Sparse(Conv2dSparseCnhw::new_adaptive(
-                            *shape,
-                            &w,
-                            choice.v,
-                            choice.tile,
-                            cfg.sparsity,
-                        )),
+                        (ConvPath::DenseNhwc, _) => PreparedConv::Nhwc(
+                            Conv2dDenseNhwc::new(*shape, &w).with_thread_cap(choice.threads),
+                        ),
+                        (_, false) => PreparedConv::Cnhw(
+                            Conv2dDenseCnhw::new(*shape, &w, choice.v, choice.tile)
+                                .with_thread_cap(choice.threads),
+                        ),
+                        (_, true) => PreparedConv::Sparse(
+                            Conv2dSparseCnhw::new_adaptive(
+                                *shape,
+                                &w,
+                                choice.v,
+                                choice.tile,
+                                cfg.sparsity,
+                            )
+                            .with_thread_cap(choice.threads),
+                        ),
                     };
                     convs.insert(node.id, prepared);
                     first_conv_seen = true;
@@ -431,13 +449,41 @@ mod tests {
     fn per_layer_choice_applied() {
         let g = build_model(ModelArch::ResNet18, 1, 32);
         let mut cfg = ExecConfig::dense_cnhw(ThreadPool::shared(1));
-        cfg.per_layer
-            .insert("s1b0-conv1".into(), LayerChoice { v: 8, tile: 4 });
+        cfg.per_layer.insert(
+            "s1b0-conv1".into(),
+            LayerChoice {
+                v: 8,
+                tile: 4,
+                threads: 0,
+            },
+        );
         let x = input(1, 32, 4);
         let y = Executor::new(g.clone(), cfg).run(&x);
         let y_default =
             Executor::new(g, ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
         // Tuning changes execution parameters, never numerics.
         assert!(allclose(&y.data, &y_default.data, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn per_layer_thread_caps_bitwise_equal_uncapped() {
+        // Per-layer parallelism caps are a scheduling decision only:
+        // the same graph with every layer capped to 1, capped to 2, or
+        // uncapped on a 4-worker pool produces identical logits.
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let x = input(1, 32, 5);
+        let run_with_cap = |threads: usize| {
+            let mut cfg = ExecConfig::sparse_cnhw(ThreadPool::shared(4), 0.5);
+            cfg.default_choice.threads = threads;
+            Executor::new(g.clone(), cfg).run(&x)
+        };
+        let uncapped = run_with_cap(0);
+        for cap in [1usize, 2, 4, 9] {
+            assert_eq!(
+                run_with_cap(cap).data,
+                uncapped.data,
+                "cap {cap} changed numerics"
+            );
+        }
     }
 }

@@ -4,6 +4,12 @@
 //! Pooling/GAP/FC/depthwise are direct implementations — they are a few
 //! percent of runtime in all seven networks, so clarity wins; conv is
 //! where the paper's optimisations (and ours) live.
+//!
+//! These ops run serially on the calling thread and deliberately take
+//! no pool handle or parallelism cap: they sit below the dispatch
+//! break-even the per-layer thread-cap tuning exists to avoid, so
+//! parallelising them would re-create exactly the small-kernel
+//! oversubscription the capped scheduler removes from the conv path.
 
 use crate::tensor::Tensor;
 

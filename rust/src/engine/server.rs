@@ -1,10 +1,23 @@
 //! Batching inference server: the request-path coordinator.
 //!
-//! Clients submit single-image NHWC requests; a dispatcher thread groups
+//! Clients submit single-image NHWC requests; dispatcher threads group
 //! them into batches (up to `max_batch`, waiting at most `batch_window`)
-//! and runs them on pre-compiled executors — one per supported batch
+//! and run them on pre-compiled executors — one per supported batch
 //! size, mirroring how the AOT artifacts are compiled per batch shape.
 //! Per-request latency and aggregate throughput are recorded.
+//!
+//! # Concurrent batch executors
+//!
+//! `ServerConfig::executors` starts that many dispatcher threads, all
+//! draining one shared request queue and all running batches on the
+//! *same* persistent [`ThreadPool`](crate::util::ThreadPool): while one
+//! batch computes, another forms and starts. Oversubscription is
+//! avoided on two levels — the pool's worker set is fixed (concurrent
+//! `parallel_for`s interleave their chunk jobs on the same workers
+//! instead of spawning more threads), and when no per-layer tuning says
+//! otherwise the server caps each executor's GEMMs at
+//! `pool size / executors` participants so concurrent batches slice the
+//! pool instead of queueing a full pool's worth of jobs each.
 
 use std::sync::mpsc::{channel, Receiver, Sender, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
@@ -24,6 +37,9 @@ pub struct ServerConfig {
     pub batch_sizes: Vec<usize>,
     /// Max time the batcher waits to fill a batch.
     pub batch_window: Duration,
+    /// Concurrent batch-executor (dispatcher) threads sharing the one
+    /// request queue and the one pool. 0 clamps to 1.
+    pub executors: usize,
 }
 
 impl Default for ServerConfig {
@@ -31,6 +47,7 @@ impl Default for ServerConfig {
         Self {
             batch_sizes: vec![1, 2, 4],
             batch_window: Duration::from_millis(5),
+            executors: 1,
         }
     }
 }
@@ -71,15 +88,16 @@ pub struct ServerStats {
 /// The serving engine.
 pub struct Server {
     tx: Option<Sender<Request>>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
     res: usize,
 }
 
 impl Server {
-    /// Build executors for every configured batch size and start the
-    /// dispatcher. `make_graph(batch)` supplies the model graph; `exec`
-    /// is the (shared) execution config; `res` the input resolution.
+    /// Build executors for every configured batch size and start
+    /// `cfg.executors` dispatcher threads. `make_graph(batch)` supplies
+    /// the model graph; `exec` is the (shared) execution config; `res`
+    /// the input resolution.
     pub fn start<F: Fn(usize) -> Graph>(
         make_graph: F,
         exec: ExecConfig,
@@ -89,18 +107,37 @@ impl Server {
         assert!(!cfg.batch_sizes.is_empty());
         let mut sizes = cfg.batch_sizes.clone();
         sizes.sort_unstable();
-        let executors: Vec<(usize, Executor)> = sizes
-            .iter()
-            .map(|&b| (b, Executor::new(make_graph(b), exec.clone())))
-            .collect();
+        let n_exec = cfg.executors.max(1);
+        let mut exec = exec;
+        if n_exec > 1 && exec.default_choice.threads == 0 {
+            // Several executors share one pool: slice it so a batch's
+            // GEMMs occupy pool/executors workers and concurrent
+            // batches run beside each other instead of queueing a full
+            // pool's worth of jobs each. Explicit per-layer tuning
+            // (per_layer entries / a preset default cap) is respected.
+            exec.default_choice.threads = exec.pool.size().div_ceil(n_exec).max(1);
+        }
+        let executors: Arc<Vec<(usize, Executor)>> = Arc::new(
+            sizes
+                .iter()
+                .map(|&b| (b, Executor::new(make_graph(b), exec.clone())))
+                .collect(),
+        );
         let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(Mutex::new(StatsInner::default()));
-        let stats2 = Arc::clone(&stats);
         let window = cfg.batch_window;
-        let worker = std::thread::spawn(move || dispatcher(rx, executors, window, stats2, res));
+        let workers = (0..n_exec)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let executors = Arc::clone(&executors);
+                let stats = Arc::clone(&stats);
+                std::thread::spawn(move || dispatcher(rx, executors, window, stats, res))
+            })
+            .collect();
         Self {
             tx: Some(tx),
-            worker: Some(worker),
+            workers,
             stats,
             res,
         }
@@ -124,8 +161,8 @@ impl Server {
 
     /// Drain and stop the server, returning aggregate stats.
     pub fn shutdown(mut self) -> ServerStats {
-        self.tx.take(); // closes channel; dispatcher drains then exits
-        if let Some(w) = self.worker.take() {
+        self.tx.take(); // closes channel; dispatchers drain then exit
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         let inner = self.stats.lock().unwrap();
@@ -154,9 +191,13 @@ impl Server {
     }
 }
 
+/// One batch-executor thread. Several of these may drain the same
+/// queue: the receiver sits behind a mutex, and each request is
+/// delivered to exactly one dispatcher, so every request is answered
+/// exactly once regardless of how many executors run.
 fn dispatcher(
-    rx: Receiver<Request>,
-    executors: Vec<(usize, Executor)>,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    executors: Arc<Vec<(usize, Executor)>>,
     window: Duration,
     stats: Arc<Mutex<StatsInner>>,
     res: usize,
@@ -165,9 +206,11 @@ fn dispatcher(
     let mut pending: Vec<Request> = Vec::new();
     let mut open = true;
     while open || !pending.is_empty() {
-        // Fill up to max_batch within the window.
+        // Blocking intake of the first request. Holding the queue lock
+        // across the blocking recv is fine: there is nothing for the
+        // other dispatchers to receive while the queue is empty.
         if open && pending.is_empty() {
-            match rx.recv() {
+            match rx.lock().unwrap().recv() {
                 Ok(r) => pending.push(r),
                 Err(_) => {
                     open = false;
@@ -175,18 +218,27 @@ fn dispatcher(
                 }
             }
         }
-        let deadline = Instant::now() + window;
-        while open && pending.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    open = false;
-                    break;
+        // Fill up to max_batch within the window — but only if the
+        // intake lock is free. If another dispatcher owns it (parked in
+        // its own blocking recv), waiting for the lock could stall this
+        // batch until the *next* request arrives; serving the batch we
+        // already have keeps trickle-latency bounded by the window.
+        if open {
+            if let Ok(q) = rx.try_lock() {
+                let deadline = Instant::now() + window;
+                while pending.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match q.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
                 }
             }
         }
@@ -253,6 +305,7 @@ mod tests {
             ServerConfig {
                 batch_sizes: vec![1, 2],
                 batch_window: Duration::from_millis(2),
+                executors: 1,
             },
         );
         let replies: Vec<_> = (0..6).map(|i| server.submit(image(res, i))).collect();
@@ -277,6 +330,7 @@ mod tests {
             ServerConfig {
                 batch_sizes: vec![1, 2, 4],
                 batch_window: Duration::from_millis(50),
+                executors: 1,
             },
         );
         // Burst of 8 requests: with a generous window, batches of 4 form.
@@ -290,6 +344,84 @@ mod tests {
         assert!(stats.mean_batch > 1.0);
     }
 
+    /// Satellite: N client threads submitting through concurrent batch
+    /// executors — every request is answered exactly once, the served
+    /// count matches, and the summary statistics stay finite and sane.
+    #[test]
+    fn concurrent_executors_answer_every_request_exactly_once() {
+        let res = 32;
+        let (clients, per_client) = (4usize, 4usize);
+        let server = Arc::new(Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::sparse_cnhw(ThreadPool::shared(4), 0.5),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 2],
+                batch_window: Duration::from_millis(2),
+                executors: 3,
+            },
+        ));
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let server = Arc::clone(&server);
+                std::thread::spawn(move || {
+                    let mut replies = 0usize;
+                    for i in 0..per_client {
+                        let rx = server.submit(image(res, (c * per_client + i) as u64));
+                        let reply = rx.recv().expect("reply");
+                        assert_eq!(reply.logits.len(), 1000);
+                        assert!(reply.logits.iter().all(|v| v.is_finite()));
+                        assert!(reply.batch >= 1 && reply.batch <= 2);
+                        // Exactly once: the reply channel yields one
+                        // reply and then hangs up.
+                        assert!(reply.latency > Duration::ZERO);
+                        assert!(rx.try_recv().is_err(), "duplicate reply");
+                        replies += 1;
+                    }
+                    replies
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, clients * per_client);
+        let server = Arc::into_inner(server).expect("all clients joined");
+        let stats = server.shutdown();
+        assert_eq!(stats.served, clients * per_client);
+        assert!(stats.latency.mean.is_finite() && stats.latency.mean > 0.0);
+        assert!(stats.latency.p95.is_finite());
+        assert!(
+            stats.mean_batch.is_finite() && stats.mean_batch >= 1.0 && stats.mean_batch <= 2.0,
+            "mean batch {} out of range",
+            stats.mean_batch
+        );
+        assert!(stats.throughput_rps > 0.0);
+    }
+
+    /// Determinism across executor counts: the same requests produce the
+    /// same logits whether one or three executors serve them (caps and
+    /// concurrency are scheduling decisions, never numerics).
+    #[test]
+    fn concurrent_executors_match_single_executor_logits() {
+        let res = 32;
+        let run = |executors: usize| -> Vec<Vec<f32>> {
+            let server = Server::start(
+                |b| build_model(ModelArch::ResNet18, b, res),
+                ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+                res,
+                ServerConfig {
+                    batch_sizes: vec![1],
+                    batch_window: Duration::from_millis(1),
+                    executors,
+                },
+            );
+            let rxs: Vec<_> = (0..4).map(|i| server.submit(image(res, i))).collect();
+            let out = rxs.into_iter().map(|rx| rx.recv().unwrap().logits).collect();
+            server.shutdown();
+            out
+        };
+        assert_eq!(run(1), run(3));
+    }
+
     #[test]
     fn shutdown_drains_pending() {
         let res = 32;
@@ -300,6 +432,7 @@ mod tests {
             ServerConfig {
                 batch_sizes: vec![1],
                 batch_window: Duration::from_millis(1),
+                executors: 1,
             },
         );
         let rxs: Vec<_> = (0..3).map(|i| server.submit(image(res, i))).collect();

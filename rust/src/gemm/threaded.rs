@@ -7,6 +7,13 @@
 //! size 1 degenerates to the serial kernels with no synchronisation,
 //! and the strip-wise arithmetic is identical either way, so results
 //! are bit-for-bit equal across pool sizes.
+//!
+//! Every driver has a `_capped` variant taking a per-call
+//! `max_workers`: the per-layer parallelism degree the tuner selects
+//! (small layers often lose more to dispatch than they gain from the
+//! whole pool). A cap of `None`, or one at least the pool size, is the
+//! plain pool-wide dispatch; caps never change which strip computes
+//! which output, so capped results stay bit-for-bit equal to serial.
 
 use crate::im2col::PackedMatrix;
 use crate::pruning::ColwisePruned;
@@ -23,6 +30,17 @@ pub fn spmm_colwise_parallel(
     a: &PackedMatrix,
     pool: &ThreadPool,
 ) -> Vec<f32> {
+    spmm_colwise_parallel_capped(w, a, pool, None)
+}
+
+/// [`spmm_colwise_parallel`] bounded to at most `max_workers`
+/// participants (the tuned per-layer parallelism degree).
+pub fn spmm_colwise_parallel_capped(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+) -> Vec<f32> {
     assert_eq!(w.cols, a.k);
     let mut c = vec![0.0f32; w.rows * a.cols];
     // Each strip writes a disjoint column range of C. Workers write
@@ -31,7 +49,7 @@ pub fn spmm_colwise_parallel(
     // references across threads (UB even with disjoint writes).
     let c_ptr = SendPtr(c.as_mut_ptr());
     let c_len = c.len();
-    pool.parallel_for(a.strips, |s0, s1| {
+    pool.parallel_for_capped(a.strips, max_workers, |s0, s1| {
         for strip in s0..s1 {
             // SAFETY: strip output ranges are disjoint by construction,
             // and `c` outlives the parallel_for barrier.
@@ -49,12 +67,24 @@ pub fn gemm_dense_parallel(
     tile: usize,
     pool: &ThreadPool,
 ) -> Vec<f32> {
+    gemm_dense_parallel_capped(w, rows, a, tile, pool, None)
+}
+
+/// [`gemm_dense_parallel`] bounded to at most `max_workers` participants.
+pub fn gemm_dense_parallel_capped(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+) -> Vec<f32> {
     assert_eq!(w.len(), rows * a.k);
     assert!((1..=MAX_TILE).contains(&tile));
     let mut c = vec![0.0f32; rows * a.cols];
     let c_ptr = SendPtr(c.as_mut_ptr());
     let c_len = c.len();
-    pool.parallel_for(a.strips, |s0, s1| {
+    pool.parallel_for_capped(a.strips, max_workers, |s0, s1| {
         for strip in s0..s1 {
             // SAFETY: as above — disjoint strip ranges, caller blocks
             // until all workers finish.
@@ -171,6 +201,31 @@ mod tests {
             spmm_colwise_parallel(&cp, &p, &pool),
             spmm_colwise(&cp, &p)
         );
+    }
+
+    #[test]
+    fn capped_kernels_match_serial_bitwise() {
+        let mut r = XorShiftRng::new(105);
+        let (rows, k, cols) = (24, 36, 200);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+        let p = pack_data_matrix(&a, k, cols, 16);
+        let serial_sparse = spmm_colwise(&cp, &p);
+        let serial_dense = gemm_dense(&w, rows, &p, 8);
+        let pool = ThreadPool::new(4);
+        for cap in [Some(1), Some(2), Some(3), Some(4), Some(5), None] {
+            assert_eq!(
+                spmm_colwise_parallel_capped(&cp, &p, &pool, cap),
+                serial_sparse,
+                "sparse cap={cap:?}"
+            );
+            assert_eq!(
+                gemm_dense_parallel_capped(&w, rows, &p, 8, &pool, cap),
+                serial_dense,
+                "dense cap={cap:?}"
+            );
+        }
     }
 
     #[test]

@@ -117,7 +117,20 @@ pub fn conv2d_indirect_nhwc_parallel(
     ib: &IndirectionBuffer,
     pool: &crate::util::threadpool::ThreadPool,
 ) -> Tensor {
-    if pool.size() <= 1 {
+    conv2d_indirect_nhwc_parallel_capped(x, filter, s, ib, pool, None)
+}
+
+/// [`conv2d_indirect_nhwc_parallel`] bounded to at most `max_workers`
+/// pool participants (per-layer parallelism cap).
+pub fn conv2d_indirect_nhwc_parallel_capped(
+    x: &Tensor,
+    filter: &[f32],
+    s: &ConvShape,
+    ib: &IndirectionBuffer,
+    pool: &crate::util::threadpool::ThreadPool,
+    max_workers: Option<usize>,
+) -> Tensor {
+    if pool.size() <= 1 || max_workers == Some(1) {
         return conv2d_indirect_nhwc(x, filter, s, ib);
     }
     assert_eq!(x.shape, vec![s.n, s.h_in, s.w_in, s.c_in]);
@@ -134,7 +147,7 @@ pub fn conv2d_indirect_nhwc_parallel(
         }
     }
     let optr = SendPtr(out.data.as_mut_ptr());
-    pool.parallel_for(ib.out_positions, |p0, p1| {
+    pool.parallel_for_capped(ib.out_positions, max_workers, |p0, p1| {
         for pos in p0..p1 {
             let out_base = pos * s.c_out;
             for tap in 0..ib.taps {

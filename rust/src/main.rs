@@ -4,7 +4,8 @@
 //!   models                       list model zoo entries with MACs/params
 //!   run    --model M [...]       single inference, timing report
 //!   serve  --model M [...]       batching server demo with load generator
-//!   tune   --model M [...]       per-layer (T, LMUL) auto-tuning
+//!                                (--executors N: concurrent batch executors)
+//!   tune   --model M [...]       per-layer (LMUL, T, P) auto-tuning
 //!   sim    [--layer i]           RVV-simulator kernel comparison
 //!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
 
@@ -134,6 +135,7 @@ fn cmd_serve(args: &Args) {
             batch_window: std::time::Duration::from_millis(
                 args.get_parsed("window-ms", 5u64),
             ),
+            executors: args.get_parsed("executors", 1usize),
         },
     );
     println!("serving {requests} requests on {} @{res} ...", arch.name());
@@ -173,10 +175,18 @@ fn cmd_tune(args: &Args) {
         arch.name(),
         if use_sim { "sim cycles" } else { "native wall-clock" }
     );
-    println!("{:<16} {:>6} {:>6} {:>14}", "layer", "LMUL", "T", "score");
-    // Native profiling runs serially per candidate so scores isolate the
-    // kernel; the pool is still the persistent shared one.
-    let profile_pool = ThreadPool::shared(1);
+    println!(
+        "{:<16} {:>6} {:>6} {:>6} {:>14}",
+        "layer", "LMUL", "T", "P", "score"
+    );
+    // Native profiling must run on the deployment-sized pool: the tuner
+    // now also selects each layer's parallelism degree P, and a cap is
+    // only meaningful relative to the pool it was measured on
+    // (--threads N, NMPRUNE_THREADS, or all hardware threads).
+    let profile_pool = match args.get("threads") {
+        None => ThreadPool::global(),
+        Some(_) => ThreadPool::shared(args.get_parsed("threads", 1)),
+    };
     for (name, shape) in g.conv_shapes() {
         let key = tuner::cache_key(&shape, Some(sparsity));
         cache.get_or_tune(key, || {
@@ -186,8 +196,8 @@ fn cmd_tune(args: &Args) {
                 tuner::tune_native(&shape, Some(sparsity), &profile_pool, tile_cap)
             };
             println!(
-                "{:<16} {:>6} {:>6} {:>14.0}",
-                name, r.best.lmul, r.best.tile, r.best.score
+                "{:<16} {:>6} {:>6} {:>6} {:>14.0}",
+                name, r.best.lmul, r.best.tile, r.best.threads, r.best.score
             );
             r.choice()
         });

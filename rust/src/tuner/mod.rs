@@ -1,19 +1,27 @@
 //! AITemplate-style auto-tuner (§3.3): enumerate micro-kernel template
-//! candidates — tile size `T ∈ 1..=31` and `LMUL ∈ {1,2,4,8}` — profile
+//! candidates — tile size `T ∈ 1..=31`, `LMUL ∈ {1,2,4,8}`, and (for
+//! native profiling) the per-layer parallelism degree `P` — profile
 //! each on the target, and select the fastest per conv layer.
 //!
 //! Two profiling backends:
 //! * **native** — wall-clock of the native Rust conv path on this host
-//!   (what a deployment would use);
-//! * **sim** — deterministic cycle counts from the RVV simulator (what
-//!   reproduces the paper's K1 numbers; used by the figure benches).
+//!   (what a deployment would use); sweeps `(LMUL, T, P)` with
+//!   `P` over [`thread_candidates`] of the profiling pool, so each
+//!   layer also picks how many pool workers it is worth waking —
+//!   hardware-shaped execution decisions are per layer, not global
+//!   (Kang 2019; Chen et al. 2021);
+//! * **sim** — deterministic cycle counts from the single-core RVV
+//!   simulator (what reproduces the paper's K1 numbers; used by the
+//!   figure benches). The simulator models one hart, so sim candidates
+//!   carry `threads = 0` (no cap information).
 //!
 //! Results are memoised in a [`TuneCache`] persisted as TSV, mirroring
-//! AITemplate's profiling cache.
+//! AITemplate's profiling cache. The TSV gained a fourth `threads`
+//! column; legacy three-column files still load (threads defaults to
+//! 0 = uncapped).
 
 use std::collections::BTreeMap;
 use std::io::Write;
-use std::time::Duration;
 
 use crate::benchlib::{bench, BenchConfig};
 use crate::conv::{Conv2dDenseCnhw, Conv2dSparseCnhw, ConvShape};
@@ -36,6 +44,8 @@ pub struct Candidate {
     /// Strip width = VLMAX(lmul) on the 256-bit machine.
     pub v: usize,
     pub tile: usize,
+    /// Parallelism degree profiled (0 = uncapped / not profiled).
+    pub threads: usize,
     /// Profiling score (ns for native, cycles for sim) — lower is better.
     pub score: f64,
 }
@@ -59,6 +69,22 @@ pub fn candidate_space(tile_cap: usize) -> Vec<(usize, usize)> {
             out.push((lmul, t));
         }
     }
+    out
+}
+
+/// Parallelism degrees worth profiling on a pool of `pool_size`
+/// workers: powers of two up to the pool size, plus the pool size
+/// itself — e.g. `[1, 2, 4, 6]` for a 6-worker pool. A size-1 pool
+/// yields `[1]`, keeping the sweep (and test cost) identical to the
+/// pre-threads tuner.
+pub fn thread_candidates(pool_size: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut t = 1;
+    while t < pool_size {
+        out.push(t);
+        t *= 2;
+    }
+    out.push(pool_size.max(1));
     out
 }
 
@@ -89,6 +115,7 @@ pub fn tune_sim_colwise(shape: &ConvShape, sparsity: f64, tile_cap: usize) -> Tu
             lmul,
             v,
             tile,
+            threads: 0, // single-hart simulator: no parallelism dimension
             score: rep.cycles as f64 * scale,
         });
     }
@@ -97,7 +124,13 @@ pub fn tune_sim_colwise(shape: &ConvShape, sparsity: f64, tile_cap: usize) -> Tu
 
 /// Profile the *native* conv operator (dense or sparse CNHW path) by
 /// wall clock, running candidates on the caller's persistent pool so
-/// profiling measures the same dispatch the deployment uses.
+/// profiling measures the same dispatch the deployment uses. The sweep
+/// is the `(LMUL, T, P)` product with `P` over [`thread_candidates`]
+/// of the pool size (trimmed to the caps that behave distinctly for
+/// the layer's strip count): each layer profiles its own parallelism
+/// degree, so small layers whose dispatch overhead dominates tune to
+/// small caps. Pass the deployment-sized pool — caps are only
+/// meaningful relative to the pool they were measured on.
 pub fn tune_native(
     shape: &ConvShape,
     sparsity: Option<f64>,
@@ -117,31 +150,54 @@ pub fn tune_native(
         -0.5,
         0.5,
     );
-    let cfg = BenchConfig {
-        warmup: Duration::from_millis(5),
-        measure: Duration::from_millis(40),
-        min_samples: 3,
-        max_samples: 20,
-    };
+    let cfg = BenchConfig::tuning();
+    let threads_space = thread_candidates(pool.size());
     let mut candidates = Vec::new();
     for (lmul, tile) in candidate_space(tile_cap) {
         let v = 8 * lmul;
-        let score = match sparsity {
+        // Caps at or beyond the layer's strip count dispatch identically
+        // (the pool clamps participants to min(cap, strips)), so profile
+        // each distinct behaviour once: every cap below the strip count,
+        // plus the smallest cap that saturates it. Small layers — the
+        // very ones per-layer caps exist for — would otherwise re-run
+        // the same serial dispatch once per candidate.
+        let strips = shape.gemm_cols().div_ceil(v);
+        let mut caps: Vec<usize> = threads_space.iter().copied().filter(|&t| t < strips).collect();
+        if let Some(&t) = threads_space.iter().find(|&&t| t >= strips) {
+            caps.push(t);
+        }
+        // Weight compression/packing happens once per (LMUL, T); the
+        // parallelism sweep only flips the dispatch cap.
+        match sparsity {
             None => {
-                let op = Conv2dDenseCnhw::new(*shape, &w, v, tile);
-                bench("cand", cfg, || op.run(&x, pool)).mean_ns()
+                let mut op = Conv2dDenseCnhw::new(*shape, &w, v, tile);
+                for &threads in &caps {
+                    op.threads = threads;
+                    let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
+                    candidates.push(Candidate {
+                        lmul,
+                        v,
+                        tile,
+                        threads,
+                        score,
+                    });
+                }
             }
             Some(s) => {
-                let op = Conv2dSparseCnhw::new_adaptive(*shape, &w, v, tile, s);
-                bench("cand", cfg, || op.run(&x, pool)).mean_ns()
+                let mut op = Conv2dSparseCnhw::new_adaptive(*shape, &w, v, tile, s);
+                for &threads in &caps {
+                    op.threads = threads;
+                    let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
+                    candidates.push(Candidate {
+                        lmul,
+                        v,
+                        tile,
+                        threads,
+                        score,
+                    });
+                }
             }
         };
-        candidates.push(Candidate {
-            lmul,
-            v,
-            tile,
-            score,
-        });
     }
     pick(candidates)
 }
@@ -159,6 +215,7 @@ impl TuneResult {
         LayerChoice {
             v: self.best.v,
             tile: self.best.tile,
+            threads: self.best.threads,
         }
     }
 }
@@ -190,7 +247,11 @@ pub fn cache_key(shape: &ConvShape, sparsity: Option<f64>) -> String {
 }
 
 impl TuneCache {
-    /// Load from a TSV file (missing file → empty cache).
+    /// Load from a TSV file (missing file → empty cache). Accepts both
+    /// the current four-column format (`key  v  tile  threads`) and the
+    /// legacy three-column one — rows without a threads column load
+    /// with `threads = 0` (uncapped) rather than erroring, so caches
+    /// written before the parallelism dimension existed keep working.
     pub fn load(path: &str) -> Self {
         let mut entries = BTreeMap::new();
         if let Ok(text) = std::fs::read_to_string(path) {
@@ -199,8 +260,16 @@ impl TuneCache {
                 if let (Some(k), Some(v), Some(t)) =
                     (parts.next(), parts.next(), parts.next())
                 {
+                    let threads = parts.next().and_then(|p| p.parse().ok()).unwrap_or(0);
                     if let (Ok(v), Ok(t)) = (v.parse(), t.parse()) {
-                        entries.insert(k.to_string(), LayerChoice { v, tile: t });
+                        entries.insert(
+                            k.to_string(),
+                            LayerChoice {
+                                v,
+                                tile: t,
+                                threads,
+                            },
+                        );
                     }
                 }
             }
@@ -208,14 +277,14 @@ impl TuneCache {
         Self { entries }
     }
 
-    /// Persist as TSV.
+    /// Persist as TSV (`key  v  tile  threads`).
     pub fn save(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
         for (k, c) in &self.entries {
-            writeln!(f, "{k}\t{}\t{}", c.v, c.tile)?;
+            writeln!(f, "{k}\t{}\t{}\t{}", c.v, c.tile, c.threads)?;
         }
         Ok(())
     }
@@ -284,6 +353,49 @@ mod tests {
         assert!(r.best.score > 0.0);
         let c = r.choice();
         assert_eq!(c.v, 8 * r.best.lmul);
+        // A size-1 pool has exactly one parallelism candidate.
+        assert_eq!(c.threads, 1);
+        assert!(r.candidates.iter().all(|cand| cand.threads == 1));
+    }
+
+    #[test]
+    fn native_tuning_emits_a_per_layer_thread_cap() {
+        // On a multi-worker profiling pool the winner carries a concrete
+        // parallelism degree, both degrees are profiled where they
+        // behave distinctly, and caps that cannot differ (strip count 1
+        // at LMUL=8: v = 64 covers the whole 8x8 output) are profiled
+        // exactly once.
+        let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
+        let pool = ThreadPool::new(2);
+        let r = tune_native(&shape, Some(0.5), &pool, 2);
+        assert!(r.best.threads == 1 || r.best.threads == 2);
+        assert_eq!(r.choice().threads, r.best.threads);
+        for th in [1usize, 2] {
+            assert!(
+                r.candidates.iter().any(|c| c.lmul == 1 && c.threads == th),
+                "thread degree {th} not profiled at LMUL=1 (8 strips)"
+            );
+        }
+        let lmul8: Vec<_> = r.candidates.iter().filter(|c| c.lmul == 8).collect();
+        assert!(!lmul8.is_empty());
+        assert!(
+            lmul8.iter().all(|c| c.threads == 1),
+            "single-strip layers must not re-profile redundant caps"
+        );
+        // No duplicate (lmul, tile, threads) configurations anywhere.
+        let mut keys: Vec<_> = r.candidates.iter().map(|c| (c.lmul, c.tile, c.threads)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), r.candidates.len(), "duplicate candidates profiled");
+    }
+
+    #[test]
+    fn thread_candidates_cover_pool_sizes() {
+        assert_eq!(thread_candidates(1), vec![1]);
+        assert_eq!(thread_candidates(2), vec![1, 2]);
+        assert_eq!(thread_candidates(6), vec![1, 2, 4, 6]);
+        assert_eq!(thread_candidates(8), vec![1, 2, 4, 8]);
+        assert_eq!(thread_candidates(0), vec![1]);
     }
 
     #[test]
@@ -291,8 +403,13 @@ mod tests {
         let mut cache = TuneCache::default();
         let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
         let key = cache_key(&shape, Some(0.5));
-        let choice = cache.get_or_tune(key.clone(), || LayerChoice { v: 16, tile: 4 });
-        assert_eq!(choice, LayerChoice { v: 16, tile: 4 });
+        let want = LayerChoice {
+            v: 16,
+            tile: 4,
+            threads: 2,
+        };
+        let choice = cache.get_or_tune(key.clone(), || want);
+        assert_eq!(choice, want);
         // hit path
         let hit = cache.get_or_tune(key.clone(), || panic!("must not re-tune"));
         assert_eq!(hit, choice);
@@ -300,6 +417,58 @@ mod tests {
         cache.save(path).unwrap();
         let loaded = TuneCache::load(path);
         assert_eq!(loaded.entries.get(&key), Some(&choice));
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Satellite: the four-column TSV (threads included) re-loads
+    /// identically, for caps of every flavour (uncapped 0, small, large).
+    #[test]
+    fn cache_roundtrip_preserves_thread_caps() {
+        let mut cache = TuneCache::default();
+        let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
+        for (i, threads) in [0usize, 1, 2, 16].into_iter().enumerate() {
+            let key = cache_key(&shape, Some(0.1 * (i + 1) as f64));
+            cache.entries.insert(
+                key,
+                LayerChoice {
+                    v: 8 << (i % 3),
+                    tile: 1 + i,
+                    threads,
+                },
+            );
+        }
+        let path = "/tmp/nmprune_tune_cache_threads_test.tsv";
+        cache.save(path).unwrap();
+        let loaded = TuneCache::load(path);
+        assert_eq!(loaded.entries, cache.entries);
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Satellite: a legacy three-column TSV (written before the threads
+    /// column existed) loads with the default uncapped degree instead
+    /// of erroring or dropping rows.
+    #[test]
+    fn cache_loads_legacy_tsv_without_threads_column() {
+        let path = "/tmp/nmprune_tune_cache_legacy_test.tsv";
+        std::fs::write(path, "layerA\t16\t4\nlayerB\t32\t8\n").unwrap();
+        let loaded = TuneCache::load(path);
+        assert_eq!(loaded.entries.len(), 2);
+        assert_eq!(
+            loaded.entries.get("layerA"),
+            Some(&LayerChoice {
+                v: 16,
+                tile: 4,
+                threads: 0
+            })
+        );
+        assert_eq!(
+            loaded.entries.get("layerB"),
+            Some(&LayerChoice {
+                v: 32,
+                tile: 8,
+                threads: 0
+            })
+        );
         std::fs::remove_file(path).ok();
     }
 

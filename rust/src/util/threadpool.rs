@@ -9,6 +9,31 @@
 //! threads per GEMM call (the seed tree used `std::thread::scope` and
 //! paid thread-creation syscalls on every conv layer).
 //!
+//! # Chunking policy (affinity-aware)
+//!
+//! `parallel_for` no longer walks one flat atomic cursor. The range
+//! `0..n` is partitioned into one *contiguous home range per
+//! participant*; each participant drains its own home range in
+//! grain-sized chunks first (so a given worker touches a contiguous,
+//! cache-friendly span of strips) and only then scans the other ranges,
+//! round-robin from its own index, to steal leftover chunks from
+//! stragglers. The grain is sized from the strip count — roughly
+//! `n / (participants × 4)`, floor 1 — so a straggler's remaining home
+//! range is still splittable.
+//!
+//! # Per-call parallelism caps
+//!
+//! [`ThreadPool::parallel_for_capped`] bounds how many participants one
+//! call may occupy. A capped call enqueues only `cap − 1` worker jobs —
+//! it wakes only the workers it needs — which is what makes per-layer
+//! parallelism degrees (tuned by `tuner`) and several concurrent batch
+//! executors on one shared pool cheap: a small conv capped at 2 leaves
+//! the remaining workers free for the next layer or the next batch.
+//! Caps larger than the pool (or than the iteration count) clamp; a cap
+//! of 1 degenerates to a serial call on the calling thread with no
+//! synchronisation at all, and `n == 0` returns before touching any
+//! queue or barrier.
+//!
 //! Panic safety: a panicking job decrements the pending count through a
 //! drop guard (so [`ThreadPool::wait`] can never hang) and is contained
 //! with `catch_unwind` (so the worker survives); `parallel_for`
@@ -164,10 +189,12 @@ impl ThreadPool {
         drop(guard);
     }
 
-    /// Scoped parallel-for over `0..n` on the pool's persistent workers,
-    /// with dynamic work stealing on a shared atomic cursor. `f(start,
-    /// end)` handles `[start, end)` and may borrow from the caller's
-    /// stack; it must be safe to call concurrently on disjoint ranges.
+    /// Scoped parallel-for over `0..n` on the pool's persistent workers
+    /// with affinity-aware chunking (see the module docs): each
+    /// participant owns a contiguous home range and steals leftover
+    /// chunks from stragglers. `f(start, end)` handles `[start, end)`
+    /// and may borrow from the caller's stack; it must be safe to call
+    /// concurrently on disjoint ranges.
     ///
     /// The calling thread participates in the loop, so the range always
     /// completes even when every worker is busy with other tasks, and a
@@ -179,24 +206,50 @@ impl ThreadPool {
     /// job running on this same pool can deadlock the completion barrier
     /// (all workers parked waiting on jobs only they could run). Kernel
     /// bodies passed to `parallel_for` must therefore never re-enter the
-    /// pool — none in this crate do.
+    /// pool — none in this crate do. (`n == 0` is exempt: it returns
+    /// before touching the queue or barrier, so it is safe anywhere.)
     pub fn parallel_for<F>(&self, n: usize, f: F)
     where
         F: Fn(usize, usize) + Sync,
     {
+        self.parallel_for_capped(n, None, f);
+    }
+
+    /// [`ThreadPool::parallel_for`] with an optional per-call cap on the
+    /// number of participants (calling thread included). `Some(k)`
+    /// occupies at most `min(k, pool size, n)` participants and enqueues
+    /// only that many − 1 worker jobs; `None` (or any cap ≥ pool size)
+    /// is the uncapped pool-wide dispatch. `Some(0)` clamps to 1. The
+    /// chunk arithmetic is identical across caps, so results of
+    /// disjoint-range kernels are bit-for-bit equal to the serial call.
+    pub fn parallel_for_capped<F>(&self, n: usize, max_workers: Option<usize>, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
         if n == 0 {
+            // Early return: no queue traffic, no barrier fence (a capped
+            // zero-length loop must never wake a worker).
             return;
         }
-        let workers = self.size.min(n);
+        let cap = max_workers.unwrap_or(self.size).max(1);
+        let workers = self.size.min(cap).min(n);
         if workers <= 1 {
             f(0, n);
             return;
         }
+        // One contiguous home range per participant; grain sized from
+        // the strip count so each range splits into ~4 stealable chunks.
+        let grain = (n / (workers * 4)).max(1);
+        let per = n.div_ceil(workers);
+        let ranges: Vec<RangeCursor> = (0..workers)
+            .map(|i| RangeCursor {
+                cursor: AtomicUsize::new(i * per),
+                end: ((i + 1) * per).min(n),
+            })
+            .collect();
         let state = Arc::new(ForState {
-            cursor: AtomicUsize::new(0),
-            n,
-            // Aim for ~4 chunks per worker so stragglers rebalance.
-            grain: (n / (workers * 4)).max(1),
+            ranges,
+            grain,
             outstanding: Mutex::new(workers - 1),
             done: Condvar::new(),
             panicked: AtomicBool::new(false),
@@ -209,11 +262,11 @@ impl ThreadPool {
         let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
         let f_static: &'static (dyn Fn(usize, usize) + Sync) =
             unsafe { std::mem::transmute(f_ref) };
-        for _ in 0..workers - 1 {
+        for home in 1..workers {
             let st = Arc::clone(&state);
-            self.execute(move || st.run_chunks(f_static));
+            self.execute(move || st.run_chunks(home, f_static));
         }
-        let caller = catch_unwind(AssertUnwindSafe(|| drain_chunks(&state, f_ref)));
+        let caller = catch_unwind(AssertUnwindSafe(|| drain_chunks(&state, 0, f_ref)));
         state.wait_workers();
         if let Err(payload) = caller {
             resume_unwind(payload);
@@ -233,10 +286,20 @@ impl Drop for ThreadPool {
     }
 }
 
+/// One participant's contiguous home range `[cursor, end)`. The cursor
+/// is shared: the owner claims grain-sized chunks from the front, and
+/// thieves claim through the same `fetch_add`, so a chunk is handed out
+/// exactly once no matter who takes it. Overshoot past `end` is benign
+/// (claims land beyond the range and are discarded).
+struct RangeCursor {
+    cursor: AtomicUsize,
+    end: usize,
+}
+
 /// Shared state of one `parallel_for` invocation.
 struct ForState {
-    cursor: AtomicUsize,
-    n: usize,
+    /// One home range per participant (caller = index 0).
+    ranges: Vec<RangeCursor>,
     grain: usize,
     /// Pool jobs still holding a reference into the caller's stack.
     outstanding: Mutex<usize>,
@@ -248,8 +311,8 @@ impl ForState {
     /// Worker-side entry: drain chunks, record panics, then release the
     /// caller. The decrement must be last — it is the caller's licence
     /// to return (and invalidate the borrowed closure).
-    fn run_chunks(&self, f: &(dyn Fn(usize, usize) + Sync)) {
-        if catch_unwind(AssertUnwindSafe(|| drain_chunks(self, f))).is_err() {
+    fn run_chunks(&self, home: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if catch_unwind(AssertUnwindSafe(|| drain_chunks(self, home, f))).is_err() {
             self.panicked.store(true, Ordering::Relaxed);
         }
         let mut left = self.outstanding.lock().unwrap();
@@ -267,14 +330,20 @@ impl ForState {
     }
 }
 
-/// Pull `[cursor, cursor+grain)` chunks until the range is exhausted.
-fn drain_chunks(st: &ForState, f: &(dyn Fn(usize, usize) + Sync)) {
-    loop {
-        let start = st.cursor.fetch_add(st.grain, Ordering::Relaxed);
-        if start >= st.n {
-            break;
+/// Drain the home range `ranges[home]` first, then sweep the other
+/// ranges round-robin (stealing from stragglers) until every range is
+/// exhausted.
+fn drain_chunks(st: &ForState, home: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    let r = st.ranges.len();
+    for visit in 0..r {
+        let range = &st.ranges[(home + visit) % r];
+        loop {
+            let start = range.cursor.fetch_add(st.grain, Ordering::Relaxed);
+            if start >= range.end {
+                break;
+            }
+            f(start, (start + st.grain).min(range.end));
         }
-        f(start, (start + st.grain).min(st.n));
     }
 }
 
@@ -401,6 +470,78 @@ mod tests {
             sum.fetch_add((e - s) as u64, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 256);
+    }
+
+    /// Regression (satellite): `parallel_for` with `n == 0` must return
+    /// before touching the job queue or the completion barrier. Run it
+    /// from *inside* the only worker of a size-1 pool — if the empty
+    /// loop enqueued jobs or fenced through the barrier, nobody could
+    /// run them and this test would deadlock.
+    #[test]
+    fn parallel_for_empty_range_skips_barrier_even_inside_pool() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let hit = Arc::new(AtomicU64::new(0));
+        let (p2, h2) = (Arc::clone(&pool), Arc::clone(&hit));
+        pool.execute(move || {
+            p2.parallel_for(0, |_, _| panic!("must not be called"));
+            p2.parallel_for_capped(0, Some(3), |_, _| panic!("must not be called"));
+            h2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait(); // deadlocks here if n == 0 reaches the barrier path
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn capped_parallel_for_covers_range_exactly_once() {
+        let pool = ThreadPool::new(8);
+        // Caps below, at, and above the pool size; n above and below cap.
+        for cap in [1usize, 2, 3, 8, 9, 100] {
+            for n in [1usize, 2, 7, 500] {
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                pool.parallel_for_capped(n, Some(cap), |s, e| {
+                    for h in &hits[s..e] {
+                        h.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                    "cap={cap} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn capped_parallel_for_bounds_concurrency() {
+        let pool = ThreadPool::new(8);
+        for cap in [1usize, 2, 4] {
+            let current = AtomicU64::new(0);
+            let peak = AtomicU64::new(0);
+            pool.parallel_for_capped(256, Some(cap), |_s, _e| {
+                let now = current.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                // Hold the slot long enough for overlap to be observable.
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                current.fetch_sub(1, Ordering::SeqCst);
+            });
+            assert!(
+                peak.load(Ordering::SeqCst) <= cap as u64,
+                "cap={cap} exceeded: peak {}",
+                peak.load(Ordering::SeqCst)
+            );
+        }
+    }
+
+    #[test]
+    fn cap_of_zero_and_uncapped_both_complete() {
+        let pool = ThreadPool::new(4);
+        for cap in [Some(0), None] {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for_capped(100, cap, |s, e| {
+                sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 100, "cap={cap:?}");
+        }
     }
 
     #[test]

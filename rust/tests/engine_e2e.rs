@@ -102,6 +102,7 @@ fn server_replies_match_direct_execution() {
         ServerConfig {
             batch_sizes: vec![1, 2, 4],
             batch_window: Duration::from_millis(20),
+            executors: 1,
         },
     );
     let mut rng = XorShiftRng::new(9);
@@ -202,12 +203,20 @@ fn tune_cache_roundtrip_and_memoisation() {
     let mut calls = 0;
     let c1 = cache.get_or_tune(key.clone(), || {
         calls += 1;
-        nmprune::engine::LayerChoice { v: 16, tile: 4 }
+        nmprune::engine::LayerChoice {
+            v: 16,
+            tile: 4,
+            threads: 2,
+        }
     });
-    assert_eq!((c1.v, c1.tile), (16, 4));
+    assert_eq!((c1.v, c1.tile, c1.threads), (16, 4, 2));
     let c2 = cache.get_or_tune(key.clone(), || {
         calls += 1;
-        nmprune::engine::LayerChoice { v: 8, tile: 2 }
+        nmprune::engine::LayerChoice {
+            v: 8,
+            tile: 2,
+            threads: 1,
+        }
     });
     assert_eq!((c2.v, c2.tile), (16, 4), "memoised value must win");
     assert_eq!(calls, 1);
@@ -215,7 +224,7 @@ fn tune_cache_roundtrip_and_memoisation() {
 
     let mut reloaded = TuneCache::load(path_s);
     let c3 = reloaded.get_or_tune(key, || panic!("must hit the persisted cache"));
-    assert_eq!((c3.v, c3.tile), (16, 4));
+    assert_eq!((c3.v, c3.tile, c3.threads), (16, 4, 2));
 }
 
 /// Different sparsity must produce different cache keys.

@@ -1,0 +1,120 @@
+//! Property-based parity for the capped, affinity-aware scheduler
+//! (satellite of the pool-scheduling PR): for random GEMM shapes,
+//! sparsities, pool sizes {1, 2, 8} and per-call caps 1..=pool+1,
+//! capped parallel SpMM / dense GEMM must be bit-for-bit equal to the
+//! serial kernels — including caps larger than the pool and strip
+//! counts smaller than the cap.
+//!
+//! Pools come from `ThreadPool::shared`, so the whole property run
+//! spawns at most three worker sets no matter how many cases execute.
+
+use nmprune::gemm::threaded::{gemm_dense_parallel_capped, spmm_colwise_parallel_capped};
+use nmprune::gemm::{gemm_dense, spmm_colwise};
+use nmprune::im2col::pack_data_matrix;
+use nmprune::pruning::prune_colwise_adaptive;
+use nmprune::util::{prop, ThreadPool};
+
+/// One random scheduling scenario. `Debug` output is the shrink report.
+#[derive(Debug)]
+struct Case {
+    rows: usize,
+    k: usize,
+    cols: usize,
+    v: usize,
+    tile: usize,
+    sparsity: f64,
+    pool_size: usize,
+    /// Per-call cap, deliberately allowed to exceed the pool by one.
+    cap: usize,
+    w: Vec<f32>,
+    a: Vec<f32>,
+}
+
+fn gen_case(r: &mut nmprune::util::XorShiftRng, size: usize) -> Case {
+    let rows = 1 + r.below(8 + size / 4);
+    let k = 1 + r.below(8 + size / 2);
+    // Columns scale with the size hint; small sizes give strip counts
+    // below the cap (and even a single ragged strip).
+    let cols = 1 + r.below(4 + 3 * size);
+    let v = [4usize, 8, 16, 32][r.below(4)];
+    let tile = 1 + r.below(8);
+    let sparsity = 0.25 + 0.5 * r.below(3) as f64 / 2.0; // {0.25, 0.5, 0.75}
+    let pool_size = [1usize, 2, 8][r.below(3)];
+    let cap = 1 + r.below(pool_size + 1); // 1..=pool_size+1
+    let w = r.normal_vec(rows * k, 1.0);
+    let a = r.normal_vec(k * cols, 1.0);
+    Case {
+        rows,
+        k,
+        cols,
+        v,
+        tile,
+        sparsity,
+        pool_size,
+        cap,
+        w,
+        a,
+    }
+}
+
+fn capped_equals_serial(c: &Case) -> bool {
+    let p = pack_data_matrix(&c.a, c.k, c.cols, c.v);
+    let cp = prune_colwise_adaptive(&c.w, c.rows, c.k, c.tile, c.sparsity);
+    let pool = ThreadPool::shared(c.pool_size);
+    let serial_sparse = spmm_colwise(&cp, &p);
+    let serial_dense = gemm_dense(&c.w, c.rows, &p, c.tile);
+    spmm_colwise_parallel_capped(&cp, &p, &pool, Some(c.cap)) == serial_sparse
+        && gemm_dense_parallel_capped(&c.w, c.rows, &p, c.tile, &pool, Some(c.cap))
+            == serial_dense
+}
+
+#[test]
+fn prop_capped_kernels_bitwise_equal_serial() {
+    prop::check_seeded(0x5CED, gen_case, capped_equals_serial);
+}
+
+/// The uncapped path (`None`) must agree too — it is the `cap = pool`
+/// special case and shares all the chunking arithmetic.
+#[test]
+fn prop_uncapped_kernels_bitwise_equal_serial() {
+    prop::check_seeded(0x5CEE, gen_case, |c| {
+        let p = pack_data_matrix(&c.a, c.k, c.cols, c.v);
+        let cp = prune_colwise_adaptive(&c.w, c.rows, c.k, c.tile, c.sparsity);
+        let pool = ThreadPool::shared(c.pool_size);
+        spmm_colwise_parallel_capped(&cp, &p, &pool, None) == spmm_colwise(&cp, &p)
+    });
+}
+
+/// Directed corners the generator only hits probabilistically: every
+/// (pool, cap) combination from the satellite spec on a strip count
+/// smaller than, equal to, and larger than the cap.
+#[test]
+fn capped_parity_exhaustive_corners() {
+    let mut r = nmprune::util::XorShiftRng::new(0xC0DE);
+    let (rows, k, v, tile) = (6usize, 12usize, 8usize, 4usize);
+    let w = r.normal_vec(rows * k, 1.0);
+    for strips in [1usize, 2, 3, 9, 16] {
+        let cols = strips * v - v / 2; // ragged final strip
+        let a = r.normal_vec(k * cols, 1.0);
+        let p = pack_data_matrix(&a, k, cols, v);
+        assert_eq!(p.strips, strips);
+        let cp = prune_colwise_adaptive(&w, rows, k, tile, 0.5);
+        let serial_sparse = spmm_colwise(&cp, &p);
+        let serial_dense = gemm_dense(&w, rows, &p, tile);
+        for pool_size in [1usize, 2, 8] {
+            let pool = ThreadPool::shared(pool_size);
+            for cap in 1..=pool_size + 1 {
+                assert_eq!(
+                    spmm_colwise_parallel_capped(&cp, &p, &pool, Some(cap)),
+                    serial_sparse,
+                    "sparse strips={strips} pool={pool_size} cap={cap}"
+                );
+                assert_eq!(
+                    gemm_dense_parallel_capped(&w, rows, &p, tile, &pool, Some(cap)),
+                    serial_dense,
+                    "dense strips={strips} pool={pool_size} cap={cap}"
+                );
+            }
+        }
+    }
+}

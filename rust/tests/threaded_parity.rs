@@ -3,7 +3,7 @@
 //! * the parallel kernels (`spmm_colwise_parallel`, `gemm_dense_parallel`)
 //!   are bit-for-bit equal to the serial kernels across pool sizes
 //!   {1, 2, 8}, including strip counts that do not divide evenly among
-//!   workers;
+//!   workers — and across per-call parallelism caps 1..=pool+1;
 //! * a long-lived engine runs an entire request stream (100 sequential
 //!   inferences) against one `ThreadPool` whose worker set never grows —
 //!   the "zero threads spawned per GEMM call" acceptance property.
@@ -12,7 +12,10 @@ use std::sync::Arc;
 
 use nmprune::conv::ConvShape;
 use nmprune::engine::{ExecConfig, Executor};
-use nmprune::gemm::threaded::{gemm_dense_parallel, spmm_colwise_parallel};
+use nmprune::gemm::threaded::{
+    gemm_dense_parallel, gemm_dense_parallel_capped, spmm_colwise_parallel,
+    spmm_colwise_parallel_capped,
+};
 use nmprune::gemm::{gemm_dense, spmm_colwise};
 use nmprune::im2col::pack_data_matrix;
 use nmprune::models::{Graph, Op};
@@ -49,6 +52,36 @@ fn parallel_kernels_match_serial_bitwise_across_pool_sizes() {
                 gemm_dense_parallel(&w, rows, &p, 8, &pool),
                 serial_dense,
                 "dense kernel diverged: cols={cols} v={v} threads={threads}"
+            );
+        }
+    }
+}
+
+/// Per-call caps on top of the pool-size sweep: every cap from 1 to one
+/// past the pool size must leave the kernels bit-for-bit serial-equal
+/// (caps pick *how many* workers participate, never *what* they do).
+#[test]
+fn capped_dispatch_matches_serial_bitwise_across_pools() {
+    let mut r = XorShiftRng::new(8);
+    let (rows, k, cols, v) = (24usize, 36usize, 205usize, 16usize);
+    let w = r.normal_vec(rows * k, 1.0);
+    let a = r.normal_vec(k * cols, 1.0);
+    let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+    let p = pack_data_matrix(&a, k, cols, v);
+    let serial_sparse = spmm_colwise(&cp, &p);
+    let serial_dense = gemm_dense(&w, rows, &p, 8);
+    for threads in [1usize, 2, 8] {
+        let pool = ThreadPool::shared(threads);
+        for cap in 1..=threads + 1 {
+            assert_eq!(
+                spmm_colwise_parallel_capped(&cp, &p, &pool, Some(cap)),
+                serial_sparse,
+                "sparse pool={threads} cap={cap}"
+            );
+            assert_eq!(
+                gemm_dense_parallel_capped(&w, rows, &p, 8, &pool, Some(cap)),
+                serial_dense,
+                "dense pool={threads} cap={cap}"
             );
         }
     }
