@@ -1,17 +1,31 @@
 //! Serving demo — the Layer-3 coordinator under load.
 //!
 //! Starts the dynamic-batching inference server with a sparse (50%)
-//! ResNet-18, fires a burst of requests from several client threads, and
-//! reports throughput, mean batch size, and the latency distribution —
-//! then repeats with the dense NHWC baseline for comparison.
+//! ResNet-18, drives it with an open-loop load generator, and reports
+//! throughput, mean batch size, and the latency distribution — then
+//! repeats with the dense NHWC baseline for comparison.
 //!
 //! `--executors N` runs N concurrent batch executors against the one
-//! shared pool (the server slices per-layer parallelism caps so they
-//! never oversubscribe it) — with >1, one batch computes while the
-//! next forms.
+//! shared pool — with >1, one batch computes while the next forms.
+//! `--adaptive` switches the server to load-aware mode: the per-batch
+//! thread cap and the number of actively draining dispatchers follow
+//! queue depth (deep burst → slice the pool so batches overlap; trickle
+//! → a lone batch takes every worker, surplus dispatchers park). The
+//! chosen cap range is printed per configuration. `--pin` core-pins the
+//! pool workers (Linux `sched_setaffinity`; a graceful no-op
+//! elsewhere — `NMPRUNE_PIN=1` does the same for shared pools).
 //!
-//! Run: `cargo run --release --example serve_sparse -- [--requests 24]
-//!       [--res 112] [--threads 2] [--executors 2]`
+//! The load generator is open-loop and bursty: `--bursts B` waves of
+//! `--burst N` requests, fired every `--gap-ms G` regardless of how far
+//! the server got — queue depth genuinely builds up during a wave and
+//! drains between waves, which is what the adaptive controller reacts
+//! to. `--bursts 1` degenerates to the old single-burst behaviour.
+//!
+//! Run: `cargo run --release --example serve_sparse -- [--res 112]
+//!       [--threads 2] [--executors 2] [--adaptive] [--pin]
+//!       [--bursts 4] [--burst 8] [--gap-ms 30]`
+
+use std::sync::Arc;
 
 use nmprune::engine::{ExecConfig, Server, ServerConfig};
 use nmprune::models::{build_model, ModelArch};
@@ -19,7 +33,13 @@ use nmprune::tensor::Tensor;
 use nmprune::util::cli::Args;
 use nmprune::util::{ThreadPool, XorShiftRng};
 
-fn drive(label: &str, cfg: ExecConfig, res: usize, requests: usize, executors: usize) {
+struct Load {
+    bursts: usize,
+    burst: usize,
+    gap: std::time::Duration,
+}
+
+fn drive(label: &str, cfg: ExecConfig, res: usize, load: &Load, executors: usize, adaptive: bool) {
     let server = Server::start(
         |b| build_model(ModelArch::ResNet18, b, res),
         cfg,
@@ -28,23 +48,34 @@ fn drive(label: &str, cfg: ExecConfig, res: usize, requests: usize, executors: u
             batch_sizes: vec![1, 2, 4],
             batch_window: std::time::Duration::from_millis(10),
             executors,
+            adaptive,
         },
     );
     let mut rng = XorShiftRng::new(99);
-    // Two bursts: a full burst (batcher should coalesce), then a trickle
-    // (batcher should fall back to singles after the window).
+    // Open-loop waves: each burst is submitted in full, then the
+    // generator sleeps for the gap — it never waits for replies, so
+    // queue depth reflects the offered load, not the service rate.
     let mut handles = Vec::new();
-    for _ in 0..requests {
-        handles.push(server.submit(Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0)));
+    for b in 0..load.bursts {
+        for _ in 0..load.burst {
+            handles.push(server.submit(Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0)));
+        }
+        if b + 1 < load.bursts {
+            std::thread::sleep(load.gap);
+        }
     }
     for h in handles.drain(..) {
         let reply = h.recv().expect("reply");
         assert_eq!(reply.logits.len(), 1000, "full logits per request");
     }
     let stats = server.shutdown();
+    let caps = match stats.cap_range {
+        Some((lo, hi)) => format!("caps={lo}..{hi}"),
+        None => "caps=static".into(),
+    };
     println!(
         "{label:<14} served={:<4} throughput={:>7.2} req/s  mean_batch={:.2}  \
-         latency p50={:.0} ms p95={:.0} ms",
+         latency p50={:.0} ms p95={:.0} ms  {caps}",
         stats.served,
         stats.throughput_rps,
         stats.mean_batch,
@@ -55,20 +86,63 @@ fn drive(label: &str, cfg: ExecConfig, res: usize, requests: usize, executors: u
 
 fn main() {
     let args = Args::from_env();
-    let requests = args.get_parsed("requests", 24usize);
     let res = args.get_parsed("res", 112usize);
     let threads = args.get_parsed("threads", 2usize);
     let executors = args.get_parsed("executors", 2usize);
+    let adaptive = args.has_flag("adaptive");
+    let pin = args.has_flag("pin");
+    let load = Load {
+        bursts: args.get_parsed("bursts", 4usize),
+        burst: args.get_parsed("burst", 8usize),
+        gap: std::time::Duration::from_millis(args.get_parsed("gap-ms", 30u64)),
+    };
     // One persistent pool serves every configuration below; the
     // executors share it without oversubscription (per-run caps).
-    let pool = ThreadPool::shared(threads);
+    let pool = if pin {
+        Arc::new(ThreadPool::new_pinned(threads))
+    } else {
+        ThreadPool::shared(threads)
+    };
     println!(
-        "serving ResNet-18 @{res}, {requests} requests per config, \
-         {executors} batch executors on one {threads}-worker pool\n"
+        "serving ResNet-18 @{res}, {}x{} requests ({}ms gaps) per config, \
+         {executors} batch executors on one {threads}-worker pool \
+         (adaptive={adaptive}, pinned={})\n",
+        load.bursts,
+        load.burst,
+        load.gap.as_millis(),
+        if pin { "requested" } else { "no" },
     );
-    drive("sparse 50%", ExecConfig::sparse_cnhw(pool.clone(), 0.5), res, requests, executors);
-    drive("sparse 75%", ExecConfig::sparse_cnhw(pool.clone(), 0.75), res, requests, executors);
-    drive("dense CNHW", ExecConfig::dense_cnhw(pool.clone()), res, requests, executors);
-    drive("dense NHWC", ExecConfig::dense_nhwc(pool), res, requests, executors);
+    drive(
+        "sparse 50%",
+        ExecConfig::sparse_cnhw(pool.clone(), 0.5),
+        res,
+        &load,
+        executors,
+        adaptive,
+    );
+    drive(
+        "sparse 75%",
+        ExecConfig::sparse_cnhw(pool.clone(), 0.75),
+        res,
+        &load,
+        executors,
+        adaptive,
+    );
+    drive(
+        "dense CNHW",
+        ExecConfig::dense_cnhw(pool.clone()),
+        res,
+        &load,
+        executors,
+        adaptive,
+    );
+    drive(
+        "dense NHWC",
+        ExecConfig::dense_nhwc(pool),
+        res,
+        &load,
+        executors,
+        adaptive,
+    );
     println!("\n(paper Table 2: sparse ResNet-18 up to 4.0x over the dense NHWC baseline)");
 }

@@ -3,5 +3,7 @@
 pub mod shape;
 pub mod op;
 
-pub use op::{Conv2dDenseCnhw, Conv2dDenseNchw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath};
+pub use op::{
+    compose_caps, Conv2dDenseCnhw, Conv2dDenseNchw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath,
+};
 pub use shape::ConvShape;

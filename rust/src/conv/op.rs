@@ -46,14 +46,16 @@ pub enum ConvPath {
     SparseCnhw,
 }
 
-/// Per-layer parallelism cap encoding shared by the conv operators:
-/// `0` means "no cap — whole pool", anything else is the max number of
-/// pool participants a `run` may occupy.
-fn cap_of(threads: usize) -> Option<usize> {
-    if threads == 0 {
-        None
-    } else {
-        Some(threads)
+/// Compose the layer's tuned cap with a caller-supplied per-run cap
+/// (both in the `0 = uncapped` encoding): the effective cap is the min
+/// of whichever are set, so an adaptive server can only tighten — never
+/// widen — what the tuner chose for a layer.
+pub fn compose_caps(layer: usize, run: usize) -> Option<usize> {
+    match (layer, run) {
+        (0, 0) => None,
+        (0, r) => Some(r),
+        (l, 0) => Some(l),
+        (l, r) => Some(l.min(r)),
     }
 }
 
@@ -86,13 +88,19 @@ impl Conv2dDenseNhwc {
 
     /// Run on an NHWC input, producing NHWC output.
     pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        self.run_capped(x, pool, 0)
+    }
+
+    /// [`Conv2dDenseNhwc::run`] with an additional per-run cap
+    /// (0 = none) composed onto the layer cap via [`compose_caps`].
+    pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         conv2d_indirect_nhwc_parallel_capped(
             x,
             &self.filter,
             &self.shape,
             &self.ib,
             pool,
-            cap_of(self.threads),
+            compose_caps(self.threads, run_cap),
         )
     }
 }
@@ -128,6 +136,12 @@ impl Conv2dDenseCnhw {
     /// Run on a CNHW input, producing CNHW output
     /// `[C_out, N, H_out, W_out]`.
     pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        self.run_capped(x, pool, 0)
+    }
+
+    /// [`Conv2dDenseCnhw::run`] with an additional per-run cap
+    /// (0 = none) composed onto the layer cap via [`compose_caps`].
+    pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         let s = &self.shape;
         let out = PACK_SCRATCH.with(|cell| {
             let mut packed = cell.borrow_mut();
@@ -138,7 +152,7 @@ impl Conv2dDenseCnhw {
                 &packed,
                 self.tile,
                 pool,
-                cap_of(self.threads),
+                compose_caps(self.threads, run_cap),
             )
         });
         Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
@@ -179,6 +193,12 @@ impl Conv2dDenseNchw {
     /// Run on an NCHW input `[N, C_in, H, W]`, producing NCHW output
     /// `[N, C_out, H_out, W_out]`.
     pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        self.run_capped(x, pool, 0)
+    }
+
+    /// [`Conv2dDenseNchw::run`] with an additional per-run cap
+    /// (0 = none) composed onto the layer cap via [`compose_caps`].
+    pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         let s = &self.shape;
         let (ho, wo) = (s.h_out(), s.w_out());
         let per_image = crate::im2col::fused_im2col_pack_nchw(x, s, self.v);
@@ -191,7 +211,7 @@ impl Conv2dDenseNchw {
                 p,
                 self.tile,
                 pool,
-                cap_of(self.threads),
+                compose_caps(self.threads, run_cap),
             );
             out.data[n * img_out..(n + 1) * img_out].copy_from_slice(&y);
         }
@@ -248,11 +268,22 @@ impl Conv2dSparseCnhw {
 
     /// Run on a CNHW input, producing CNHW output.
     pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        self.run_capped(x, pool, 0)
+    }
+
+    /// [`Conv2dSparseCnhw::run`] with an additional per-run cap
+    /// (0 = none) composed onto the layer cap via [`compose_caps`].
+    pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         let s = &self.shape;
         let out = PACK_SCRATCH.with(|cell| {
             let mut packed = cell.borrow_mut();
             fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
-            spmm_colwise_parallel_capped(&self.weights, &packed, pool, cap_of(self.threads))
+            spmm_colwise_parallel_capped(
+                &self.weights,
+                &packed,
+                pool,
+                compose_caps(self.threads, run_cap),
+            )
         });
         Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
     }
@@ -339,6 +370,40 @@ mod tests {
             assert!(allclose(&got.data, &want.data, 1e-4, 1e-5), "threads={threads}");
         }
         assert!((op.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compose_caps_takes_the_min_of_set_caps() {
+        assert_eq!(compose_caps(0, 0), None);
+        assert_eq!(compose_caps(0, 3), Some(3));
+        assert_eq!(compose_caps(2, 0), Some(2));
+        assert_eq!(compose_caps(2, 3), Some(2));
+        assert_eq!(compose_caps(4, 1), Some(1));
+    }
+
+    /// A per-run cap is the same scheduling-only knob as the layer cap:
+    /// outputs stay bitwise identical for every composition.
+    #[test]
+    fn run_capped_never_changes_conv_outputs() {
+        let s = ConvShape::square(1, 4, 8, 8, 3, 1, 1);
+        let (x, w) = rand_case(23, s);
+        let pool = ThreadPool::new(4);
+        let sp = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4).with_thread_cap(3);
+        let de = Conv2dDenseCnhw::new(s, &w, 16, 4).with_thread_cap(3);
+        let base_sparse = sp.run(&x, &pool);
+        let base_dense = de.run(&x, &pool);
+        for run_cap in [0usize, 1, 2, 4, 7] {
+            assert_eq!(
+                sp.run_capped(&x, &pool, run_cap).data,
+                base_sparse.data,
+                "sparse run_cap={run_cap}"
+            );
+            assert_eq!(
+                de.run_capped(&x, &pool, run_cap).data,
+                base_dense.data,
+                "dense run_cap={run_cap}"
+            );
+        }
     }
 
     #[test]

@@ -222,6 +222,16 @@ impl Executor {
     /// `[N, classes]`. Activations flow CNHW internally unless the path
     /// is DenseNhwc (the paper's layout policy, §4.1.2).
     pub fn run(&self, input_nhwc: &Tensor) -> Tensor {
+        self.run_capped(input_nhwc, 0)
+    }
+
+    /// [`Executor::run`] with a per-run parallelism cap (0 = none)
+    /// applied on top of every layer's tuned cap — the effective cap per
+    /// conv is the min of the two (see [`crate::conv::compose_caps`]).
+    /// This is how a load-aware server tightens a batch's pool slice at
+    /// dispatch time without recompiling executors or losing per-layer
+    /// tuning; caps are pure scheduling and never change numerics.
+    pub fn run_capped(&self, input_nhwc: &Tensor, run_cap: usize) -> Tensor {
         let nhwc = self.cfg.path == ConvPath::DenseNhwc;
         let pool = self.cfg.pool.as_ref();
         let mut acts: Vec<Option<Tensor>> = vec![None; self.graph.nodes.len()];
@@ -252,9 +262,9 @@ impl Executor {
                 Op::Conv { relu, .. } => {
                     let x = fetch(&acts, &node.inputs, 0);
                     let mut y = match self.convs.get(&node.id).unwrap() {
-                        PreparedConv::Nhwc(op) => op.run(x, pool),
-                        PreparedConv::Cnhw(op) => op.run(x, pool),
-                        PreparedConv::Sparse(op) => op.run(x, pool),
+                        PreparedConv::Nhwc(op) => op.run_capped(x, pool, run_cap),
+                        PreparedConv::Cnhw(op) => op.run_capped(x, pool, run_cap),
+                        PreparedConv::Sparse(op) => op.run_capped(x, pool, run_cap),
                     };
                     if *relu {
                         ops::relu_inplace(&mut y);
@@ -463,6 +473,26 @@ mod tests {
             Executor::new(g, ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
         // Tuning changes execution parameters, never numerics.
         assert!(allclose(&y.data, &y_default.data, 1e-4, 1e-5));
+    }
+
+    /// Per-run caps (the adaptive server's dispatch-time knob) compose
+    /// with per-layer tuned caps as a min and never change numerics:
+    /// every composition is bitwise equal to the uncapped run.
+    #[test]
+    fn per_run_cap_composes_with_layer_caps_bitwise() {
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let x = input(1, 32, 6);
+        let mut cfg = ExecConfig::sparse_cnhw(ThreadPool::shared(4), 0.5);
+        cfg.default_choice.threads = 3;
+        let e = Executor::new(g, cfg);
+        let base = e.run(&x);
+        for run_cap in [0usize, 1, 2, 4, 9] {
+            assert_eq!(
+                e.run_capped(&x, run_cap).data,
+                base.data,
+                "run cap {run_cap} changed numerics"
+            );
+        }
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! them into batches (up to `max_batch`, waiting at most `batch_window`)
 //! and run them on pre-compiled executors — one per supported batch
 //! size, mirroring how the AOT artifacts are compiled per batch shape.
-//! Per-request latency and aggregate throughput are recorded.
+//! When fewer requests are pending than the smallest compiled batch
+//! (a trickle, or the shutdown drain), the batch is zero-padded up to
+//! the smallest executor's size and the padded rows' logits are
+//! discarded — a request always gets a reply. Per-request latency and
+//! aggregate throughput are recorded.
 //!
 //! # Concurrent batch executors
 //!
@@ -18,9 +22,33 @@
 //! otherwise the server caps each executor's GEMMs at
 //! `pool size / executors` participants so concurrent batches slice the
 //! pool instead of queueing a full pool's worth of jobs each.
+//!
+//! # Load-aware adaptive mode
+//!
+//! The static `pool/executors` slice is right only when every
+//! dispatcher is actually busy. `ServerConfig::adaptive` replaces the
+//! startup-time split with two decisions made *per batch* against a
+//! queue-depth gauge (an atomic incremented in [`Server::submit`],
+//! decremented when requests drain into a batch):
+//!
+//! 1. **Per-run thread cap** — each batch executes under
+//!    [`Executor::run_capped`] with `pool size / expected overlapping
+//!    batches` participants: a deep queue slices the pool harder so
+//!    more batches run beside each other, an empty queue lets a lone
+//!    batch take the whole pool. The per-run cap composes with
+//!    per-layer tuned caps as a min, so tuning is never widened.
+//! 2. **Active dispatchers** — surplus dispatchers park on a condvar
+//!    while the queue is shallow (one stays live) and are woken by
+//!    `submit` on bursts, instead of all camping on the intake lock.
+//!
+//! The chosen caps are observable: `ServerStats::cap_range` reports the
+//! min/max cap used, and `NMPRUNE_SERVE_TRACE=1` prints one line per
+//! batch. Caps and parking are pure scheduling — logits are bitwise
+//! identical between static and adaptive modes.
 
-use std::sync::mpsc::{channel, Receiver, Sender, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -40,6 +68,10 @@ pub struct ServerConfig {
     /// Concurrent batch-executor (dispatcher) threads sharing the one
     /// request queue and the one pool. 0 clamps to 1.
     pub executors: usize,
+    /// Load-aware mode: derive the per-run thread cap and the number of
+    /// actively draining dispatchers from queue depth per batch, instead
+    /// of the fixed `pool/executors` slice chosen at startup.
+    pub adaptive: bool,
 }
 
 impl Default for ServerConfig {
@@ -48,6 +80,7 @@ impl Default for ServerConfig {
             batch_sizes: vec![1, 2, 4],
             batch_window: Duration::from_millis(5),
             executors: 1,
+            adaptive: false,
         }
     }
 }
@@ -63,7 +96,8 @@ pub struct Reply {
     pub logits: Vec<f32>,
     /// Queue + batching + compute latency.
     pub latency: Duration,
-    /// Batch this request was served in.
+    /// Batch this request was served in (the compiled batch size — may
+    /// exceed the number of real requests when the batch was padded).
     pub batch: usize,
 }
 
@@ -71,6 +105,8 @@ pub struct Reply {
 struct StatsInner {
     latencies_ns: Vec<f64>,
     batches: Vec<usize>,
+    /// Per-batch chosen per-run thread cap (adaptive mode only).
+    caps: Vec<usize>,
     started: Option<Instant>,
     finished: Option<Instant>,
     served: usize,
@@ -80,9 +116,68 @@ struct StatsInner {
 #[derive(Clone, Debug)]
 pub struct ServerStats {
     pub served: usize,
+    /// Empty (`n == 0`, all zeros) when nothing was served — never a
+    /// fabricated 0 ns sample.
     pub latency: Summary,
     pub throughput_rps: f64,
     pub mean_batch: f64,
+    /// Min/max per-run thread cap chosen across batches; `None` in
+    /// static mode or when no batch ran. The observable trace of the
+    /// adaptive controller (deep burst → small caps, trickle → pool
+    /// size).
+    pub cap_range: Option<(usize, usize)>,
+}
+
+/// Queue-depth gauge plus the parking primitive for surplus
+/// dispatchers. `depth` counts requests submitted but not yet drained
+/// into a batch (incremented in `submit`, decremented at batch
+/// formation); `busy` counts dispatchers currently computing a batch —
+/// without it, a request arriving while the only awake dispatcher is
+/// mid-compute would leave parked dispatchers asleep for a whole batch
+/// time. The condvar wakes parked dispatchers on bursts and at
+/// shutdown.
+struct LoadGauge {
+    depth: AtomicUsize,
+    busy: AtomicUsize,
+    closing: AtomicBool,
+    lock: Mutex<()>,
+    cvar: Condvar,
+}
+
+impl LoadGauge {
+    fn new() -> Self {
+        Self {
+            depth: AtomicUsize::new(0),
+            busy: AtomicUsize::new(0),
+            closing: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cvar: Condvar::new(),
+        }
+    }
+}
+
+/// How many dispatchers are worth keeping awake: the ones already
+/// computing a batch plus one per full `max_batch` of queued work — at
+/// least one, at most all of them.
+fn desired_active(busy: usize, depth: usize, max_batch: usize, n_exec: usize) -> usize {
+    (busy + depth.div_ceil(max_batch.max(1))).clamp(1, n_exec)
+}
+
+/// Per-run thread cap for a batch about to execute: slice the pool by
+/// the number of batches expected to overlap — the ones other
+/// dispatchers are already computing, this one, and what the remaining
+/// queue depth can still fill — clamped to the dispatcher count. An
+/// idle server yields the whole pool; a deep queue yields
+/// `pool/n_exec`.
+fn adaptive_cap(
+    busy_others: usize,
+    depth_after: usize,
+    max_batch: usize,
+    n_exec: usize,
+    pool_size: usize,
+) -> usize {
+    let overlap = (busy_others + 1 + depth_after / max_batch.max(1)).clamp(1, n_exec.max(1));
+    pool_size.div_ceil(overlap).max(1)
 }
 
 /// The serving engine.
@@ -90,7 +185,25 @@ pub struct Server {
     tx: Option<Sender<Request>>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
+    gauge: Arc<LoadGauge>,
+    /// Adaptive mode with >1 dispatcher: only then can anyone be parked
+    /// and worth waking from `submit` (a lone dispatcher never parks).
+    wake_dispatchers: bool,
     res: usize,
+}
+
+/// Everything a dispatcher thread needs, shared across all of them.
+struct Dispatch {
+    rx: Arc<Mutex<Receiver<Request>>>,
+    executors: Arc<Vec<(usize, Executor)>>,
+    window: Duration,
+    stats: Arc<Mutex<StatsInner>>,
+    gauge: Arc<LoadGauge>,
+    res: usize,
+    adaptive: bool,
+    n_exec: usize,
+    pool_size: usize,
+    trace: bool,
 }
 
 impl Server {
@@ -108,14 +221,17 @@ impl Server {
         let mut sizes = cfg.batch_sizes.clone();
         sizes.sort_unstable();
         let n_exec = cfg.executors.max(1);
+        let pool_size = exec.pool.size();
         let mut exec = exec;
-        if n_exec > 1 && exec.default_choice.threads == 0 {
-            // Several executors share one pool: slice it so a batch's
-            // GEMMs occupy pool/executors workers and concurrent
-            // batches run beside each other instead of queueing a full
-            // pool's worth of jobs each. Explicit per-layer tuning
-            // (per_layer entries / a preset default cap) is respected.
-            exec.default_choice.threads = exec.pool.size().div_ceil(n_exec).max(1);
+        if !cfg.adaptive && n_exec > 1 && exec.default_choice.threads == 0 {
+            // Static mode with several executors on one pool: slice it
+            // so a batch's GEMMs occupy pool/executors workers and
+            // concurrent batches run beside each other instead of
+            // queueing a full pool's worth of jobs each. Explicit
+            // per-layer tuning (per_layer entries / a preset default
+            // cap) is respected. Adaptive mode skips this: the slice is
+            // decided per batch from queue depth instead.
+            exec.default_choice.threads = pool_size.div_ceil(n_exec).max(1);
         }
         let executors: Arc<Vec<(usize, Executor)>> = Arc::new(
             sizes
@@ -126,19 +242,32 @@ impl Server {
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(Mutex::new(StatsInner::default()));
-        let window = cfg.batch_window;
+        let gauge = Arc::new(LoadGauge::new());
+        let ctx = Arc::new(Dispatch {
+            rx,
+            executors,
+            window: cfg.batch_window,
+            stats: Arc::clone(&stats),
+            gauge: Arc::clone(&gauge),
+            res,
+            adaptive: cfg.adaptive,
+            n_exec,
+            pool_size,
+            // `=1` to enable, like NMPRUNE_PIN (so `=0` really is off).
+            trace: std::env::var("NMPRUNE_SERVE_TRACE").map(|v| v == "1").unwrap_or(false),
+        });
         let workers = (0..n_exec)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                let executors = Arc::clone(&executors);
-                let stats = Arc::clone(&stats);
-                std::thread::spawn(move || dispatcher(rx, executors, window, stats, res))
+            .map(|idx| {
+                let ctx = Arc::clone(&ctx);
+                std::thread::spawn(move || dispatcher(&ctx, idx))
             })
             .collect();
         Self {
             tx: Some(tx),
             workers,
             stats,
+            gauge,
+            wake_dispatchers: cfg.adaptive && n_exec > 1,
             res,
         }
     }
@@ -147,6 +276,9 @@ impl Server {
     pub fn submit(&self, image: Tensor) -> Receiver<Reply> {
         assert_eq!(image.shape, vec![self.res, self.res, 3], "image shape");
         let (reply_tx, reply_rx) = channel();
+        // Gauge before send: a dispatcher can only drain (and decrement
+        // for) this request after `send`, so depth never underflows.
+        self.gauge.depth.fetch_add(1, Ordering::AcqRel);
         self.tx
             .as_ref()
             .unwrap()
@@ -156,12 +288,27 @@ impl Server {
                 reply: reply_tx,
             })
             .expect("server stopped");
+        if self.wake_dispatchers {
+            // Wake parked dispatchers so a burst is met with more
+            // drains. Taking the lock pairs the notify with the parked
+            // side's predicate check (no missed wake-ups); the parked
+            // side's wait also has a timeout backstop.
+            let _guard = self.gauge.lock.lock().unwrap();
+            self.gauge.cvar.notify_all();
+        }
         reply_rx
     }
 
     /// Drain and stop the server, returning aggregate stats.
     pub fn shutdown(mut self) -> ServerStats {
         self.tx.take(); // closes channel; dispatchers drain then exit
+        // Wake parked dispatchers so they observe the close and help
+        // drain whatever is still queued.
+        self.gauge.closing.store(true, Ordering::Release);
+        {
+            let _guard = self.gauge.lock.lock().unwrap();
+            self.gauge.cvar.notify_all();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -173,7 +320,9 @@ impl Server {
         ServerStats {
             served: inner.served,
             latency: if inner.latencies_ns.is_empty() {
-                Summary::of(&[0.0])
+                // Nothing served: report an explicitly empty summary
+                // instead of fabricating a 0 ns request.
+                Summary::empty()
             } else {
                 Summary::of(&inner.latencies_ns)
             },
@@ -187,6 +336,14 @@ impl Server {
             } else {
                 inner.batches.iter().sum::<usize>() as f64 / inner.batches.len() as f64
             },
+            cap_range: inner
+                .caps
+                .iter()
+                .copied()
+                .fold(None, |acc: Option<(usize, usize)>, c| match acc {
+                    None => Some((c, c)),
+                    Some((lo, hi)) => Some((lo.min(c), hi.max(c))),
+                }),
         }
     }
 }
@@ -195,26 +352,68 @@ impl Server {
 /// queue: the receiver sits behind a mutex, and each request is
 /// delivered to exactly one dispatcher, so every request is answered
 /// exactly once regardless of how many executors run.
-fn dispatcher(
-    rx: Arc<Mutex<Receiver<Request>>>,
-    executors: Arc<Vec<(usize, Executor)>>,
-    window: Duration,
-    stats: Arc<Mutex<StatsInner>>,
-    res: usize,
-) {
-    let max_batch = executors.last().map(|(b, _)| *b).unwrap_or(1);
+fn dispatcher(ctx: &Dispatch, idx: usize) {
+    let max_batch = ctx.executors.last().map(|(b, _)| *b).unwrap_or(1);
+    // Bounded poll interval for parked/polling dispatchers (never 0,
+    // or they would spin).
+    let poll = ctx.window.max(Duration::from_millis(1));
     let mut pending: Vec<Request> = Vec::new();
     let mut open = true;
     while open || !pending.is_empty() {
+        // Adaptive mode: surplus dispatchers park while the queue is
+        // shallow enough that fewer drains suffice. Dispatcher 0 never
+        // parks (something must accept the first request of a burst);
+        // the rest re-check on every submit notify, on a timeout
+        // backstop, and at shutdown.
+        if ctx.adaptive && idx > 0 && open && pending.is_empty() {
+            let mut guard = ctx.gauge.lock.lock().unwrap();
+            while !ctx.gauge.closing.load(Ordering::Acquire)
+                && desired_active(
+                    ctx.gauge.busy.load(Ordering::Acquire),
+                    ctx.gauge.depth.load(Ordering::Acquire),
+                    max_batch,
+                    ctx.n_exec,
+                ) <= idx
+            {
+                let (g, _timed_out) = ctx.gauge.cvar.wait_timeout(guard, poll).unwrap();
+                guard = g;
+            }
+        }
         // Blocking intake of the first request. Holding the queue lock
         // across the blocking recv is fine: there is nothing for the
-        // other dispatchers to receive while the queue is empty.
+        // other dispatchers to receive while the queue is empty. Woken
+        // adaptive dispatchers poll with a bounded wait instead, so
+        // that when the burst is already drained they go back to the
+        // parking check rather than camping on the intake lock.
         if open && pending.is_empty() {
-            match rx.lock().unwrap().recv() {
-                Ok(r) => pending.push(r),
-                Err(_) => {
-                    open = false;
-                    continue;
+            if ctx.adaptive && idx > 0 {
+                // try_lock, not lock: Mutex::lock has no timeout, so a
+                // blocking acquire would camp behind a dispatcher that
+                // idles holding the lock across its recv — exactly the
+                // unbounded wait parking is meant to replace. If the
+                // lock is taken, the owner is handling intake; back off
+                // briefly and re-evaluate parking.
+                match ctx.rx.try_lock() {
+                    Ok(q) => match q.recv_timeout(poll) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            continue;
+                        }
+                    },
+                    Err(_) => {
+                        std::thread::sleep(Duration::from_micros(500));
+                        continue;
+                    }
+                }
+            } else {
+                match ctx.rx.lock().unwrap().recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => {
+                        open = false;
+                        continue;
+                    }
                 }
             }
         }
@@ -224,8 +423,8 @@ fn dispatcher(
         // batch until the *next* request arrives; serving the batch we
         // already have keeps trickle-latency bounded by the window.
         if open {
-            if let Ok(q) = rx.try_lock() {
-                let deadline = Instant::now() + window;
+            if let Ok(q) = ctx.rx.try_lock() {
+                let deadline = Instant::now() + ctx.window;
                 while pending.len() < max_batch {
                     let now = Instant::now();
                     if now >= deadline {
@@ -245,35 +444,80 @@ fn dispatcher(
         if pending.is_empty() {
             continue;
         }
-        // Largest supported batch ≤ pending.
-        let (batch, exec) = executors
+        // Largest supported batch ≤ pending — or, when even the
+        // smallest compiled batch exceeds what is pending (trickle /
+        // shutdown drain), the smallest one zero-padded: the executor's
+        // compiled input shape is always honoured and every request is
+        // answered. (Running `batch.min(pending.len())` real rows
+        // against a larger compiled batch used to trip the Input-op
+        // shape assert and drop the requests.)
+        let (batch, exec) = ctx
+            .executors
             .iter()
             .rev()
             .find(|(b, _)| *b <= pending.len())
-            .unwrap_or(&executors[0]);
-        let batch = (*batch).min(pending.len());
-        let group: Vec<Request> = pending.drain(..batch).collect();
-        // Assemble the batched NHWC input.
-        let mut input = Tensor::zeros(&[batch, res, res, 3]);
-        let per = res * res * 3;
+            .unwrap_or(&ctx.executors[0]);
+        let batch = *batch;
+        let take = batch.min(pending.len());
+        let group: Vec<Request> = pending.drain(..take).collect();
+        ctx.gauge.depth.fetch_sub(take, Ordering::AcqRel);
+        // Assemble the batched NHWC input; rows [take, batch) stay zero
+        // and their logits are computed but discarded.
+        let mut input = Tensor::zeros(&[batch, ctx.res, ctx.res, 3]);
+        let per = ctx.res * ctx.res * 3;
         for (i, r) in group.iter().enumerate() {
             input.data[i * per..(i + 1) * per].copy_from_slice(&r.image.data);
         }
+        // Per-run cap: adaptive mode slices the pool by how many
+        // batches can overlap — dispatchers already computing, this
+        // batch, and what is still queued; static mode relies on the
+        // startup-time default cap (run_cap 0 = defer to per-layer
+        // choices). `busy` is read before our own increment below, so
+        // it counts the *other* in-flight batches.
+        let run_cap = if ctx.adaptive {
+            adaptive_cap(
+                ctx.gauge.busy.load(Ordering::Acquire),
+                ctx.gauge.depth.load(Ordering::Acquire),
+                max_batch,
+                ctx.n_exec,
+                ctx.pool_size,
+            )
+        } else {
+            0
+        };
+        let t0 = Instant::now();
         {
-            let mut s = stats.lock().unwrap();
-            if s.started.is_none() {
-                s.started = Some(Instant::now());
-            }
+            let mut s = ctx.stats.lock().unwrap();
+            // Keep the earliest start across racing dispatchers.
+            s.started = Some(s.started.map_or(t0, |prev| prev.min(t0)));
         }
-        let logits = exec.run(&input);
+        ctx.gauge.busy.fetch_add(1, Ordering::AcqRel);
+        let logits = exec.run_capped(&input, run_cap);
+        ctx.gauge.busy.fetch_sub(1, Ordering::AcqRel);
         let done = Instant::now();
+        if ctx.trace {
+            eprintln!(
+                "[serve] exec={idx} batch={batch} real={take} cap={run_cap} depth={}",
+                ctx.gauge.depth.load(Ordering::Relaxed)
+            );
+        }
         let classes = logits.shape[1];
-        let mut s = stats.lock().unwrap();
-        s.finished = Some(done);
+        let mut s = ctx.stats.lock().unwrap();
+        // Keep the latest finish: with concurrent executors a batch that
+        // completed *before* us may lock *after* us — blindly storing
+        // our timestamp could rewind the measured wall clock and
+        // inflate throughput_rps.
+        s.finished = Some(s.finished.map_or(done, |prev| prev.max(done)));
+        if ctx.adaptive {
+            s.caps.push(run_cap);
+        }
         for (i, r) in group.into_iter().enumerate() {
             let latency = done - r.enqueued;
             s.latencies_ns.push(latency.as_nanos() as f64);
-            s.batches.push(batch);
+            // Batching efficiency counts *real* requests per batch: a
+            // padded trickle must report mean_batch 1.0, not the
+            // compiled size (Reply::batch still carries the latter).
+            s.batches.push(take);
             s.served += 1;
             let _ = r.reply.send(Reply {
                 logits: logits.data[i * classes..(i + 1) * classes].to_vec(),
@@ -306,6 +550,7 @@ mod tests {
                 batch_sizes: vec![1, 2],
                 batch_window: Duration::from_millis(2),
                 executors: 1,
+                adaptive: false,
             },
         );
         let replies: Vec<_> = (0..6).map(|i| server.submit(image(res, i))).collect();
@@ -318,6 +563,7 @@ mod tests {
         assert_eq!(stats.served, 6);
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.latency.mean > 0.0);
+        assert!(stats.cap_range.is_none(), "static mode records no caps");
     }
 
     #[test]
@@ -331,6 +577,7 @@ mod tests {
                 batch_sizes: vec![1, 2, 4],
                 batch_window: Duration::from_millis(50),
                 executors: 1,
+                adaptive: false,
             },
         );
         // Burst of 8 requests: with a generous window, batches of 4 form.
@@ -359,6 +606,7 @@ mod tests {
                 batch_sizes: vec![1, 2],
                 batch_window: Duration::from_millis(2),
                 executors: 3,
+                adaptive: false,
             },
         ));
         let handles: Vec<_> = (0..clients)
@@ -412,6 +660,7 @@ mod tests {
                     batch_sizes: vec![1],
                     batch_window: Duration::from_millis(1),
                     executors,
+                    adaptive: false,
                 },
             );
             let rxs: Vec<_> = (0..4).map(|i| server.submit(image(res, i))).collect();
@@ -433,6 +682,7 @@ mod tests {
                 batch_sizes: vec![1],
                 batch_window: Duration::from_millis(1),
                 executors: 1,
+                adaptive: false,
             },
         );
         let rxs: Vec<_> = (0..3).map(|i| server.submit(image(res, i))).collect();
@@ -441,5 +691,185 @@ mod tests {
         for rx in rxs {
             assert!(rx.try_recv().is_ok());
         }
+    }
+
+    /// Regression (satellite bugfix): when fewer requests are pending
+    /// than the smallest compiled batch size, the batch is zero-padded
+    /// instead of panicking on the Input-op shape assert — and the real
+    /// rows' logits are bitwise what a hand-padded direct run produces.
+    #[test]
+    fn fewer_requests_than_smallest_batch_are_padded_not_dropped() {
+        let res = 32;
+        let exec_cfg = ExecConfig::dense_cnhw(ThreadPool::shared(2));
+        let direct = Executor::new(build_model(ModelArch::ResNet18, 4, res), exec_cfg.clone());
+        for n in 1..=3usize {
+            let server = Server::start(
+                |b| build_model(ModelArch::ResNet18, b, res),
+                exec_cfg.clone(),
+                res,
+                ServerConfig {
+                    batch_sizes: vec![4],
+                    batch_window: Duration::from_millis(2),
+                    executors: 1,
+                    adaptive: false,
+                },
+            );
+            let images: Vec<Tensor> = (0..n).map(|i| image(res, 100 + i as u64)).collect();
+            let rxs: Vec<_> = images.iter().map(|im| server.submit(im.clone())).collect();
+            for (im, rx) in images.iter().zip(rxs) {
+                let reply = rx.recv().expect("padded batch must still reply");
+                assert_eq!(reply.logits.len(), 1000);
+                assert_eq!(reply.batch, 4, "served on the padded batch-4 executor");
+                assert!(rx.try_recv().is_err(), "exactly one reply");
+                // Per-sample independence: a request's logits equal a
+                // direct batch-4 run with that image in row 0 and the
+                // other rows zero-padded, bitwise.
+                let mut padded = Tensor::zeros(&[4, res, res, 3]);
+                padded.data[..im.data.len()].copy_from_slice(&im.data);
+                let want = direct.run(&padded);
+                assert_eq!(reply.logits, want.data[..1000].to_vec(), "n={n}");
+            }
+            let stats = server.shutdown();
+            assert_eq!(stats.served, n, "n={n}");
+            // The padded rows are not requests: latency samples count
+            // only real ones.
+            assert_eq!(stats.latency.n, n, "n={n}");
+        }
+    }
+
+    /// Regression (satellite bugfix): a server that served nothing
+    /// reports an explicitly empty latency summary — not a fabricated
+    /// 0 ns sample — and every stat stays finite.
+    #[test]
+    fn zero_request_shutdown_reports_empty_stats() {
+        let res = 32;
+        for adaptive in [false, true] {
+            let server = Server::start(
+                |b| build_model(ModelArch::ResNet18, b, res),
+                ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+                res,
+                ServerConfig {
+                    batch_sizes: vec![2, 4],
+                    batch_window: Duration::from_millis(1),
+                    executors: 2,
+                    adaptive,
+                },
+            );
+            let stats = server.shutdown();
+            assert_eq!(stats.served, 0);
+            assert_eq!(stats.latency.n, 0, "no fabricated samples");
+            assert_eq!(stats.latency.mean, 0.0);
+            assert_eq!(stats.throughput_rps, 0.0);
+            assert_eq!(stats.mean_batch, 0.0);
+            assert!(stats.cap_range.is_none());
+            for v in [
+                stats.latency.stddev,
+                stats.latency.min,
+                stats.latency.max,
+                stats.latency.median,
+                stats.latency.p95,
+            ] {
+                assert!(v == 0.0, "adaptive={adaptive}: NaN/garbage in empty summary");
+            }
+        }
+    }
+
+    /// Tentpole: adaptive mode answers every request exactly once with
+    /// logits bitwise identical to static mode, and records the caps it
+    /// chose.
+    #[test]
+    fn adaptive_mode_matches_static_logits_and_records_caps() {
+        let res = 32;
+        let run = |adaptive: bool| -> (Vec<Vec<f32>>, ServerStats) {
+            let server = Server::start(
+                |b| build_model(ModelArch::ResNet18, b, res),
+                ExecConfig::sparse_cnhw(ThreadPool::shared(4), 0.5),
+                res,
+                ServerConfig {
+                    batch_sizes: vec![2, 4],
+                    batch_window: Duration::from_millis(2),
+                    executors: 2,
+                    adaptive,
+                },
+            );
+            let rxs: Vec<_> = (0..12).map(|i| server.submit(image(res, i))).collect();
+            let logits: Vec<Vec<f32>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let reply = rx.recv().expect("reply");
+                    assert!(rx.try_recv().is_err(), "duplicate reply");
+                    reply.logits
+                })
+                .collect();
+            let stats = server.shutdown();
+            assert_eq!(stats.served, 12);
+            (logits, stats)
+        };
+        let (static_logits, static_stats) = run(false);
+        let (adaptive_logits, adaptive_stats) = run(true);
+        assert_eq!(static_logits, adaptive_logits, "modes must agree bitwise");
+        assert!(static_stats.cap_range.is_none());
+        let (lo, hi) = adaptive_stats.cap_range.expect("adaptive records caps");
+        assert!(lo >= 1 && hi <= 4, "caps within pool bounds: {lo}..{hi}");
+    }
+
+    /// The adaptive controller itself: deep queues slice the pool,
+    /// shallow queues hand a lone batch the whole pool, and the number
+    /// of dispatchers worth waking scales with depth.
+    #[test]
+    fn adaptive_controller_cap_and_parking_policy() {
+        // Idle server, empty queue → lone batch gets the whole pool.
+        assert_eq!(adaptive_cap(0, 0, 4, 2, 8), 8);
+        // A full extra batch queued → two overlap → half the pool each.
+        assert_eq!(adaptive_cap(0, 4, 4, 2, 8), 4);
+        // Another dispatcher already computing → same split, even with
+        // an empty queue.
+        assert_eq!(adaptive_cap(1, 0, 4, 2, 8), 4);
+        // Very deep queue → clamped to the dispatcher count, not below
+        // one worker.
+        assert_eq!(adaptive_cap(0, 100, 4, 2, 8), 4);
+        assert_eq!(adaptive_cap(0, 100, 4, 4, 2), 1);
+        // Parking: shallow queues keep one drainer; queued work or a
+        // busy dispatcher wakes more; never more than exist.
+        assert_eq!(desired_active(0, 0, 4, 3), 1);
+        assert_eq!(desired_active(0, 1, 4, 3), 1);
+        // A request arriving while the lone awake dispatcher computes
+        // must wake a second one — busy counts toward desired.
+        assert_eq!(desired_active(1, 1, 4, 3), 2);
+        assert_eq!(desired_active(0, 5, 4, 3), 2);
+        assert_eq!(desired_active(2, 100, 4, 3), 3);
+    }
+
+    /// Parked dispatchers must wake for bursts and for shutdown: a
+    /// 3-executor adaptive server under a trickle-then-burst load
+    /// answers everything and exits cleanly.
+    #[test]
+    fn adaptive_parked_dispatchers_wake_on_burst_and_shutdown() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::dense_cnhw(ThreadPool::shared(4)),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 2],
+                batch_window: Duration::from_millis(2),
+                executors: 3,
+                adaptive: true,
+            },
+        );
+        // Trickle: one at a time (surplus dispatchers stay parked).
+        for i in 0..3 {
+            let rx = server.submit(image(res, i));
+            assert_eq!(rx.recv().expect("trickle reply").logits.len(), 1000);
+        }
+        // Burst: all at once (parked dispatchers must wake to help).
+        let rxs: Vec<_> = (10..20).map(|i| server.submit(image(res, i))).collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().expect("burst reply").logits.len(), 1000);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 13);
+        let (lo, hi) = stats.cap_range.expect("caps recorded");
+        assert!(lo >= 1 && hi <= 4);
     }
 }

@@ -4,7 +4,9 @@
 //!   models                       list model zoo entries with MACs/params
 //!   run    --model M [...]       single inference, timing report
 //!   serve  --model M [...]       batching server demo with load generator
-//!                                (--executors N: concurrent batch executors)
+//!                                (--executors N: concurrent batch executors;
+//!                                --adaptive: load-aware caps + dispatcher
+//!                                parking; --pin: core-pinned pool workers)
 //!   tune   --model M [...]       per-layer (LMUL, T, P) auto-tuning
 //!   sim    [--layer i]           RVV-simulator kernel comparison
 //!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
@@ -51,10 +53,21 @@ fn parse_exec(args: &Args) -> ExecConfig {
     // One persistent pool per process: `--threads N` pins the size
     // (N = 0 clamps to 1, i.e. serial, matching the seed CLI); with the
     // flag absent, the global pool (NMPRUNE_THREADS or all hardware
-    // threads) serves the process.
-    let pool = match args.get("threads") {
-        None => ThreadPool::global(),
-        Some(_) => ThreadPool::shared(args.get_parsed("threads", 1)),
+    // threads) serves the process. `--pin` always builds a fresh
+    // core-pinned pool of the requested size — it bypasses the
+    // memoised shared()/global() registry, whose pools honour
+    // NMPRUNE_PIN=1 instead.
+    let pool = match (args.get("threads"), args.has_flag("pin")) {
+        (None, false) => ThreadPool::global(),
+        (None, true) => {
+            // Same sizing rule as the global pool: --pin changes
+            // placement only, never the worker count.
+            std::sync::Arc::new(ThreadPool::new_pinned(ThreadPool::default_size()))
+        }
+        (Some(_), false) => ThreadPool::shared(args.get_parsed("threads", 1)),
+        (Some(_), true) => {
+            std::sync::Arc::new(ThreadPool::new_pinned(args.get_parsed("threads", 1)))
+        }
     };
     let sparsity = args.get_parsed("sparsity", 0.5f64);
     match args.get_or("path", "sparse").as_str() {
@@ -136,6 +149,7 @@ fn cmd_serve(args: &Args) {
                 args.get_parsed("window-ms", 5u64),
             ),
             executors: args.get_parsed("executors", 1usize),
+            adaptive: args.has_flag("adaptive"),
         },
     );
     println!("serving {requests} requests on {} @{res} ...", arch.name());
@@ -157,6 +171,9 @@ fn cmd_serve(args: &Args) {
         stats.latency.median / 1e6,
         stats.latency.p95 / 1e6,
     );
+    if let Some((lo, hi)) = stats.cap_range {
+        println!("adaptive caps: {lo}..{hi} workers per batch");
+    }
 }
 
 fn cmd_tune(args: &Args) {

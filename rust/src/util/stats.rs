@@ -39,6 +39,22 @@ impl Summary {
         }
     }
 
+    /// An explicitly empty summary: `n == 0` and every moment zero.
+    /// What a server that served no requests reports — fabricating a
+    /// `Summary::of(&[0.0])` sample would claim one request took 0 ns.
+    pub fn empty() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            stddev: 0.0,
+            min: 0.0,
+            max: 0.0,
+            median: 0.0,
+            p5: 0.0,
+            p95: 0.0,
+        }
+    }
+
     /// Relative standard deviation (coefficient of variation).
     pub fn rsd(&self) -> f64 {
         if self.mean == 0.0 {
@@ -96,6 +112,16 @@ mod tests {
         assert_eq!(s.stddev, 0.0);
         assert_eq!(s.median, 5.0);
         assert_eq!((s.min, s.max), (5.0, 5.0));
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed_and_nan_free() {
+        let s = Summary::empty();
+        assert_eq!(s.n, 0);
+        for v in [s.mean, s.stddev, s.min, s.max, s.median, s.p5, s.p95] {
+            assert_eq!(v, 0.0);
+        }
+        assert_eq!(s.rsd(), 0.0);
     }
 
     #[test]

@@ -39,6 +39,22 @@
 //! with `catch_unwind` (so the worker survives); `parallel_for`
 //! re-raises the panic on the calling thread once every outstanding
 //! chunk has finished.
+//!
+//! # Core pinning
+//!
+//! The affinity-aware home ranges only pay off if a worker actually
+//! stays on the core whose cache it warmed. [`ThreadPool::new_pinned`]
+//! pins workers round-robin over the CPUs the process is *allowed* to
+//! run on (`sched_getaffinity`, so cpuset-restricted containers pin to
+//! real ids, not `0..n`) through `sched_setaffinity` (raw glibc FFI on
+//! Linux — no crates offline; a graceful no-op on every other OS).
+//! `NMPRUNE_PIN=1` makes
+//! [`ThreadPool::global`] and [`ThreadPool::shared`] build pinned
+//! pools. Pinning is pure placement: it never changes chunk arithmetic
+//! or numerics, and a failed `sched_setaffinity` (restricted cgroup
+//! mask, exotic libc) degrades silently to the unpinned behaviour —
+//! [`ThreadPool::pinned_workers`] reports how many workers actually
+//! landed.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -48,6 +64,75 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// OS-level thread→core pinning. Linux-only: `sched_setaffinity` is
+/// declared directly against the system libc (the offline environment
+/// vendors no `libc` crate); with `pid == 0` glibc applies the mask to
+/// the calling thread. Everywhere else this is a no-op returning
+/// `false` — pinning must degrade, never fail.
+pub mod affinity {
+    /// A fixed 1024-bit cpu_set_t, matching glibc's default width.
+    #[cfg(target_os = "linux")]
+    const WORDS: usize = 1024 / 64;
+
+    /// Pin the calling thread to `core` (a kernel CPU id, modulo the
+    /// CPU-set width). Returns whether the kernel accepted the mask.
+    #[cfg(target_os = "linux")]
+    pub fn pin_current_thread(core: usize) -> bool {
+        extern "C" {
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        }
+        let mut mask = [0u64; WORDS];
+        let bit = core % (WORDS * 64);
+        mask[bit / 64] |= 1u64 << (bit % 64);
+        unsafe { sched_setaffinity(0, WORDS * 8, mask.as_ptr()) == 0 }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn pin_current_thread(_core: usize) -> bool {
+        false
+    }
+
+    /// The CPU ids this process may run on, from `sched_getaffinity`.
+    /// Under a cpuset/affinity restriction (container pinned to CPUs
+    /// {4..7}, taskset, k8s cpuset cgroup) these are *not* simply
+    /// `0..available_parallelism()` — pinning must target ids from this
+    /// set or the kernel rejects the mask with EINVAL. Falls back to
+    /// `0..available_parallelism()` if the syscall fails.
+    #[cfg(target_os = "linux")]
+    pub fn allowed_cpus() -> Vec<usize> {
+        extern "C" {
+            fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+        }
+        let mut mask = [0u64; WORDS];
+        let mut cpus = Vec::new();
+        if unsafe { sched_getaffinity(0, WORDS * 8, mask.as_mut_ptr()) == 0 } {
+            for (w, &bits) in mask.iter().enumerate() {
+                for b in 0..64 {
+                    if bits & (1u64 << b) != 0 {
+                        cpus.push(w * 64 + b);
+                    }
+                }
+            }
+        }
+        if cpus.is_empty() {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            cpus.extend(0..n);
+        }
+        cpus
+    }
+
+    /// Off Linux there is nothing to enumerate: pinning is a no-op.
+    #[cfg(not(target_os = "linux"))]
+    pub fn allowed_cpus() -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Is pinning requested via the environment (`NMPRUNE_PIN=1`)?
+    pub fn env_pin() -> bool {
+        std::env::var("NMPRUNE_PIN").map(|v| v == "1").unwrap_or(false)
+    }
+}
 
 /// Pending-job bookkeeping. The hot path touches only the atomic: the
 /// mutex/condvar pair exists solely so `wait()` can park, and is locked
@@ -81,6 +166,9 @@ pub struct ThreadPool {
     workers: Vec<JoinHandle<()>>,
     pending: Arc<Pending>,
     size: usize,
+    /// Workers that successfully pinned themselves to a core (0 on
+    /// unpinned pools and on OSes without affinity support).
+    pinned: Arc<AtomicUsize>,
 }
 
 impl std::fmt::Debug for ThreadPool {
@@ -95,6 +183,20 @@ static SIZED_POOLS: OnceLock<Mutex<HashMap<usize, Arc<ThreadPool>>>> = OnceLock:
 impl ThreadPool {
     /// Create a pool of `size` workers (min 1).
     pub fn new(size: usize) -> Self {
+        Self::with_pinning(size, false)
+    }
+
+    /// Create a pool whose workers are pinned round-robin over the
+    /// process's allowed CPU set (worker `i` → `allowed[i mod count]`,
+    /// from `sched_getaffinity`). On non-Linux targets (or when the
+    /// kernel rejects the mask) the pool behaves exactly like
+    /// [`ThreadPool::new`] — pinning is best-effort placement, never a
+    /// construction failure.
+    pub fn new_pinned(size: usize) -> Self {
+        Self::with_pinning(size, true)
+    }
+
+    fn with_pinning(size: usize, pin: bool) -> Self {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -103,23 +205,35 @@ impl ThreadPool {
             lock: Mutex::new(()),
             cvar: Condvar::new(),
         });
+        let pinned = Arc::new(AtomicUsize::new(0));
+        // Round-robin over the CPUs this process is actually allowed to
+        // run on (cpuset-aware) — pinning to `0..ncpu` would EINVAL in
+        // any container restricted to a CPU set not starting at 0.
+        let cpus = if pin { affinity::allowed_cpus() } else { Vec::new() };
         let workers = (0..size)
-            .map(|_| {
+            .map(|i| {
                 let rx = Arc::clone(&rx);
                 let pending = Arc::clone(&pending);
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => {
-                            // Guard first: even if the job panics, the
-                            // pending count is decremented on unwind.
-                            let _pending = PendingGuard(&pending);
-                            let _ = catch_unwind(AssertUnwindSafe(job));
+                let pinned = Arc::clone(&pinned);
+                let cpu = if cpus.is_empty() { None } else { Some(cpus[i % cpus.len()]) };
+                std::thread::spawn(move || {
+                    if cpu.is_some_and(affinity::pin_current_thread) {
+                        pinned.fetch_add(1, Ordering::SeqCst);
+                    }
+                    loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                // Guard first: even if the job panics, the
+                                // pending count is decremented on unwind.
+                                let _pending = PendingGuard(&pending);
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Err(_) => break,
                         }
-                        Err(_) => break,
                     }
                 })
             })
@@ -129,44 +243,63 @@ impl ThreadPool {
             workers,
             pending,
             size,
+            pinned,
         }
     }
 
-    /// The process-wide default pool: sized by `NMPRUNE_THREADS` if set,
-    /// else one worker per available hardware thread. Created on first
-    /// use and reused by every caller for the lifetime of the process —
-    /// the "one pool serves the whole process" handle.
+    /// The default worker count for process-wide pools: `NMPRUNE_THREADS`
+    /// if set (≥ 1), else one worker per available hardware thread. The
+    /// single sizing rule shared by [`ThreadPool::global`] and every
+    /// CLI path that builds its own pool — placement flags like `--pin`
+    /// must never change the count, only where workers land.
+    pub fn default_size() -> usize {
+        std::env::var("NMPRUNE_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            })
+    }
+
+    /// The process-wide default pool: sized by [`ThreadPool::default_size`];
+    /// core-pinned when `NMPRUNE_PIN=1`. Created on first use and reused
+    /// by every caller for the lifetime of the process — the "one pool
+    /// serves the whole process" handle.
     pub fn global() -> Arc<ThreadPool> {
         Arc::clone(GLOBAL_POOL.get_or_init(|| {
-            let size = std::env::var("NMPRUNE_THREADS")
-                .ok()
-                .and_then(|s| s.parse::<usize>().ok())
-                .filter(|&n| n >= 1)
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism()
-                        .map(|n| n.get())
-                        .unwrap_or(4)
-                });
-            Arc::new(ThreadPool::new(size))
+            Arc::new(ThreadPool::with_pinning(Self::default_size(), affinity::env_pin()))
         }))
     }
 
     /// A process-shared pool of exactly `size` workers, memoised per
-    /// size. Tests and benches that sweep thread counts go through this
-    /// so repeated configuration never re-spawns workers.
+    /// size (core-pinned when `NMPRUNE_PIN=1` — the env is read at
+    /// first construction of each size, consistent with it being a
+    /// process-constant deployment switch). Tests and benches that
+    /// sweep thread counts go through this so repeated configuration
+    /// never re-spawns workers.
     pub fn shared(size: usize) -> Arc<ThreadPool> {
         let pools = SIZED_POOLS.get_or_init(|| Mutex::new(HashMap::new()));
         let mut pools = pools.lock().unwrap();
         Arc::clone(
             pools
                 .entry(size.max(1))
-                .or_insert_with(|| Arc::new(ThreadPool::new(size))),
+                .or_insert_with(|| Arc::new(ThreadPool::with_pinning(size, affinity::env_pin()))),
         )
     }
 
     /// Number of workers.
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// How many workers successfully pinned themselves to a core. 0 on
+    /// unpinned pools and wherever affinity is unsupported; may lag the
+    /// constructor briefly (workers pin from inside their own thread).
+    pub fn pinned_workers(&self) -> usize {
+        self.pinned.load(Ordering::SeqCst)
     }
 
     /// Submit a job (fire and forget; use [`ThreadPool::wait`] to sync).
@@ -555,6 +688,52 @@ mod tests {
         // Size 0 clamps to 1 and shares the size-1 pool.
         assert_eq!(ThreadPool::shared(0).size(), 1);
         assert!(Arc::ptr_eq(&ThreadPool::shared(0), &ThreadPool::shared(1)));
+    }
+
+    /// Pinning is placement only: a pinned pool runs the same jobs to
+    /// the same results, and on non-Linux targets `new_pinned` is a
+    /// silent no-op (`pinned_workers() == 0`), never a failure.
+    #[test]
+    fn pinned_pool_executes_like_unpinned() {
+        let pinned = ThreadPool::new_pinned(3);
+        let plain = ThreadPool::new(3);
+        for pool in [&pinned, &plain] {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(777, |s, e| {
+                sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 777);
+        }
+        // parallel_for's completion barrier means worker jobs ran, and
+        // workers attempt their pin before entering the job loop — so on
+        // Linux at least one worker has pinned by now (pins target the
+        // process's own allowed CPU set, so they succeed). One worker
+        // can drain several jobs, hence ≥ 1, not = 3.
+        if cfg!(target_os = "linux") {
+            let p = pinned.pinned_workers();
+            assert!(
+                (1..=3).contains(&p),
+                "pool must actually pin its workers on Linux (got {p})"
+            );
+        } else {
+            assert_eq!(pinned.pinned_workers(), 0, "no-op off Linux");
+        }
+        assert_eq!(plain.pinned_workers(), 0);
+    }
+
+    /// On Linux the syscall path itself must work: a CPU taken from the
+    /// process's own allowed set (cpuset-aware — plain core 0 may be
+    /// outside the mask in restricted containers) is always legal to
+    /// pin to. Test threads are per-test, so the pin dies with it.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn pin_current_thread_to_an_allowed_core_succeeds() {
+        let cpus = affinity::allowed_cpus();
+        assert!(!cpus.is_empty(), "allowed set never empty (fallback)");
+        assert!(
+            affinity::pin_current_thread(cpus[0]),
+            "pinning to a CPU from our own affinity mask must succeed"
+        );
     }
 
     #[test]

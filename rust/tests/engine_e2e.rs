@@ -103,6 +103,7 @@ fn server_replies_match_direct_execution() {
             batch_sizes: vec![1, 2, 4],
             batch_window: Duration::from_millis(20),
             executors: 1,
+            adaptive: false,
         },
     );
     let mut rng = XorShiftRng::new(9);

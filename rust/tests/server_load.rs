@@ -1,0 +1,176 @@
+//! Serving under load: the acceptance-path integration tests for the
+//! load-aware server and the core-pinned pool.
+//!
+//! - Bursty open-loop traffic (4 bursts × 8 requests, smallest compiled
+//!   batch 4, 2-worker pool) answered exactly once in static *and*
+//!   adaptive mode with bitwise-identical logits — exercising the
+//!   batch-padding path that used to panic and drop requests whenever
+//!   fewer requests than the smallest compiled batch were pending.
+//! - Shutdown-drain padding: requests stranded below the smallest batch
+//!   at shutdown are padded and answered, never dropped.
+//! - Pinned-pool parity: OS-level core pinning is placement only —
+//!   logits are bitwise identical pinned vs unpinned. On non-Linux
+//!   targets pinning is a graceful no-op, so the same test passes
+//!   unchanged (nothing to skip, by construction).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nmprune::engine::{ExecConfig, Executor, Server, ServerConfig, ServerStats};
+use nmprune::models::{build_model, ModelArch};
+use nmprune::tensor::Tensor;
+use nmprune::util::{ThreadPool, XorShiftRng};
+
+fn image(res: usize, seed: u64) -> Tensor {
+    let mut r = XorShiftRng::new(seed);
+    Tensor::random(&[res, res, 3], &mut r, 0.0, 1.0)
+}
+
+/// 32 requests in 4 open-loop bursts against a server whose smallest
+/// compiled batch is 4, on a 2-worker pool. Returns per-request logits
+/// (in submission order) and the final stats.
+fn run_bursty(adaptive: bool) -> (Vec<Vec<f32>>, ServerStats) {
+    let res = 32;
+    let server = Server::start(
+        |b| build_model(ModelArch::ResNet18, b, res),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
+        res,
+        ServerConfig {
+            batch_sizes: vec![4, 8],
+            batch_window: Duration::from_millis(3),
+            executors: 2,
+            adaptive,
+        },
+    );
+    let mut handles = Vec::new();
+    for burst in 0..4u64 {
+        for i in 0..8u64 {
+            handles.push(server.submit(image(res, burst * 8 + i)));
+        }
+        // Open-loop gap: the next burst fires regardless of how far the
+        // server got — trailing partial batches exercise zero-padding.
+        std::thread::sleep(Duration::from_millis(15));
+    }
+    let logits: Vec<Vec<f32>> = handles
+        .into_iter()
+        .map(|rx| {
+            let reply = rx.recv().expect("every request must be answered");
+            assert_eq!(reply.logits.len(), 1000);
+            assert!(reply.logits.iter().all(|v| v.is_finite()));
+            assert!(rx.try_recv().is_err(), "exactly one reply per request");
+            reply.logits
+        })
+        .collect();
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 32, "adaptive={adaptive}");
+    assert_eq!(stats.latency.n, 32, "one latency sample per real request");
+    (logits, stats)
+}
+
+/// Acceptance: bursty load completes in both modes, logits bitwise
+/// identical across modes, caps recorded (and within pool bounds) only
+/// in adaptive mode.
+#[test]
+fn bursty_load_static_and_adaptive_agree_bitwise() {
+    let (static_logits, static_stats) = run_bursty(false);
+    let (adaptive_logits, adaptive_stats) = run_bursty(true);
+    assert_eq!(
+        static_logits, adaptive_logits,
+        "adaptive scheduling changed numerics"
+    );
+    assert!(static_stats.cap_range.is_none());
+    let (lo, hi) = adaptive_stats
+        .cap_range
+        .expect("adaptive mode must record its chosen caps");
+    assert!(lo >= 1 && hi <= 2, "caps {lo}..{hi} outside the 2-worker pool");
+}
+
+/// Requests stranded below the smallest compiled batch at shutdown are
+/// served via the padded batch, not dropped: the channel closes, the
+/// dispatcher's fill loop breaks with 3 pending against a smallest
+/// batch of 4, and the drain must still reply to all three.
+#[test]
+fn shutdown_drain_pads_partial_batches() {
+    let res = 32;
+    let server = Server::start(
+        |b| build_model(ModelArch::ResNet18, b, res),
+        ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+        res,
+        ServerConfig {
+            batch_sizes: vec![4],
+            batch_window: Duration::from_millis(200),
+            executors: 1,
+            adaptive: false,
+        },
+    );
+    let rxs: Vec<_> = (0..3).map(|i| server.submit(image(res, 40 + i))).collect();
+    // Shut down while the batcher is still inside its fill window.
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 3);
+    for rx in rxs {
+        let reply = rx.try_recv().expect("drained request must have a reply");
+        assert_eq!(reply.logits.len(), 1000);
+        assert_eq!(reply.batch, 4, "served on the padded smallest executor");
+    }
+}
+
+/// Core pinning is pure placement: the same model on a pinned and an
+/// unpinned pool of equal size produces bitwise-identical logits. Off
+/// Linux, `new_pinned` degrades to an unpinned pool, so this test runs
+/// (and passes) everywhere without a skip.
+#[test]
+fn pinned_pool_logits_match_unpinned() {
+    let res = 32;
+    let mut rng = XorShiftRng::new(77);
+    let x = Tensor::random(&[2, res, res, 3], &mut rng, 0.0, 1.0);
+    let g = build_model(ModelArch::ResNet18, 2, res);
+    let pinned = Arc::new(ThreadPool::new_pinned(3));
+    let plain = Arc::new(ThreadPool::new(3));
+    let y_pinned =
+        Executor::new(g.clone(), ExecConfig::sparse_cnhw(Arc::clone(&pinned), 0.5)).run(&x);
+    let y_plain = Executor::new(g, ExecConfig::sparse_cnhw(plain, 0.5)).run(&x);
+    assert_eq!(y_pinned.data, y_plain.data, "pinning changed numerics");
+    assert!(
+        pinned.pinned_workers() <= 3,
+        "at most one successful pin per worker"
+    );
+    if !cfg!(target_os = "linux") {
+        assert_eq!(pinned.pinned_workers(), 0, "pinning must no-op off Linux");
+    }
+}
+
+/// An adaptive server running on an explicitly pinned pool (the
+/// NMPRUNE_PIN=1 deployment shape, which CI also exercises through the
+/// env var on shared pools) serves a mixed trickle + burst load
+/// exactly once.
+#[test]
+fn adaptive_server_on_pinned_pool_serves_all() {
+    let res = 32;
+    let pool = Arc::new(ThreadPool::new_pinned(2));
+    let server = Server::start(
+        |b| build_model(ModelArch::ResNet18, b, res),
+        ExecConfig::dense_cnhw(pool),
+        res,
+        ServerConfig {
+            batch_sizes: vec![2, 4],
+            batch_window: Duration::from_millis(2),
+            executors: 2,
+            adaptive: true,
+        },
+    );
+    // Trickle…
+    for i in 0..2 {
+        let rx = server.submit(image(res, 60 + i));
+        assert_eq!(rx.recv().expect("trickle reply").logits.len(), 1000);
+    }
+    // …then a burst.
+    let rxs: Vec<_> = (0..8).map(|i| server.submit(image(res, 70 + i))).collect();
+    for rx in rxs {
+        let reply = rx.recv().expect("burst reply");
+        assert_eq!(reply.logits.len(), 1000);
+        assert!(rx.try_recv().is_err(), "exactly once");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 10);
+    assert!(stats.cap_range.is_some(), "adaptive caps observable");
+}
