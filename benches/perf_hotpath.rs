@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
 use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
-use nmprune::engine::{ExecConfig, Server, ServerConfig};
+use nmprune::engine::{ExecConfig, Priority, QueueDiscipline, Server, ServerConfig, ServerStats};
 use nmprune::gemm::threaded::spmm_colwise_parallel_capped;
 use nmprune::gemm::{gemm_dense, spmm_colwise};
 use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix};
@@ -17,11 +17,18 @@ use nmprune::tensor::Tensor;
 use nmprune::util::XorShiftRng;
 
 fn main() {
-    let cfg = BenchConfig {
-        warmup: std::time::Duration::from_millis(150),
-        measure: std::time::Duration::from_millis(1200),
-        min_samples: 8,
-        max_samples: 400,
+    // NMPRUNE_BENCH_QUICK=1: CI's bit-rot smoke profile — tiny windows,
+    // same code paths, so the bench is *run* (not just compiled) on
+    // every push without burning minutes.
+    let cfg = if std::env::var("NMPRUNE_BENCH_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig {
+            warmup: std::time::Duration::from_millis(150),
+            measure: std::time::Duration::from_millis(1200),
+            min_samples: 8,
+            max_samples: 400,
+        }
     };
     let mut t = Table::new(
         "§Perf hot-path kernels",
@@ -142,6 +149,7 @@ fn main() {
                 batch_window: Duration::from_millis(3),
                 executors: 2,
                 adaptive,
+                ..ServerConfig::default()
             },
         );
         let mut rng = XorShiftRng::new(0xBEEF);
@@ -194,6 +202,92 @@ fn main() {
     println!(
         "adaptive caps follow queue depth: deep bursts slice the pool so \
          batches overlap, trickles give a lone batch all workers"
+    );
+
+    // Mixed-traffic serving: the same open-loop 50/50 interactive +
+    // background load with tight interactive deadlines, once on the
+    // FIFO intake and once on the priority/deadline intake. The
+    // observables are the interactive class's p95 and deadline-miss
+    // rate — the numbers priority scheduling exists to improve — next
+    // to the background p95 it pays for them with. Logits are bitwise
+    // identical across the two rows (test-enforced in
+    // rust/tests/server_load.rs); this table is about latency only.
+    let serve_mixed = |discipline: QueueDiscipline| -> ServerStats {
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::sparse_cnhw(bench_pool(4), 0.5),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 2, 4],
+                batch_window: Duration::from_millis(3),
+                executors: 2,
+                adaptive: true,
+                discipline,
+                ..ServerConfig::default()
+            },
+        );
+        let mut rng = XorShiftRng::new(0x317ED);
+        let mut image = || Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0);
+        let mut handles = Vec::new();
+        // Three open-loop waves of 16, alternating classes; interactive
+        // requests carry a 40 ms deadline.
+        for wave in 0..3 {
+            for i in 0..16usize {
+                handles.push(if i % 2 == 0 {
+                    server.submit_with(
+                        image(),
+                        Priority::Interactive,
+                        Some(Duration::from_millis(40)),
+                    )
+                } else {
+                    server.submit_with(image(), Priority::Batch, None)
+                });
+            }
+            if wave < 2 {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+        for h in handles {
+            let _ = h.recv();
+        }
+        server.shutdown()
+    };
+    let mut mt = Table::new(
+        "§Serve mixed traffic (50/50 interactive+background, 40 ms deadlines, \
+         ResNet-18 @32, 2 executors on a 4-worker pool)",
+        &[
+            "intake",
+            "interactive p95",
+            "interactive miss-rate",
+            "background p95",
+            "mean batch",
+        ],
+    );
+    for (label, discipline) in [
+        ("fifo", QueueDiscipline::Fifo),
+        ("priority", QueueDiscipline::Priority),
+    ] {
+        let stats = serve_mixed(discipline);
+        let inter = stats.class(Priority::Interactive);
+        let bg = stats.class(Priority::Batch);
+        mt.row(&[
+            label.into(),
+            format!("{:.1} ms", inter.latency.p95 / 1e6),
+            format!(
+                "{:.0}% ({}/{})",
+                inter.miss_rate() * 100.0,
+                inter.deadline_missed,
+                inter.deadline_total
+            ),
+            format!("{:.1} ms", bg.latency.p95 / 1e6),
+            format!("{:.2}", stats.mean_batch),
+        ]);
+    }
+    mt.print();
+    println!(
+        "priority intake serves interactive requests ahead of queued \
+         background work (starvation-bounded), trading background p95 for \
+         interactive p95 and fewer deadline misses"
     );
 
     println!(

@@ -7,13 +7,22 @@
 //!
 //! `--executors N` runs N concurrent batch executors against the one
 //! shared pool — with >1, one batch computes while the next forms.
-//! `--adaptive` switches the server to load-aware mode: the per-batch
-//! thread cap and the number of actively draining dispatchers follow
-//! queue depth (deep burst → slice the pool so batches overlap; trickle
-//! → a lone batch takes every worker, surplus dispatchers park). The
-//! chosen cap range is printed per configuration. `--pin` core-pins the
-//! pool workers (Linux `sched_setaffinity`; a graceful no-op
-//! elsewhere — `NMPRUNE_PIN=1` does the same for shared pools).
+//! `--adaptive` switches the server to load-aware mode: the batch size,
+//! the per-batch thread cap and the number of actively draining
+//! dispatchers follow the queue gauge (deep burst → largest compiled
+//! batch and a sliced pool so batches overlap; trickle or tight
+//! deadline → smallest batch, a lone batch takes every worker, surplus
+//! dispatchers park). The chosen cap range and batch-size histogram are
+//! printed per configuration. `--pin` core-pins the pool workers (Linux
+//! `sched_setaffinity`; a graceful no-op elsewhere — `NMPRUNE_PIN=1`
+//! does the same for shared pools).
+//!
+//! Mixed traffic: `--prio-mix F` submits fraction F of each burst as
+//! `Interactive` (with a `--deadline-ms D` deadline, default 50) and
+//! the rest as background `Batch` traffic on the priority/deadline
+//! intake; `--fifo` keeps the FIFO intake so the two disciplines can be
+//! compared under the identical load. Per-class p50/p95 and
+//! deadline-miss rates are printed whenever both classes are present.
 //!
 //! The load generator is open-loop and bursty: `--bursts B` waves of
 //! `--burst N` requests, fired every `--gap-ms G` regardless of how far
@@ -23,11 +32,14 @@
 //!
 //! Run: `cargo run --release --example serve_sparse -- [--res 112]
 //!       [--threads 2] [--executors 2] [--adaptive] [--pin]
-//!       [--bursts 4] [--burst 8] [--gap-ms 30]`
+//!       [--bursts 4] [--burst 8] [--gap-ms 30]
+//!       [--prio-mix 0.5] [--deadline-ms 50] [--fifo]`
 
 use std::sync::Arc;
 
-use nmprune::engine::{ExecConfig, Server, ServerConfig};
+use nmprune::engine::{
+    ExecConfig, Priority, QueueDiscipline, Server, ServerConfig,
+};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::tensor::Tensor;
 use nmprune::util::cli::Args;
@@ -37,6 +49,11 @@ struct Load {
     bursts: usize,
     burst: usize,
     gap: std::time::Duration,
+    /// Fraction of each burst submitted as Interactive (1.0 = all).
+    prio_mix: f64,
+    /// Deadline attached to interactive requests (mixed traffic only).
+    deadline: Option<std::time::Duration>,
+    discipline: QueueDiscipline,
 }
 
 fn drive(label: &str, cfg: ExecConfig, res: usize, load: &Load, executors: usize, adaptive: bool) {
@@ -49,16 +66,34 @@ fn drive(label: &str, cfg: ExecConfig, res: usize, load: &Load, executors: usize
             batch_window: std::time::Duration::from_millis(10),
             executors,
             adaptive,
+            discipline: load.discipline,
+            ..ServerConfig::default()
         },
     );
+    // Mixed-traffic reporting follows what was actually configured —
+    // `--prio-mix 1.0 --deadline-ms 10` still tracks (and must print)
+    // deadline misses even though only one class is in play.
+    let mixed = load.prio_mix < 1.0 || load.deadline.is_some();
     let mut rng = XorShiftRng::new(99);
     // Open-loop waves: each burst is submitted in full, then the
     // generator sleeps for the gap — it never waits for replies, so
     // queue depth reflects the offered load, not the service rate.
     let mut handles = Vec::new();
+    let mut n_interactive = 0usize;
+    let mut submitted = 0usize;
     for b in 0..load.bursts {
         for _ in 0..load.burst {
-            handles.push(server.submit(Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0)));
+            let image = Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0);
+            submitted += 1;
+            // Deterministic interleave tracking the target mix.
+            let interactive =
+                !mixed || (n_interactive as f64) < submitted as f64 * load.prio_mix;
+            handles.push(if interactive {
+                n_interactive += 1;
+                server.submit_with(image, Priority::Interactive, load.deadline)
+            } else {
+                server.submit_with(image, Priority::Batch, None)
+            });
         }
         if b + 1 < load.bursts {
             std::thread::sleep(load.gap);
@@ -73,15 +108,39 @@ fn drive(label: &str, cfg: ExecConfig, res: usize, load: &Load, executors: usize
         Some((lo, hi)) => format!("caps={lo}..{hi}"),
         None => "caps=static".into(),
     };
+    let hist: Vec<String> = stats
+        .batch_hist
+        .iter()
+        .map(|(b, n)| format!("{b}x{n}"))
+        .collect();
     println!(
         "{label:<14} served={:<4} throughput={:>7.2} req/s  mean_batch={:.2}  \
-         latency p50={:.0} ms p95={:.0} ms  {caps}",
+         latency p50={:.0} ms p95={:.0} ms  {caps}  batches[{}]",
         stats.served,
         stats.throughput_rps,
         stats.mean_batch,
         stats.latency.median / 1e6,
         stats.latency.p95 / 1e6,
+        hist.join(" "),
     );
+    if mixed {
+        for p in Priority::ALL {
+            let cls = stats.class(p);
+            if cls.served == 0 {
+                continue;
+            }
+            println!(
+                "  {:<12} served={:<4} p50={:.0} ms p95={:.0} ms  miss {}/{} ({:.0}%)",
+                p.name(),
+                cls.served,
+                cls.latency.median / 1e6,
+                cls.latency.p95 / 1e6,
+                cls.deadline_missed,
+                cls.deadline_total,
+                cls.miss_rate() * 100.0,
+            );
+        }
+    }
 }
 
 fn main() {
@@ -91,10 +150,27 @@ fn main() {
     let executors = args.get_parsed("executors", 2usize);
     let adaptive = args.has_flag("adaptive");
     let pin = args.has_flag("pin");
+    let prio_mix = args.get_parsed("prio-mix", 1.0f64).clamp(0.0, 1.0);
+    // Same rule as `nmprune serve`: either flag opts into mixed-traffic
+    // mode (so `--deadline-ms` alone is never a silent no-op).
+    let mixed = args.get("prio-mix").is_some() || args.get("deadline-ms").is_some();
     let load = Load {
         bursts: args.get_parsed("bursts", 4usize),
         burst: args.get_parsed("burst", 8usize),
         gap: std::time::Duration::from_millis(args.get_parsed("gap-ms", 30u64)),
+        prio_mix,
+        deadline: if mixed {
+            Some(std::time::Duration::from_millis(
+                args.get_parsed("deadline-ms", 50u64),
+            ))
+        } else {
+            None
+        },
+        discipline: if mixed && !args.has_flag("fifo") {
+            QueueDiscipline::Priority
+        } else {
+            QueueDiscipline::Fifo
+        },
     };
     // One persistent pool serves every configuration below; the
     // executors share it without oversubscription (per-run caps).
@@ -106,11 +182,13 @@ fn main() {
     println!(
         "serving ResNet-18 @{res}, {}x{} requests ({}ms gaps) per config, \
          {executors} batch executors on one {threads}-worker pool \
-         (adaptive={adaptive}, pinned={})\n",
+         (adaptive={adaptive}, pinned={}, intake={:?}, prio-mix={:.2})\n",
         load.bursts,
         load.burst,
         load.gap.as_millis(),
         if pin { "requested" } else { "no" },
+        load.discipline,
+        load.prio_mix,
     );
     drive(
         "sparse 50%",

@@ -1,10 +1,13 @@
 //! The inference engine (Layer-3 coordinator core): operator
 //! implementations, a graph executor with per-layer path/parameter
-//! configuration, and a batching request server.
+//! configuration, pure serving policies, and a batching request server
+//! with traffic classes and deadlines.
 
 pub mod ops;
 pub mod executor;
+pub mod policy;
 pub mod server;
 
 pub use executor::{ExecConfig, Executor, LayerChoice};
-pub use server::{Server, ServerConfig, ServerStats};
+pub use policy::{PolicyConfig, Priority, QueueDiscipline, QueueSnapshot};
+pub use server::{ClassStats, Server, ServerConfig, ServerStats};

@@ -1,0 +1,333 @@
+//! Pure, clock-free serving policies.
+//!
+//! Every scheduling decision the server makes per drain — traffic-class
+//! ordering, starvation promotion, **batch size**, per-run thread cap,
+//! and the number of actively draining dispatchers — lives here as a
+//! pure function of an explicit [`QueueSnapshot`]. The threaded server
+//! (`engine::server`) is a thin shell that assembles snapshots from its
+//! intake queue and gauge; the policies themselves never read a clock,
+//! never touch a thread, and are therefore unit-testable with virtual
+//! time (a `Duration` in a snapshot is just a value).
+//!
+//! Decisions are pure scheduling: none of them may change numerics.
+//! Logits stay bitwise identical between FIFO and priority/deadline
+//! modes (`rust/tests/server_load.rs` enforces this end to end).
+
+use std::time::Duration;
+
+/// Traffic class of a request. `Interactive` outranks `Batch` in the
+/// intake ordering (priority, then deadline, then FIFO); the `Batch`
+/// class is protected from starvation by [`promote_background`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic; served first.
+    Interactive,
+    /// Throughput-oriented background traffic; served when no
+    /// interactive work is queued, or when starvation protection
+    /// promotes it.
+    Batch,
+}
+
+impl Priority {
+    /// Dense index for per-class stats arrays.
+    pub const COUNT: usize = 2;
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub const ALL: [Priority; Self::COUNT] = [Priority::Interactive, Priority::Batch];
+}
+
+/// How the intake queue orders requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueDiscipline {
+    /// Submission order only; classes and deadlines are recorded for
+    /// stats but ignored for scheduling. The baseline every priority
+    /// run is compared against (bitwise, for logits).
+    Fifo,
+    /// (priority, deadline, FIFO) ordering with starvation protection
+    /// for the background class.
+    Priority,
+}
+
+/// Static inputs of every policy decision, fixed at server start.
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    /// Compiled batch sizes, ascending and non-empty.
+    pub batch_sizes: Vec<usize>,
+    /// Dispatcher (batch executor) thread count.
+    pub n_exec: usize,
+    /// Worker count of the shared compute pool.
+    pub pool_size: usize,
+    /// A queued background request older than this is served before
+    /// interactive traffic (starvation protection).
+    pub starvation_limit: Duration,
+    /// Head-of-queue deadline slack below which the drain optimises for
+    /// latency: smallest compiled batch, no window fill.
+    pub slack_floor: Duration,
+}
+
+impl PolicyConfig {
+    /// Largest compiled batch size.
+    #[inline]
+    pub fn max_batch(&self) -> usize {
+        self.batch_sizes.last().copied().unwrap_or(1).max(1)
+    }
+
+    /// Smallest compiled batch size.
+    #[inline]
+    pub fn min_batch(&self) -> usize {
+        self.batch_sizes.first().copied().unwrap_or(1).max(1)
+    }
+}
+
+/// Point-in-time view of the intake queue and the dispatcher fleet —
+/// everything a policy may look at. Built by the server under the
+/// intake lock; built literally (virtual time) by the policy tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueSnapshot {
+    /// Requests queued (submitted, not yet drained into a batch).
+    pub depth: usize,
+    /// Dispatchers currently computing a batch (excluding the caller).
+    pub busy: usize,
+    /// Deadline slack of the head request: `None` when the head has no
+    /// deadline, `Some(ZERO)` when it is already late.
+    pub head_slack: Option<Duration>,
+    /// Age of the oldest queued background-class request, if any.
+    pub oldest_background_wait: Option<Duration>,
+}
+
+/// Gauge-driven batch size for the drain about to happen: a tight head
+/// deadline (or an already-late head) always takes the smallest
+/// compiled batch — latency mode; otherwise the largest compiled size
+/// the current queue depth can fill — throughput mode. A queue
+/// shallower than the smallest compiled batch also yields the smallest
+/// (the server zero-pads it).
+pub fn choose_batch_size(cfg: &PolicyConfig, snap: &QueueSnapshot) -> usize {
+    if snap.head_slack.is_some_and(|s| s < cfg.slack_floor) {
+        return cfg.min_batch();
+    }
+    cfg.batch_sizes
+        .iter()
+        .rev()
+        .copied()
+        .find(|&b| b <= snap.depth)
+        .unwrap_or_else(|| cfg.min_batch())
+}
+
+/// Whether the dispatcher should spend the batching window waiting for
+/// the chosen batch to fill. With a tight head deadline the window wait
+/// would burn the remaining slack, so the drain runs immediately with
+/// whatever is pending (padded if below the smallest compiled batch).
+pub fn fill_window(cfg: &PolicyConfig, snap: &QueueSnapshot) -> bool {
+    !snap.head_slack.is_some_and(|s| s < cfg.slack_floor)
+}
+
+/// Whether starvation protection kicks in: the oldest queued
+/// background request has waited at least `starvation_limit`, so it is
+/// served ahead of interactive traffic this pop.
+pub fn promote_background(cfg: &PolicyConfig, snap: &QueueSnapshot) -> bool {
+    snap.oldest_background_wait
+        .is_some_and(|w| w >= cfg.starvation_limit)
+}
+
+/// How many dispatchers are worth keeping awake: the ones already
+/// computing a batch plus one per full `max_batch` of queued work — at
+/// least one, at most all of them.
+pub fn desired_active(cfg: &PolicyConfig, snap: &QueueSnapshot) -> usize {
+    (snap.busy + snap.depth.div_ceil(cfg.max_batch())).clamp(1, cfg.n_exec.max(1))
+}
+
+/// Per-run thread cap for a batch about to execute: slice the pool by
+/// the number of batches expected to overlap — the ones other
+/// dispatchers are already computing (`snap.busy`), this one, and what
+/// the remaining queue depth (`snap.depth`, *after* this batch's
+/// requests were drained) can still fill — clamped to the dispatcher
+/// count. An idle server yields the whole pool; a deep queue yields
+/// `pool / n_exec`.
+pub fn run_cap(cfg: &PolicyConfig, snap: &QueueSnapshot) -> usize {
+    let overlap =
+        (snap.busy + 1 + snap.depth / cfg.max_batch()).clamp(1, cfg.n_exec.max(1));
+    cfg.pool_size.div_ceil(overlap).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(batch_sizes: &[usize], n_exec: usize, pool_size: usize) -> PolicyConfig {
+        PolicyConfig {
+            batch_sizes: batch_sizes.to_vec(),
+            n_exec,
+            pool_size,
+            starvation_limit: Duration::from_millis(100),
+            slack_floor: Duration::from_millis(10),
+        }
+    }
+
+    fn snap(depth: usize, busy: usize) -> QueueSnapshot {
+        QueueSnapshot {
+            depth,
+            busy,
+            head_slack: None,
+            oldest_background_wait: None,
+        }
+    }
+
+    /// Satellite: table-driven batch-size policy — deep queue with
+    /// slack takes the largest compiled batch, shallow queues and tight
+    /// deadlines take the smallest, intermediate depths take the
+    /// largest size they can fill. No threads, no clocks.
+    #[test]
+    fn batch_size_follows_depth_and_slack() {
+        let c = cfg(&[1, 2, 4, 8], 2, 8);
+        // (depth, head_slack_ms, want)
+        let table: &[(usize, Option<u64>, usize)] = &[
+            (0, None, 1),       // empty queue → smallest
+            (1, None, 1),       // trickle → smallest
+            (2, None, 2),       // exactly fills a 2-batch
+            (3, None, 2),       // largest size ≤ 3
+            (7, None, 4),       // largest size ≤ 7
+            (8, None, 8),       // deep → largest
+            (100, None, 8),     // very deep → still largest
+            (100, Some(500), 8), // deep + generous slack → throughput mode
+            (100, Some(0), 1),  // already late → latency mode
+            (100, Some(5), 1),  // slack below the floor → latency mode
+            (1, Some(5), 1),    // tight + shallow → smallest
+            (0, Some(500), 1),  // slack alone cannot grow an empty queue
+        ];
+        for &(depth, slack_ms, want) in table {
+            let s = QueueSnapshot {
+                depth,
+                busy: 0,
+                head_slack: slack_ms.map(Duration::from_millis),
+                oldest_background_wait: None,
+            };
+            assert_eq!(
+                choose_batch_size(&c, &s),
+                want,
+                "depth={depth} slack={slack_ms:?}"
+            );
+        }
+    }
+
+    /// The slack floor is a strict threshold: exactly at the floor is
+    /// throughput mode, one nanosecond below is latency mode.
+    #[test]
+    fn slack_floor_is_exclusive() {
+        let c = cfg(&[2, 8], 1, 4);
+        let at = QueueSnapshot {
+            depth: 50,
+            head_slack: Some(c.slack_floor),
+            ..Default::default()
+        };
+        let below = QueueSnapshot {
+            depth: 50,
+            head_slack: Some(c.slack_floor - Duration::from_nanos(1)),
+            ..Default::default()
+        };
+        assert_eq!(choose_batch_size(&c, &at), 8);
+        assert_eq!(choose_batch_size(&c, &below), 2);
+        assert!(fill_window(&c, &at));
+        assert!(!fill_window(&c, &below));
+    }
+
+    /// Satellite: starvation-protection bounds — promotion happens at
+    /// the limit (inclusive), never before it, and never without a
+    /// queued background request.
+    #[test]
+    fn starvation_promotion_bounds() {
+        let c = cfg(&[1, 4], 2, 4);
+        let limit = c.starvation_limit;
+        let with_wait = |w: Option<Duration>| QueueSnapshot {
+            depth: 3,
+            oldest_background_wait: w,
+            ..Default::default()
+        };
+        assert!(!promote_background(&c, &with_wait(None)));
+        assert!(!promote_background(&c, &with_wait(Some(Duration::ZERO))));
+        assert!(!promote_background(
+            &c,
+            &with_wait(Some(limit - Duration::from_nanos(1)))
+        ));
+        assert!(promote_background(&c, &with_wait(Some(limit))));
+        assert!(promote_background(&c, &with_wait(Some(limit * 10))));
+    }
+
+    /// Table-driven dispatcher-activation policy (moved from the
+    /// server): shallow queues keep one drainer, queued work or busy
+    /// dispatchers wake more, never more than exist.
+    #[test]
+    fn desired_active_scales_with_depth_and_busy() {
+        let c = cfg(&[1, 2, 4], 3, 8);
+        let table: &[(usize, usize, usize)] = &[
+            // (busy, depth, want)
+            (0, 0, 1),
+            (0, 1, 1),
+            (1, 1, 2), // a request arriving mid-compute wakes a second
+            (0, 5, 2),
+            (2, 100, 3),
+            (0, 100, 3), // clamped at n_exec
+        ];
+        for &(busy, depth, want) in table {
+            assert_eq!(
+                desired_active(&c, &snap(depth, busy)),
+                want,
+                "busy={busy} depth={depth}"
+            );
+        }
+    }
+
+    /// Table-driven per-run cap policy (moved from the server): idle →
+    /// whole pool, overlapping batches slice it, clamps keep it within
+    /// [1, pool].
+    #[test]
+    fn run_cap_slices_pool_by_expected_overlap() {
+        let c2 = cfg(&[1, 2, 4], 2, 8);
+        let table2: &[(usize, usize, usize)] = &[
+            // (busy_others, depth_after, want)
+            (0, 0, 8), // idle server → lone batch takes the whole pool
+            (0, 4, 4), // a full extra batch queued → half the pool each
+            (1, 0, 4), // another dispatcher computing → same split
+            (0, 100, 4), // very deep → clamped to dispatcher count
+        ];
+        for &(busy, depth, want) in table2 {
+            assert_eq!(run_cap(&c2, &snap(depth, busy)), want, "busy={busy} depth={depth}");
+        }
+        // Tiny pool, many dispatchers: cap never drops below one worker.
+        let c4 = cfg(&[1, 2, 4], 4, 2);
+        assert_eq!(run_cap(&c4, &snap(100, 0)), 1);
+    }
+
+    /// Degenerate configs stay safe: a single compiled batch size, one
+    /// dispatcher, and zero-depth snapshots never panic or return 0.
+    #[test]
+    fn degenerate_configs_are_safe() {
+        let c = cfg(&[4], 1, 1);
+        assert_eq!(choose_batch_size(&c, &snap(0, 0)), 4);
+        assert_eq!(choose_batch_size(&c, &snap(100, 0)), 4);
+        assert_eq!(desired_active(&c, &snap(0, 0)), 1);
+        assert_eq!(run_cap(&c, &snap(0, 0)), 1);
+        assert!(fill_window(&c, &snap(0, 0)));
+    }
+
+    #[test]
+    fn priority_ordering_and_indices() {
+        assert!(Priority::Interactive < Priority::Batch);
+        assert_eq!(Priority::Interactive.index(), 0);
+        assert_eq!(Priority::Batch.index(), 1);
+        assert_eq!(Priority::ALL.len(), Priority::COUNT);
+    }
+}

@@ -1,53 +1,72 @@
 //! Batching inference server: the request-path coordinator.
 //!
-//! Clients submit single-image NHWC requests; dispatcher threads group
-//! them into batches (up to `max_batch`, waiting at most `batch_window`)
-//! and run them on pre-compiled executors — one per supported batch
-//! size, mirroring how the AOT artifacts are compiled per batch shape.
-//! When fewer requests are pending than the smallest compiled batch
-//! (a trickle, or the shutdown drain), the batch is zero-padded up to
-//! the smallest executor's size and the padded rows' logits are
-//! discarded — a request always gets a reply. Per-request latency and
-//! aggregate throughput are recorded.
+//! Clients submit single-image NHWC requests — with a traffic class and
+//! an optional deadline via [`Server::submit_with`] — and dispatcher
+//! threads group them into batches and run them on pre-compiled
+//! executors, one per supported batch size, mirroring how the AOT
+//! artifacts are compiled per batch shape. When fewer requests are
+//! pending than the smallest compiled batch (a trickle, or the shutdown
+//! drain), the batch is zero-padded up to the smallest executor's size
+//! and the padded rows' logits are discarded — a request always gets a
+//! reply. Per-request latency (overall and per class), deadline misses,
+//! aggregate throughput, and a batch-size histogram are recorded.
+//!
+//! # Ordered intake queue
+//!
+//! The dispatcher's source of truth is an ordered intake queue, not a
+//! bare channel. Under [`QueueDiscipline::Priority`] requests pop in
+//! (priority, deadline, FIFO) order — `Interactive` before `Batch`,
+//! earlier deadlines first within the interactive class, submission
+//! order as the tie break (the background class is FIFO within itself,
+//! which keeps starvation protection exact) — with starvation
+//! protection: the *oldest* background request is served ahead of
+//! interactive traffic once it has queued longer than
+//! `ServerConfig::starvation_limit`. Under [`QueueDiscipline::Fifo`]
+//! (the default) classes and
+//! deadlines are recorded for stats but ignored for ordering, which is
+//! the baseline the priority mode is compared against — scheduling is
+//! pure, so logits are bitwise identical between the two disciplines.
 //!
 //! # Concurrent batch executors
 //!
 //! `ServerConfig::executors` starts that many dispatcher threads, all
-//! draining one shared request queue and all running batches on the
-//! *same* persistent [`ThreadPool`](crate::util::ThreadPool): while one
-//! batch computes, another forms and starts. Oversubscription is
-//! avoided on two levels — the pool's worker set is fixed (concurrent
-//! `parallel_for`s interleave their chunk jobs on the same workers
-//! instead of spawning more threads), and when no per-layer tuning says
-//! otherwise the server caps each executor's GEMMs at
+//! draining the one intake queue and all running batches on the *same*
+//! persistent [`ThreadPool`](crate::util::ThreadPool): while one batch
+//! computes, another forms and starts. Oversubscription is avoided on
+//! two levels — the pool's worker set is fixed, and when no per-layer
+//! tuning says otherwise the server caps each executor's GEMMs at
 //! `pool size / executors` participants so concurrent batches slice the
 //! pool instead of queueing a full pool's worth of jobs each.
 //!
 //! # Load-aware adaptive mode
 //!
-//! The static `pool/executors` slice is right only when every
-//! dispatcher is actually busy. `ServerConfig::adaptive` replaces the
-//! startup-time split with two decisions made *per batch* against a
-//! queue-depth gauge (an atomic incremented in [`Server::submit`],
-//! decremented when requests drain into a batch):
+//! `ServerConfig::adaptive` makes three decisions *per drain*, all
+//! implemented as pure functions in [`super::policy`] over a
+//! [`QueueSnapshot`] assembled from the intake queue:
 //!
-//! 1. **Per-run thread cap** — each batch executes under
-//!    [`Executor::run_capped`] with `pool size / expected overlapping
-//!    batches` participants: a deep queue slices the pool harder so
-//!    more batches run beside each other, an empty queue lets a lone
-//!    batch take the whole pool. The per-run cap composes with
+//! 1. **Batch size** ([`policy::choose_batch_size`]) — a shallow queue
+//!    or a tight head deadline takes the smallest compiled batch
+//!    (latency mode; a tight head also skips the batching window), a
+//!    deep queue with slack takes the largest (throughput mode).
+//! 2. **Per-run thread cap** ([`policy::run_cap`]) — each batch
+//!    executes under [`Executor::run_capped`] with the pool sliced by
+//!    the expected number of overlapping batches; composes with
 //!    per-layer tuned caps as a min, so tuning is never widened.
-//! 2. **Active dispatchers** — surplus dispatchers park on a condvar
-//!    while the queue is shallow (one stays live) and are woken by
-//!    `submit` on bursts, instead of all camping on the intake lock.
+//! 3. **Active dispatchers** ([`policy::desired_active`]) — surplus
+//!    dispatchers keep waiting on the intake condvar while the queue is
+//!    shallow (one always stays live) and wake on submit bursts.
 //!
-//! The chosen caps are observable: `ServerStats::cap_range` reports the
-//! min/max cap used, and `NMPRUNE_SERVE_TRACE=1` prints one line per
-//! batch. Caps and parking are pure scheduling — logits are bitwise
-//! identical between static and adaptive modes.
+//! The decisions are observable: `ServerStats::cap_range` reports the
+//! min/max cap used, `ServerStats::batch_hist` the compiled batch sizes
+//! chosen, and `NMPRUNE_SERVE_TRACE=1` prints one line per batch. All
+//! of it is pure scheduling — logits are bitwise identical across
+//! static/adaptive modes and FIFO/priority disciplines.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -57,6 +76,7 @@ use crate::tensor::Tensor;
 use crate::util::stats::Summary;
 
 use super::executor::{ExecConfig, Executor};
+use super::policy::{self, PolicyConfig, Priority, QueueDiscipline, QueueSnapshot};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -66,12 +86,21 @@ pub struct ServerConfig {
     /// Max time the batcher waits to fill a batch.
     pub batch_window: Duration,
     /// Concurrent batch-executor (dispatcher) threads sharing the one
-    /// request queue and the one pool. 0 clamps to 1.
+    /// intake queue and the one pool. 0 clamps to 1.
     pub executors: usize,
-    /// Load-aware mode: derive the per-run thread cap and the number of
-    /// actively draining dispatchers from queue depth per batch, instead
-    /// of the fixed `pool/executors` slice chosen at startup.
+    /// Load-aware mode: derive the batch size, the per-run thread cap
+    /// and the number of actively draining dispatchers from the queue
+    /// gauge per drain, instead of fixed startup-time choices.
     pub adaptive: bool,
+    /// Intake ordering: FIFO (default; classes/deadlines stats-only) or
+    /// (priority, deadline, FIFO) with starvation protection.
+    pub discipline: QueueDiscipline,
+    /// Starvation protection: a queued background request older than
+    /// this is served ahead of interactive traffic.
+    pub starvation_limit: Duration,
+    /// Head-of-queue deadline slack below which a drain optimises for
+    /// latency (smallest compiled batch, no window fill).
+    pub slack_floor: Duration,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +110,9 @@ impl Default for ServerConfig {
             batch_window: Duration::from_millis(5),
             executors: 1,
             adaptive: false,
+            discipline: QueueDiscipline::Fifo,
+            starvation_limit: Duration::from_millis(100),
+            slack_floor: Duration::from_millis(10),
         }
     }
 }
@@ -88,6 +120,9 @@ impl Default for ServerConfig {
 struct Request {
     image: Tensor, // [H, W, C]
     enqueued: Instant,
+    /// Absolute deadline (stats + Priority-discipline ordering).
+    deadline: Option<Instant>,
+    prio: Priority,
     reply: Sender<Reply>,
 }
 
@@ -99,17 +134,165 @@ pub struct Reply {
     /// Batch this request was served in (the compiled batch size — may
     /// exceed the number of real requests when the batch was padded).
     pub batch: usize,
+    /// Whether the reply came after the request's deadline (always
+    /// false for deadline-less requests).
+    pub missed_deadline: bool,
+}
+
+/// One queued request plus its ordering key. Min-order is
+/// (deadline, submission seq) with `None` deadlines after every
+/// concrete one; the FIFO discipline stores `key_deadline = None`
+/// everywhere, degenerating the order to pure submission seq.
+struct Queued {
+    key_deadline: Option<Instant>,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        match (self.key_deadline, other.key_deadline) {
+            (Some(a), Some(b)) => a.cmp(&b).then(self.seq.cmp(&other.seq)),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => self.seq.cmp(&other.seq),
+        }
+    }
+}
+
+/// The intake queue: two per-class min-heaps behind one mutex, plus
+/// the condvar dispatchers wait on. The `interactive` heap orders by
+/// (deadline, seq); the `background` heap orders by seq alone — FIFO
+/// within the throughput class — so its head *is* the oldest arrival:
+/// starvation promotion serves exactly the starved request (a
+/// deadline-carrying newcomer can never jump an aged one and latch the
+/// promotion into priority inversion), and the age check is an O(1)
+/// peek. Under the FIFO discipline every request lands in the
+/// `interactive` heap with a `None` ordering deadline — pure
+/// submission order, classes recorded for stats only.
+struct IntakeState {
+    interactive: BinaryHeap<Reverse<Queued>>,
+    background: BinaryHeap<Reverse<Queued>>,
+    open: bool,
+    seq: u64,
+}
+
+struct Intake {
+    state: Mutex<IntakeState>,
+    cvar: Condvar,
+}
+
+impl IntakeState {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.background.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.interactive.is_empty() && self.background.is_empty()
+    }
+
+    /// Age of the oldest queued background request — an O(1) peek: the
+    /// background heap is seq-ordered, so its head is the oldest
+    /// arrival.
+    fn oldest_background_wait(&self, now: Instant) -> Option<Duration> {
+        self.background
+            .peek()
+            .map(|Reverse(q)| now.saturating_duration_since(q.req.enqueued))
+    }
+
+    /// Assemble the policy inputs under the intake lock. `busy` is the
+    /// number of dispatchers currently computing (excluding the
+    /// caller); `now` is sampled once by the caller so one snapshot is
+    /// internally consistent.
+    fn snapshot(&self, busy: usize, now: Instant) -> QueueSnapshot {
+        let head = self.interactive.peek().or_else(|| self.background.peek());
+        QueueSnapshot {
+            depth: self.len(),
+            busy,
+            head_slack: head
+                .and_then(|Reverse(q)| q.req.deadline)
+                .map(|d| d.saturating_duration_since(now)),
+            oldest_background_wait: self.oldest_background_wait(now),
+        }
+    }
+
+    /// Pop the next request in policy order: interactive first, unless
+    /// starvation protection promotes the background class this pop —
+    /// and then the promoted request is exactly the oldest background
+    /// arrival (the seq-ordered heap's head), so serving it clears the
+    /// promotion instead of latching it into priority inversion. The
+    /// age check runs only when both classes are actually queued.
+    fn pop_next(&mut self, pcfg: &PolicyConfig, now: Instant) -> Option<Request> {
+        let heap = if self.interactive.is_empty() {
+            &mut self.background
+        } else if self.background.is_empty() {
+            &mut self.interactive
+        } else {
+            let snap = QueueSnapshot {
+                oldest_background_wait: self.oldest_background_wait(now),
+                ..QueueSnapshot::default()
+            };
+            if policy::promote_background(pcfg, &snap) {
+                &mut self.background
+            } else {
+                &mut self.interactive
+            }
+        };
+        heap.pop().map(|Reverse(q)| q.req)
+    }
 }
 
 #[derive(Default)]
 struct StatsInner {
     latencies_ns: Vec<f64>,
+    /// Per-class latency samples, indexed by `Priority::index()`.
+    class_latencies_ns: [Vec<f64>; Priority::COUNT],
+    /// Per-class requests that carried a deadline / missed it.
+    deadline_total: [usize; Priority::COUNT],
+    deadline_missed: [usize; Priority::COUNT],
     batches: Vec<usize>,
+    /// Compiled batch size → number of batches executed at that size.
+    batch_hist: BTreeMap<usize, usize>,
     /// Per-batch chosen per-run thread cap (adaptive mode only).
     caps: Vec<usize>,
     started: Option<Instant>,
     finished: Option<Instant>,
     served: usize,
+}
+
+/// Per-traffic-class serving statistics.
+#[derive(Clone, Debug)]
+pub struct ClassStats {
+    pub served: usize,
+    /// Empty (`n == 0`) when the class served nothing.
+    pub latency: Summary,
+    /// Requests of this class that carried a deadline.
+    pub deadline_total: usize,
+    /// …and how many of those were answered after it.
+    pub deadline_missed: usize,
+}
+
+impl ClassStats {
+    /// Fraction of deadline-carrying requests answered late (0.0 when
+    /// none carried a deadline).
+    pub fn miss_rate(&self) -> f64 {
+        if self.deadline_total == 0 {
+            0.0
+        } else {
+            self.deadline_missed as f64 / self.deadline_total as f64
+        }
+    }
 }
 
 /// Aggregate serving statistics.
@@ -122,87 +305,42 @@ pub struct ServerStats {
     pub throughput_rps: f64,
     pub mean_batch: f64,
     /// Min/max per-run thread cap chosen across batches; `None` in
-    /// static mode or when no batch ran. The observable trace of the
-    /// adaptive controller (deep burst → small caps, trickle → pool
-    /// size).
+    /// static mode or when no batch ran.
     pub cap_range: Option<(usize, usize)>,
+    /// Per-class latency summaries and deadline-miss counts, indexed by
+    /// `Priority::index()`.
+    pub per_class: [ClassStats; Priority::COUNT],
+    /// (compiled batch size, batches executed at that size), ascending —
+    /// the observable trace of the gauge-driven batch-size policy.
+    pub batch_hist: Vec<(usize, usize)>,
 }
 
-/// Queue-depth gauge plus the parking primitive for surplus
-/// dispatchers. `depth` counts requests submitted but not yet drained
-/// into a batch (incremented in `submit`, decremented at batch
-/// formation); `busy` counts dispatchers currently computing a batch —
-/// without it, a request arriving while the only awake dispatcher is
-/// mid-compute would leave parked dispatchers asleep for a whole batch
-/// time. The condvar wakes parked dispatchers on bursts and at
-/// shutdown.
-struct LoadGauge {
-    depth: AtomicUsize,
-    busy: AtomicUsize,
-    closing: AtomicBool,
-    lock: Mutex<()>,
-    cvar: Condvar,
-}
-
-impl LoadGauge {
-    fn new() -> Self {
-        Self {
-            depth: AtomicUsize::new(0),
-            busy: AtomicUsize::new(0),
-            closing: AtomicBool::new(false),
-            lock: Mutex::new(()),
-            cvar: Condvar::new(),
-        }
+impl ServerStats {
+    pub fn class(&self, p: Priority) -> &ClassStats {
+        &self.per_class[p.index()]
     }
-}
-
-/// How many dispatchers are worth keeping awake: the ones already
-/// computing a batch plus one per full `max_batch` of queued work — at
-/// least one, at most all of them.
-fn desired_active(busy: usize, depth: usize, max_batch: usize, n_exec: usize) -> usize {
-    (busy + depth.div_ceil(max_batch.max(1))).clamp(1, n_exec)
-}
-
-/// Per-run thread cap for a batch about to execute: slice the pool by
-/// the number of batches expected to overlap — the ones other
-/// dispatchers are already computing, this one, and what the remaining
-/// queue depth can still fill — clamped to the dispatcher count. An
-/// idle server yields the whole pool; a deep queue yields
-/// `pool/n_exec`.
-fn adaptive_cap(
-    busy_others: usize,
-    depth_after: usize,
-    max_batch: usize,
-    n_exec: usize,
-    pool_size: usize,
-) -> usize {
-    let overlap = (busy_others + 1 + depth_after / max_batch.max(1)).clamp(1, n_exec.max(1));
-    pool_size.div_ceil(overlap).max(1)
 }
 
 /// The serving engine.
 pub struct Server {
-    tx: Option<Sender<Request>>,
+    intake: Arc<Intake>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
-    gauge: Arc<LoadGauge>,
-    /// Adaptive mode with >1 dispatcher: only then can anyone be parked
-    /// and worth waking from `submit` (a lone dispatcher never parks).
-    wake_dispatchers: bool,
+    discipline: QueueDiscipline,
     res: usize,
 }
 
 /// Everything a dispatcher thread needs, shared across all of them.
 struct Dispatch {
-    rx: Arc<Mutex<Receiver<Request>>>,
+    intake: Arc<Intake>,
     executors: Arc<Vec<(usize, Executor)>>,
     window: Duration,
     stats: Arc<Mutex<StatsInner>>,
-    gauge: Arc<LoadGauge>,
+    /// Dispatchers currently computing a batch.
+    busy: AtomicUsize,
     res: usize,
     adaptive: bool,
-    n_exec: usize,
-    pool_size: usize,
+    pcfg: PolicyConfig,
     trace: bool,
 }
 
@@ -230,7 +368,7 @@ impl Server {
             // queueing a full pool's worth of jobs each. Explicit
             // per-layer tuning (per_layer entries / a preset default
             // cap) is respected. Adaptive mode skips this: the slice is
-            // decided per batch from queue depth instead.
+            // decided per batch from the queue gauge instead.
             exec.default_choice.threads = pool_size.div_ceil(n_exec).max(1);
         }
         let executors: Arc<Vec<(usize, Executor)>> = Arc::new(
@@ -239,20 +377,31 @@ impl Server {
                 .map(|&b| (b, Executor::new(make_graph(b), exec.clone())))
                 .collect(),
         );
-        let (tx, rx) = channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
+        let intake = Arc::new(Intake {
+            state: Mutex::new(IntakeState {
+                interactive: BinaryHeap::new(),
+                background: BinaryHeap::new(),
+                open: true,
+                seq: 0,
+            }),
+            cvar: Condvar::new(),
+        });
         let stats = Arc::new(Mutex::new(StatsInner::default()));
-        let gauge = Arc::new(LoadGauge::new());
         let ctx = Arc::new(Dispatch {
-            rx,
+            intake: Arc::clone(&intake),
             executors,
             window: cfg.batch_window,
             stats: Arc::clone(&stats),
-            gauge: Arc::clone(&gauge),
+            busy: AtomicUsize::new(0),
             res,
             adaptive: cfg.adaptive,
-            n_exec,
-            pool_size,
+            pcfg: PolicyConfig {
+                batch_sizes: sizes,
+                n_exec,
+                pool_size,
+                starvation_limit: cfg.starvation_limit,
+                slack_floor: cfg.slack_floor,
+            },
             // `=1` to enable, like NMPRUNE_PIN (so `=0` really is off).
             trace: std::env::var("NMPRUNE_SERVE_TRACE").map(|v| v == "1").unwrap_or(false),
         });
@@ -263,52 +412,84 @@ impl Server {
             })
             .collect();
         Self {
-            tx: Some(tx),
+            intake,
             workers,
             stats,
-            gauge,
-            wake_dispatchers: cfg.adaptive && n_exec > 1,
+            discipline: cfg.discipline,
             res,
         }
     }
 
-    /// Submit one image `[H, W, C]`; returns a handle to await the reply.
+    /// Submit one image `[H, W, C]` as interactive, deadline-less
+    /// traffic; returns a handle to await the reply.
     pub fn submit(&self, image: Tensor) -> Receiver<Reply> {
+        self.submit_with(image, Priority::Interactive, None)
+    }
+
+    /// Submit one image `[H, W, C]` with a traffic class and an
+    /// optional deadline (relative to now). Under the Priority
+    /// discipline the deadline orders the interactive class (the
+    /// background class stays FIFO so starvation protection is exact);
+    /// deadlines are tracked in the miss stats under both disciplines.
+    pub fn submit_with(
+        &self,
+        image: Tensor,
+        prio: Priority,
+        deadline: Option<Duration>,
+    ) -> Receiver<Reply> {
         assert_eq!(image.shape, vec![self.res, self.res, 3], "image shape");
         let (reply_tx, reply_rx) = channel();
-        // Gauge before send: a dispatcher can only drain (and decrement
-        // for) this request after `send`, so depth never underflows.
-        self.gauge.depth.fetch_add(1, Ordering::AcqRel);
-        self.tx
-            .as_ref()
-            .unwrap()
-            .send(Request {
-                image,
-                enqueued: Instant::now(),
-                reply: reply_tx,
-            })
-            .expect("server stopped");
-        if self.wake_dispatchers {
-            // Wake parked dispatchers so a burst is met with more
-            // drains. Taking the lock pairs the notify with the parked
-            // side's predicate check (no missed wake-ups); the parked
-            // side's wait also has a timeout backstop.
-            let _guard = self.gauge.lock.lock().unwrap();
-            self.gauge.cvar.notify_all();
+        let now = Instant::now();
+        let req = Request {
+            image,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            prio,
+            reply: reply_tx,
+        };
+        {
+            let mut st = self.intake.state.lock().unwrap();
+            assert!(st.open, "server stopped");
+            let seq = st.seq;
+            st.seq += 1;
+            // Ordering key: deadlines order the *interactive* class
+            // under the Priority discipline. The background class is
+            // FIFO (seq-only) so starvation protection stays exact —
+            // see the `IntakeState` doc; the FIFO discipline ignores
+            // deadlines for ordering entirely. Deadlines always count
+            // toward miss stats regardless.
+            let key_deadline = match (self.discipline, prio) {
+                (QueueDiscipline::Priority, Priority::Interactive) => req.deadline,
+                _ => None,
+            };
+            let queued = Queued {
+                key_deadline,
+                seq,
+                req,
+            };
+            match (self.discipline, prio) {
+                // FIFO: one seq-ordered queue regardless of class.
+                (QueueDiscipline::Fifo, _) | (_, Priority::Interactive) => {
+                    st.interactive.push(Reverse(queued))
+                }
+                (QueueDiscipline::Priority, Priority::Batch) => {
+                    st.background.push(Reverse(queued))
+                }
+            }
         }
+        // Wake dispatchers (parked ones included) outside the lock;
+        // waiters re-check their predicates, so notify_all is safe.
+        self.intake.cvar.notify_all();
         reply_rx
     }
 
     /// Drain and stop the server, returning aggregate stats.
     pub fn shutdown(mut self) -> ServerStats {
-        self.tx.take(); // closes channel; dispatchers drain then exit
-        // Wake parked dispatchers so they observe the close and help
-        // drain whatever is still queued.
-        self.gauge.closing.store(true, Ordering::Release);
         {
-            let _guard = self.gauge.lock.lock().unwrap();
-            self.gauge.cvar.notify_all();
+            let mut st = self.intake.state.lock().unwrap();
+            st.open = false; // dispatchers drain then exit
         }
+        self.intake.cvar.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -317,15 +498,18 @@ impl Server {
             (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
             _ => 0.0,
         };
-        ServerStats {
-            served: inner.served,
-            latency: if inner.latencies_ns.is_empty() {
+        let summarise = |samples: &[f64]| {
+            if samples.is_empty() {
                 // Nothing served: report an explicitly empty summary
                 // instead of fabricating a 0 ns request.
                 Summary::empty()
             } else {
-                Summary::of(&inner.latencies_ns)
-            },
+                Summary::of(samples)
+            }
+        };
+        ServerStats {
+            served: inner.served,
+            latency: summarise(&inner.latencies_ns),
             throughput_rps: if wall > 0.0 {
                 inner.served as f64 / wall
             } else {
@@ -344,123 +528,135 @@ impl Server {
                     None => Some((c, c)),
                     Some((lo, hi)) => Some((lo.min(c), hi.max(c))),
                 }),
+            per_class: Priority::ALL.map(|p| {
+                let i = p.index();
+                ClassStats {
+                    served: inner.class_latencies_ns[i].len(),
+                    latency: summarise(&inner.class_latencies_ns[i]),
+                    deadline_total: inner.deadline_total[i],
+                    deadline_missed: inner.deadline_missed[i],
+                }
+            }),
+            batch_hist: inner.batch_hist.iter().map(|(&b, &n)| (b, n)).collect(),
         }
     }
 }
 
 /// One batch-executor thread. Several of these may drain the same
-/// queue: the receiver sits behind a mutex, and each request is
-/// delivered to exactly one dispatcher, so every request is answered
+/// intake queue: pops happen under the intake mutex, so each request is
+/// delivered to exactly one dispatcher and every request is answered
 /// exactly once regardless of how many executors run.
 fn dispatcher(ctx: &Dispatch, idx: usize) {
-    let max_batch = ctx.executors.last().map(|(b, _)| *b).unwrap_or(1);
-    // Bounded poll interval for parked/polling dispatchers (never 0,
-    // or they would spin).
+    // Bounded re-check interval for waiting dispatchers (never 0, or a
+    // missed predicate change could strand them).
     let poll = ctx.window.max(Duration::from_millis(1));
+    // Requests drained in an earlier iteration beyond what that
+    // iteration's executor could take (a group size strictly between
+    // two compiled batch sizes). They are served first next iteration —
+    // they were popped in policy order and have waited longest.
     let mut pending: Vec<Request> = Vec::new();
-    let mut open = true;
-    while open || !pending.is_empty() {
-        // Adaptive mode: surplus dispatchers park while the queue is
-        // shallow enough that fewer drains suffice. Dispatcher 0 never
-        // parks (something must accept the first request of a burst);
-        // the rest re-check on every submit notify, on a timeout
-        // backstop, and at shutdown.
-        if ctx.adaptive && idx > 0 && open && pending.is_empty() {
-            let mut guard = ctx.gauge.lock.lock().unwrap();
-            while !ctx.gauge.closing.load(Ordering::Acquire)
-                && desired_active(
-                    ctx.gauge.busy.load(Ordering::Acquire),
-                    ctx.gauge.depth.load(Ordering::Acquire),
-                    max_batch,
-                    ctx.n_exec,
-                ) <= idx
-            {
-                let (g, _timed_out) = ctx.gauge.cvar.wait_timeout(guard, poll).unwrap();
-                guard = g;
-            }
-        }
-        // Blocking intake of the first request. Holding the queue lock
-        // across the blocking recv is fine: there is nothing for the
-        // other dispatchers to receive while the queue is empty. Woken
-        // adaptive dispatchers poll with a bounded wait instead, so
-        // that when the burst is already drained they go back to the
-        // parking check rather than camping on the intake lock.
-        if open && pending.is_empty() {
-            if ctx.adaptive && idx > 0 {
-                // try_lock, not lock: Mutex::lock has no timeout, so a
-                // blocking acquire would camp behind a dispatcher that
-                // idles holding the lock across its recv — exactly the
-                // unbounded wait parking is meant to replace. If the
-                // lock is taken, the owner is handling intake; back off
-                // briefly and re-evaluate parking.
-                match ctx.rx.try_lock() {
-                    Ok(q) => match q.recv_timeout(poll) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => continue,
-                        Err(RecvTimeoutError::Disconnected) => {
-                            open = false;
-                            continue;
-                        }
-                    },
-                    Err(_) => {
-                        std::thread::sleep(Duration::from_micros(500));
-                        continue;
-                    }
+    loop {
+        // Phase 1 — wait for work (skipped while carried requests are
+        // in hand). Parked surplus dispatchers (adaptive mode, idx
+        // beyond the policy's desired_active) keep waiting even while
+        // work is queued; dispatcher 0 never parks, and shutdown
+        // (open = false) overrides parking so everyone helps drain.
+        let mut st = ctx.intake.state.lock().unwrap();
+        while pending.is_empty() {
+            if st.is_empty() {
+                if !st.open {
+                    return;
                 }
+            } else if !(ctx.adaptive && idx > 0 && st.open) {
+                break;
             } else {
-                match ctx.rx.lock().unwrap().recv() {
-                    Ok(r) => pending.push(r),
-                    Err(_) => {
-                        open = false;
-                        continue;
-                    }
+                let snap = st.snapshot(ctx.busy.load(Ordering::Acquire), Instant::now());
+                if policy::desired_active(&ctx.pcfg, &snap) > idx {
+                    break;
                 }
             }
+            st = ctx.intake.cvar.wait_timeout(st, poll).unwrap().0;
         }
-        // Fill up to max_batch within the window — but only if the
-        // intake lock is free. If another dispatcher owns it (parked in
-        // its own blocking recv), waiting for the lock could stall this
-        // batch until the *next* request arrives; serving the batch we
-        // already have keeps trickle-latency bounded by the window.
-        if open {
-            if let Ok(q) = ctx.rx.try_lock() {
-                let deadline = Instant::now() + ctx.window;
-                while pending.len() < max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match q.recv_timeout(deadline - now) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => {
-                            open = false;
-                            break;
-                        }
-                    }
+        // Phase 2 — per-drain policy decisions from one snapshot.
+        // Carried requests count too: they sit ahead of the queue head,
+        // so the effective depth includes them and the effective head
+        // slack is the tightest deadline among them and the queue head
+        // — a carried tight-deadline request must still trigger latency
+        // mode instead of idling out a fresh batching window.
+        let now = Instant::now();
+        let mut snap = st.snapshot(ctx.busy.load(Ordering::Acquire), now);
+        snap.depth += pending.len();
+        if let Some(d) = pending.iter().filter_map(|r| r.deadline).min() {
+            let carried_slack = d.saturating_duration_since(now);
+            snap.head_slack = Some(match snap.head_slack {
+                Some(s) => s.min(carried_slack),
+                None => carried_slack,
+            });
+        }
+        let (target, wait_fill) = if ctx.adaptive {
+            (
+                policy::choose_batch_size(&ctx.pcfg, &snap),
+                policy::fill_window(&ctx.pcfg, &snap),
+            )
+        } else {
+            (ctx.pcfg.max_batch(), true)
+        };
+        // Phase 3 — carried requests first, then drain up to `target`
+        // in policy order; if underfull and allowed, wait out the
+        // batching window for more arrivals (the condvar wait drops the
+        // lock, so submits and the other dispatchers proceed
+        // meanwhile).
+        let fill_deadline = now + ctx.window;
+        let mut group: Vec<Request> = std::mem::take(&mut pending);
+        loop {
+            while group.len() < target {
+                match st.pop_next(&ctx.pcfg, Instant::now()) {
+                    Some(r) => group.push(r),
+                    None => break,
                 }
             }
+            if group.len() >= target || !st.open || !wait_fill {
+                break;
+            }
+            let rem = fill_deadline.saturating_duration_since(Instant::now());
+            if rem.is_zero() {
+                break;
+            }
+            st = ctx.intake.cvar.wait_timeout(st, rem).unwrap().0;
         }
-        if pending.is_empty() {
+        // Phase 4 — per-run cap from the post-drain queue state: the
+        // remaining depth plus the *other* dispatchers' in-flight
+        // batches predict the overlap this batch will see.
+        let run_cap = if ctx.adaptive {
+            policy::run_cap(
+                &ctx.pcfg,
+                &st.snapshot(ctx.busy.load(Ordering::Acquire), Instant::now()),
+            )
+        } else {
+            0
+        };
+        drop(st);
+        if group.is_empty() {
             continue;
         }
-        // Largest supported batch ≤ pending — or, when even the
-        // smallest compiled batch exceeds what is pending (trickle /
-        // shutdown drain), the smallest one zero-padded: the executor's
-        // compiled input shape is always honoured and every request is
-        // answered. (Running `batch.min(pending.len())` real rows
-        // against a larger compiled batch used to trip the Input-op
-        // shape assert and drop the requests.)
+        // Largest supported batch ≤ group — or, when even the smallest
+        // compiled batch exceeds what was drained (trickle / shutdown
+        // drain / latency mode), the smallest one zero-padded: the
+        // executor's compiled input shape is always honoured and every
+        // request is answered. A group size strictly *between* two
+        // compiled sizes (window expiry or shutdown drain with e.g. 3
+        // pending against sizes [2, 4]) serves the largest fitting
+        // batch and carries the surplus to the next iteration — never
+        // overrunning the compiled shape, never dropping a request.
         let (batch, exec) = ctx
             .executors
             .iter()
             .rev()
-            .find(|(b, _)| *b <= pending.len())
+            .find(|(b, _)| *b <= group.len())
             .unwrap_or(&ctx.executors[0]);
         let batch = *batch;
-        let take = batch.min(pending.len());
-        let group: Vec<Request> = pending.drain(..take).collect();
-        ctx.gauge.depth.fetch_sub(take, Ordering::AcqRel);
+        let take = group.len().min(batch);
+        pending = group.split_off(take);
         // Assemble the batched NHWC input; rows [take, batch) stay zero
         // and their logits are computed but discarded.
         let mut input = Tensor::zeros(&[batch, ctx.res, ctx.res, 3]);
@@ -468,37 +664,19 @@ fn dispatcher(ctx: &Dispatch, idx: usize) {
         for (i, r) in group.iter().enumerate() {
             input.data[i * per..(i + 1) * per].copy_from_slice(&r.image.data);
         }
-        // Per-run cap: adaptive mode slices the pool by how many
-        // batches can overlap — dispatchers already computing, this
-        // batch, and what is still queued; static mode relies on the
-        // startup-time default cap (run_cap 0 = defer to per-layer
-        // choices). `busy` is read before our own increment below, so
-        // it counts the *other* in-flight batches.
-        let run_cap = if ctx.adaptive {
-            adaptive_cap(
-                ctx.gauge.busy.load(Ordering::Acquire),
-                ctx.gauge.depth.load(Ordering::Acquire),
-                max_batch,
-                ctx.n_exec,
-                ctx.pool_size,
-            )
-        } else {
-            0
-        };
         let t0 = Instant::now();
         {
             let mut s = ctx.stats.lock().unwrap();
             // Keep the earliest start across racing dispatchers.
             s.started = Some(s.started.map_or(t0, |prev| prev.min(t0)));
         }
-        ctx.gauge.busy.fetch_add(1, Ordering::AcqRel);
+        ctx.busy.fetch_add(1, Ordering::AcqRel);
         let logits = exec.run_capped(&input, run_cap);
-        ctx.gauge.busy.fetch_sub(1, Ordering::AcqRel);
+        ctx.busy.fetch_sub(1, Ordering::AcqRel);
         let done = Instant::now();
         if ctx.trace {
             eprintln!(
-                "[serve] exec={idx} batch={batch} real={take} cap={run_cap} depth={}",
-                ctx.gauge.depth.load(Ordering::Relaxed)
+                "[serve] exec={idx} batch={batch} real={take} target={target} cap={run_cap}"
             );
         }
         let classes = logits.shape[1];
@@ -511,9 +689,19 @@ fn dispatcher(ctx: &Dispatch, idx: usize) {
         if ctx.adaptive {
             s.caps.push(run_cap);
         }
+        *s.batch_hist.entry(batch).or_insert(0) += 1;
         for (i, r) in group.into_iter().enumerate() {
             let latency = done - r.enqueued;
+            let missed = r.deadline.is_some_and(|d| done > d);
+            let ci = r.prio.index();
             s.latencies_ns.push(latency.as_nanos() as f64);
+            s.class_latencies_ns[ci].push(latency.as_nanos() as f64);
+            if r.deadline.is_some() {
+                s.deadline_total[ci] += 1;
+                if missed {
+                    s.deadline_missed[ci] += 1;
+                }
+            }
             // Batching efficiency counts *real* requests per batch: a
             // padded trickle must report mean_batch 1.0, not the
             // compiled size (Reply::batch still carries the latter).
@@ -523,6 +711,7 @@ fn dispatcher(ctx: &Dispatch, idx: usize) {
                 logits: logits.data[i * classes..(i + 1) * classes].to_vec(),
                 latency,
                 batch,
+                missed_deadline: missed,
             });
         }
     }
@@ -549,8 +738,7 @@ mod tests {
             ServerConfig {
                 batch_sizes: vec![1, 2],
                 batch_window: Duration::from_millis(2),
-                executors: 1,
-                adaptive: false,
+                ..ServerConfig::default()
             },
         );
         let replies: Vec<_> = (0..6).map(|i| server.submit(image(res, i))).collect();
@@ -558,12 +746,21 @@ mod tests {
             let reply = r.recv().expect("reply");
             assert_eq!(reply.logits.len(), 1000);
             assert!(reply.batch >= 1 && reply.batch <= 2);
+            assert!(!reply.missed_deadline, "deadline-less requests never miss");
         }
         let stats = server.shutdown();
         assert_eq!(stats.served, 6);
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.latency.mean > 0.0);
         assert!(stats.cap_range.is_none(), "static mode records no caps");
+        // Default submissions are interactive and deadline-less.
+        assert_eq!(stats.class(Priority::Interactive).served, 6);
+        assert_eq!(stats.class(Priority::Batch).served, 0);
+        assert_eq!(stats.class(Priority::Interactive).deadline_total, 0);
+        assert_eq!(stats.class(Priority::Interactive).miss_rate(), 0.0);
+        // The histogram accounts for every served request.
+        let hist_total: usize = stats.batch_hist.iter().map(|&(b, n)| b * n).sum();
+        assert!(hist_total >= 6, "histogram covers all batches (padding included)");
     }
 
     #[test]
@@ -576,8 +773,7 @@ mod tests {
             ServerConfig {
                 batch_sizes: vec![1, 2, 4],
                 batch_window: Duration::from_millis(50),
-                executors: 1,
-                adaptive: false,
+                ..ServerConfig::default()
             },
         );
         // Burst of 8 requests: with a generous window, batches of 4 form.
@@ -589,11 +785,16 @@ mod tests {
         let stats = server.shutdown();
         assert!(max_batch >= 2, "expected batching, got max batch {max_batch}");
         assert!(stats.mean_batch > 1.0);
+        assert!(
+            stats.batch_hist.iter().any(|&(b, _)| b >= 2),
+            "histogram records the formed batches: {:?}",
+            stats.batch_hist
+        );
     }
 
-    /// Satellite: N client threads submitting through concurrent batch
-    /// executors — every request is answered exactly once, the served
-    /// count matches, and the summary statistics stay finite and sane.
+    /// N client threads submitting through concurrent batch executors —
+    /// every request is answered exactly once, the served count
+    /// matches, and the summary statistics stay finite and sane.
     #[test]
     fn concurrent_executors_answer_every_request_exactly_once() {
         let res = 32;
@@ -606,7 +807,7 @@ mod tests {
                 batch_sizes: vec![1, 2],
                 batch_window: Duration::from_millis(2),
                 executors: 3,
-                adaptive: false,
+                ..ServerConfig::default()
             },
         ));
         let handles: Vec<_> = (0..clients)
@@ -660,7 +861,7 @@ mod tests {
                     batch_sizes: vec![1],
                     batch_window: Duration::from_millis(1),
                     executors,
-                    adaptive: false,
+                    ..ServerConfig::default()
                 },
             );
             let rxs: Vec<_> = (0..4).map(|i| server.submit(image(res, i))).collect();
@@ -681,8 +882,7 @@ mod tests {
             ServerConfig {
                 batch_sizes: vec![1],
                 batch_window: Duration::from_millis(1),
-                executors: 1,
-                adaptive: false,
+                ..ServerConfig::default()
             },
         );
         let rxs: Vec<_> = (0..3).map(|i| server.submit(image(res, i))).collect();
@@ -693,10 +893,10 @@ mod tests {
         }
     }
 
-    /// Regression (satellite bugfix): when fewer requests are pending
-    /// than the smallest compiled batch size, the batch is zero-padded
-    /// instead of panicking on the Input-op shape assert — and the real
-    /// rows' logits are bitwise what a hand-padded direct run produces.
+    /// Regression: when fewer requests are pending than the smallest
+    /// compiled batch size, the batch is zero-padded instead of
+    /// panicking on the Input-op shape assert — and the real rows'
+    /// logits are bitwise what a hand-padded direct run produces.
     #[test]
     fn fewer_requests_than_smallest_batch_are_padded_not_dropped() {
         let res = 32;
@@ -710,8 +910,7 @@ mod tests {
                 ServerConfig {
                     batch_sizes: vec![4],
                     batch_window: Duration::from_millis(2),
-                    executors: 1,
-                    adaptive: false,
+                    ..ServerConfig::default()
                 },
             );
             let images: Vec<Tensor> = (0..n).map(|i| image(res, 100 + i as u64)).collect();
@@ -737,9 +936,45 @@ mod tests {
         }
     }
 
-    /// Regression (satellite bugfix): a server that served nothing
-    /// reports an explicitly empty latency summary — not a fabricated
-    /// 0 ns sample — and every stat stays finite.
+    /// Regression (review finding): a drained group whose size falls
+    /// strictly *between* two compiled batch sizes — 3 requests against
+    /// sizes [2, 4] at the shutdown drain — must serve the largest
+    /// fitting batch and carry the surplus to the next drain, not
+    /// overrun the compiled input shape (which panicked the dispatcher
+    /// and dropped all three replies).
+    #[test]
+    fn group_between_compiled_sizes_is_split_not_overrun() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+            res,
+            ServerConfig {
+                batch_sizes: vec![2, 4],
+                // Long window: the drain is still filling when shutdown
+                // closes the intake with 3 pending.
+                batch_window: Duration::from_millis(200),
+                ..ServerConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..3).map(|i| server.submit(image(res, 200 + i))).collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 3);
+        for rx in rxs {
+            let reply = rx.try_recv().expect("split drain must answer everyone");
+            assert_eq!(reply.logits.len(), 1000);
+            assert_eq!(reply.batch, 2, "both drains run on the batch-2 executor");
+        }
+        assert_eq!(
+            stats.batch_hist,
+            vec![(2, 2)],
+            "3 requests split as 2 + 1(padded) on the batch-2 executor"
+        );
+    }
+
+    /// Regression: a server that served nothing reports an explicitly
+    /// empty latency summary — not a fabricated 0 ns sample — and every
+    /// stat stays finite, per class included.
     #[test]
     fn zero_request_shutdown_reports_empty_stats() {
         let res = 32;
@@ -753,6 +988,7 @@ mod tests {
                     batch_window: Duration::from_millis(1),
                     executors: 2,
                     adaptive,
+                    ..ServerConfig::default()
                 },
             );
             let stats = server.shutdown();
@@ -762,6 +998,12 @@ mod tests {
             assert_eq!(stats.throughput_rps, 0.0);
             assert_eq!(stats.mean_batch, 0.0);
             assert!(stats.cap_range.is_none());
+            assert!(stats.batch_hist.is_empty());
+            for p in Priority::ALL {
+                assert_eq!(stats.class(p).served, 0);
+                assert_eq!(stats.class(p).latency.n, 0);
+                assert_eq!(stats.class(p).miss_rate(), 0.0);
+            }
             for v in [
                 stats.latency.stddev,
                 stats.latency.min,
@@ -774,9 +1016,9 @@ mod tests {
         }
     }
 
-    /// Tentpole: adaptive mode answers every request exactly once with
-    /// logits bitwise identical to static mode, and records the caps it
-    /// chose.
+    /// Adaptive mode answers every request exactly once with logits
+    /// bitwise identical to static mode, and records the caps and batch
+    /// sizes it chose.
     #[test]
     fn adaptive_mode_matches_static_logits_and_records_caps() {
         let res = 32;
@@ -790,6 +1032,7 @@ mod tests {
                     batch_window: Duration::from_millis(2),
                     executors: 2,
                     adaptive,
+                    ..ServerConfig::default()
                 },
             );
             let rxs: Vec<_> = (0..12).map(|i| server.submit(image(res, i))).collect();
@@ -811,33 +1054,194 @@ mod tests {
         assert!(static_stats.cap_range.is_none());
         let (lo, hi) = adaptive_stats.cap_range.expect("adaptive records caps");
         assert!(lo >= 1 && hi <= 4, "caps within pool bounds: {lo}..{hi}");
+        // Every batch size in the histogram is a compiled size.
+        for &(b, _) in &adaptive_stats.batch_hist {
+            assert!(b == 2 || b == 4, "unknown batch size {b} in histogram");
+        }
     }
 
-    /// The adaptive controller itself: deep queues slice the pool,
-    /// shallow queues hand a lone batch the whole pool, and the number
-    /// of dispatchers worth waking scales with depth.
+    /// Tentpole: mixed-priority traffic under the Priority discipline
+    /// produces logits bitwise identical to the FIFO discipline, and the
+    /// per-class stats attribute every request to its class.
     #[test]
-    fn adaptive_controller_cap_and_parking_policy() {
-        // Idle server, empty queue → lone batch gets the whole pool.
-        assert_eq!(adaptive_cap(0, 0, 4, 2, 8), 8);
-        // A full extra batch queued → two overlap → half the pool each.
-        assert_eq!(adaptive_cap(0, 4, 4, 2, 8), 4);
-        // Another dispatcher already computing → same split, even with
-        // an empty queue.
-        assert_eq!(adaptive_cap(1, 0, 4, 2, 8), 4);
-        // Very deep queue → clamped to the dispatcher count, not below
-        // one worker.
-        assert_eq!(adaptive_cap(0, 100, 4, 2, 8), 4);
-        assert_eq!(adaptive_cap(0, 100, 4, 4, 2), 1);
-        // Parking: shallow queues keep one drainer; queued work or a
-        // busy dispatcher wakes more; never more than exist.
-        assert_eq!(desired_active(0, 0, 4, 3), 1);
-        assert_eq!(desired_active(0, 1, 4, 3), 1);
-        // A request arriving while the lone awake dispatcher computes
-        // must wake a second one — busy counts toward desired.
-        assert_eq!(desired_active(1, 1, 4, 3), 2);
-        assert_eq!(desired_active(0, 5, 4, 3), 2);
-        assert_eq!(desired_active(2, 100, 4, 3), 3);
+    fn priority_discipline_matches_fifo_logits_with_per_class_stats() {
+        let res = 32;
+        let run = |discipline: QueueDiscipline| -> (Vec<Vec<f32>>, ServerStats) {
+            let server = Server::start(
+                |b| build_model(ModelArch::ResNet18, b, res),
+                ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
+                res,
+                ServerConfig {
+                    batch_sizes: vec![2, 4],
+                    batch_window: Duration::from_millis(2),
+                    executors: 2,
+                    adaptive: true,
+                    discipline,
+                    ..ServerConfig::default()
+                },
+            );
+            let rxs: Vec<_> = (0..10)
+                .map(|i| {
+                    let (prio, ddl) = if i % 2 == 0 {
+                        (Priority::Interactive, Some(Duration::from_secs(30)))
+                    } else {
+                        (Priority::Batch, None)
+                    };
+                    server.submit_with(image(res, i), prio, ddl)
+                })
+                .collect();
+            let logits = rxs
+                .into_iter()
+                .map(|rx| {
+                    let reply = rx.recv().expect("reply");
+                    assert!(rx.try_recv().is_err(), "exactly one reply");
+                    reply.logits
+                })
+                .collect();
+            (logits, server.shutdown())
+        };
+        let (fifo_logits, fifo_stats) = run(QueueDiscipline::Fifo);
+        let (prio_logits, prio_stats) = run(QueueDiscipline::Priority);
+        assert_eq!(fifo_logits, prio_logits, "discipline changed numerics");
+        for stats in [&fifo_stats, &prio_stats] {
+            assert_eq!(stats.served, 10);
+            assert_eq!(stats.class(Priority::Interactive).served, 5);
+            assert_eq!(stats.class(Priority::Batch).served, 5);
+            // Generous 30 s deadlines: tracked, not missed.
+            assert_eq!(stats.class(Priority::Interactive).deadline_total, 5);
+            assert_eq!(stats.class(Priority::Interactive).deadline_missed, 0);
+            assert_eq!(stats.class(Priority::Batch).deadline_total, 0);
+        }
+    }
+
+    /// Deadline misses are counted: a deadline that already passed at
+    /// submit time must be reported as missed in the reply and in the
+    /// per-class stats, without affecting the logits.
+    #[test]
+    fn expired_deadlines_are_counted_as_missed() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 2],
+                batch_window: Duration::from_millis(1),
+                discipline: QueueDiscipline::Priority,
+                ..ServerConfig::default()
+            },
+        );
+        let rx_late =
+            server.submit_with(image(res, 1), Priority::Interactive, Some(Duration::ZERO));
+        let rx_ok =
+            server.submit_with(image(res, 2), Priority::Interactive, Some(Duration::from_secs(30)));
+        assert!(rx_late.recv().expect("reply").missed_deadline);
+        assert!(!rx_ok.recv().expect("reply").missed_deadline);
+        let stats = server.shutdown();
+        let cls = stats.class(Priority::Interactive);
+        assert_eq!(cls.deadline_total, 2);
+        assert_eq!(cls.deadline_missed, 1);
+        assert!((cls.miss_rate() - 0.5).abs() < 1e-12);
+    }
+
+    /// Regression (review finding): starvation promotion must serve the
+    /// *oldest* background request and then clear — a deadline-carrying
+    /// background newcomer must neither jump the aged request nor latch
+    /// the promotion into serving background ahead of interactive
+    /// forever. Pure pop-order test on the intake state: constructed
+    /// timestamps, no threads, no sleeps.
+    #[test]
+    fn starvation_promotion_serves_oldest_background_then_clears() {
+        let pcfg = PolicyConfig {
+            batch_sizes: vec![1, 4],
+            n_exec: 1,
+            pool_size: 1,
+            starvation_limit: Duration::from_millis(100),
+            slack_floor: Duration::from_millis(10),
+        };
+        let now = Instant::now();
+        // Tag requests by image length so pops are identifiable.
+        let mk = |tag: usize, prio: Priority, enqueued: Instant, deadline: Option<Instant>| {
+            let (tx, _rx) = channel();
+            Request {
+                image: Tensor::zeros(&[tag]),
+                enqueued,
+                deadline,
+                prio,
+                reply: tx,
+            }
+        };
+        let mut st = IntakeState {
+            interactive: BinaryHeap::new(),
+            background: BinaryHeap::new(),
+            open: true,
+            seq: 3,
+        };
+        // Aged, deadline-less background request (past the limit).
+        st.background.push(Reverse(Queued {
+            key_deadline: None,
+            seq: 0,
+            req: mk(1, Priority::Batch, now - Duration::from_millis(200), None),
+        }));
+        // Fresh interactive request.
+        st.interactive.push(Reverse(Queued {
+            key_deadline: None,
+            seq: 1,
+            req: mk(2, Priority::Interactive, now, None),
+        }));
+        // Fresh background request *with* a deadline: background is
+        // seq-ordered, so it must not jump the aged one.
+        st.background.push(Reverse(Queued {
+            key_deadline: None,
+            seq: 2,
+            req: mk(3, Priority::Batch, now, Some(now + Duration::from_millis(5))),
+        }));
+        let order: Vec<usize> = (0..3)
+            .map(|_| st.pop_next(&pcfg, now).expect("queued").image.shape[0])
+            .collect();
+        assert_eq!(
+            order,
+            vec![1, 2, 3],
+            "aged background (promoted), then interactive (promotion cleared), then fresh background"
+        );
+        assert!(st.pop_next(&pcfg, now).is_none());
+    }
+
+    /// Starvation protection end to end: with interactive traffic
+    /// continuously queued, an old background request is still served
+    /// (the promotion path), and the background class drains.
+    #[test]
+    fn background_class_is_not_starved() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 2],
+                batch_window: Duration::from_millis(1),
+                discipline: QueueDiscipline::Priority,
+                // Tiny limit so the test promotes quickly.
+                starvation_limit: Duration::from_millis(5),
+                ..ServerConfig::default()
+            },
+        );
+        let bg = server.submit_with(image(res, 0), Priority::Batch, None);
+        // Keep interactive traffic flowing while the background request
+        // ages past the starvation limit.
+        let mut fg = Vec::new();
+        for i in 0..12u64 {
+            fg.push(server.submit_with(image(res, 1 + i), Priority::Interactive, None));
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let bg_reply = bg.recv().expect("background request must not starve");
+        assert_eq!(bg_reply.logits.len(), 1000);
+        for rx in fg {
+            assert_eq!(rx.recv().expect("interactive reply").logits.len(), 1000);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.class(Priority::Batch).served, 1);
+        assert_eq!(stats.class(Priority::Interactive).served, 12);
     }
 
     /// Parked dispatchers must wake for bursts and for shutdown: a
@@ -855,6 +1259,7 @@ mod tests {
                 batch_window: Duration::from_millis(2),
                 executors: 3,
                 adaptive: true,
+                ..ServerConfig::default()
             },
         );
         // Trickle: one at a time (surplus dispatchers stay parked).
@@ -871,5 +1276,48 @@ mod tests {
         assert_eq!(stats.served, 13);
         let (lo, hi) = stats.cap_range.expect("caps recorded");
         assert!(lo >= 1 && hi <= 4);
+    }
+
+    /// A tight head deadline flips the drain into latency mode: the
+    /// smallest compiled batch is chosen even though the queue is deep
+    /// (observable through the batch histogram).
+    #[test]
+    fn tight_deadlines_choose_small_batches() {
+        let res = 32;
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+            res,
+            ServerConfig {
+                batch_sizes: vec![1, 8],
+                // A long window would otherwise merge the whole burst.
+                batch_window: Duration::from_millis(100),
+                adaptive: true,
+                discipline: QueueDiscipline::Priority,
+                slack_floor: Duration::from_millis(50),
+                ..ServerConfig::default()
+            },
+        );
+        // Every request's slack (20 ms) is under the 50 ms floor, so
+        // each drain takes the smallest batch and skips the window.
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                server.submit_with(
+                    image(res, i),
+                    Priority::Interactive,
+                    Some(Duration::from_millis(20)),
+                )
+            })
+            .collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().expect("reply").logits.len(), 1000);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 6);
+        assert_eq!(
+            stats.batch_hist,
+            vec![(1, 6)],
+            "latency mode must have served every request on the batch-1 executor"
+        );
     }
 }

@@ -5,15 +5,20 @@
 //!   run    --model M [...]       single inference, timing report
 //!   serve  --model M [...]       batching server demo with load generator
 //!                                (--executors N: concurrent batch executors;
-//!                                --adaptive: load-aware caps + dispatcher
-//!                                parking; --pin: core-pinned pool workers)
+//!                                --adaptive: load-aware batch size + caps +
+//!                                dispatcher parking; --pin: core-pinned pool
+//!                                workers; --prio-mix F: fraction F
+//!                                interactive / 1−F background traffic on the
+//!                                priority/deadline intake; --deadline-ms D:
+//!                                interactive deadline; --fifo: keep FIFO
+//!                                intake for comparison)
 //!   tune   --model M [...]       per-layer (LMUL, T, P) auto-tuning
 //!   sim    [--layer i]           RVV-simulator kernel comparison
 //!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
 
 use std::time::Instant;
 
-use nmprune::engine::{ExecConfig, Server, ServerConfig};
+use nmprune::engine::{ExecConfig, Priority, QueueDiscipline, Server, ServerConfig};
 use nmprune::models::{build_model, model_names, resnet50_fig5_layers, ModelArch};
 use nmprune::tensor::Tensor;
 use nmprune::tuner;
@@ -136,6 +141,21 @@ fn cmd_serve(args: &Args) {
     let cfg = parse_exec(args);
     let requests = args.get_parsed("requests", 32usize);
     let max_batch = args.get_parsed("max-batch", 4usize);
+    // Mixed-traffic flags: --prio-mix F submits fraction F of requests
+    // as Interactive and the rest as background Batch traffic (and
+    // switches the intake to the priority/deadline discipline unless
+    // --fifo keeps the baseline ordering for comparison);
+    // --deadline-ms D attaches a D ms deadline to interactive requests.
+    let prio_mix = args.get_parsed("prio-mix", 1.0f64).clamp(0.0, 1.0);
+    let mixed = args.get("prio-mix").is_some() || args.get("deadline-ms").is_some();
+    let deadline = args
+        .get("deadline-ms")
+        .map(|_| std::time::Duration::from_millis(args.get_parsed("deadline-ms", 50u64)));
+    let discipline = if mixed && !args.has_flag("fifo") {
+        QueueDiscipline::Priority
+    } else {
+        QueueDiscipline::Fifo
+    };
     let server = Server::start(
         |b| build_model(arch, b, res),
         cfg,
@@ -150,13 +170,30 @@ fn cmd_serve(args: &Args) {
             ),
             executors: args.get_parsed("executors", 1usize),
             adaptive: args.has_flag("adaptive"),
+            discipline,
+            ..ServerConfig::default()
         },
     );
-    println!("serving {requests} requests on {} @{res} ...", arch.name());
+    println!(
+        "serving {requests} requests on {} @{res} ({discipline:?} intake) ...",
+        arch.name()
+    );
     let mut rng = XorShiftRng::new(7);
-    let handles: Vec<_> = (0..requests)
-        .map(|_| server.submit(Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0)))
-        .collect();
+    let mut handles = Vec::with_capacity(requests);
+    let mut n_interactive = 0usize;
+    for i in 0..requests {
+        let image = Tensor::random(&[res, res, 3], &mut rng, 0.0, 1.0);
+        // Deterministic interleave tracking the target mix: submit as
+        // interactive whenever the running count is behind the quota.
+        let interactive =
+            !mixed || (n_interactive as f64) < (i + 1) as f64 * prio_mix;
+        handles.push(if interactive {
+            n_interactive += 1;
+            server.submit_with(image, Priority::Interactive, deadline)
+        } else {
+            server.submit_with(image, Priority::Batch, None)
+        });
+    }
     for h in handles {
         h.recv().expect("reply");
     }
@@ -171,6 +208,30 @@ fn cmd_serve(args: &Args) {
         stats.latency.median / 1e6,
         stats.latency.p95 / 1e6,
     );
+    for p in Priority::ALL {
+        let cls = stats.class(p);
+        if cls.served == 0 {
+            continue;
+        }
+        println!(
+            "  {:<12} served={:<4} p50={:.1} ms  p95={:.1} ms  deadline miss {}/{} ({:.0}%)",
+            p.name(),
+            cls.served,
+            cls.latency.median / 1e6,
+            cls.latency.p95 / 1e6,
+            cls.deadline_missed,
+            cls.deadline_total,
+            cls.miss_rate() * 100.0,
+        );
+    }
+    if !stats.batch_hist.is_empty() {
+        let hist: Vec<String> = stats
+            .batch_hist
+            .iter()
+            .map(|(b, n)| format!("{b}x{n}"))
+            .collect();
+        println!("batch sizes: {}", hist.join("  "));
+    }
     if let Some((lo, hi)) = stats.cap_range {
         println!("adaptive caps: {lo}..{hi} workers per batch");
     }

@@ -250,31 +250,52 @@ impl TuneCache {
     /// Load from a TSV file (missing file → empty cache). Accepts both
     /// the current four-column format (`key  v  tile  threads`) and the
     /// legacy three-column one — rows without a threads column load
-    /// with `threads = 0` (uncapped) rather than erroring, so caches
-    /// written before the parallelism dimension existed keep working.
+    /// with `threads = 0` (uncapped), so caches written before the
+    /// parallelism dimension existed keep working.
+    ///
+    /// Robust against a corrupted cache (satellite): truncated rows, a
+    /// trailing partial write (a row cut mid-field by a crash), rows
+    /// with non-numeric fields, empty keys, and overlong rows are
+    /// *skipped*, never a panic or a half-parsed entry — and `save`
+    /// round-trips exactly the rows that survived. A broken cache costs
+    /// a re-tune, not an outage.
     pub fn load(path: &str) -> Self {
         let mut entries = BTreeMap::new();
         if let Ok(text) = std::fs::read_to_string(path) {
             for line in text.lines() {
-                let mut parts = line.split('\t');
-                if let (Some(k), Some(v), Some(t)) =
-                    (parts.next(), parts.next(), parts.next())
-                {
-                    let threads = parts.next().and_then(|p| p.parse().ok()).unwrap_or(0);
-                    if let (Ok(v), Ok(t)) = (v.parse(), t.parse()) {
-                        entries.insert(
-                            k.to_string(),
-                            LayerChoice {
-                                v,
-                                tile: t,
-                                threads,
-                            },
-                        );
-                    }
+                if let Some((key, choice)) = Self::parse_row(line) {
+                    entries.insert(key, choice);
                 }
             }
         }
         Self { entries }
+    }
+
+    /// Parse one TSV row; `None` for anything malformed.
+    fn parse_row(line: &str) -> Option<(String, LayerChoice)> {
+        // Tolerate CRLF caches written on other platforms.
+        let line = line.trim_end_matches('\r');
+        if line.is_empty() {
+            return None;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        let (k, v, t, threads) = match fields.as_slice() {
+            [k, v, t] => (*k, *v, *t, None),
+            [k, v, t, th] => (*k, *v, *t, Some(*th)),
+            _ => return None, // truncated or overlong row
+        };
+        if k.is_empty() {
+            return None;
+        }
+        let v: usize = v.trim().parse().ok()?;
+        let tile: usize = t.trim().parse().ok()?;
+        // A present-but-garbled threads column means the row was cut
+        // mid-write: skip it entirely rather than guessing 0.
+        let threads: usize = match threads {
+            None => 0,
+            Some(th) => th.trim().parse().ok()?,
+        };
+        Some((k.to_string(), LayerChoice { v, tile, threads }))
     }
 
     /// Persist as TSV (`key  v  tile  threads`).
@@ -468,6 +489,65 @@ mod tests {
                 tile: 8,
                 threads: 0
             })
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Satellite: a corrupted cache file — truncated rows, non-numeric
+    /// fields, a trailing partial write, overlong rows, empty keys and
+    /// blank lines — loads without panicking, keeps exactly the valid
+    /// rows, and `save` round-trips what survived.
+    #[test]
+    fn cache_load_skips_malformed_rows_and_roundtrips_survivors() {
+        let path = "/tmp/nmprune_tune_cache_malformed_test.tsv";
+        let text = concat!(
+            "good1\t16\t4\t2\n",              // valid 4-col
+            "good2\t32\t8\n",                 // valid legacy 3-col → threads 0
+            "truncated\t16\n",                // too few columns
+            "nonnum\tsixteen\t4\t2\n",        // non-numeric v
+            "nonnum2\t16\tfour\t2\n",         // non-numeric tile
+            "nonnum3\t16\t4\ttwo\n",          // non-numeric threads → skip, not 0
+            "\t16\t4\t2\n",                   // empty key
+            "overlong\t16\t4\t2\t9\textra\n", // too many columns
+            "\n",                             // blank line
+            "good3\t8\t1\t0\n",               // valid after the garbage
+            "partial\t1"                      // trailing partial write (crash mid-row)
+        );
+        std::fs::write(path, text).unwrap();
+        let loaded = TuneCache::load(path);
+        assert_eq!(
+            loaded.entries.keys().map(String::as_str).collect::<Vec<_>>(),
+            vec!["good1", "good2", "good3"],
+            "exactly the well-formed rows survive"
+        );
+        assert_eq!(
+            loaded.entries.get("good1"),
+            Some(&LayerChoice { v: 16, tile: 4, threads: 2 })
+        );
+        assert_eq!(
+            loaded.entries.get("good2"),
+            Some(&LayerChoice { v: 32, tile: 8, threads: 0 })
+        );
+        // Round-trip: saving the survivors and re-loading is identity.
+        loaded.save(path).unwrap();
+        let reloaded = TuneCache::load(path);
+        assert_eq!(reloaded.entries, loaded.entries);
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Windows-style CRLF line endings parse identically to LF.
+    #[test]
+    fn cache_load_tolerates_crlf() {
+        let path = "/tmp/nmprune_tune_cache_crlf_test.tsv";
+        std::fs::write(path, "layerA\t16\t4\t1\r\nlayerB\t32\t8\r\n").unwrap();
+        let loaded = TuneCache::load(path);
+        assert_eq!(
+            loaded.entries.get("layerA"),
+            Some(&LayerChoice { v: 16, tile: 4, threads: 1 })
+        );
+        assert_eq!(
+            loaded.entries.get("layerB"),
+            Some(&LayerChoice { v: 32, tile: 8, threads: 0 })
         );
         std::fs::remove_file(path).ok();
     }

@@ -25,6 +25,18 @@ impl Default for Config {
     }
 }
 
+/// Case count for a property run: `NMPRUNE_PROP_CASES` when set to a
+/// positive integer, else `default`. The extended-fuzz CI job uses this
+/// to scale the same seeded suites to hundreds of cases without
+/// touching the test code; garbage values fall back to `default`.
+pub fn cases_from_env(default: usize) -> usize {
+    std::env::var("NMPRUNE_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
 /// Run `prop` against `cases` inputs drawn by `gen`. `gen` receives the
 /// RNG and a size hint that ramps from 1 to `max_size` across cases, so
 /// early cases are small. On failure the size is halved repeatedly to
@@ -101,6 +113,22 @@ mod tests {
             |v| v.iter().all(|x| x.abs() <= 1.0),
         );
         assert_eq!(count, Config::default().cases);
+    }
+
+    /// The only test touching NMPRUNE_PROP_CASES (process env is
+    /// shared, but lib tests run in a different process from the
+    /// integration suites that read it for real).
+    #[test]
+    fn cases_from_env_overrides_and_rejects_garbage() {
+        std::env::remove_var("NMPRUNE_PROP_CASES");
+        assert_eq!(cases_from_env(64), 64);
+        std::env::set_var("NMPRUNE_PROP_CASES", "512");
+        assert_eq!(cases_from_env(64), 512);
+        std::env::set_var("NMPRUNE_PROP_CASES", "0");
+        assert_eq!(cases_from_env(64), 64, "zero cases would skip the suite");
+        std::env::set_var("NMPRUNE_PROP_CASES", "lots");
+        assert_eq!(cases_from_env(64), 64);
+        std::env::remove_var("NMPRUNE_PROP_CASES");
     }
 
     #[test]

@@ -15,18 +15,24 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary. Panics on an empty sample.
+    /// Compute a summary. Panics on an empty sample. NaN samples are
+    /// filtered out rather than poisoning the sort (a single NaN used
+    /// to panic the whole stats path through `partial_cmp().unwrap()`);
+    /// if every sample is NaN the summary is [`Summary::empty`].
     pub fn of(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "Summary::of on empty sample");
-        let n = samples.len();
-        let mean = samples.iter().sum::<f64>() / n as f64;
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        if sorted.is_empty() {
+            return Self::empty();
+        }
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
-            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
         } else {
             0.0
         };
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Self {
             n,
             mean,
@@ -79,10 +85,11 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 }
 
 /// Trim `frac` of the sample from each tail (by value), for outlier-robust
-/// timing estimates. Returns at least one element.
+/// timing estimates. Returns at least one element. NaN-tolerant: the
+/// total order sorts NaN to the tails, where trimming drops it first.
 pub fn trimmed(samples: &[f64], frac: f64) -> Vec<f64> {
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let k = ((samples.len() as f64) * frac).floor() as usize;
     let end = sorted.len().saturating_sub(k).max(k + 1);
     sorted[k..end].to_vec()
@@ -133,6 +140,47 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 9.0);
         assert!((s.stddev - 2.7386).abs() < 1e-3);
+    }
+
+    /// Regression (satellite): a NaN sample used to panic `Summary::of`
+    /// via `partial_cmp().unwrap()` in the sort. NaNs are filtered; the
+    /// remaining samples summarise as if the NaN never existed, and an
+    /// all-NaN sample degrades to the explicit empty summary.
+    #[test]
+    fn nan_samples_are_filtered_not_panicking() {
+        let s = Summary::of(&[1.0, f64::NAN, 3.0]);
+        let clean = Summary::of(&[1.0, 3.0]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s, clean);
+        for v in [s.mean, s.stddev, s.min, s.max, s.median, s.p5, s.p95] {
+            assert!(v.is_finite(), "NaN leaked into the summary");
+        }
+        let all_nan = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(all_nan, Summary::empty());
+        // `trimmed` shares the sort: NaN lands in the trimmed tail.
+        let t = trimmed(&[1.0, 2.0, 3.0, 4.0, f64::NAN], 0.2);
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+
+    /// Percentile edge cases (satellite): n = 1 returns the sample for
+    /// every p, n = 2 interpolates linearly, and p5/p95 match
+    /// hand-computed interpolation on a small sorted sample.
+    #[test]
+    fn percentile_edge_cases_hand_computed() {
+        // n = 1: every percentile is the lone sample.
+        let one = Summary::of(&[7.0]);
+        assert_eq!((one.median, one.p5, one.p95), (7.0, 7.0, 7.0));
+        assert_eq!(one.stddev, 0.0);
+        // n = 2 over [10, 20]: rank = p/100 * 1.
+        let two = Summary::of(&[20.0, 10.0]);
+        assert_eq!(two.median, 15.0);
+        assert!((two.p5 - 10.5).abs() < 1e-12, "p5 {}", two.p5);
+        assert!((two.p95 - 19.5).abs() < 1e-12, "p95 {}", two.p95);
+        // n = 4 over [1, 2, 3, 4]: p95 rank = 2.85 → 3·0.15 + 4·0.85.
+        let four = Summary::of(&[4.0, 1.0, 3.0, 2.0]);
+        assert!((four.p95 - 3.85).abs() < 1e-12, "p95 {}", four.p95);
+        // p5 rank = 0.15 → 1·0.85 + 2·0.15.
+        assert!((four.p5 - 1.15).abs() < 1e-12, "p5 {}", four.p5);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Seeded differential fuzz of the column-wise sparse conv path
+//! (satellite of the priority-serving PR).
+//!
+//! For random conv shapes × explicit N:M configs × strip widths × pool
+//! sizes {1, 2, 8} × per-layer/per-run thread caps, the full sparse
+//! operator (`Conv2dSparseCnhw`: fused im2col/pack + Algorithm-1 SpMM,
+//! dispatched on a persistent pool) must agree **bitwise** with a naive
+//! dense reference: a scalar GEMM over the unfused `im2col_cnhw` data
+//! matrix and the *decompressed* (masked) weights, accumulating each
+//! output in ascending reduction order.
+//!
+//! Why bitwise is the right bar: the sparse kernel accumulates each
+//! output column over the retained indices in ascending order, and the
+//! reference accumulates over *all* indices in the same order — the
+//! skipped terms are exact zeros, and adding `±0.0` to a finite f32
+//! accumulator never changes it (under `==`, which treats `-0.0` and
+//! `+0.0` as equal). Any deviation — a wrong index, a dropped strip, a
+//! racing cap path, a ragged-edge overrun — breaks exact equality and
+//! shrinks to a small counterexample.
+//!
+//! Runs from fixed seeds via `util::prop::check` (with shrinking), so
+//! CI is deterministic; `NMPRUNE_PROP_CASES=512` (the scheduled
+//! `fuzz-extended` job) scales the same suites up without code changes.
+
+use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
+use nmprune::im2col::im2col_cnhw;
+use nmprune::tensor::Tensor;
+use nmprune::util::{prop, ThreadPool, XorShiftRng};
+
+/// One random fuzz scenario. Data is regenerated from `data_seed`
+/// inside the property, so the shrink report stays readable.
+#[derive(Debug)]
+struct Case {
+    shape: ConvShape,
+    /// Strip width (VLMAX stand-in).
+    v: usize,
+    /// Pruning tile height T.
+    tile: usize,
+    /// Explicit N:M config; `m` always divides `shape.k()`.
+    n_keep: usize,
+    m: usize,
+    pool_size: usize,
+    /// Per-layer cap (0 = whole pool) and per-run cap (0 = none),
+    /// composed as a min inside the operator.
+    layer_cap: usize,
+    run_cap: usize,
+    data_seed: u64,
+}
+
+/// Divisors of `k`, ascending (k is tiny here: ≤ ~200).
+fn divisors(k: usize) -> Vec<usize> {
+    (1..=k).filter(|d| k % d == 0).collect()
+}
+
+fn gen_case(r: &mut XorShiftRng, size: usize) -> Case {
+    let kernel = [1usize, 3][r.below(2)];
+    let c_in = 1 + r.below(3 + size / 16);
+    // Input large enough for the kernel at any stride/pad below.
+    let hw = kernel + 1 + r.below(4 + size / 8);
+    let c_out = 1 + r.below(8 + size / 8);
+    let stride = 1 + r.below(2);
+    let pad = r.below(2);
+    let batch = 1 + r.below(2);
+    let shape = ConvShape::square(batch, c_in, hw, c_out, kernel, stride, pad);
+    let k = shape.k();
+    // N:M with M drawn from the divisors of K (the pruning contract),
+    // N anywhere in 1..=M — covers 1:M, dense N=M, and everything
+    // between.
+    let divs = divisors(k);
+    let m = divs[r.below(divs.len())];
+    let n_keep = 1 + r.below(m);
+    Case {
+        shape,
+        v: [4usize, 8, 16, 32][r.below(4)],
+        tile: 1 + r.below(8),
+        n_keep,
+        m,
+        pool_size: [1usize, 2, 8][r.below(3)],
+        layer_cap: r.below(4),          // 0 = uncapped
+        run_cap: [0usize, 1, 2, 9][r.below(4)], // 0 = none; 9 > any pool
+        data_seed: r.below(1 << 30) as u64,
+    }
+}
+
+/// The differential property: sparse path output == naive masked-dense
+/// reference, bitwise, for every (pool, cap) composition in the case.
+fn sparse_path_matches_naive_dense(c: &Case) -> bool {
+    let s = c.shape;
+    let mut r = XorShiftRng::new(c.data_seed);
+    let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+    let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -0.5, 0.5);
+    let op = Conv2dSparseCnhw::new(s, &w, c.v, c.tile, c.n_keep, c.m)
+        .with_thread_cap(c.layer_cap);
+    let pool = ThreadPool::shared(c.pool_size);
+    let got = op.run_capped(&x, &pool, c.run_cap);
+    if got.shape != vec![s.c_out, s.n, s.h_out(), s.w_out()] {
+        return false;
+    }
+    // Naive dense reference: unfused im2col + scalar GEMM over the
+    // decompressed masked filter, ascending-k accumulation per output.
+    let a = im2col_cnhw(&x, &s);
+    let wm = op.weights.decompress();
+    let (k, cols) = (s.k(), s.gemm_cols());
+    let mut want = vec![0.0f32; s.c_out * cols];
+    for o in 0..s.c_out {
+        for col in 0..cols {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += wm[o * k + kk] * a[kk * cols + col];
+            }
+            want[o * cols + col] = acc;
+        }
+    }
+    got.data == want
+}
+
+#[test]
+fn fuzz_sparse_conv_bitwise_vs_naive_dense() {
+    prop::check(
+        prop::Config {
+            cases: prop::cases_from_env(64),
+            seed: 0xF22A,
+            max_size: 64,
+        },
+        gen_case,
+        sparse_path_matches_naive_dense,
+    );
+}
+
+/// Same differential, restricted to serial execution (pool 1, cap 1):
+/// separates kernel-correctness failures from scheduling failures when
+/// the main property trips.
+#[test]
+fn fuzz_sparse_conv_serial_bitwise_vs_naive_dense() {
+    prop::check(
+        prop::Config {
+            cases: prop::cases_from_env(64),
+            seed: 0xF22B,
+            max_size: 48,
+        },
+        |r, size| {
+            let mut c = gen_case(r, size);
+            c.pool_size = 1;
+            c.layer_cap = 1;
+            c.run_cap = 0;
+            c
+        },
+        sparse_path_matches_naive_dense,
+    );
+}
+
+/// Directed corners the generator only hits probabilistically: the
+/// degenerate N:M configs (1:K max sparsity, K:K dense-as-sparse) on a
+/// strided, padded shape across every pool size.
+#[test]
+fn degenerate_nm_configs_bitwise() {
+    let shape = ConvShape::square(2, 3, 7, 5, 3, 2, 1);
+    let k = shape.k();
+    for (n_keep, m) in [(1, k), (k, k), (1, 3), (3, 3)] {
+        for pool_size in [1usize, 2, 8] {
+            let c = Case {
+                shape,
+                v: 8,
+                tile: 4,
+                n_keep,
+                m,
+                pool_size,
+                layer_cap: 0,
+                run_cap: 0,
+                data_seed: 7,
+            };
+            assert!(
+                sparse_path_matches_naive_dense(&c),
+                "degenerate config failed: {c:?}"
+            );
+        }
+    }
+}

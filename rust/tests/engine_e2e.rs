@@ -102,8 +102,7 @@ fn server_replies_match_direct_execution() {
         ServerConfig {
             batch_sizes: vec![1, 2, 4],
             batch_window: Duration::from_millis(20),
-            executors: 1,
-            adaptive: false,
+            ..ServerConfig::default()
         },
     );
     let mut rng = XorShiftRng::new(9);

@@ -68,16 +68,35 @@ fn capped_equals_serial(c: &Case) -> bool {
             == serial_dense
 }
 
+/// Default-config property run, with the case count overridable via
+/// `NMPRUNE_PROP_CASES` (the CI fuzz-extended job runs these suites at
+/// 512 cases).
+fn check_env<T: std::fmt::Debug>(
+    seed: u64,
+    gen: impl FnMut(&mut nmprune::util::XorShiftRng, usize) -> T,
+    p: impl Fn(&T) -> bool,
+) {
+    prop::check(
+        prop::Config {
+            cases: prop::cases_from_env(prop::Config::default().cases),
+            seed,
+            ..prop::Config::default()
+        },
+        gen,
+        p,
+    );
+}
+
 #[test]
 fn prop_capped_kernels_bitwise_equal_serial() {
-    prop::check_seeded(0x5CED, gen_case, capped_equals_serial);
+    check_env(0x5CED, gen_case, capped_equals_serial);
 }
 
 /// The uncapped path (`None`) must agree too — it is the `cap = pool`
 /// special case and shares all the chunking arithmetic.
 #[test]
 fn prop_uncapped_kernels_bitwise_equal_serial() {
-    prop::check_seeded(0x5CEE, gen_case, |c| {
+    check_env(0x5CEE, gen_case, |c| {
         let p = pack_data_matrix(&c.a, c.k, c.cols, c.v);
         let cp = prune_colwise_adaptive(&c.w, c.rows, c.k, c.tile, c.sparsity);
         let pool = ThreadPool::shared(c.pool_size);

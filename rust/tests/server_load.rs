@@ -16,7 +16,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use nmprune::engine::{ExecConfig, Executor, Server, ServerConfig, ServerStats};
+use nmprune::engine::{
+    ExecConfig, Executor, Priority, QueueDiscipline, Server, ServerConfig, ServerStats,
+};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::tensor::Tensor;
 use nmprune::util::{ThreadPool, XorShiftRng};
@@ -40,6 +42,7 @@ fn run_bursty(adaptive: bool) -> (Vec<Vec<f32>>, ServerStats) {
             batch_window: Duration::from_millis(3),
             executors: 2,
             adaptive,
+            ..ServerConfig::default()
         },
     );
     let mut handles = Vec::new();
@@ -100,7 +103,7 @@ fn shutdown_drain_pads_partial_batches() {
             batch_sizes: vec![4],
             batch_window: Duration::from_millis(200),
             executors: 1,
-            adaptive: false,
+            ..ServerConfig::default()
         },
     );
     let rxs: Vec<_> = (0..3).map(|i| server.submit(image(res, 40 + i))).collect();
@@ -139,6 +142,96 @@ fn pinned_pool_logits_match_unpinned() {
     }
 }
 
+/// Acceptance (tentpole): mixed-priority open-loop traffic — bursts of
+/// interleaved interactive-with-deadline and background requests —
+/// served under the Priority discipline answers every request exactly
+/// once, drains the background class fully, attributes stats per class,
+/// and produces logits **bitwise identical** to the FIFO discipline:
+/// priorities and deadlines are scheduling, never numerics.
+#[test]
+fn mixed_priority_load_matches_fifo_bitwise_and_drains_background() {
+    let res = 32;
+    let run = |discipline: QueueDiscipline| -> (Vec<Vec<f32>>, ServerStats) {
+        let server = Server::start(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
+            res,
+            ServerConfig {
+                batch_sizes: vec![2, 4],
+                batch_window: Duration::from_millis(3),
+                executors: 2,
+                adaptive: true,
+                discipline,
+                ..ServerConfig::default()
+            },
+        );
+        let mut handles = Vec::new();
+        for burst in 0..3u64 {
+            for i in 0..8u64 {
+                let seed = burst * 8 + i;
+                // Interleave classes: evens interactive with a generous
+                // deadline (tracked, not expected to miss), odds
+                // background without one.
+                let (prio, ddl) = if i % 2 == 0 {
+                    (Priority::Interactive, Some(Duration::from_secs(30)))
+                } else {
+                    (Priority::Batch, None)
+                };
+                handles.push(server.submit_with(image(res, seed), prio, ddl));
+            }
+            // Open-loop gap: the next burst fires regardless of how far
+            // the server got.
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let logits: Vec<Vec<f32>> = handles
+            .into_iter()
+            .map(|rx| {
+                let reply = rx.recv().expect("every request must be answered");
+                assert_eq!(reply.logits.len(), 1000);
+                assert!(rx.try_recv().is_err(), "exactly one reply per request");
+                reply.logits
+            })
+            .collect();
+        (logits, server.shutdown())
+    };
+    let (fifo_logits, fifo_stats) = run(QueueDiscipline::Fifo);
+    let (prio_logits, prio_stats) = run(QueueDiscipline::Priority);
+    assert_eq!(
+        fifo_logits, prio_logits,
+        "priority/deadline scheduling changed numerics"
+    );
+    for (label, stats) in [("fifo", &fifo_stats), ("priority", &prio_stats)] {
+        assert_eq!(stats.served, 24, "{label}");
+        assert_eq!(
+            stats.class(Priority::Interactive).served,
+            12,
+            "{label}: interactive class fully served"
+        );
+        assert_eq!(
+            stats.class(Priority::Batch).served,
+            12,
+            "{label}: background class fully drained, not starved"
+        );
+        assert_eq!(stats.class(Priority::Interactive).deadline_total, 12, "{label}");
+        assert_eq!(stats.class(Priority::Batch).deadline_total, 0, "{label}");
+        // Per-class samples partition the overall latency samples, and
+        // the batch histogram accounts for every batch executed.
+        assert_eq!(
+            stats.class(Priority::Interactive).latency.n
+                + stats.class(Priority::Batch).latency.n,
+            stats.latency.n,
+            "{label}"
+        );
+        let hist_batches: usize = stats.batch_hist.iter().map(|&(_, n)| n).sum();
+        assert!(hist_batches > 0, "{label}: batch histogram populated");
+        assert!(
+            stats.batch_hist.iter().all(|&(b, _)| b == 2 || b == 4),
+            "{label}: only compiled sizes appear: {:?}",
+            stats.batch_hist
+        );
+    }
+}
+
 /// An adaptive server running on an explicitly pinned pool (the
 /// NMPRUNE_PIN=1 deployment shape, which CI also exercises through the
 /// env var on shared pools) serves a mixed trickle + burst load
@@ -156,6 +249,7 @@ fn adaptive_server_on_pinned_pool_serves_all() {
             batch_window: Duration::from_millis(2),
             executors: 2,
             adaptive: true,
+            ..ServerConfig::default()
         },
     );
     // Trickle…
