@@ -19,7 +19,7 @@
 //!      shared-index data reuse and the register-resident accumulators,
 //!      so column-wise wins wall-clock at equal FLOPs.
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::im2col::pack_data_matrix;
 use nmprune::models::resnet50_fig5_layers;
 use nmprune::pruning::{prune_colwise_adaptive, prune_unstructured, Csr};
@@ -42,6 +42,8 @@ fn machine(prefetch: bool) -> RvvMachine {
 }
 
 fn main() {
+    let quick = is_quick();
+    let mut reporter = Reporter::from_env("ablation_design");
     let mut rng = XorShiftRng::new(0xAB1);
 
     // ---- A: tile-size sweep on the column-wise kernel ----
@@ -52,12 +54,16 @@ fn main() {
     let (rows, k, cols) = (64usize, 576usize, 512usize);
     let w = rng.normal_vec(rows * k, 1.0);
     let a = rng.normal_vec(k * cols, 1.0);
-    for tile in [1usize, 2, 4, 8, 12, 15] {
+    let tiles: &[usize] = if quick { &[1, 8, 15] } else { &[1, 2, 4, 8, 12, 15] };
+    for &tile in tiles {
         let mut m = machine(true);
         let v = m.vlmax(LMUL);
         let p = pack_data_matrix(&a, k, cols, v);
         let cp = prune_colwise_adaptive(&w, rows, k, tile, 0.5);
         let (_, rep) = sim_spmm_colwise(&mut m, &cp, &p, LMUL);
+        let case = format!("A colwise cycles T={tile}");
+        let acfg = RecordConfig::new(LMUL, tile, 1);
+        reporter.record_value(&case, acfg, rep.cycles as f64, "cycles", true);
         ta.row(&[
             format!("{tile}"),
             format!("{}", rep.cycles),
@@ -85,6 +91,12 @@ fn main() {
         let mut m = machine(prefetch);
         let aa = m.alloc(&a);
         let (_, ru) = sim_gemm_dense_unpacked(&mut m, &w, rows, aa, k, cols, 8, LMUL);
+        let pf = if prefetch { "on" } else { "off" };
+        let bcfg = RecordConfig::new(LMUL, 8, 1);
+        let case = format!("B packed cycles prefetch={pf}");
+        reporter.record_value(&case, bcfg, rp.cycles as f64, "cycles", true);
+        let case = format!("B unpacked cycles prefetch={pf}");
+        reporter.record_value(&case, bcfg, ru.cycles as f64, "cycles", true);
         tb.row(&[
             if prefetch { "prefetch ON" } else { "prefetch OFF" }.into(),
             format!("{}", rp.cycles),
@@ -136,7 +148,8 @@ fn main() {
     let a = rng.normal_vec(k * cols, 1.0);
     let p = pack_data_matrix(&a, k, cols, v);
     let cfg = BenchConfig::quick();
-    for sparsity in [0.5f64, 0.75, 0.9] {
+    let sparsities: &[f64] = if quick { &[0.5, 0.9] } else { &[0.5, 0.75, 0.9] };
+    for &sparsity in sparsities {
         let cp = prune_colwise_adaptive(&w, rows, k, tile, sparsity);
         let bc = bench("colwise", cfg, || nmprune::gemm::spmm_colwise(&cp, &p));
         let csr = Csr::from_dense(&prune_unstructured(&w, sparsity), rows, k);
@@ -149,6 +162,12 @@ fn main() {
             }
             out
         });
+        let flops_exec = (1.0 - sparsity) * 2.0 * (rows * k * cols) as f64;
+        let dcfg = RecordConfig::new(0, tile, 1);
+        let case = format!("D colwise {:.0}%", sparsity * 100.0);
+        reporter.record(&case, dcfg, &bc.summary, Some(flops_exec));
+        let case = format!("D csr {:.0}%", sparsity * 100.0);
+        reporter.record(&case, dcfg, &bu.summary, Some(flops_exec));
         td.row(&[
             format!("{:.0}%", sparsity * 100.0),
             format!("{:.3}", bc.mean_ms()),
@@ -161,4 +180,5 @@ fn main() {
         "claim D: same executed FLOPs, but the shared column-index set and \
          register-resident accumulators make the structured kernel win"
     );
+    reporter.finish();
 }

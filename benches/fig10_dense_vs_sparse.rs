@@ -9,7 +9,7 @@
 //! Stage4-down / Stage4-conv1) because its per-run weight packing data
 //! movement grows with C_in×C_out.
 
-use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw};
 use nmprune::models::resnet50_fig10_layers;
 use nmprune::tensor::Tensor;
@@ -21,8 +21,14 @@ const THREADS: usize = 4;
 const V_LMUL4: usize = 32; // VLMAX at LMUL=4 on the 256-bit machine
 
 fn main() {
-    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
-    let layers = resnet50_fig10_layers(1);
+    let quick = is_quick();
+    let mut layers = resnet50_fig10_layers(1);
+    if quick {
+        // Early layers plus the deepest pair: the NHWC collapse the
+        // figure demonstrates needs a stage-4 shape.
+        let n = layers.len();
+        layers.drain(3..n - 2);
+    }
     let cfg = if quick {
         BenchConfig {
             warmup: std::time::Duration::from_millis(5),
@@ -34,6 +40,7 @@ fn main() {
         BenchConfig::quick()
     };
 
+    let mut rep = Reporter::from_env("fig10_dense_vs_sparse");
     let mut t = Table::new(
         "Fig. 10 — dense NHWC vs dense CNHW vs tuned sparse CNHW (ms, 4 threads)",
         &[
@@ -71,6 +78,17 @@ fn main() {
         let bc = bench("cnhw", cfg, || cnhw.run(&x_cnhw, &pool));
         let bs = bench("sparse", cfg, || sparse.run(&x_cnhw, &pool));
 
+        let case = format!("dense nhwc {}", l.name);
+        rep.record(&case, RecordConfig::new(4, 0, THREADS), &bn.summary, None);
+        let case = format!("dense cnhw {}", l.name);
+        rep.record(&case, RecordConfig::new(4, 7, THREADS), &bc.summary, None);
+        // The tuned choice is part of the record's identity: a tuner
+        // that starts picking a different (LMUL, T, P) shows up as a
+        // removed + added record, not a bogus time regression.
+        let case = format!("sparse tuned {}", l.name);
+        let tcfg = RecordConfig::new(tr.best.lmul, tt, tr.best.threads);
+        rep.record(&case, tcfg, &bs.summary, None);
+
         let vs_cnhw = bc.mean_ns() / bs.mean_ns();
         let vs_nhwc = bn.mean_ns() / bs.mean_ns();
         best_vs_cnhw = best_vs_cnhw.max(vs_cnhw);
@@ -91,4 +109,5 @@ fn main() {
         "paper: ours up to 2.1x over dense CNHW; NHWC up to 21x slower than ours in stage 4.\n\
          measured: ours up to {best_vs_cnhw:.2}x over dense CNHW; NHWC worst {worst_nhwc:.2}x vs ours"
     );
+    rep.finish();
 }

@@ -9,7 +9,7 @@
 //! `NMPRUNE_BENCH_QUICK=1` drops the resolution to 112 to keep CI fast;
 //! the full run uses the paper's 224×224 ImageNet geometry.
 
-use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::engine::{ExecConfig, Executor};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::tensor::Tensor;
@@ -18,7 +18,7 @@ use nmprune::util::XorShiftRng;
 const THREADS: usize = 4;
 
 fn main() {
-    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
+    let quick = is_quick();
     let res = if quick { 112 } else { 224 };
     let batches: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
     let cfg = BenchConfig {
@@ -41,6 +41,7 @@ fn main() {
         ],
     );
 
+    let mut rep = Reporter::from_env("fig11_batch_sweep");
     let mut rng = XorShiftRng::new(0xF11);
     let pool = bench_pool(THREADS);
     for &b in batches {
@@ -56,6 +57,8 @@ fn main() {
         for (name, cfg_exec) in variants {
             let exec = Executor::new(build_model(ModelArch::ResNet50, b, res), cfg_exec);
             let r = bench(&name, cfg, || exec.run(&x));
+            let case = format!("resnet50@{res} {name} batch{b}");
+            rep.record(&case, RecordConfig::new(0, 0, THREADS), &r.summary, None);
             ms.push(r.mean_ms());
         }
         t.row(&[
@@ -71,4 +74,5 @@ fn main() {
 
     t.print();
     println!("paper: 75% sparsity vs dense NHWC = 3.0x (b1), 1.9x (b2), 1.5x (b4)");
+    rep.finish();
 }

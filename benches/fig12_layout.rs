@@ -8,7 +8,7 @@
 //! MobileNet-V2, and ≈1× (slight loss) for DenseNet-121, whose weight
 //! tensors are smaller than its feature maps.
 
-use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::engine::{ExecConfig, Executor};
 use nmprune::models::{build_model, model_names, ModelArch};
 use nmprune::tensor::Tensor;
@@ -17,7 +17,7 @@ use nmprune::util::XorShiftRng;
 const THREADS: usize = 4;
 
 fn main() {
-    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
+    let quick = is_quick();
     let res = if quick { 112 } else { 224 };
     let cfg = BenchConfig {
         warmup: std::time::Duration::from_millis(0),
@@ -31,6 +31,7 @@ fn main() {
         &["model", "NHWC", "CNHW", "CNHW speedup"],
     );
 
+    let mut rep = Reporter::from_env("fig12_layout");
     let mut rng = XorShiftRng::new(0xF12);
     let pool = bench_pool(THREADS);
     for &name in model_names() {
@@ -52,6 +53,11 @@ fn main() {
         );
         let bc = bench("cnhw", cfg, || ec.run(&x));
 
+        let ecfg = RecordConfig::new(0, 0, THREADS);
+        let case = format!("{name}@{res} nhwc");
+        rep.record(&case, ecfg, &bn.summary, None);
+        let case = format!("{name}@{res} cnhw");
+        rep.record(&case, ecfg, &bc.summary, None);
         t.row(&[
             name.into(),
             format!("{:.1}", bn.mean_ms()),
@@ -65,4 +71,5 @@ fn main() {
         "paper: shallow ResNets up to 1.8x, deep ResNets up to 1.6x, \
          MobileNet-V2 ~1.3x, DenseNet-121 ~1x (slight loss)"
     );
+    rep.finish();
 }

@@ -13,7 +13,7 @@
 //! ~1.5×). We report both deterministic RVV-simulator cycles (the
 //! paper-metric twin of the SpacemiT K1) and native wall-clock.
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::gemm::{gemm_dense, spmm_colwise, spmm_outer_rownm};
 use nmprune::im2col::pack_data_matrix;
 use nmprune::models::resnet50_fig5_layers;
@@ -29,9 +29,15 @@ const TILE: usize = 8;
 const LMUL: usize = 2; // (T+1)·LMUL ≤ 32 with T = 8
 
 fn main() {
-    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
-    let layers = resnet50_fig5_layers(1);
+    let quick = is_quick();
+    let mut layers = resnet50_fig5_layers(1);
+    if quick {
+        // One conv2/conv3 pair per early stage keeps every code path hot
+        // while the CI smoke stays under a minute.
+        layers.truncate(4);
+    }
     let cfg = BenchConfig::quick();
+    let mut rep = Reporter::from_env("fig5_conv_layers");
 
     let mut sim_t = Table::new(
         "Fig. 5 (sim) — RVV cycles per conv GEMM, 50% sparsity, LMUL=2, T=8",
@@ -98,6 +104,15 @@ fn main() {
             ro.cycles as f64 * scale,
             rc.cycles as f64 * scale,
         );
+        // Simulator cycles are deterministic: the strongest regression
+        // gates in the whole trajectory.
+        let scfg = RecordConfig::new(LMUL, TILE, 1);
+        let case = format!("sim dense {}", l.name);
+        rep.record_value(&case, scfg, dc, "cycles", true);
+        let case = format!("sim outer_rownm {}", l.name);
+        rep.record_value(&case, scfg, oc, "cycles", true);
+        let case = format!("sim colwise {}", l.name);
+        rep.record_value(&case, scfg, cc, "cycles", true);
         sim_t.row(&[
             l.name.into(),
             format!("{:.0}", dc),
@@ -114,6 +129,14 @@ fn main() {
         let bd = bench("dense", cfg, || gemm_dense(&f.data, s.c_out, &packed_full, TILE));
         let bo = bench("outer", cfg, || spmm_outer_rownm(&rowp, &packed_full));
         let bc = bench("colwise", cfg, || spmm_colwise(&colp, &packed_full));
+        let flops = 2.0 * s.c_out as f64 * k as f64 * full_cols as f64;
+        let ncfg = RecordConfig::new(0, TILE, 1);
+        let case = format!("native dense {}", l.name);
+        rep.record(&case, ncfg, &bd.summary, Some(flops));
+        let case = format!("native outer_rownm {}", l.name);
+        rep.record(&case, ncfg, &bo.summary, Some(0.5 * flops));
+        let case = format!("native colwise {}", l.name);
+        rep.record(&case, ncfg, &bc.summary, Some(0.5 * flops));
         nat_t.row(&[
             l.name.into(),
             format!("{:.3}", bd.mean_ms()),
@@ -135,4 +158,5 @@ fn main() {
         best_ours,
         sum_ours / layers.len() as f64
     );
+    rep.finish();
 }

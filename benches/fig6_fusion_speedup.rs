@@ -7,7 +7,7 @@
 //! layer because feature-map widths are not multiples of the vector
 //! length (boundary handling grows with LMUL).
 
-use nmprune::benchlib::{bench, BenchConfig, Table};
+use nmprune::benchlib::{bench, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::im2col::{fused_im2col_pack_cnhw, im2col_cnhw, pack_data_matrix};
 use nmprune::models::resnet50_fig6_layers;
 use nmprune::rvv::kernels::{sim_fused_im2col_pack, sim_separate_im2col_pack};
@@ -17,8 +17,13 @@ use nmprune::tuner::LMULS;
 use nmprune::util::XorShiftRng;
 
 fn main() {
-    let layers = resnet50_fig6_layers(1);
+    let mut layers = resnet50_fig6_layers(1);
+    if is_quick() {
+        // Stem + the two largest 3×3 layers exercise every boundary case.
+        layers.truncate(3);
+    }
     let cfg = BenchConfig::quick();
+    let mut rep = Reporter::from_env("fig6_fusion_speedup");
 
     let mut sim_t = Table::new(
         "Fig. 6 (sim) — fused/separate speedup, RVV cycles",
@@ -48,6 +53,11 @@ fn main() {
             let x_addr = m.alloc(&x.data);
             let (_, sep) = sim_separate_im2col_pack(&mut m, x_addr, &s, lmul);
             let ratio = sep.cycles as f64 / fused.cycles as f64;
+            let lcfg = RecordConfig::new(lmul, 0, 1);
+            let case = format!("sim fused cycles {}", l.name);
+            rep.record_value(&case, lcfg, fused.cycles as f64, "cycles", true);
+            let case = format!("sim fusion speedup {}", l.name);
+            rep.record_value(&case, lcfg, ratio, "ratio", true);
             sim_cells.push(format!("{ratio:.2}x"));
             if (fused.cycles as f64) < best_sim_cyc {
                 best_sim_cyc = fused.cycles as f64;
@@ -61,6 +71,8 @@ fn main() {
                 let a = im2col_cnhw(&x, &s);
                 pack_data_matrix(&a, s.k(), s.gemm_cols(), v)
             });
+            let case = format!("native fused pack {}", l.name);
+            rep.record(&case, RecordConfig::new(lmul, 0, 1), &bf.summary, None);
             nat_cells.push(format!("{:.2}x", bs.mean_ns() / bf.mean_ns()));
             if bf.mean_ns() < best_nat_ns {
                 best_nat_ns = bf.mean_ns();
@@ -76,4 +88,5 @@ fn main() {
     sim_t.print();
     nat_t.print();
     println!("paper: fusion consistently >1x at every LMUL; optimal LMUL varies per layer");
+    rep.finish();
 }

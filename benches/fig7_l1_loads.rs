@@ -7,7 +7,7 @@
 //! granularity — the same event `perf`'s L1-dcache-loads counts on the
 //! SpacemiT K1.
 
-use nmprune::benchlib::Table;
+use nmprune::benchlib::{is_quick, RecordConfig, Reporter, Table};
 use nmprune::models::resnet50_fig6_layers;
 use nmprune::rvv::kernels::{sim_fused_im2col_pack, sim_separate_im2col_pack};
 use nmprune::rvv::RvvMachine;
@@ -17,10 +17,14 @@ use nmprune::util::XorShiftRng;
 
 fn main() {
     // Fig. 7 uses the 3×3 layers only (the stem is 7×7).
-    let layers: Vec<_> = resnet50_fig6_layers(1)
+    let mut layers: Vec<_> = resnet50_fig6_layers(1)
         .into_iter()
         .filter(|l| l.shape.kh == 3)
         .collect();
+    if is_quick() {
+        layers.truncate(3);
+    }
+    let mut rep = Reporter::from_env("fig7_l1_loads");
 
     let mut t = Table::new(
         "Fig. 7 — L1-load reduction of fused vs separate im2col+pack (%)",
@@ -42,6 +46,8 @@ fn main() {
             let (_, sep) = sim_separate_im2col_pack(&mut m, x_addr, &s, lmul);
             let red = 100.0 * (1.0 - fused.l1_loads as f64 / sep.l1_loads as f64);
             max_red = max_red.max(red);
+            let case = format!("l1-load reduction {}", l.name);
+            rep.record_value(&case, RecordConfig::new(lmul, 0, 1), red, "percent", true);
             cells.push(format!("{red:.1}%"));
         }
         t.row(&cells);
@@ -49,4 +55,5 @@ fn main() {
 
     t.print();
     println!("paper: up to 42% L1-load reduction; measured max {max_red:.1}%");
+    rep.finish();
 }

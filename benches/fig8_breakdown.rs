@@ -12,7 +12,7 @@
 //! Layers: ResNet-50 stem (7×7 s2) + the 3×3 conv2 of each stage.
 //! Metric: deterministic RVV-simulator cycles, split per phase.
 
-use nmprune::benchlib::Table;
+use nmprune::benchlib::{is_quick, RecordConfig, Reporter, Table};
 use nmprune::models::resnet50_fig6_layers;
 use nmprune::rvv::kernels::{
     sim_fused_im2col_pack, sim_gemm_dense, sim_gemm_dense_unpacked, sim_im2col, sim_pack,
@@ -26,8 +26,12 @@ const LMUL: usize = 2;
 const TILE: usize = 8;
 
 fn main() {
-    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
-    let layers = resnet50_fig6_layers(1);
+    let quick = is_quick();
+    let mut layers = resnet50_fig6_layers(1);
+    if quick {
+        layers.truncate(3);
+    }
+    let mut rep = Reporter::from_env("fig8_breakdown");
 
     let mut t8a = Table::new(
         "Fig. 8a (sim cycles) — with vs without data packing",
@@ -96,6 +100,11 @@ fn main() {
 
         let total_packed = r_im2col.cycles + r_pack.cycles + r_gemm_p.cycles;
         let total_unpacked = r_im2col.cycles + r_gemm_u.cycles;
+        let scfg = RecordConfig::new(LMUL, TILE, 1);
+        let case = format!("sim total packed {}", l.name);
+        rep.record_value(&case, scfg, total_packed as f64, "cycles", true);
+        let case = format!("sim total unpacked {}", l.name);
+        rep.record_value(&case, scfg, total_unpacked as f64, "cycles", true);
         t8a.row(&[
             l.name.into(),
             format!("{}", r_im2col.cycles),
@@ -108,6 +117,10 @@ fn main() {
         ]);
 
         let sep = r_im2col.cycles + r_pack.cycles;
+        let case = format!("sim separate im2col+pack {}", l.name);
+        rep.record_value(&case, scfg, sep as f64, "cycles", true);
+        let case = format!("sim fused {}", l.name);
+        rep.record_value(&case, scfg, r_fused.cycles as f64, "cycles", true);
         t8b.row(&[
             l.name.into(),
             format!("{}", r_im2col.cycles),
@@ -124,4 +137,5 @@ fn main() {
         "paper: 8a — omitting packing balloons GEMM time (poor locality); \
          8b — fused ~= im2col alone, far below separate; stem stride-2 fused beats im2col alone"
     );
+    rep.finish();
 }

@@ -11,7 +11,7 @@
 //! template parameters: at LMUL=8 only T ≤ 3 fits, so wider vectors
 //! trade away accumulator rows exactly as on the K1.
 
-use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::conv::Conv2dSparseCnhw;
 use nmprune::models::resnet50_fig5_layers;
 use nmprune::pruning::prune_colwise_adaptive;
@@ -26,9 +26,13 @@ const SPARSITY: f64 = 0.5;
 const THREADS: usize = 4;
 
 fn main() {
-    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
-    let layers = resnet50_fig5_layers(1);
+    let quick = is_quick();
+    let mut layers = resnet50_fig5_layers(1);
+    if quick {
+        layers.truncate(4);
+    }
     let cfg = BenchConfig::quick();
+    let mut rep = Reporter::from_env("fig9_lmul_sweep");
 
     let mut nat_t = Table::new(
         "Fig. 9 (native) — sparse conv wall-clock (ms) across LMUL, 4 threads",
@@ -55,6 +59,9 @@ fn main() {
             let tile = (32 / lmul - 1).min(8);
             let op = Conv2dSparseCnhw::new_adaptive(s, &w, v, tile, SPARSITY);
             let b = bench("conv", cfg, || op.run(&x, &pool));
+            let case = format!("native sparse conv {}", l.name);
+            let ncfg = RecordConfig::new(lmul, tile, THREADS);
+            rep.record(&case, ncfg, &b.summary, None);
             times.push(b.mean_ns());
             cells.push(format!("{:.3}", b.mean_ms()));
         }
@@ -91,6 +98,9 @@ fn main() {
             let mut m = RvvMachine::k1();
             let (_, rg) = sim_spmm_colwise(&mut m, &cp, &bounded, lmul);
             let total = rp.cycles as f64 + rg.cycles as f64 * scale;
+            let case = format!("sim sparse conv {}", l.name);
+            let scfg = RecordConfig::new(lmul, tile, 1);
+            rep.record_value(&case, scfg, total, "cycles", true);
             cycs.push(total);
             cells.push(format!("{total:.0}"));
         }
@@ -108,4 +118,5 @@ fn main() {
     nat_t.print();
     sim_t.print();
     println!("paper: optimal LMUL varies per layer; best vs worst up to 4x");
+    rep.finish();
 }

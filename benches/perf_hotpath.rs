@@ -5,7 +5,7 @@
 
 use std::time::Duration;
 
-use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
 use nmprune::engine::{ExecConfig, Priority, QueueDiscipline, Server, ServerConfig, ServerStats};
 use nmprune::gemm::threaded::spmm_colwise_parallel_capped;
@@ -20,7 +20,7 @@ fn main() {
     // NMPRUNE_BENCH_QUICK=1: CI's bit-rot smoke profile — tiny windows,
     // same code paths, so the bench is *run* (not just compiled) on
     // every push without burning minutes.
-    let cfg = if std::env::var("NMPRUNE_BENCH_QUICK").is_ok() {
+    let cfg = if nmprune::benchlib::is_quick() {
         BenchConfig::quick()
     } else {
         BenchConfig {
@@ -34,6 +34,9 @@ fn main() {
         "§Perf hot-path kernels",
         &["kernel", "shape", "time", "GFLOP/s (executed)"],
     );
+    // NMPRUNE_BENCH_JSON=<path>: also emit machine-readable records
+    // (roofline-normalized) for the BENCH_*.json trajectory.
+    let mut rep = Reporter::from_env("perf_hotpath");
     let mut rng = XorShiftRng::new(0x9E6F);
 
     // Representative GEMM geometry: Stage1-conv2-like (K=576, cols=3136).
@@ -44,6 +47,8 @@ fn main() {
 
     let r = bench("dense", cfg, || gemm_dense(&w, rows, &p, tile));
     let flops = 2.0 * rows as f64 * k as f64 * cols as f64;
+    let kcfg = RecordConfig::new(0, tile, 1);
+    rep.record("gemm_dense 64x576x3136", kcfg, &r.summary, Some(flops));
     t.row(&[
         "gemm_dense".into(),
         format!("{rows}x{k}x{cols} v{v} t{tile}"),
@@ -53,6 +58,12 @@ fn main() {
 
     let cp = prune_colwise_adaptive(&w, rows, k, tile, 0.5);
     let r = bench("colwise", cfg, || spmm_colwise(&cp, &p));
+    rep.record(
+        "spmm_colwise 50% 64x576x3136",
+        kcfg,
+        &r.summary,
+        Some(0.5 * flops),
+    );
     t.row(&[
         "spmm_colwise 50%".into(),
         format!("{rows}x{k}x{cols} v{v} t{tile}"),
@@ -62,6 +73,12 @@ fn main() {
 
     let cp75 = prune_colwise_adaptive(&w, rows, k, tile, 0.75);
     let r = bench("colwise75", cfg, || spmm_colwise(&cp75, &p));
+    rep.record(
+        "spmm_colwise 75% 64x576x3136",
+        kcfg,
+        &r.summary,
+        Some(0.25 * flops),
+    );
     t.row(&[
         "spmm_colwise 75%".into(),
         format!("{rows}x{k}x{cols} v{v} t{tile}"),
@@ -74,6 +91,12 @@ fn main() {
     let x = Tensor::random(&[64, 1, 56, 56], &mut rng, -1.0, 1.0);
     let r = bench("pack", cfg, || fused_im2col_pack_cnhw(&x, &s, v));
     let bytes = (s.k() * s.gemm_cols() * 4) as f64;
+    rep.record(
+        "fused_im2col_pack 64ch56x56",
+        RecordConfig::new(0, 0, 1),
+        &r.summary,
+        None,
+    );
     t.row(&[
         "fused_im2col_pack".into(),
         format!("{s}"),
@@ -89,6 +112,18 @@ fn main() {
     let pool4 = bench_pool(4);
     let r1 = bench("conv1t", cfg, || op.run(&x, &pool1));
     let r4 = bench("conv4t", cfg, || op.run(&x, &pool4));
+    rep.record(
+        "conv sparse 50% 64ch56x56",
+        RecordConfig::new(0, tile, 1),
+        &r1.summary,
+        Some(0.5 * flops),
+    );
+    rep.record(
+        "conv sparse 50% 64ch56x56",
+        RecordConfig::new(0, tile, 4),
+        &r4.summary,
+        Some(0.5 * flops),
+    );
     t.row(&[
         "conv sparse 1thr".into(),
         format!("{s}"),
@@ -119,6 +154,18 @@ fn main() {
     let rc = bench("small-capped", cfg, || {
         spmm_colwise_parallel_capped(&scp, &sp, &pool4, Some(2))
     });
+    rep.record(
+        "small spmm 50% 64x576x128 pool-wide",
+        RecordConfig::new(0, tile, 4),
+        &rw.summary,
+        Some(sflops),
+    );
+    rep.record(
+        "small spmm 50% 64x576x128 cap=2",
+        RecordConfig::new(0, tile, 2),
+        &rc.summary,
+        Some(sflops),
+    );
     t.row(&[
         "small spmm pool-wide".into(),
         format!("{srows}x{sk}x{scols} v{v} 4thr"),
@@ -189,6 +236,10 @@ fn main() {
     for (mode, adaptive) in [("static", false), ("adaptive", true)] {
         for (load, burst) in [("burst", true), ("trickle", false)] {
             let (rps, p95, caps) = serve(adaptive, burst);
+            // Serving throughput is scheduler-noise-bound: recorded for
+            // the trajectory but never a CI gate.
+            let case = format!("serve {mode} {load} throughput");
+            rep.record_value(&case, RecordConfig::NONE, rps, "rps", false);
             st.row(&[
                 mode.into(),
                 load.into(),
@@ -270,6 +321,11 @@ fn main() {
         let stats = serve_mixed(discipline);
         let inter = stats.class(Priority::Interactive);
         let bg = stats.class(Priority::Batch);
+        let case = format!("serve mixed {label} interactive p95");
+        rep.record_value(&case, RecordConfig::NONE, inter.latency.p95, "ns", false);
+        let case = format!("serve mixed {label} miss-rate");
+        let miss_pct = inter.miss_rate() * 100.0;
+        rep.record_value(&case, RecordConfig::NONE, miss_pct, "percent", false);
         mt.row(&[
             label.into(),
             format!("{:.1} ms", inter.latency.p95 / 1e6),
@@ -300,4 +356,5 @@ fn main() {
             "pool-wide won here — tuner would keep the full pool for this layer"
         }
     );
+    rep.finish();
 }

@@ -8,7 +8,7 @@
 //! `artifacts/accuracy_table.md`) and this bench reprints those numbers
 //! when present.
 
-use nmprune::benchlib::{bench, bench_pool, BenchConfig, Table};
+use nmprune::benchlib::{bench, bench_pool, is_quick, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::engine::{ExecConfig, Executor};
 use nmprune::models::{build_model, model_names, ModelArch};
 use nmprune::tensor::Tensor;
@@ -17,7 +17,7 @@ use nmprune::util::XorShiftRng;
 const THREADS: usize = 4;
 
 fn main() {
-    let quick = std::env::var("NMPRUNE_BENCH_QUICK").is_ok();
+    let quick = is_quick();
     // NMPRUNE_THREAD_CAP=N caps every layer's GEMM at N pool workers
     // (0 / unset = pool-wide), exposing the per-layer parallelism knob
     // end-to-end without re-tuning: batch-1 late-stage layers are small
@@ -53,6 +53,7 @@ fn main() {
         ],
     );
 
+    let mut rep = Reporter::from_env("table2_e2e");
     let mut rng = XorShiftRng::new(0x7B2);
     let pool = bench_pool(THREADS);
     for &name in model_names() {
@@ -62,15 +63,19 @@ fn main() {
         let arch = ModelArch::parse(name).unwrap();
         let x = Tensor::random(&[1, res, res, 3], &mut rng, 0.0, 1.0);
 
-        let run = |mut cfg_exec: ExecConfig| -> f64 {
+        let eff_threads = if thread_cap > 0 { thread_cap } else { THREADS };
+        let ecfg = RecordConfig::new(0, 0, eff_threads);
+        let mut run = |label: &str, mut cfg_exec: ExecConfig| -> f64 {
             cfg_exec.default_choice.threads = thread_cap;
             let exec = Executor::new(build_model(arch, 1, res), cfg_exec);
-            bench(name, cfg, || exec.run(&x)).mean_ms()
+            let r = bench(name, cfg, || exec.run(&x));
+            rep.record(&format!("{name}@{res} {label}"), ecfg, &r.summary, None);
+            r.mean_ms()
         };
-        let dense = run(ExecConfig::dense_nhwc(pool.clone()));
-        let r25 = run(ExecConfig::sparse_cnhw(pool.clone(), 0.25));
-        let r50 = run(ExecConfig::sparse_cnhw(pool.clone(), 0.5));
-        let r75 = run(ExecConfig::sparse_cnhw(pool.clone(), 0.75));
+        let dense = run("dense nhwc", ExecConfig::dense_nhwc(pool.clone()));
+        let r25 = run("sparse r25", ExecConfig::sparse_cnhw(pool.clone(), 0.25));
+        let r50 = run("sparse r50", ExecConfig::sparse_cnhw(pool.clone(), 0.5));
+        let r75 = run("sparse r75", ExecConfig::sparse_cnhw(pool.clone(), 0.75));
 
         t.row(&[
             name.into(),
@@ -96,4 +101,5 @@ fn main() {
     println!(
         "paper: shallow ResNets up to 4.0x, deep up to 3.2x, MobileNet-V2 1.4x, DenseNet-121 modest"
     );
+    rep.finish();
 }

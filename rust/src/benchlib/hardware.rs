@@ -1,0 +1,228 @@
+//! Peak-throughput probe for roofline normalization.
+//!
+//! Raw nanoseconds are machine-bound: a kernel at 2.1 GFLOP/s is
+//! excellent on one host and a regression on another. Following pire's
+//! `hardware.rs` idiom, this module measures — at bench startup, on the
+//! machine actually running the bench — what the compiler + CPU sustain
+//! on the same kind of code the hot kernels are written in, so every
+//! [`super::report::BenchRecord`] can carry a `%-of-peak` figure that
+//! is comparable across hosts.
+//!
+//! Three numbers are probed:
+//!
+//! * **scalar** — one dependent multiply-add chain: the latency-bound
+//!   floor a serial reduction pays;
+//! * **fma** — independent multiply-add lanes over a small register
+//!   array: the throughput the auto-vectorizer reaches on exactly the
+//!   `a * m + b` form the GEMM micro-kernels use (deliberately *not*
+//!   `f32::mul_add`, which can lower to a libm call on non-FMA
+//!   targets — the roofline must be what our kernels could actually
+//!   hit);
+//! * **aggregate** — the fma kernel on every available hardware thread
+//!   simultaneously (barrier-started), capturing the frequency/SMT
+//!   scaling loss that makes `N × single-core` an overestimate.
+//!
+//! The probe costs ~100 ms, runs once per process (memoised), and is
+//! only triggered when JSON output is requested — plain table runs
+//! never pay for it.
+
+use std::sync::{Barrier, OnceLock};
+use std::time::Instant;
+
+/// Measured peak throughput of the probing machine.
+#[derive(Clone, Copy, Debug)]
+pub struct HwProfile {
+    /// Hardware threads used for the aggregate probe
+    /// (`available_parallelism`, not `NMPRUNE_THREADS` — the roofline
+    /// is a machine property, not a configuration).
+    pub threads: usize,
+    /// Dependent-chain multiply-add throughput, one thread (GFLOP/s).
+    pub scalar_gflops: f64,
+    /// Independent-lane multiply-add throughput, one thread (GFLOP/s).
+    pub fma_gflops: f64,
+    /// Sum of per-thread fma throughput with all threads running
+    /// (GFLOP/s); at most `threads × fma_gflops`, typically less.
+    pub aggregate_gflops: f64,
+}
+
+impl HwProfile {
+    /// Roofline for a kernel allowed `threads` workers: the single-core
+    /// fma peak at 1, the measured aggregate at full occupancy, and a
+    /// linear interpolation between the two endpoints in between (both
+    /// are measurements, so the estimate never extrapolates). `0` means
+    /// "uncapped" and maps to one thread — single-thread records are
+    /// the common case in the figure benches.
+    pub fn peak_gflops(&self, threads: usize) -> f64 {
+        let t = threads.max(1).min(self.threads.max(1));
+        if t == 1 || self.threads <= 1 {
+            return self.fma_gflops;
+        }
+        let frac = (t - 1) as f64 / (self.threads - 1) as f64;
+        self.fma_gflops + (self.aggregate_gflops - self.fma_gflops) * frac
+    }
+}
+
+/// The process-wide memoised probe result.
+pub fn probe() -> &'static HwProfile {
+    static PROFILE: OnceLock<HwProfile> = OnceLock::new();
+    PROFILE.get_or_init(measure)
+}
+
+/// Independent accumulator lanes per iteration of the fma kernel. 16
+/// f32 lanes = two 256-bit vectors: enough ILP to saturate the FMA
+/// pipes, small enough to stay register-resident at every ISA width.
+const LANES: usize = 16;
+
+/// Multiplier/addend chosen so the iteration `a = a * M + B` converges
+/// to `B / (1 - M)` = 0.1: accumulators stay normal (no denormal or
+/// overflow stalls distorting the measurement) for any iteration count.
+const M: f32 = 0.999_999;
+const B: f32 = 1.0e-7;
+
+fn measure() -> HwProfile {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let scalar_iters = calibrate(run_scalar);
+    let lane_iters = calibrate(run_lanes);
+    HwProfile {
+        threads,
+        scalar_gflops: best_of(3, || scalar_flops(scalar_iters) / run_scalar(scalar_iters)),
+        fma_gflops: best_of(3, || lane_flops(lane_iters) / run_lanes(lane_iters)),
+        aggregate_gflops: best_of(2, || run_aggregate(threads, lane_iters)),
+    }
+}
+
+/// Peak means *best observed*: take the max over `n` trials, so a
+/// scheduler hiccup can only understate a record's %-of-peak, never
+/// flatter it.
+fn best_of<F: FnMut() -> f64>(n: usize, mut f: F) -> f64 {
+    (0..n).map(|_| f()).fold(0.0, f64::max)
+}
+
+/// Double the iteration count until one run takes ≥ 2 ms — long enough
+/// to dwarf timer quantisation, short enough that the whole probe stays
+/// around 100 ms.
+fn calibrate(run: fn(usize) -> f64) -> usize {
+    let mut iters = 1usize << 12;
+    while run(iters) < 2.0e6 && iters < 1usize << 28 {
+        iters *= 2;
+    }
+    iters
+}
+
+fn scalar_flops(iters: usize) -> f64 {
+    2.0 * iters as f64
+}
+
+fn lane_flops(iters: usize) -> f64 {
+    2.0 * (iters * LANES) as f64
+}
+
+/// One dependent multiply-add chain; returns elapsed nanoseconds.
+fn run_scalar(iters: usize) -> f64 {
+    let m = std::hint::black_box(M);
+    let b = std::hint::black_box(B);
+    let mut acc = std::hint::black_box(1.0f32);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        acc = acc * m + b;
+    }
+    let ns = t0.elapsed().as_nanos() as f64;
+    std::hint::black_box(acc);
+    ns.max(1.0)
+}
+
+/// `LANES` independent multiply-add chains; returns elapsed nanoseconds.
+fn run_lanes(iters: usize) -> f64 {
+    let m = std::hint::black_box(M);
+    let b = std::hint::black_box(B);
+    let mut acc = [0.0f32; LANES];
+    for (i, a) in acc.iter_mut().enumerate() {
+        *a = std::hint::black_box(1.0 + i as f32 * 0.125);
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for a in acc.iter_mut() {
+            *a = *a * m + b;
+        }
+    }
+    let ns = t0.elapsed().as_nanos() as f64;
+    std::hint::black_box(acc);
+    ns.max(1.0)
+}
+
+/// The lane kernel on `n` plain threads at once (barrier-started so
+/// every thread measures under full contention); returns the sum of
+/// per-thread GFLOP/s. Startup-only code — spawning OS threads here is
+/// fine; the no-spawn rule protects the serving hot path.
+fn run_aggregate(n: usize, iters: usize) -> f64 {
+    if n <= 1 {
+        return lane_flops(iters) / run_lanes(iters);
+    }
+    let barrier = Barrier::new(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    lane_flops(iters) / run_lanes(iters)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(0.0)).sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_reports_positive_finite_peaks() {
+        let p = probe();
+        assert!(p.threads >= 1);
+        for v in [p.scalar_gflops, p.fma_gflops, p.aggregate_gflops] {
+            assert!(v.is_finite() && v > 0.0, "non-positive peak {v}");
+        }
+        // Independent lanes can never be slower than a dependent chain
+        // by more than measurement noise.
+        assert!(p.fma_gflops >= p.scalar_gflops * 0.5);
+    }
+
+    #[test]
+    fn probe_is_memoised() {
+        let a = probe() as *const HwProfile;
+        let b = probe() as *const HwProfile;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn peak_interpolates_between_measurements() {
+        let p = HwProfile {
+            threads: 4,
+            scalar_gflops: 1.0,
+            fma_gflops: 10.0,
+            aggregate_gflops: 28.0,
+        };
+        assert_eq!(p.peak_gflops(0), 10.0); // uncapped records = 1 thread
+        assert_eq!(p.peak_gflops(1), 10.0);
+        assert_eq!(p.peak_gflops(4), 28.0);
+        assert_eq!(p.peak_gflops(99), 28.0); // clamped to the machine
+        let mid = p.peak_gflops(2);
+        assert!(mid > 10.0 && mid < 28.0);
+    }
+
+    #[test]
+    fn single_core_machines_use_the_fma_peak_everywhere() {
+        let p = HwProfile {
+            threads: 1,
+            scalar_gflops: 1.0,
+            fma_gflops: 8.0,
+            aggregate_gflops: 8.0,
+        };
+        assert_eq!(p.peak_gflops(1), 8.0);
+        assert_eq!(p.peak_gflops(16), 8.0);
+    }
+}

@@ -2,12 +2,34 @@
 //! the offline crate set). Warmup, adaptive iteration count targeting a
 //! wall-time budget, outlier-trimmed statistics, and markdown table
 //! output shared by every `benches/` target.
+//!
+//! Two environment variables shape every bench run:
+//!
+//! * `NMPRUNE_BENCH_QUICK=1` — shrink measurement budgets *and* case
+//!   counts ([`is_quick`]) so the full suite finishes in CI smoke time;
+//! * `NMPRUNE_BENCH_JSON=<path>` — additionally emit a machine-readable
+//!   [`report::Report`] with roofline-normalized records (see
+//!   [`hardware`]), consumed by `nmprune bench-diff`.
+
+pub mod hardware;
+pub mod report;
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+pub use hardware::HwProfile;
+pub use report::{diff_reports, BenchRecord, RecordConfig, Report, Reporter};
+
 use crate::util::stats::{fmt_ns, trimmed, Summary};
 use crate::util::threadpool::ThreadPool;
+
+/// Whether `NMPRUNE_BENCH_QUICK=1` (or any non-empty value) asked for
+/// the reduced-case CI profile. Every bench target must consult this
+/// single predicate — both for [`BenchConfig::quick`] budgets and for
+/// shrinking its case list — so "quick" means the same thing suite-wide.
+pub fn is_quick() -> bool {
+    std::env::var_os("NMPRUNE_BENCH_QUICK").is_some_and(|v| !v.is_empty())
+}
 
 /// Persistent, per-size worker pools shared by every bench target.
 /// Benches sweeping thread counts must route through this so that no

@@ -1,0 +1,767 @@
+//! Machine-readable bench records: the `BENCH_*.json` trajectory layer.
+//!
+//! Every bench target prints human markdown tables; this module gives
+//! the same measurements a versioned, parseable second life. When
+//! `NMPRUNE_BENCH_JSON=<path>` is set, a [`Reporter`] accumulates one
+//! [`BenchRecord`] per measured case — bench name, case label,
+//! `(LMUL, tile, threads)` configuration, the full nanosecond
+//! [`Summary`], effective GFLOP/s, and %-of-peak against the
+//! [`super::hardware`] roofline probe — and writes one [`Report`]
+//! document on [`Reporter::finish`]. With the variable unset the
+//! reporter is inert and table output is byte-identical to before.
+//!
+//! The emitted files are the repo's perf trajectory: `BENCH_<PR>.json`
+//! snapshots are committed per PR and compared by
+//! `nmprune bench-diff <old> <new>` (see [`diff_reports`]), which CI
+//! runs against the quick profile to catch kernel regressions.
+//!
+//! JSON emit/parse is hand-rolled on [`crate::util::json`] — the
+//! offline crate set has no serde, matching how `util` hand-rolls its
+//! other substrates.
+
+use std::path::{Path, PathBuf};
+
+use super::hardware::{self, HwProfile};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Version stamp written into every document. Bump when a field
+/// changes meaning; [`Report::from_json`] rejects mismatched files
+/// (a wrong-version trajectory silently diffed would be worse than an
+/// error).
+pub const SCHEMA_VERSION: usize = 1;
+
+/// The `(LMUL, tile, threads)` template configuration a record was
+/// measured at; `0` in any position means "not applicable / uncapped".
+/// Part of the record identity: `bench-diff` only compares records
+/// whose configurations match exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct RecordConfig {
+    /// RVV LMUL (strip width / 8 on the 256-bit machine); 0 = n/a.
+    pub lmul: usize,
+    /// Micro-kernel tile height T; 0 = n/a.
+    pub tile: usize,
+    /// Parallelism degree (pool workers); 0 = n/a or single-threaded.
+    pub threads: usize,
+}
+
+impl RecordConfig {
+    /// No template parameters apply (e.g. end-to-end serving rows).
+    pub const NONE: RecordConfig = RecordConfig {
+        lmul: 0,
+        tile: 0,
+        threads: 0,
+    };
+
+    /// Convenience constructor in `(lmul, tile, threads)` order.
+    pub fn new(lmul: usize, tile: usize, threads: usize) -> Self {
+        Self {
+            lmul,
+            tile,
+            threads,
+        }
+    }
+}
+
+/// One measured case, roofline-normalized where FLOPs are known.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Suite (bench target) name, e.g. `perf_hotpath`.
+    pub bench: String,
+    /// Case label within the suite, e.g. `gemm_dense 64x576x3136`.
+    pub case: String,
+    /// Template configuration the case was measured at.
+    pub config: RecordConfig,
+    /// Unit of the summary samples: `ns`, `cycles`, `percent`,
+    /// `ratio`, or `rps`. `ns` and `cycles` are lower-is-better;
+    /// everything else is higher-is-better.
+    pub unit: String,
+    /// Sample statistics in `unit` (deterministic metrics are stored
+    /// as a single-sample summary).
+    pub summary: Summary,
+    /// Effective GFLOP/s (executed FLOPs / median ns), when known.
+    pub gflops: Option<f64>,
+    /// `100 × gflops / peak` for this record's thread count, when the
+    /// hardware probe ran.
+    pub pct_of_peak: Option<f64>,
+    /// Whether `bench-diff` may fail the build on this record. Noisy
+    /// end-to-end observables (serving throughput/latency) are
+    /// recorded for the trajectory but never gate.
+    pub gate: bool,
+}
+
+impl BenchRecord {
+    /// Identity used by [`diff_reports`] to match records across runs.
+    pub fn key(&self) -> String {
+        format!(
+            "{}::{} [lmul={} tile={} threads={}]",
+            self.bench,
+            self.case,
+            self.config.lmul,
+            self.config.tile,
+            self.config.threads
+        )
+    }
+
+    /// Whether smaller summary values are better for this unit.
+    pub fn lower_is_better(&self) -> bool {
+        matches!(self.unit.as_str(), "ns" | "cycles")
+    }
+}
+
+/// A full bench-run document: schema version, suite, the probing
+/// machine's roofline, and the records.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Always [`SCHEMA_VERSION`] for documents this build writes.
+    pub schema_version: usize,
+    /// Suite (bench target) that produced the document.
+    pub suite: String,
+    /// Roofline probe of the machine that ran the suite, when probed.
+    pub hardware: Option<HwProfile>,
+    /// One entry per measured case.
+    pub records: Vec<BenchRecord>,
+}
+
+impl Report {
+    /// An empty report for `suite` (no hardware probe attached).
+    pub fn new(suite: &str) -> Self {
+        Self {
+            schema_version: SCHEMA_VERSION,
+            suite: suite.to_string(),
+            hardware: None,
+            records: Vec::new(),
+        }
+    }
+
+    /// Serialise to the JSON document model.
+    pub fn to_json(&self) -> Json {
+        let version = self.schema_version as f64;
+        let mut top = vec![
+            ("schema_version".into(), Json::Num(version)),
+            ("suite".into(), Json::Str(self.suite.clone())),
+        ];
+        if let Some(hw) = &self.hardware {
+            top.push((
+                "hardware".into(),
+                Json::Obj(vec![
+                    ("threads".into(), Json::Num(hw.threads as f64)),
+                    ("scalar_gflops".into(), Json::Num(hw.scalar_gflops)),
+                    ("fma_gflops".into(), Json::Num(hw.fma_gflops)),
+                    ("aggregate_gflops".into(), Json::Num(hw.aggregate_gflops)),
+                ]),
+            ));
+        }
+        let records = self.records.iter().map(record_to_json).collect();
+        top.push(("records".into(), Json::Arr(records)));
+        Json::Obj(top)
+    }
+
+    /// Render the document as pretty-printed JSON text.
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Rebuild a report from a parsed JSON document.
+    pub fn from_json(v: &Json) -> Result<Report, String> {
+        let version = v
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or("missing schema_version")?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} (this build reads {SCHEMA_VERSION})"
+            ));
+        }
+        let suite = v
+            .get("suite")
+            .and_then(Json::as_str)
+            .ok_or("missing suite")?
+            .to_string();
+        let hardware = match v.get("hardware") {
+            None | Some(Json::Null) => None,
+            Some(h) => Some(HwProfile {
+                threads: h
+                    .get("threads")
+                    .and_then(Json::as_usize)
+                    .ok_or("hardware.threads")?,
+                scalar_gflops: num_field(h, "scalar_gflops")?,
+                fma_gflops: num_field(h, "fma_gflops")?,
+                aggregate_gflops: num_field(h, "aggregate_gflops")?,
+            }),
+        };
+        let records = v
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or("missing records array")?
+            .iter()
+            .map(record_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Report {
+            schema_version: version,
+            suite,
+            hardware,
+            records,
+        })
+    }
+
+    /// Parse a report from JSON text.
+    pub fn parse(text: &str) -> Result<Report, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+
+    /// Read and parse a report file.
+    pub fn load(path: &Path) -> Result<Report, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Write the rendered document (parent directories created).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn num_field(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing numeric field {key:?}"))
+}
+
+fn record_to_json(r: &BenchRecord) -> Json {
+    let mut pairs = vec![
+        ("bench".into(), Json::Str(r.bench.clone())),
+        ("case".into(), Json::Str(r.case.clone())),
+        (
+            "config".into(),
+            Json::Obj(vec![
+                ("lmul".into(), Json::Num(r.config.lmul as f64)),
+                ("tile".into(), Json::Num(r.config.tile as f64)),
+                ("threads".into(), Json::Num(r.config.threads as f64)),
+            ]),
+        ),
+        ("unit".into(), Json::Str(r.unit.clone())),
+        ("gate".into(), Json::Bool(r.gate)),
+        (
+            "summary".into(),
+            Json::Obj(vec![
+                ("n".into(), Json::Num(r.summary.n as f64)),
+                ("mean".into(), Json::Num(r.summary.mean)),
+                ("stddev".into(), Json::Num(r.summary.stddev)),
+                ("min".into(), Json::Num(r.summary.min)),
+                ("max".into(), Json::Num(r.summary.max)),
+                ("median".into(), Json::Num(r.summary.median)),
+                ("p5".into(), Json::Num(r.summary.p5)),
+                ("p95".into(), Json::Num(r.summary.p95)),
+            ]),
+        ),
+    ];
+    if let Some(g) = r.gflops {
+        pairs.push(("gflops".into(), Json::Num(g)));
+    }
+    if let Some(p) = r.pct_of_peak {
+        pairs.push(("pct_of_peak".into(), Json::Num(p)));
+    }
+    Json::Obj(pairs)
+}
+
+fn record_from_json(v: &Json) -> Result<BenchRecord, String> {
+    let cfg = v.get("config").ok_or("record missing config")?;
+    let s = v.get("summary").ok_or("record missing summary")?;
+    Ok(BenchRecord {
+        bench: v
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or("record missing bench")?
+            .to_string(),
+        case: v
+            .get("case")
+            .and_then(Json::as_str)
+            .ok_or("record missing case")?
+            .to_string(),
+        config: RecordConfig {
+            lmul: cfg.get("lmul").and_then(Json::as_usize).unwrap_or(0),
+            tile: cfg.get("tile").and_then(Json::as_usize).unwrap_or(0),
+            threads: cfg.get("threads").and_then(Json::as_usize).unwrap_or(0),
+        },
+        unit: v
+            .get("unit")
+            .and_then(Json::as_str)
+            .unwrap_or("ns")
+            .to_string(),
+        summary: Summary {
+            n: s.get("n").and_then(Json::as_usize).unwrap_or(0),
+            mean: num_field(s, "mean")?,
+            stddev: num_field(s, "stddev")?,
+            min: num_field(s, "min")?,
+            max: num_field(s, "max")?,
+            median: num_field(s, "median")?,
+            p5: num_field(s, "p5")?,
+            p95: num_field(s, "p95")?,
+        },
+        gflops: v.get("gflops").and_then(Json::as_f64),
+        pct_of_peak: v.get("pct_of_peak").and_then(Json::as_f64),
+        gate: v.get("gate").and_then(Json::as_bool).unwrap_or(true),
+    })
+}
+
+// ----------------------------------------------------------------------
+// Reporter: the env-gated accumulator the bench targets talk to.
+
+/// Accumulates [`BenchRecord`]s during a bench run and writes one
+/// [`Report`] at the end — active only when `NMPRUNE_BENCH_JSON=<path>`
+/// is set, so plain table runs pay nothing (not even the hardware
+/// probe).
+pub struct Reporter {
+    out: Option<(PathBuf, Report)>,
+}
+
+impl Reporter {
+    /// Build from the environment: inert unless `NMPRUNE_BENCH_JSON`
+    /// names an output path. When active, the [`hardware`] roofline
+    /// probe runs once (memoised) so records can be %-of-peak
+    /// normalized.
+    pub fn from_env(suite: &str) -> Self {
+        let out = std::env::var_os("NMPRUNE_BENCH_JSON").map(|p| {
+            let mut report = Report::new(suite);
+            report.hardware = Some(*hardware::probe());
+            (PathBuf::from(p), report)
+        });
+        Reporter { out }
+    }
+
+    /// Whether records are being collected this run.
+    pub fn active(&self) -> bool {
+        self.out.is_some()
+    }
+
+    /// Record a wall-clock measurement (unit `ns`, gating). When
+    /// `flops` (executed FLOPs per iteration) is given, the record
+    /// carries effective GFLOP/s (`flops / median ns`) and %-of-peak
+    /// for `config.threads` workers.
+    pub fn record(
+        &mut self,
+        case: &str,
+        config: RecordConfig,
+        summary: &Summary,
+        flops: Option<f64>,
+    ) {
+        let Some((_, report)) = self.out.as_mut() else {
+            return;
+        };
+        let gflops = match flops {
+            Some(f) if summary.median > 0.0 => Some(f / summary.median),
+            _ => None,
+        };
+        let pct_of_peak = gflops.map(|g| {
+            let peak = report
+                .hardware
+                .as_ref()
+                .expect("active reporter probes hardware")
+                .peak_gflops(config.threads);
+            100.0 * g / peak
+        });
+        let bench = report.suite.clone();
+        report.records.push(BenchRecord {
+            bench,
+            case: case.to_string(),
+            config,
+            unit: "ns".to_string(),
+            summary: summary.clone(),
+            gflops,
+            pct_of_peak,
+            gate: true,
+        });
+    }
+
+    /// Record a single-valued metric (simulator cycles, ratios,
+    /// percentages, serving throughput). `gate = false` marks noisy
+    /// observables that the trajectory tracks but `bench-diff` must
+    /// not fail the build on.
+    pub fn record_value(
+        &mut self,
+        case: &str,
+        config: RecordConfig,
+        value: f64,
+        unit: &str,
+        gate: bool,
+    ) {
+        let Some((_, report)) = self.out.as_mut() else {
+            return;
+        };
+        let bench = report.suite.clone();
+        report.records.push(BenchRecord {
+            bench,
+            case: case.to_string(),
+            config,
+            unit: unit.to_string(),
+            summary: Summary::of(&[value]),
+            gflops: None,
+            pct_of_peak: None,
+            gate,
+        });
+    }
+
+    /// Write the accumulated report (no-op when inert). Prints a
+    /// one-line confirmation to stderr so table output stays clean.
+    pub fn finish(self) {
+        let Some((path, report)) = self.out else {
+            return;
+        };
+        match report.save(&path) {
+            Ok(()) => eprintln!(
+                "bench json: wrote {} records to {}",
+                report.records.len(),
+                path.display()
+            ),
+            Err(e) => eprintln!("bench json: FAILED writing {}: {e}", path.display()),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// bench-diff: regression gating between two reports.
+
+/// Classification of one compared record pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffStatus {
+    /// Worse than the threshold allows.
+    Regression,
+    /// Better by more than the threshold.
+    Improvement,
+    /// Within the threshold either way.
+    Unchanged,
+    /// Present only in the old report (case removed or skipped).
+    OnlyOld,
+    /// Present only in the new report (case added).
+    OnlyNew,
+}
+
+/// One row of a [`DiffReport`].
+#[derive(Clone, Debug)]
+pub struct DiffEntry {
+    /// Record identity ([`BenchRecord::key`]).
+    pub key: String,
+    /// What was compared: `%peak` when both sides carry roofline
+    /// normalization (machine-portable), otherwise the record unit
+    /// compared on the summary median.
+    pub metric: String,
+    /// Old-side value of `metric` (0 for [`DiffStatus::OnlyNew`]).
+    pub old: f64,
+    /// New-side value of `metric` (0 for [`DiffStatus::OnlyOld`]).
+    pub new: f64,
+    /// Signed relative change in percent; positive is improvement.
+    pub delta_pct: f64,
+    /// Whether both sides allow gating (see [`BenchRecord::gate`]).
+    pub gated: bool,
+    /// Classification against the threshold.
+    pub status: DiffStatus,
+}
+
+/// Result of comparing two reports.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    /// Relative threshold (percent) separating noise from signal.
+    pub threshold_pct: f64,
+    /// One entry per record key present in either report, old-report
+    /// order first, then new-only keys.
+    pub entries: Vec<DiffEntry>,
+}
+
+impl DiffReport {
+    /// Gated regressions — the count that fails a build.
+    pub fn regressions(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.status == DiffStatus::Regression && e.gated)
+            .count()
+    }
+
+    /// Gated improvements beyond the threshold.
+    pub fn improvements(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.status == DiffStatus::Improvement && e.gated)
+            .count()
+    }
+
+    /// Whether `bench-diff` should exit nonzero.
+    pub fn has_regressions(&self) -> bool {
+        self.regressions() > 0
+    }
+}
+
+/// Compare two reports record-by-record. Records match on
+/// `(bench, case, config)` — a config change is a different record
+/// (reported as removed + added), never a false regression. Matched
+/// pairs compare on `%-of-peak` when both sides have it (normalized by
+/// each machine's own roofline, so snapshots from different hosts stay
+/// comparable), else on the summary median in the record's unit with
+/// the unit's better-direction. Only pairs gated on *both* sides can
+/// count as regressions.
+pub fn diff_reports(old: &Report, new: &Report, threshold_pct: f64) -> DiffReport {
+    use std::collections::{BTreeMap, BTreeSet};
+    let new_by_key: BTreeMap<String, &BenchRecord> =
+        new.records.iter().map(|r| (r.key(), r)).collect();
+    let old_keys: BTreeSet<String> = old.records.iter().map(|r| r.key()).collect();
+
+    let mut entries = Vec::new();
+    for o in &old.records {
+        let key = o.key();
+        match new_by_key.get(&key) {
+            None => entries.push(DiffEntry {
+                key,
+                metric: o.unit.clone(),
+                old: o.summary.median,
+                new: 0.0,
+                delta_pct: 0.0,
+                gated: false,
+                status: DiffStatus::OnlyOld,
+            }),
+            Some(n) => entries.push(compare_pair(o, n, threshold_pct)),
+        }
+    }
+    for n in &new.records {
+        let key = n.key();
+        if !old_keys.contains(&key) {
+            entries.push(DiffEntry {
+                key,
+                metric: n.unit.clone(),
+                old: 0.0,
+                new: n.summary.median,
+                delta_pct: 0.0,
+                gated: false,
+                status: DiffStatus::OnlyNew,
+            });
+        }
+    }
+    DiffReport {
+        threshold_pct,
+        entries,
+    }
+}
+
+fn compare_pair(o: &BenchRecord, n: &BenchRecord, threshold_pct: f64) -> DiffEntry {
+    // Prefer the roofline-normalized view; fall back to the raw median.
+    let (metric, old_v, new_v, higher_is_better) = match (o.pct_of_peak, n.pct_of_peak) {
+        (Some(a), Some(b)) => ("%peak".to_string(), a, b, true),
+        _ => (
+            o.unit.clone(),
+            o.summary.median,
+            n.summary.median,
+            !o.lower_is_better(),
+        ),
+    };
+    let delta_pct = if old_v.abs() > f64::EPSILON {
+        let raw = (new_v - old_v) / old_v.abs() * 100.0;
+        if higher_is_better {
+            raw
+        } else {
+            -raw
+        }
+    } else {
+        0.0
+    };
+    let status = if delta_pct < -threshold_pct {
+        DiffStatus::Regression
+    } else if delta_pct > threshold_pct {
+        DiffStatus::Improvement
+    } else {
+        DiffStatus::Unchanged
+    };
+    DiffEntry {
+        key: o.key(),
+        metric,
+        old: old_v,
+        new: new_v,
+        delta_pct,
+        gated: o.gate && n.gate,
+        status,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(case: &str, median: f64, pct: Option<f64>) -> BenchRecord {
+        BenchRecord {
+            bench: "suite".into(),
+            case: case.into(),
+            config: RecordConfig::new(2, 8, 1),
+            unit: "ns".into(),
+            summary: Summary::of(&[median]),
+            gflops: pct.map(|_| 1.0),
+            pct_of_peak: pct,
+            gate: true,
+        }
+    }
+
+    fn report_with(records: Vec<BenchRecord>) -> Report {
+        Report {
+            schema_version: SCHEMA_VERSION,
+            suite: "suite".into(),
+            hardware: None,
+            records,
+        }
+    }
+
+    #[test]
+    fn self_diff_is_clean() {
+        let records = vec![record("a", 100.0, Some(40.0)), record("b", 5.0, None)];
+        let r = report_with(records);
+        let d = diff_reports(&r, &r, 10.0);
+        assert_eq!(d.regressions(), 0);
+        assert!(!d.has_regressions());
+        assert!(d.entries.iter().all(|e| e.status == DiffStatus::Unchanged));
+    }
+
+    #[test]
+    fn pct_of_peak_is_preferred_and_directional() {
+        // %-of-peak fell 50 → 30: a 40% regression even though raw ns
+        // (the fallback metric) also changed.
+        let old = report_with(vec![record("k", 100.0, Some(50.0))]);
+        let new = report_with(vec![record("k", 100.0, Some(30.0))]);
+        let d = diff_reports(&old, &new, 10.0);
+        assert_eq!(d.entries.len(), 1);
+        let e = &d.entries[0];
+        assert_eq!(e.metric, "%peak");
+        assert_eq!(e.status, DiffStatus::Regression);
+        assert!((e.delta_pct + 40.0).abs() < 1e-9);
+        assert!(d.has_regressions());
+        // The reverse direction is an improvement.
+        let d = diff_reports(&new, &old, 10.0);
+        assert_eq!(d.entries[0].status, DiffStatus::Improvement);
+        assert!(!d.has_regressions());
+    }
+
+    #[test]
+    fn ns_fallback_treats_slower_as_regression() {
+        let old = report_with(vec![record("k", 100.0, None)]);
+        let new = report_with(vec![record("k", 125.0, None)]);
+        let d = diff_reports(&old, &new, 10.0);
+        assert_eq!(d.entries[0].metric, "ns");
+        assert_eq!(d.entries[0].status, DiffStatus::Regression);
+        assert!((d.entries[0].delta_pct + 25.0).abs() < 1e-9);
+        // 25% slower under a 30% threshold is within noise.
+        assert!(!diff_reports(&old, &new, 30.0).has_regressions());
+    }
+
+    #[test]
+    fn higher_is_better_units_invert_direction() {
+        let mut o = record("serve", 100.0, None);
+        o.unit = "rps".into();
+        let mut n = o.clone();
+        n.summary = Summary::of(&[150.0]);
+        let d = diff_reports(&report_with(vec![o]), &report_with(vec![n]), 10.0);
+        assert_eq!(d.entries[0].status, DiffStatus::Improvement);
+    }
+
+    #[test]
+    fn config_change_is_add_plus_remove_not_a_regression() {
+        let old = report_with(vec![record("k", 100.0, Some(50.0))]);
+        let mut moved = record("k", 300.0, Some(10.0));
+        moved.config.threads = 4;
+        let new = report_with(vec![moved]);
+        let d = diff_reports(&old, &new, 10.0);
+        assert_eq!(d.entries.len(), 2);
+        assert!(d.entries.iter().any(|e| e.status == DiffStatus::OnlyOld));
+        assert!(d.entries.iter().any(|e| e.status == DiffStatus::OnlyNew));
+        assert!(!d.has_regressions());
+    }
+
+    #[test]
+    fn ungated_records_never_fail_the_diff() {
+        let mut o = record("serve p95", 100.0, None);
+        o.gate = false;
+        let mut n = o.clone();
+        n.summary = Summary::of(&[1000.0]);
+        let d = diff_reports(&report_with(vec![o]), &report_with(vec![n]), 10.0);
+        assert_eq!(d.entries[0].status, DiffStatus::Regression);
+        assert!(!d.entries[0].gated);
+        assert_eq!(d.regressions(), 0);
+        assert!(!d.has_regressions());
+    }
+
+    #[test]
+    fn report_json_roundtrip_preserves_everything() {
+        let records = vec![record("a", 123.456, Some(41.5)), record("b", 7.0, None)];
+        let mut r = report_with(records);
+        r.hardware = Some(HwProfile {
+            threads: 8,
+            scalar_gflops: 1.25,
+            fma_gflops: 9.5,
+            aggregate_gflops: 40.0,
+        });
+        r.records[1].unit = "cycles".into();
+        r.records[1].gate = false;
+        // An explicitly empty summary (n = 0) must survive the trip.
+        r.records.push(BenchRecord {
+            bench: "suite".into(),
+            case: "empty".into(),
+            config: RecordConfig::NONE,
+            unit: "ns".into(),
+            summary: Summary::empty(),
+            gflops: None,
+            pct_of_peak: None,
+            gate: true,
+        });
+        let text = r.render();
+        let back = Report::parse(&text).unwrap();
+        assert_eq!(back.schema_version, SCHEMA_VERSION);
+        assert_eq!(back.suite, r.suite);
+        let hw = back.hardware.unwrap();
+        assert_eq!(hw.threads, 8);
+        assert_eq!(hw.fma_gflops, 9.5);
+        assert_eq!(back.records.len(), r.records.len());
+        for (a, b) in back.records.iter().zip(&r.records) {
+            assert_eq!(a.key(), b.key());
+            assert_eq!(a.unit, b.unit);
+            assert_eq!(a.gate, b.gate);
+            assert_eq!(a.summary, b.summary);
+            assert_eq!(a.gflops, b.gflops);
+            assert_eq!(a.pct_of_peak, b.pct_of_peak);
+        }
+        // A round-tripped report self-diffs clean.
+        assert!(!diff_reports(&r, &back, 0.001).has_regressions());
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let text = r#"{"schema_version": 99, "suite": "s", "records": []}"#;
+        let e = Report::parse(text).unwrap_err();
+        assert!(e.contains("schema_version 99"), "{e}");
+    }
+
+    #[test]
+    fn malformed_documents_error_not_panic() {
+        for bad in [
+            "",
+            "{}",
+            "[]",
+            r#"{"schema_version": 1}"#,
+            r#"{"schema_version": 1, "suite": "s"}"#,
+            r#"{"schema_version": 1, "suite": "s", "records": [{}]}"#,
+        ] {
+            assert!(Report::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn inert_reporter_records_nothing() {
+        // NMPRUNE_BENCH_JSON is not set under `cargo test`.
+        std::env::remove_var("NMPRUNE_BENCH_JSON");
+        let mut rep = Reporter::from_env("suite");
+        assert!(!rep.active());
+        let s = Summary::of(&[1.0]);
+        rep.record("case", RecordConfig::NONE, &s, Some(10.0));
+        rep.record_value("v", RecordConfig::NONE, 1.0, "cycles", true);
+        rep.finish(); // must not write anywhere / panic
+    }
+}

@@ -32,6 +32,7 @@ impl Priority {
     /// Dense index for per-class stats arrays.
     pub const COUNT: usize = 2;
 
+    /// This class's slot in `[_; Priority::COUNT]` stats arrays.
     #[inline]
     pub fn index(self) -> usize {
         match self {
@@ -40,6 +41,7 @@ impl Priority {
         }
     }
 
+    /// Human-readable class label for tables and trace lines.
     pub fn name(self) -> &'static str {
         match self {
             Priority::Interactive => "interactive",
@@ -47,6 +49,7 @@ impl Priority {
         }
     }
 
+    /// Every class, in [`Priority::index`] order.
     pub const ALL: [Priority; Self::COUNT] = [Priority::Interactive, Priority::Batch];
 }
 

@@ -15,6 +15,11 @@
 //!   tune   --model M [...]       per-layer (LMUL, T, P) auto-tuning
 //!   sim    [--layer i]           RVV-simulator kernel comparison
 //!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
+//!   bench-diff OLD NEW [...]     compare two NMPRUNE_BENCH_JSON reports
+//!                                (--threshold-pct X, default 10): prints a
+//!                                regression/improvement table and exits
+//!                                nonzero if any gated record regressed
+//!                                beyond the threshold — the CI perf gate
 
 use std::time::Instant;
 
@@ -34,9 +39,10 @@ fn main() {
         Some("tune") => cmd_tune(&args),
         Some("sim") => cmd_sim(&args),
         Some("artifacts") => cmd_artifacts(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             eprintln!(
-                "usage: nmprune <models|run|serve|tune|sim|artifacts> [options]\n\
+                "usage: nmprune <models|run|serve|tune|sim|artifacts|bench-diff> [options]\n\
                  common options: --model resnet50 --batch 1 --res 224 \
                  --threads N (default: all hardware threads, or NMPRUNE_THREADS) \
                  --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
@@ -344,6 +350,77 @@ fn cmd_sim(args: &Args) {
         dense.cycles as f64 / outer.cycles as f64,
         dense.cycles as f64 / col.cycles as f64
     );
+}
+
+fn cmd_bench_diff(args: &Args) {
+    use nmprune::benchlib::report::DiffStatus;
+    use nmprune::benchlib::{diff_reports, Report, Table};
+
+    let (Some(old_path), Some(new_path)) = (args.positional.get(1), args.positional.get(2))
+    else {
+        eprintln!("usage: nmprune bench-diff <old.json> <new.json> [--threshold-pct X]");
+        std::process::exit(2);
+    };
+    let threshold = args.get_parsed("threshold-pct", 10.0f64);
+    let load = |p: &str| {
+        Report::load(std::path::Path::new(p)).unwrap_or_else(|e| {
+            eprintln!("bench-diff: {e}");
+            std::process::exit(2);
+        })
+    };
+    let old = load(old_path);
+    let new = load(new_path);
+    println!(
+        "comparing {} ({} records) -> {} ({} records), threshold {threshold:.0}%",
+        old_path,
+        old.records.len(),
+        new_path,
+        new.records.len()
+    );
+
+    let diff = diff_reports(&old, &new, threshold);
+    let mut t = Table::new(
+        "bench-diff",
+        &["record", "metric", "old", "new", "delta", "status"],
+    );
+    for e in &diff.entries {
+        // %-of-peak prints with a decimal; raw medians (ns/cycles) are
+        // large integers.
+        let fmt = |v: f64| {
+            if e.metric == "%peak" || v.abs() < 100.0 {
+                format!("{v:.1}")
+            } else {
+                format!("{v:.0}")
+            }
+        };
+        let status = match e.status {
+            DiffStatus::Regression if e.gated => "REGRESSION".to_string(),
+            DiffStatus::Regression => "regression (ungated)".to_string(),
+            DiffStatus::Improvement => "improvement".to_string(),
+            DiffStatus::Unchanged => "ok".to_string(),
+            DiffStatus::OnlyOld => "removed".to_string(),
+            DiffStatus::OnlyNew => "added".to_string(),
+        };
+        t.row(&[
+            e.key.clone(),
+            e.metric.clone(),
+            fmt(e.old),
+            fmt(e.new),
+            format!("{:+.1}%", e.delta_pct),
+            status,
+        ]);
+    }
+    t.print();
+    println!(
+        "{} records: {} gated regressions, {} improvements beyond {threshold:.0}%",
+        diff.entries.len(),
+        diff.regressions(),
+        diff.improvements()
+    );
+    if diff.has_regressions() {
+        eprintln!("bench-diff: FAIL — gated regressions beyond threshold");
+        std::process::exit(1);
+    }
 }
 
 fn cmd_artifacts(args: &Args) {

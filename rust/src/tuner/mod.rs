@@ -40,9 +40,11 @@ pub const LMULS: [usize; 4] = [1, 2, 4, 8];
 /// One profiled candidate.
 #[derive(Clone, Copy, Debug)]
 pub struct Candidate {
+    /// RVV register-group multiplier profiled (one of [`LMULS`]).
     pub lmul: usize,
     /// Strip width = VLMAX(lmul) on the 256-bit machine.
     pub v: usize,
+    /// Micro-kernel tile height T (accumulator rows kept in registers).
     pub tile: usize,
     /// Parallelism degree profiled (0 = uncapped / not profiled).
     pub threads: usize,
@@ -53,7 +55,9 @@ pub struct Candidate {
 /// Tuning outcome for one layer.
 #[derive(Clone, Debug)]
 pub struct TuneResult {
+    /// The fastest profiled candidate.
     pub best: Candidate,
+    /// Every profiled candidate, in sweep order (for reporting).
     pub candidates: Vec<Candidate>,
 }
 
@@ -211,6 +215,7 @@ fn pick(candidates: Vec<Candidate>) -> TuneResult {
 }
 
 impl TuneResult {
+    /// The winner as an engine-facing per-layer execution choice.
     pub fn choice(&self) -> LayerChoice {
         LayerChoice {
             v: self.best.v,
@@ -226,6 +231,7 @@ impl TuneResult {
 /// Key → tuned choice, persisted as TSV at `path`.
 #[derive(Clone, Debug, Default)]
 pub struct TuneCache {
+    /// [`cache_key`] → tuned per-layer choice.
     pub entries: BTreeMap<String, LayerChoice>,
 }
 

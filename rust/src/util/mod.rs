@@ -1,12 +1,14 @@
 //! General-purpose substrates hand-rolled for the offline environment:
-//! PRNG, statistics, thread pool, CLI parsing and a small property-test
-//! driver (the vendored crate set has no rand/rayon/clap/proptest).
+//! PRNG, statistics, thread pool, CLI parsing, JSON, and a small
+//! property-test driver (the vendored crate set has no
+//! rand/rayon/clap/serde/proptest).
 
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
 pub mod cli;
 pub mod prop;
+pub mod json;
 
 pub use rng::XorShiftRng;
 pub use stats::Summary;

@@ -1,0 +1,163 @@
+//! Integration coverage for the bench-trajectory layer: `Report` JSON
+//! round-trips through the public API (save → load), `diff_reports`
+//! regression semantics on synthetic data, and the
+//! `nmprune bench-diff` CLI exit-code contract — 0 clean, 1 gated
+//! regression beyond threshold, 2 usage or unreadable input.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use nmprune::benchlib::report::DiffStatus;
+use nmprune::benchlib::{diff_reports, BenchRecord, RecordConfig, Report};
+use nmprune::util::Summary;
+
+fn record(case: &str, config: RecordConfig, median: f64, pct: Option<f64>) -> BenchRecord {
+    BenchRecord {
+        bench: "perf_hotpath".into(),
+        case: case.into(),
+        config,
+        unit: "ns".into(),
+        summary: Summary::of(&[median]),
+        gflops: pct.map(|p| p / 10.0),
+        pct_of_peak: pct,
+        gate: true,
+    }
+}
+
+fn report_with(records: Vec<BenchRecord>) -> Report {
+    let mut r = Report::new("perf_hotpath");
+    r.records = records;
+    r
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("nmprune_bench_{}_{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn save_load_roundtrip_via_public_api() {
+    let mut r = report_with(vec![
+        record("gemm", RecordConfig::new(2, 8, 1), 1.0e6, Some(40.0)),
+        record("fused pack", RecordConfig::NONE, 250.0, None),
+    ]);
+    r.records[1].unit = "cycles".into();
+    // An empty summary (n = 0) and an ungated record must survive too.
+    r.records.push(BenchRecord {
+        bench: "perf_hotpath".into(),
+        case: "empty".into(),
+        config: RecordConfig::NONE,
+        unit: "ns".into(),
+        summary: Summary::empty(),
+        gflops: None,
+        pct_of_peak: None,
+        gate: false,
+    });
+
+    let path = tmp_path("roundtrip.json");
+    r.save(&path).unwrap();
+    let back = Report::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(back.suite, "perf_hotpath");
+    assert_eq!(back.records.len(), r.records.len());
+    for (a, b) in back.records.iter().zip(&r.records) {
+        assert_eq!(a.key(), b.key());
+        assert_eq!(a.unit, b.unit);
+        assert_eq!(a.gate, b.gate);
+        assert_eq!(a.summary, b.summary);
+        assert_eq!(a.pct_of_peak, b.pct_of_peak);
+    }
+    // A round-tripped report self-diffs clean even at a tiny threshold.
+    assert!(!diff_reports(&r, &back, 0.001).has_regressions());
+}
+
+#[test]
+fn injected_regression_fails_and_config_change_does_not() {
+    let old = report_with(vec![
+        record("kernel", RecordConfig::new(2, 8, 1), 1000.0, Some(50.0)),
+        record("moved", RecordConfig::new(2, 8, 1), 500.0, None),
+    ]);
+    let new = report_with(vec![
+        // %-of-peak fell 50 → 30: a 40% drop, far past a 10% threshold.
+        record("kernel", RecordConfig::new(2, 8, 1), 1500.0, Some(30.0)),
+        // Same case re-measured at a different config: identity changes,
+        // so this is removed + added, never a false regression.
+        record("moved", RecordConfig::new(4, 8, 1), 5000.0, None),
+    ]);
+
+    let d = diff_reports(&old, &new, 10.0);
+    assert!(d.has_regressions());
+    assert_eq!(d.regressions(), 1);
+    let reg = d
+        .entries
+        .iter()
+        .find(|e| e.status == DiffStatus::Regression)
+        .unwrap();
+    assert!(reg.key.contains("kernel"));
+    assert_eq!(reg.metric, "%peak");
+    let only_old = d.entries.iter().filter(|e| e.status == DiffStatus::OnlyOld);
+    let only_new = d.entries.iter().filter(|e| e.status == DiffStatus::OnlyNew);
+    assert_eq!(only_old.count(), 1);
+    assert_eq!(only_new.count(), 1);
+
+    // A threshold past the injected delta tolerates it.
+    assert!(!diff_reports(&old, &new, 60.0).has_regressions());
+}
+
+fn run_diff(args: &[&str]) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_nmprune"));
+    cmd.arg("bench-diff").args(args);
+    cmd.output().expect("spawn nmprune bench-diff")
+}
+
+#[test]
+fn bench_diff_cli_exit_codes() {
+    let rec = record("k", RecordConfig::new(2, 8, 1), 1000.0, Some(50.0));
+    let base = report_with(vec![rec]);
+    let mut slow = base.clone();
+    slow.records[0].summary = Summary::of(&[1500.0]);
+    slow.records[0].pct_of_peak = Some(30.0);
+
+    let old_p = tmp_path("cli_old.json");
+    let new_p = tmp_path("cli_new.json");
+    base.save(&old_p).unwrap();
+    slow.save(&new_p).unwrap();
+    let old = old_p.to_str().unwrap();
+    let new = new_p.to_str().unwrap();
+
+    // Self-diff is clean: exit 0.
+    let out = run_diff(&[old, old]);
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(out.status.success(), "self-diff failed: {err}");
+
+    // Injected >10% regression: exit 1, row flagged in the table.
+    let out = run_diff(&[old, new, "--threshold-pct", "10"]);
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("REGRESSION"), "{text}");
+
+    // The same delta under a generous threshold passes.
+    let out = run_diff(&[old, new, "--threshold-pct", "60"]);
+    assert!(out.status.success());
+
+    // Missing operands: usage error, exit 2.
+    let out = run_diff(&[old]);
+    assert_eq!(out.status.code(), Some(2));
+
+    // Unreadable input: exit 2.
+    let out = run_diff(&["/nonexistent/bench_old.json", new]);
+    assert_eq!(out.status.code(), Some(2));
+
+    // Wrong schema version: load error, exit 2.
+    let bad_p = tmp_path("cli_bad.json");
+    let doc = r#"{"schema_version": 99, "suite": "s", "records": []}"#;
+    std::fs::write(&bad_p, doc).unwrap();
+    let out = run_diff(&[bad_p.to_str().unwrap(), new]);
+    assert_eq!(out.status.code(), Some(2));
+
+    std::fs::remove_file(&old_p).ok();
+    std::fs::remove_file(&new_p).ok();
+    std::fs::remove_file(&bad_p).ok();
+}
