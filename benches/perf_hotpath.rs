@@ -7,14 +7,25 @@ use std::time::Duration;
 
 use nmprune::benchlib::{bench, bench_pool, BenchConfig, RecordConfig, Reporter, Table};
 use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
-use nmprune::engine::{ExecConfig, Priority, QueueDiscipline, Server, ServerConfig, ServerStats};
+use nmprune::engine::{
+    ExecConfig, Executor, Priority, QueueDiscipline, Server, ServerConfig, ServerStats,
+};
 use nmprune::gemm::threaded::spmm_colwise_parallel_capped;
 use nmprune::gemm::{gemm_dense, spmm_colwise};
 use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::pruning::prune_colwise_adaptive;
+use nmprune::runtime::PackedArtifact;
 use nmprune::tensor::Tensor;
+use nmprune::util::allocwatch::{self, CountingAlloc};
 use nmprune::util::XorShiftRng;
+
+// The memory-plane rows below report *measured* allocation traffic, so
+// this bench binary registers the counting allocator the way the
+// zero-alloc tests do. Counting is thread-local and opt-in per scope;
+// the kernel measurements above it are unaffected.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn main() {
     // NMPRUNE_BENCH_QUICK=1: CI's bit-rot smoke profile — tiny windows,
@@ -345,6 +356,91 @@ fn main() {
          background work (starvation-bounded), trading background p95 for \
          interactive p95 and fewer deadline misses"
     );
+
+    // Memory plane: model-load time online-pack vs AOT artifact, and
+    // the compute plane's per-request allocation traffic. The counting
+    // allocator registered at the top of this file makes the
+    // bytes-per-request row a real measurement — production binaries
+    // leave the instrumentation inert. Neither record gates CI: load
+    // time is dominated by prune/pack (online) vs disk I/O (AOT), and
+    // the allocation row is enforced exactly (as zero) by
+    // rust/tests/zero_alloc.rs — these rows exist so the perf
+    // trajectory shows when either side moves.
+    let lres = 64usize;
+    let dir = std::env::temp_dir().join("nmprune_perf_hotpath");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let apath = dir.join("resnet18_s50.nmpk");
+    Executor::new(
+        build_model(ModelArch::ResNet18, 1, lres),
+        ExecConfig::sparse_cnhw(bench_pool(1), 0.5),
+    )
+    .to_artifact()
+    .save(&apath)
+    .expect("pack artifact");
+    let r_online = bench("load-online", cfg, || {
+        Executor::new(
+            build_model(ModelArch::ResNet18, 1, lres),
+            ExecConfig::sparse_cnhw(bench_pool(1), 0.5),
+        )
+    });
+    let r_aot = bench("load-aot", cfg, || {
+        let art = PackedArtifact::load(&apath).expect("load artifact");
+        Executor::from_artifact(
+            build_model(ModelArch::ResNet18, 1, lres),
+            bench_pool(1),
+            &art,
+        )
+        .expect("artifact matches graph")
+    });
+    rep.record_value(
+        "model load online pack resnet18@64",
+        RecordConfig::NONE,
+        r_online.summary.median,
+        "ns",
+        false,
+    );
+    rep.record_value(
+        "model load AOT artifact resnet18@64",
+        RecordConfig::NONE,
+        r_aot.summary.median,
+        "ns",
+        false,
+    );
+    let exec = Executor::new(
+        build_model(ModelArch::ResNet18, 1, lres),
+        ExecConfig::sparse_cnhw(bench_pool(1), 0.5),
+    );
+    let mut arena = exec.scratch();
+    let x = Tensor::random(&[1, lres, lres, 3], &mut rng, 0.0, 1.0);
+    exec.run_in(&x, &mut arena);
+    let (_, mem) = allocwatch::scoped(|| {
+        exec.run_in(&x, &mut arena);
+    });
+    rep.record_value(
+        "compute-plane bytes per request resnet18@64",
+        RecordConfig::new(0, 0, 1),
+        mem.bytes as f64,
+        "bytes",
+        false,
+    );
+    let mut pt = Table::new(
+        "§Memory plane (ResNet-18 @64, sparse 50%, 1-worker pool)",
+        &["metric", "value"],
+    );
+    pt.row(&[
+        "model load, online pack".into(),
+        format!("{:.1} ms", r_online.mean_ms()),
+    ]);
+    pt.row(&[
+        "model load, AOT artifact".into(),
+        format!("{:.1} ms", r_aot.mean_ms()),
+    ]);
+    pt.row(&[
+        "compute plane per request (warmed arena)".into(),
+        format!("{} allocs / {} bytes", mem.allocs, mem.bytes),
+    ]);
+    pt.print();
+    std::fs::remove_dir_all(&dir).ok();
 
     println!(
         "small-layer dispatch: cap=2 {:.3} ms vs pool-wide {:.3} ms ({})",

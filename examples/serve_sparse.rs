@@ -30,17 +30,24 @@
 //! drains between waves, which is what the adaptive controller reacts
 //! to. `--bursts 1` degenerates to the old single-burst behaviour.
 //!
+//! AOT weights: `--artifact F` serves the sparse-50% configuration
+//! from a packed weight artifact (packing it on first run if `F` does
+//! not exist yet) — model load becomes a validation pass, and the
+//! served logits are bitwise identical to the online-packed run.
+//!
 //! Run: `cargo run --release --example serve_sparse -- [--res 112]
 //!       [--threads 2] [--executors 2] [--adaptive] [--pin]
 //!       [--bursts 4] [--burst 8] [--gap-ms 30]
-//!       [--prio-mix 0.5] [--deadline-ms 50] [--fifo]`
+//!       [--prio-mix 0.5] [--deadline-ms 50] [--fifo]
+//!       [--artifact resnet18_sparse.nmpk]`
 
 use std::sync::Arc;
 
 use nmprune::engine::{
-    ExecConfig, Priority, QueueDiscipline, Server, ServerConfig,
+    ExecConfig, Executor, Priority, QueueDiscipline, Server, ServerConfig,
 };
 use nmprune::models::{build_model, ModelArch};
+use nmprune::runtime::PackedArtifact;
 use nmprune::tensor::Tensor;
 use nmprune::util::cli::Args;
 use nmprune::util::{ThreadPool, XorShiftRng};
@@ -56,20 +63,35 @@ struct Load {
     discipline: QueueDiscipline,
 }
 
-fn drive(label: &str, cfg: ExecConfig, res: usize, load: &Load, executors: usize, adaptive: bool) {
-    let server = Server::start(
-        |b| build_model(ModelArch::ResNet18, b, res),
-        cfg,
-        res,
-        ServerConfig {
-            batch_sizes: vec![1, 2, 4],
-            batch_window: std::time::Duration::from_millis(10),
-            executors,
-            adaptive,
-            discipline: load.discipline,
-            ..ServerConfig::default()
-        },
-    );
+fn drive(
+    label: &str,
+    cfg: ExecConfig,
+    res: usize,
+    load: &Load,
+    executors: usize,
+    adaptive: bool,
+    artifact: Option<&PackedArtifact>,
+) {
+    let scfg = ServerConfig {
+        batch_sizes: vec![1, 2, 4],
+        batch_window: std::time::Duration::from_millis(10),
+        executors,
+        adaptive,
+        discipline: load.discipline,
+        ..ServerConfig::default()
+    };
+    let server = match artifact {
+        // AOT path: executors validate and adopt the packed weights —
+        // bitwise the same logits as the online-packed run below.
+        Some(art) => Server::start_packed(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            cfg.pool.clone(),
+            art,
+            scfg,
+        )
+        .expect("artifact matches the serving model"),
+        None => Server::start(|b| build_model(ModelArch::ResNet18, b, res), cfg, res, scfg),
+    };
     // Mixed-traffic reporting follows what was actually configured —
     // `--prio-mix 1.0 --deadline-ms 10` still tracks (and must print)
     // deadline misses even though only one class is in play.
@@ -179,6 +201,31 @@ fn main() {
     } else {
         ThreadPool::shared(threads)
     };
+    // `--artifact F`: serve the sparse-50% configuration from an
+    // AOT-packed weight artifact, packing one on first run so the demo
+    // is self-contained.
+    let artifact = args.get("artifact").map(|p| {
+        let path = std::path::Path::new(p);
+        if !path.exists() {
+            Executor::new(
+                build_model(ModelArch::ResNet18, 4, res),
+                ExecConfig::sparse_cnhw(pool.clone(), 0.5),
+            )
+            .to_artifact()
+            .save(path)
+            .expect("write artifact");
+            println!("packed sparse-50% ResNet-18 @{res} -> {p}");
+        }
+        let t0 = std::time::Instant::now();
+        let art = PackedArtifact::load(path).expect("load artifact");
+        println!(
+            "validated + loaded {p} in {:.1} ms ({} layers, {:.1} MiB weights)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            art.layers.len(),
+            art.weight_bytes() as f64 / (1 << 20) as f64,
+        );
+        art
+    });
     println!(
         "serving ResNet-18 @{res}, {}x{} requests ({}ms gaps) per config, \
          {executors} batch executors on one {threads}-worker pool \
@@ -197,6 +244,7 @@ fn main() {
         &load,
         executors,
         adaptive,
+        artifact.as_ref(),
     );
     drive(
         "sparse 75%",
@@ -205,6 +253,7 @@ fn main() {
         &load,
         executors,
         adaptive,
+        None,
     );
     drive(
         "dense CNHW",
@@ -213,6 +262,7 @@ fn main() {
         &load,
         executors,
         adaptive,
+        None,
     );
     drive(
         "dense NHWC",
@@ -221,6 +271,7 @@ fn main() {
         &load,
         executors,
         adaptive,
+        None,
     );
     println!("\n(paper Table 2: sparse ResNet-18 up to 4.0x over the dense NHWC baseline)");
 }

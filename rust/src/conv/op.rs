@@ -21,9 +21,12 @@
 use std::cell::RefCell;
 
 use super::shape::ConvShape;
-use crate::gemm::threaded::{gemm_dense_parallel_capped, spmm_colwise_parallel_capped};
+use crate::gemm::threaded::{
+    gemm_dense_parallel_capped, gemm_dense_parallel_capped_into,
+    spmm_colwise_parallel_capped_into,
+};
 use crate::im2col::{
-    conv2d_indirect_nhwc_parallel_capped, fused_im2col_pack_cnhw_into, IndirectionBuffer,
+    conv2d_indirect_nhwc_parallel_capped_into, fused_im2col_pack_cnhw_into, IndirectionBuffer,
     PackedMatrix,
 };
 use crate::pruning::{prune_colwise, prune_colwise_adaptive, ColwisePruned};
@@ -72,12 +75,25 @@ impl Conv2dDenseNhwc {
     /// Pack weights (OIHW) and build the indirection buffer.
     pub fn new(shape: ConvShape, w_oihw: &Tensor) -> Self {
         assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
+        Self::from_filter_matrix(shape, oihw_to_filter_matrix(w_oihw).data)
+    }
+
+    /// Build from an already-flattened `[C_out, K]` filter matrix
+    /// (k-major/channel-inner rows) — the AOT-artifact load path, which
+    /// must not re-derive weights.
+    pub fn from_filter_matrix(shape: ConvShape, filter: Vec<f32>) -> Self {
+        assert_eq!(filter.len(), shape.c_out * shape.k(), "filter matrix length");
         Self {
             shape,
             threads: 0,
-            filter: oihw_to_filter_matrix(w_oihw).data,
+            filter,
             ib: IndirectionBuffer::build(&shape),
         }
+    }
+
+    /// The flattened `[C_out, K]` filter matrix (artifact writer input).
+    pub fn filter(&self) -> &[f32] {
+        &self.filter
     }
 
     /// Set the per-layer parallelism cap (0 = whole pool).
@@ -94,14 +110,24 @@ impl Conv2dDenseNhwc {
     /// [`Conv2dDenseNhwc::run`] with an additional per-run cap
     /// (0 = none) composed onto the layer cap via [`compose_caps`].
     pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
-        conv2d_indirect_nhwc_parallel_capped(
+        let s = &self.shape;
+        let mut out = Tensor::zeros(&[s.n, s.h_out(), s.w_out(), s.c_out]);
+        self.run_capped_into(x, pool, run_cap, &mut out);
+        out
+    }
+
+    /// [`Conv2dDenseNhwc::run_capped`] into a caller-provided output
+    /// tensor shaped `[N, H_out, W_out, C_out]` (zero-alloc path).
+    pub fn run_capped_into(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize, out: &mut Tensor) {
+        conv2d_indirect_nhwc_parallel_capped_into(
             x,
             &self.filter,
             &self.shape,
             &self.ib,
             pool,
             compose_caps(self.threads, run_cap),
-        )
+            out,
+        );
     }
 }
 
@@ -118,13 +144,25 @@ pub struct Conv2dDenseCnhw {
 impl Conv2dDenseCnhw {
     pub fn new(shape: ConvShape, w_oihw: &Tensor, v: usize, tile: usize) -> Self {
         assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
+        Self::from_filter_matrix(shape, oihw_to_filter_matrix(w_oihw).data, v, tile)
+    }
+
+    /// Build from an already-flattened `[C_out, K]` filter matrix
+    /// (AOT-artifact load path).
+    pub fn from_filter_matrix(shape: ConvShape, filter: Vec<f32>, v: usize, tile: usize) -> Self {
+        assert_eq!(filter.len(), shape.c_out * shape.k(), "filter matrix length");
         Self {
             shape,
             v,
             tile,
             threads: 0,
-            filter: oihw_to_filter_matrix(w_oihw).data,
+            filter,
         }
+    }
+
+    /// The flattened `[C_out, K]` filter matrix (artifact writer input).
+    pub fn filter(&self) -> &[f32] {
+        &self.filter
     }
 
     /// Set the per-layer parallelism cap (0 = whole pool).
@@ -143,19 +181,37 @@ impl Conv2dDenseCnhw {
     /// (0 = none) composed onto the layer cap via [`compose_caps`].
     pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         let s = &self.shape;
-        let out = PACK_SCRATCH.with(|cell| {
-            let mut packed = cell.borrow_mut();
-            fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
-            gemm_dense_parallel_capped(
-                &self.filter,
-                s.c_out,
-                &packed,
-                self.tile,
-                pool,
-                compose_caps(self.threads, run_cap),
-            )
+        let mut out = Tensor::zeros(&[s.c_out, s.n, s.h_out(), s.w_out()]);
+        PACK_SCRATCH.with(|cell| {
+            self.run_capped_into(x, pool, run_cap, &mut cell.borrow_mut(), &mut out);
         });
-        Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
+        out
+    }
+
+    /// [`Conv2dDenseCnhw::run_capped`] packing into a caller-provided
+    /// [`PackedMatrix`] and writing a caller-provided CNHW output
+    /// tensor — the arena-driven zero-alloc path. Bitwise identical to
+    /// `run_capped`, which routes through this body.
+    pub fn run_capped_into(
+        &self,
+        x: &Tensor,
+        pool: &ThreadPool,
+        run_cap: usize,
+        packed: &mut PackedMatrix,
+        out: &mut Tensor,
+    ) {
+        let s = &self.shape;
+        assert_eq!(out.shape, [s.c_out, s.n, s.h_out(), s.w_out()], "output tensor shape");
+        fused_im2col_pack_cnhw_into(x, s, self.v, packed);
+        gemm_dense_parallel_capped_into(
+            &self.filter,
+            s.c_out,
+            packed,
+            self.tile,
+            pool,
+            compose_caps(self.threads, run_cap),
+            &mut out.data,
+        );
     }
 }
 
@@ -235,11 +291,21 @@ impl Conv2dSparseCnhw {
     pub fn new(shape: ConvShape, w_oihw: &Tensor, v: usize, tile: usize, n: usize, m: usize) -> Self {
         assert_eq!(w_oihw.shape, vec![shape.c_out, shape.c_in, shape.kh, shape.kw]);
         let f = oihw_to_filter_matrix(w_oihw);
+        let weights = prune_colwise(&f.data, shape.c_out, shape.k(), tile, n, m);
+        Self::from_pruned(shape, weights, v)
+    }
+
+    /// Build from already-compressed column-wise N:M weights (the
+    /// AOT-artifact load path — no re-pruning, the stored compressed
+    /// form is used verbatim so logits stay bitwise identical).
+    pub fn from_pruned(shape: ConvShape, weights: ColwisePruned, v: usize) -> Self {
+        assert_eq!(weights.rows, shape.c_out, "pruned rows != C_out");
+        assert_eq!(weights.cols, shape.k(), "pruned cols != K");
         Self {
             shape,
             v,
             threads: 0,
-            weights: prune_colwise(&f.data, shape.c_out, shape.k(), tile, n, m),
+            weights,
         }
     }
 
@@ -275,17 +341,34 @@ impl Conv2dSparseCnhw {
     /// (0 = none) composed onto the layer cap via [`compose_caps`].
     pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         let s = &self.shape;
-        let out = PACK_SCRATCH.with(|cell| {
-            let mut packed = cell.borrow_mut();
-            fused_im2col_pack_cnhw_into(x, s, self.v, &mut packed);
-            spmm_colwise_parallel_capped(
-                &self.weights,
-                &packed,
-                pool,
-                compose_caps(self.threads, run_cap),
-            )
+        let mut out = Tensor::zeros(&[s.c_out, s.n, s.h_out(), s.w_out()]);
+        PACK_SCRATCH.with(|cell| {
+            self.run_capped_into(x, pool, run_cap, &mut cell.borrow_mut(), &mut out);
         });
-        Tensor::from_vec(&[s.c_out, s.n, s.h_out(), s.w_out()], out)
+        out
+    }
+
+    /// [`Conv2dSparseCnhw::run_capped`] packing into a caller-provided
+    /// [`PackedMatrix`] and writing a caller-provided CNHW output
+    /// tensor — the arena-driven zero-alloc path.
+    pub fn run_capped_into(
+        &self,
+        x: &Tensor,
+        pool: &ThreadPool,
+        run_cap: usize,
+        packed: &mut PackedMatrix,
+        out: &mut Tensor,
+    ) {
+        let s = &self.shape;
+        assert_eq!(out.shape, [s.c_out, s.n, s.h_out(), s.w_out()], "output tensor shape");
+        fused_im2col_pack_cnhw_into(x, s, self.v, packed);
+        spmm_colwise_parallel_capped_into(
+            &self.weights,
+            packed,
+            pool,
+            compose_caps(self.threads, run_cap),
+            &mut out.data,
+        );
     }
 
     /// Effective sparsity of the compressed weights.
@@ -427,6 +510,28 @@ mod tests {
                 base_nhwc.data,
                 "nhwc cap={cap}"
             );
+        }
+    }
+
+    /// The arena path: one packed-matrix scratch and one output tensor
+    /// shared across repeated runs of different ops must reproduce the
+    /// allocating path bitwise every time.
+    #[test]
+    fn run_capped_into_reuses_scratch_bitwise() {
+        let s = ConvShape::square(1, 4, 8, 8, 3, 1, 1);
+        let (x, w) = rand_case(29, s);
+        let pool = ThreadPool::new(2);
+        let sp = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4);
+        let de = Conv2dDenseCnhw::new(s, &w, 16, 4);
+        let want_sp = sp.run(&x, &pool);
+        let want_de = de.run(&x, &pool);
+        let mut packed = PackedMatrix::zeros(1, 1, 1);
+        let mut out = Tensor::zeros(&want_sp.shape);
+        for round in 0..3 {
+            sp.run_capped_into(&x, &pool, 0, &mut packed, &mut out);
+            assert_eq!(out.data, want_sp.data, "sparse round {round}");
+            de.run_capped_into(&x, &pool, 0, &mut packed, &mut out);
+            assert_eq!(out.data, want_de.data, "dense round {round}");
         }
     }
 

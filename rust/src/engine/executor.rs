@@ -10,14 +10,17 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath};
+use crate::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath, ConvShape};
 use crate::models::{Graph, Op};
-use crate::tensor::layout::nhwc_to_cnhw;
+use crate::runtime::artifact::{ArtifactLayer, LayerWeights, PackedArtifact};
+use crate::runtime::RuntimeError;
+use crate::tensor::layout::{nhwc_to_cnhw, nhwc_to_cnhw_into};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 use crate::util::XorShiftRng;
 
 use super::ops;
+use super::scratch::{MemoryPlan, ScratchArena};
 
 /// Per-conv-layer micro-kernel parameters: strip width `v` (= VLMAX of
 /// the chosen LMUL), register tile height `tile`, and the parallelism
@@ -134,6 +137,46 @@ fn name_hash(s: &str) -> u64 {
     h
 }
 
+/// Deterministic OIHW conv weights for layer `name` (He-style scale
+/// keeps activations bounded through deep graphs; pure numerics
+/// hygiene — values don't affect timing). Shared by [`Executor::new`]
+/// and the seed-derived layers of [`Executor::from_artifact`].
+fn make_conv_weight(seed: u64, name: &str, shape: &ConvShape) -> Tensor {
+    let mut rng = XorShiftRng::new(seed ^ name_hash(name));
+    let scale = (2.0 / shape.k() as f32).sqrt();
+    Tensor::from_vec(
+        &[shape.c_out, shape.c_in, shape.kh, shape.kw],
+        rng.normal_vec(shape.weight_len(), scale),
+    )
+}
+
+/// Deterministic depthwise weights `[c, k, k]` for layer `name`.
+fn make_dw_weight(seed: u64, name: &str, c: usize, k: usize) -> Tensor {
+    let mut rng = XorShiftRng::new(seed ^ name_hash(name));
+    let scale = (2.0 / (k * k) as f32).sqrt();
+    Tensor::from_vec(&[c, k, k], rng.normal_vec(c * k * k, scale))
+}
+
+/// Deterministic FC weights `[out, in]` + bias for layer `name`.
+fn make_fc_params(seed: u64, name: &str, fin: usize, fout: usize) -> (Tensor, Vec<f32>) {
+    let mut rng = XorShiftRng::new(seed ^ name_hash(name));
+    let scale = (1.0 / fin as f32).sqrt();
+    let w = Tensor::from_vec(&[fout, fin], rng.normal_vec(fin * fout, scale));
+    let b = rng.normal_vec(fout, 0.01);
+    (w, b)
+}
+
+/// Per-node consumer counts (buffer freeing / liveness planning).
+fn consumer_counts(graph: &Graph) -> Vec<usize> {
+    let mut consumers = vec![0usize; graph.nodes.len()];
+    for node in &graph.nodes {
+        for &i in &node.inputs {
+            consumers[i] += 1;
+        }
+    }
+    consumers
+}
+
 impl Executor {
     /// Compile a graph: generate weights and prepare conv operators.
     pub fn new(graph: Graph, cfg: ExecConfig) -> Self {
@@ -144,15 +187,7 @@ impl Executor {
         for node in &graph.nodes {
             match &node.op {
                 Op::Conv { shape, .. } => {
-                    let mut rng = XorShiftRng::new(cfg.seed ^ name_hash(&node.name));
-                    // He-style scale keeps activations bounded through
-                    // deep graphs (pure numerics hygiene; values don't
-                    // affect timing).
-                    let scale = (2.0 / shape.k() as f32).sqrt();
-                    let w = Tensor::from_vec(
-                        &[shape.c_out, shape.c_in, shape.kh, shape.kw],
-                        rng.normal_vec(shape.weight_len(), scale),
-                    );
+                    let w = make_conv_weight(cfg.seed, &node.name, shape);
                     let choice = cfg.choice_for(&node.name);
                     // The paper never prunes the first convolution.
                     let prune_this = cfg.path == ConvPath::SparseCnhw && first_conv_seen;
@@ -179,35 +214,21 @@ impl Executor {
                     first_conv_seen = true;
                 }
                 Op::DepthwiseConv { c, k, .. } => {
-                    let mut rng = XorShiftRng::new(cfg.seed ^ name_hash(&node.name));
-                    let scale = (2.0 / (k * k) as f32).sqrt();
-                    dw_weights.insert(
-                        node.id,
-                        Tensor::from_vec(&[*c, *k, *k], rng.normal_vec(c * k * k, scale)),
-                    );
+                    dw_weights.insert(node.id, make_dw_weight(cfg.seed, &node.name, *c, *k));
                 }
                 Op::Fc {
                     in_features,
                     out_features,
                 } => {
-                    let mut rng = XorShiftRng::new(cfg.seed ^ name_hash(&node.name));
-                    let scale = (1.0 / *in_features as f32).sqrt();
-                    let w = Tensor::from_vec(
-                        &[*out_features, *in_features],
-                        rng.normal_vec(in_features * out_features, scale),
+                    fc_params.insert(
+                        node.id,
+                        make_fc_params(cfg.seed, &node.name, *in_features, *out_features),
                     );
-                    let b = rng.normal_vec(*out_features, 0.01);
-                    fc_params.insert(node.id, (w, b));
                 }
                 _ => {}
             }
         }
-        let mut consumers = vec![0usize; graph.nodes.len()];
-        for node in &graph.nodes {
-            for &i in &node.inputs {
-                consumers[i] += 1;
-            }
-        }
+        let consumers = consumer_counts(&graph);
         Self {
             graph,
             cfg,
@@ -344,6 +365,348 @@ impl Executor {
             acts[node.id] = Some(out);
         }
         acts.last_mut().take().unwrap().take().unwrap()
+    }
+
+    /// Input resolution the graph was built for (0 if no input node).
+    fn input_res(graph: &Graph) -> usize {
+        graph
+            .nodes
+            .iter()
+            .find_map(|n| match n.op {
+                Op::Input { h, .. } => Some(h),
+                _ => None,
+            })
+            .unwrap_or(0)
+    }
+
+    /// Freeze this executor's conv weights and tuning choices into a
+    /// packed artifact (the `nmprune pack` writer). Depthwise/FC
+    /// parameters are omitted: they are seed-derived and regenerated
+    /// identically on load.
+    pub fn to_artifact(&self) -> PackedArtifact {
+        let mut layers = Vec::new();
+        for node in &self.graph.nodes {
+            if let Op::Conv { shape, .. } = &node.op {
+                let weights = match self.convs.get(&node.id).unwrap() {
+                    PreparedConv::Nhwc(op) => LayerWeights::Dense(op.filter().to_vec()),
+                    PreparedConv::Cnhw(op) => LayerWeights::Dense(op.filter().to_vec()),
+                    PreparedConv::Sparse(op) => LayerWeights::Sparse(op.weights.clone()),
+                };
+                layers.push(ArtifactLayer {
+                    name: node.name.clone(),
+                    choice: self.cfg.choice_for(&node.name),
+                    shape: *shape,
+                    weights,
+                });
+            }
+        }
+        PackedArtifact {
+            arch: self.graph.name.clone(),
+            batch: self.graph.batch,
+            res: Self::input_res(&self.graph),
+            path: self.cfg.path,
+            sparsity: self.cfg.sparsity,
+            seed: self.cfg.seed,
+            default_choice: self.cfg.default_choice,
+            layers,
+        }
+    }
+
+    /// Build an executor from an AOT-packed artifact: a validation
+    /// pass, not a re-pack. Conv weights are taken verbatim from the
+    /// artifact (the sparse layers' compressed form is used as stored,
+    /// so logits stay bitwise identical to the executor that produced
+    /// it); depthwise/FC parameters are regenerated from the recorded
+    /// seed. Loading is batch-generic: weights and tuning choices do
+    /// not depend on the batch dimension, so one artifact serves every
+    /// compiled batch size (`art.batch` records the batch the tuning
+    /// ran at). Any other mismatch between artifact and graph — arch,
+    /// resolution, layer names, shapes, or weight kind vs path — is a
+    /// [`RuntimeError`].
+    pub fn from_artifact(
+        graph: Graph,
+        pool: Arc<ThreadPool>,
+        art: &PackedArtifact,
+    ) -> crate::runtime::Result<Self> {
+        let e = RuntimeError;
+        if art.arch != graph.name {
+            return Err(e(format!(
+                "artifact is for arch {:?}, graph is {:?}",
+                art.arch, graph.name
+            )));
+        }
+        let res = Self::input_res(&graph);
+        if art.res != res {
+            return Err(e(format!("artifact resolution {} != graph input {res}", art.res)));
+        }
+        let mut cfg = ExecConfig {
+            path: art.path,
+            sparsity: art.sparsity,
+            pool,
+            default_choice: art.default_choice,
+            per_layer: HashMap::new(),
+            seed: art.seed,
+        };
+        let mut convs = HashMap::new();
+        let mut dw_weights = HashMap::new();
+        let mut fc_params = HashMap::new();
+        let mut li = 0usize;
+        for node in &graph.nodes {
+            match &node.op {
+                Op::Conv { shape, .. } => {
+                    let layer = art.layers.get(li).ok_or_else(|| {
+                        e(format!(
+                            "artifact has only {} conv layers; graph {:?} has more",
+                            art.layers.len(),
+                            graph.name
+                        ))
+                    })?;
+                    li += 1;
+                    if layer.name != node.name {
+                        return Err(e(format!(
+                            "artifact layer {li} is {:?}, graph expects {:?}",
+                            layer.name, node.name
+                        )));
+                    }
+                    // Compare everything except the batch dimension:
+                    // the filter (c_out × k) is batch-independent, and
+                    // the executor is built with the graph's own shape.
+                    let want = ConvShape {
+                        n: shape.n,
+                        ..layer.shape
+                    };
+                    if want != *shape {
+                        return Err(e(format!(
+                            "artifact layer {:?} shape {} != graph {}",
+                            layer.name, layer.shape, shape
+                        )));
+                    }
+                    let choice = layer.choice;
+                    cfg.per_layer.insert(node.name.clone(), choice);
+                    let prepared = match (&layer.weights, art.path) {
+                        (LayerWeights::Dense(f), ConvPath::DenseNhwc) => PreparedConv::Nhwc(
+                            Conv2dDenseNhwc::from_filter_matrix(*shape, f.clone())
+                                .with_thread_cap(choice.threads),
+                        ),
+                        (LayerWeights::Dense(f), _) => PreparedConv::Cnhw(
+                            Conv2dDenseCnhw::from_filter_matrix(
+                                *shape,
+                                f.clone(),
+                                choice.v,
+                                choice.tile,
+                            )
+                            .with_thread_cap(choice.threads),
+                        ),
+                        (LayerWeights::Sparse(p), ConvPath::SparseCnhw) => PreparedConv::Sparse(
+                            Conv2dSparseCnhw::from_pruned(*shape, p.clone(), choice.v)
+                                .with_thread_cap(choice.threads),
+                        ),
+                        (LayerWeights::Sparse(_), _) => {
+                            return Err(e(format!(
+                                "artifact layer {:?} has sparse weights but the \
+                                 artifact path is {:?}",
+                                layer.name, art.path
+                            )));
+                        }
+                    };
+                    convs.insert(node.id, prepared);
+                }
+                Op::DepthwiseConv { c, k, .. } => {
+                    dw_weights.insert(node.id, make_dw_weight(art.seed, &node.name, *c, *k));
+                }
+                Op::Fc {
+                    in_features,
+                    out_features,
+                } => {
+                    fc_params.insert(
+                        node.id,
+                        make_fc_params(art.seed, &node.name, *in_features, *out_features),
+                    );
+                }
+                _ => {}
+            }
+        }
+        if li != art.layers.len() {
+            return Err(e(format!(
+                "artifact has {} conv layers, graph {:?} has {li}",
+                art.layers.len(),
+                graph.name
+            )));
+        }
+        let consumers = consumer_counts(&graph);
+        Ok(Self {
+            graph,
+            cfg,
+            convs,
+            dw_weights,
+            fc_params,
+            consumers,
+        })
+    }
+
+    /// Static activation-memory plan for this executor's graph and
+    /// execution path, including the worst-case conv panel size.
+    pub fn memory_plan(&self) -> MemoryPlan {
+        let nhwc = self.cfg.path == ConvPath::DenseNhwc;
+        let mut panel_elems = 0usize;
+        if !nhwc {
+            for node in &self.graph.nodes {
+                if let Op::Conv { shape, .. } = &node.op {
+                    let v = self.cfg.choice_for(&node.name).v;
+                    let strips = shape.gemm_cols().div_ceil(v).max(1);
+                    panel_elems = panel_elems.max(strips * v * shape.k());
+                }
+            }
+        }
+        MemoryPlan::plan(&self.graph, nhwc, panel_elems)
+    }
+
+    /// Allocate a scratch arena sized for this executor's plan.
+    pub fn scratch(&self) -> ScratchArena {
+        ScratchArena::new(self.memory_plan())
+    }
+
+    /// [`Executor::run`] inside a preallocated arena (uncapped).
+    pub fn run_in<'a>(&self, input_nhwc: &Tensor, arena: &'a mut ScratchArena) -> &'a Tensor {
+        self.run_capped_in(input_nhwc, 0, arena)
+    }
+
+    /// [`Executor::run_capped`] executed entirely inside `arena`'s
+    /// preallocated scratch memory: in steady state the compute plane
+    /// performs no heap allocation (proven by `rust/tests/zero_alloc.rs`
+    /// with a counting global allocator). Logits are bitwise identical
+    /// to the allocating path — same kernels in the same order,
+    /// different storage. Returns a borrow of the logits slot, valid
+    /// until the next run on the same arena.
+    ///
+    /// Unlike [`Executor::run_capped`] this path never consults
+    /// `NMPRUNE_TRACE`: reading an env var allocates a `CString` per
+    /// call, which would break the zero-alloc guarantee.
+    pub fn run_capped_in<'a>(
+        &self,
+        input_nhwc: &Tensor,
+        run_cap: usize,
+        arena: &'a mut ScratchArena,
+    ) -> &'a Tensor {
+        let nhwc = self.cfg.path == ConvPath::DenseNhwc;
+        let pool = self.cfg.pool.as_ref();
+        assert_eq!(
+            arena.plan.node_slot.len(),
+            self.graph.nodes.len(),
+            "arena was planned for a different graph"
+        );
+        for node in &self.graph.nodes {
+            let oslot = arena.plan.node_slot[node.id];
+            // Move the output tensor out of its slot so its buffer can
+            // be borrowed mutably alongside shared borrows of the input
+            // slots (`Vec::new()` does not allocate). The plan
+            // guarantees an output slot never aliases a live input.
+            let mut out = std::mem::replace(
+                &mut arena.slots[oslot],
+                Tensor {
+                    shape: Vec::new(),
+                    data: Vec::new(),
+                },
+            );
+            let plan_shape = &arena.plan.shapes[node.id];
+            out.shape.clear();
+            out.shape.extend_from_slice(plan_shape);
+            // Within preallocated capacity: shrink/regrow, no realloc.
+            out.data.resize(plan_shape.iter().product(), 0.0);
+            match &node.op {
+                Op::Input { c, h, w } => {
+                    assert_eq!(
+                        input_nhwc.shape,
+                        [self.graph.batch, *h, *w, *c],
+                        "input must be NHWC [N,H,W,C]"
+                    );
+                    if nhwc {
+                        out.data.copy_from_slice(&input_nhwc.data);
+                    } else {
+                        nhwc_to_cnhw_into(input_nhwc, &mut out);
+                    }
+                }
+                Op::Conv { relu, .. } => {
+                    let x = &arena.slots[arena.plan.node_slot[node.inputs[0]]];
+                    match self.convs.get(&node.id).unwrap() {
+                        PreparedConv::Nhwc(op) => {
+                            op.run_capped_into(x, pool, run_cap, &mut out)
+                        }
+                        PreparedConv::Cnhw(op) => {
+                            op.run_capped_into(x, pool, run_cap, &mut arena.panel, &mut out)
+                        }
+                        PreparedConv::Sparse(op) => {
+                            op.run_capped_into(x, pool, run_cap, &mut arena.panel, &mut out)
+                        }
+                    }
+                    if *relu {
+                        ops::relu_inplace(&mut out);
+                    }
+                }
+                Op::DepthwiseConv {
+                    stride, pad, relu, ..
+                } => {
+                    let x = &arena.slots[arena.plan.node_slot[node.inputs[0]]];
+                    let w = self.dw_weights.get(&node.id).unwrap();
+                    if nhwc {
+                        ops::depthwise_nhwc_into(x, w, *stride, *pad, *relu, &mut out);
+                    } else {
+                        ops::depthwise_cnhw_into(x, w, *stride, *pad, *relu, &mut out);
+                    }
+                }
+                Op::MaxPool { k, stride, pad } => {
+                    let x = &arena.slots[arena.plan.node_slot[node.inputs[0]]];
+                    if nhwc {
+                        ops::maxpool_nhwc_into(x, *k, *stride, *pad, &mut out);
+                    } else {
+                        ops::maxpool_cnhw_into(x, *k, *stride, *pad, &mut out);
+                    }
+                }
+                Op::AvgPool { k, stride } => {
+                    let x = &arena.slots[arena.plan.node_slot[node.inputs[0]]];
+                    if nhwc {
+                        ops::avgpool_nhwc_into(x, *k, *stride, &mut out);
+                    } else {
+                        ops::avgpool_cnhw_into(x, *k, *stride, &mut out);
+                    }
+                }
+                Op::GlobalAvgPool => {
+                    let x = &arena.slots[arena.plan.node_slot[node.inputs[0]]];
+                    if nhwc {
+                        ops::gap_nhwc_into(x, &mut out);
+                    } else {
+                        ops::gap_cnhw_into(x, &mut out);
+                    }
+                }
+                Op::Add { relu } => {
+                    let a = &arena.slots[arena.plan.node_slot[node.inputs[0]]];
+                    let b = &arena.slots[arena.plan.node_slot[node.inputs[1]]];
+                    ops::add_into(a, b, *relu, &mut out);
+                }
+                Op::Concat => {
+                    // Per-part copies at explicit channel offsets: no
+                    // `Vec<&Tensor>` collect on the zero-alloc path.
+                    let mut c_off = 0;
+                    for &i in &node.inputs {
+                        let x = &arena.slots[arena.plan.node_slot[i]];
+                        if nhwc {
+                            ops::concat_nhwc_part_into(x, c_off, &mut out);
+                            c_off += x.shape[3];
+                        } else {
+                            ops::concat_cnhw_part_into(x, c_off, &mut out);
+                            c_off += x.shape[0];
+                        }
+                    }
+                }
+                Op::Fc { .. } => {
+                    let x = &arena.slots[arena.plan.node_slot[node.inputs[0]]];
+                    let (w, b) = self.fc_params.get(&node.id).unwrap();
+                    ops::fc_into(x, w, b, &mut out);
+                }
+            }
+            arena.slots[oslot] = out;
+        }
+        &arena.slots[arena.plan.node_slot[self.graph.nodes.len() - 1]]
     }
 
     /// Sum of conv weight memory after compression (bytes), for the
@@ -493,6 +856,120 @@ mod tests {
                 "run cap {run_cap} changed numerics"
             );
         }
+    }
+
+    /// The arena path must be bitwise identical to the allocating path
+    /// on every architecture and execution path, including when one
+    /// arena is reused across runs (stale values must never leak).
+    #[test]
+    fn arena_run_bitwise_matches_allocating_run() {
+        let res = 32;
+        let x = input(1, res, 11);
+        for arch in [ModelArch::ResNet18, ModelArch::MobileNetV2, ModelArch::DenseNet121] {
+            let g = build_model(arch, 1, res);
+            let cfgs = [
+                ExecConfig::dense_nhwc(ThreadPool::shared(2)),
+                ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+                ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
+            ];
+            for cfg in cfgs {
+                let path = cfg.path;
+                let e = Executor::new(g.clone(), cfg);
+                let want = e.run(&x);
+                let mut arena = e.scratch();
+                for round in 0..3 {
+                    let got = e.run_in(&x, &mut arena);
+                    assert_eq!(
+                        got.data, want.data,
+                        "{arch:?} {path:?} round {round} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Per-run caps compose identically inside the arena path.
+    #[test]
+    fn arena_run_caps_bitwise_equal_uncapped() {
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let x = input(1, 32, 13);
+        let e = Executor::new(g, ExecConfig::sparse_cnhw(ThreadPool::shared(4), 0.5));
+        let base = e.run(&x);
+        let mut arena = e.scratch();
+        for run_cap in [0usize, 1, 2, 4] {
+            assert_eq!(
+                e.run_capped_in(&x, run_cap, &mut arena).data,
+                base.data,
+                "run cap {run_cap} changed numerics in the arena path"
+            );
+        }
+    }
+
+    /// Executor → artifact → executor must preserve logits bitwise on
+    /// every path: loading is a validation pass, not a re-pack.
+    #[test]
+    fn artifact_roundtrip_preserves_logits_bitwise() {
+        use crate::runtime::PackedArtifact;
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let x = input(1, 32, 12);
+        let cfgs = [
+            ExecConfig::dense_nhwc(ThreadPool::shared(1)),
+            ExecConfig::dense_cnhw(ThreadPool::shared(1)),
+            ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+        ];
+        for cfg in cfgs {
+            let path = cfg.path;
+            let e = Executor::new(g.clone(), cfg);
+            let want = e.run(&x);
+            // Through the full binary encode/decode, not just memory.
+            let art = PackedArtifact::decode(&e.to_artifact().encode()).unwrap();
+            let e2 = Executor::from_artifact(g.clone(), ThreadPool::shared(2), &art).unwrap();
+            assert_eq!(e2.run(&x).data, want.data, "{path:?} artifact run diverged");
+            let mut arena = e2.scratch();
+            assert_eq!(
+                e2.run_in(&x, &mut arena).data,
+                want.data,
+                "{path:?} artifact arena run diverged"
+            );
+        }
+    }
+
+    /// Loading an artifact into the wrong graph must error, not panic.
+    #[test]
+    fn from_artifact_rejects_mismatched_graph() {
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let e = Executor::new(g.clone(), ExecConfig::dense_cnhw(ThreadPool::shared(1)));
+        let art = e.to_artifact();
+        // Wrong architecture.
+        let g2 = build_model(ModelArch::MobileNetV2, 1, 32);
+        let err = Executor::from_artifact(g2, ThreadPool::shared(1), &art).unwrap_err();
+        assert!(err.to_string().contains("arch"), "{err}");
+        // A *different batch* is not a mismatch: weights are
+        // batch-independent, so one artifact serves every compiled
+        // batch size — and bitwise so (per-sample logits don't depend
+        // on batch packing).
+        let gb = build_model(ModelArch::ResNet18, 2, 32);
+        let eb = Executor::from_artifact(gb, ThreadPool::shared(1), &art).expect("batch-generic");
+        let x1 = input(1, 32, 77);
+        let mut x2 = input(2, 32, 0);
+        x2.data[..x1.data.len()].copy_from_slice(&x1.data);
+        x2.data[x1.data.len()..].copy_from_slice(&x1.data);
+        let want = Executor::from_artifact(
+            build_model(ModelArch::ResNet18, 1, 32),
+            ThreadPool::shared(1),
+            &art,
+        )
+        .unwrap()
+        .run(&x1);
+        let got = eb.run(&x2);
+        assert_eq!(&got.data[..1000], &want.data[..], "row 0");
+        assert_eq!(&got.data[1000..], &want.data[..], "row 1");
+        // Wrong resolution.
+        let gr = build_model(ModelArch::ResNet18, 1, 64);
+        let err = Executor::from_artifact(gr, ThreadPool::shared(1), &art).unwrap_err();
+        assert!(err.to_string().contains("resolution"), "{err}");
+        // The matching graph still loads.
+        assert!(Executor::from_artifact(g, ThreadPool::shared(1), &art).is_ok());
     }
 
     #[test]

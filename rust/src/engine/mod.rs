@@ -6,8 +6,10 @@
 pub mod ops;
 pub mod executor;
 pub mod policy;
+pub mod scratch;
 pub mod server;
 
 pub use executor::{ExecConfig, Executor, LayerChoice};
 pub use policy::{PolicyConfig, Priority, QueueDiscipline, QueueSnapshot};
+pub use scratch::{MemoryPlan, ScratchArena};
 pub use server::{ClassStats, Server, ServerConfig, ServerStats};

@@ -10,6 +10,12 @@
 //! break-even the per-layer thread-cap tuning exists to avoid, so
 //! parallelising them would re-create exactly the small-kernel
 //! oversubscription the capped scheduler removes from the conv path.
+//!
+//! Every op has an `_into` twin writing into a caller-provided tensor
+//! of the correct output shape — the zero-alloc path the executor's
+//! [`super::scratch::ScratchArena`] drives. The allocating versions are
+//! thin wrappers (zeros + `_into`), so both paths share one kernel body
+//! and stay bitwise identical by construction.
 
 use crate::tensor::Tensor;
 
@@ -24,15 +30,21 @@ pub fn relu_inplace(x: &mut Tensor) {
 
 /// Elementwise add (same shape), optionally fused ReLU.
 pub fn add(a: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+    let mut out = Tensor::zeros(&a.shape);
+    add_into(a, b, relu, &mut out);
+    out
+}
+
+/// [`add`] into a caller-provided output tensor.
+pub fn add_into(a: &Tensor, b: &Tensor, relu: bool, out: &mut Tensor) {
     assert_eq!(a.shape, b.shape, "residual add shape mismatch");
-    let mut out = a.clone();
-    for (o, &bv) in out.data.iter_mut().zip(&b.data) {
-        *o += bv;
+    assert_eq!(out.shape, a.shape, "output tensor shape");
+    for ((o, &av), &bv) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+        *o = av + bv;
         if relu && *o < 0.0 {
             *o = 0.0;
         }
     }
-    out
 }
 
 /// Max pooling over CNHW.
@@ -41,6 +53,16 @@ pub fn maxpool_cnhw(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
     let ho = (h + 2 * pad - k) / stride + 1;
     let wo = (w + 2 * pad - k) / stride + 1;
     let mut out = Tensor::zeros(&[c, n, ho, wo]);
+    maxpool_cnhw_into(x, k, stride, pad, &mut out);
+    out
+}
+
+/// [`maxpool_cnhw`] into a caller-provided output tensor.
+pub fn maxpool_cnhw_into(x: &Tensor, k: usize, stride: usize, pad: usize, out: &mut Tensor) {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    assert_eq!(out.shape, [c, n, ho, wo], "output tensor shape");
     // Flat-offset inner loops (§Perf step 5: `Tensor::at` index math per
     // element made the stem pool the single slowest op in the graph).
     for ci in 0..c {
@@ -70,7 +92,6 @@ pub fn maxpool_cnhw(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Average pooling (no padding) over CNHW.
@@ -79,6 +100,16 @@ pub fn avgpool_cnhw(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let ho = (h - k) / stride + 1;
     let wo = (w - k) / stride + 1;
     let mut out = Tensor::zeros(&[c, n, ho, wo]);
+    avgpool_cnhw_into(x, k, stride, &mut out);
+    out
+}
+
+/// [`avgpool_cnhw`] into a caller-provided output tensor.
+pub fn avgpool_cnhw_into(x: &Tensor, k: usize, stride: usize, out: &mut Tensor) {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    assert_eq!(out.shape, [c, n, ho, wo], "output tensor shape");
     let inv = 1.0 / (k * k) as f32;
     for ci in 0..c {
         for ni in 0..n {
@@ -95,13 +126,20 @@ pub fn avgpool_cnhw(x: &Tensor, k: usize, stride: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Global average pool CNHW → `[N, C]`.
 pub fn gap_cnhw(x: &Tensor) -> Tensor {
-    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (n, c) = (x.shape[1], x.shape[0]);
     let mut out = Tensor::zeros(&[n, c]);
+    gap_cnhw_into(x, &mut out);
+    out
+}
+
+/// [`gap_cnhw`] into a caller-provided output tensor.
+pub fn gap_cnhw_into(x: &Tensor, out: &mut Tensor) {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(out.shape, [n, c], "output tensor shape");
     let inv = 1.0 / (h * w) as f32;
     for ci in 0..c {
         for ni in 0..n {
@@ -110,17 +148,34 @@ pub fn gap_cnhw(x: &Tensor) -> Tensor {
             *out.at_mut(&[ni, ci]) = sum * inv;
         }
     }
-    out
 }
 
 /// Depthwise k×k conv over CNHW; weights `[C, k, k]`.
 pub fn depthwise_cnhw(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: bool) -> Tensor {
     let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let k = wt.shape[1];
-    assert_eq!(wt.shape, vec![c, k, k]);
     let ho = (h + 2 * pad - k) / stride + 1;
     let wo = (w + 2 * pad - k) / stride + 1;
     let mut out = Tensor::zeros(&[c, n, ho, wo]);
+    depthwise_cnhw_into(x, wt, stride, pad, relu, &mut out);
+    out
+}
+
+/// [`depthwise_cnhw`] into a caller-provided output tensor.
+pub fn depthwise_cnhw_into(
+    x: &Tensor,
+    wt: &Tensor,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    out: &mut Tensor,
+) {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let k = wt.shape[1];
+    assert_eq!(wt.shape, [c, k, k]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    assert_eq!(out.shape, [c, n, ho, wo], "output tensor shape");
     for ci in 0..c {
         for ni in 0..n {
             for oy in 0..ho {
@@ -148,7 +203,6 @@ pub fn depthwise_cnhw(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: 
             }
         }
     }
-    out
 }
 
 /// Channel concat in CNHW: channels are the outermost axis, so this is
@@ -156,23 +210,52 @@ pub fn depthwise_cnhw(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: 
 pub fn concat_cnhw(xs: &[&Tensor]) -> Tensor {
     assert!(!xs.is_empty());
     let (n, h, w) = (xs[0].shape[1], xs[0].shape[2], xs[0].shape[3]);
-    let mut c_total = 0;
-    let mut data = Vec::new();
+    let c_total: usize = xs.iter().map(|x| x.shape[0]).sum();
+    let mut out = Tensor::zeros(&[c_total, n, h, w]);
+    concat_cnhw_into(xs, &mut out);
+    out
+}
+
+/// [`concat_cnhw`] into a caller-provided output tensor.
+pub fn concat_cnhw_into(xs: &[&Tensor], out: &mut Tensor) {
+    assert!(!xs.is_empty());
+    let (n, h, w) = (xs[0].shape[1], xs[0].shape[2], xs[0].shape[3]);
+    let c_total: usize = xs.iter().map(|x| x.shape[0]).sum();
+    assert_eq!(out.shape, [c_total, n, h, w], "output tensor shape");
+    let mut off = 0;
     for x in xs {
         assert_eq!(&x.shape[1..], &[n, h, w], "concat spatial mismatch");
-        c_total += x.shape[0];
-        data.extend_from_slice(&x.data);
+        out.data[off..off + x.data.len()].copy_from_slice(&x.data);
+        off += x.data.len();
     }
-    Tensor::from_vec(&[c_total, n, h, w], data)
+}
+
+/// Copy one CNHW concat input into `out` at channel offset `c_off`.
+/// Per-part form so the arena executor can concatenate without
+/// collecting a `Vec<&Tensor>` per run (that collect is a heap
+/// allocation on the zero-alloc path).
+pub fn concat_cnhw_part_into(x: &Tensor, c_off: usize, out: &mut Tensor) {
+    let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(&out.shape[1..], &[n, h, w], "concat spatial mismatch");
+    assert!(c_off + c <= out.shape[0], "concat channel overflow");
+    let off = c_off * n * h * w;
+    out.data[off..off + x.data.len()].copy_from_slice(&x.data);
 }
 
 /// Fully connected: `x[N, in] · W[out, in]ᵀ + b[out]` → `[N, out]`.
 pub fn fc(x: &Tensor, wt: &Tensor, bias: &[f32]) -> Tensor {
+    let mut out = Tensor::zeros(&[x.shape[0], wt.shape[0]]);
+    fc_into(x, wt, bias, &mut out);
+    out
+}
+
+/// [`fc`] into a caller-provided output tensor.
+pub fn fc_into(x: &Tensor, wt: &Tensor, bias: &[f32], out: &mut Tensor) {
     let (n, fin) = (x.shape[0], x.shape[1]);
     let fout = wt.shape[0];
-    assert_eq!(wt.shape, vec![fout, fin]);
+    assert_eq!(wt.shape, [fout, fin]);
     assert_eq!(bias.len(), fout);
-    let mut out = Tensor::zeros(&[n, fout]);
+    assert_eq!(out.shape, [n, fout], "output tensor shape");
     for ni in 0..n {
         for o in 0..fout {
             let mut acc = bias[o];
@@ -184,7 +267,6 @@ pub fn fc(x: &Tensor, wt: &Tensor, bias: &[f32]) -> Tensor {
             *out.at_mut(&[ni, o]) = acc;
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------
@@ -196,6 +278,16 @@ pub fn maxpool_nhwc(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
     let ho = (h + 2 * pad - k) / stride + 1;
     let wo = (w + 2 * pad - k) / stride + 1;
     let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    maxpool_nhwc_into(x, k, stride, pad, &mut out);
+    out
+}
+
+/// [`maxpool_nhwc`] into a caller-provided output tensor.
+pub fn maxpool_nhwc_into(x: &Tensor, k: usize, stride: usize, pad: usize, out: &mut Tensor) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    assert_eq!(out.shape, [n, ho, wo, c], "output tensor shape");
     // Flat-offset channel-vector inner loop (§Perf step 5, NHWC twin —
     // the baseline gets the same treatment for a fair comparison).
     for ni in 0..n {
@@ -226,7 +318,6 @@ pub fn maxpool_nhwc(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Average pooling (no padding) over NHWC.
@@ -235,6 +326,16 @@ pub fn avgpool_nhwc(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let ho = (h - k) / stride + 1;
     let wo = (w - k) / stride + 1;
     let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    avgpool_nhwc_into(x, k, stride, &mut out);
+    out
+}
+
+/// [`avgpool_nhwc`] into a caller-provided output tensor.
+pub fn avgpool_nhwc_into(x: &Tensor, k: usize, stride: usize, out: &mut Tensor) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    assert_eq!(out.shape, [n, ho, wo, c], "output tensor shape");
     let inv = 1.0 / (k * k) as f32;
     for ni in 0..n {
         for oy in 0..ho {
@@ -251,13 +352,22 @@ pub fn avgpool_nhwc(x: &Tensor, k: usize, stride: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Global average pool NHWC → `[N, C]`.
 pub fn gap_nhwc(x: &Tensor) -> Tensor {
-    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (n, c) = (x.shape[0], x.shape[3]);
     let mut out = Tensor::zeros(&[n, c]);
+    gap_nhwc_into(x, &mut out);
+    out
+}
+
+/// [`gap_nhwc`] into a caller-provided output tensor.
+pub fn gap_nhwc_into(x: &Tensor, out: &mut Tensor) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(out.shape, [n, c], "output tensor shape");
+    // Accumulating op: clear the (possibly reused) output first.
+    out.data.fill(0.0);
     let inv = 1.0 / (h * w) as f32;
     for ni in 0..n {
         for y in 0..h {
@@ -271,17 +381,34 @@ pub fn gap_nhwc(x: &Tensor) -> Tensor {
     for v in &mut out.data {
         *v *= inv;
     }
-    out
 }
 
 /// Depthwise conv over NHWC; weights `[C, k, k]`.
 pub fn depthwise_nhwc(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: bool) -> Tensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let k = wt.shape[1];
-    assert_eq!(wt.shape, vec![c, k, k]);
     let ho = (h + 2 * pad - k) / stride + 1;
     let wo = (w + 2 * pad - k) / stride + 1;
     let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    depthwise_nhwc_into(x, wt, stride, pad, relu, &mut out);
+    out
+}
+
+/// [`depthwise_nhwc`] into a caller-provided output tensor.
+pub fn depthwise_nhwc_into(
+    x: &Tensor,
+    wt: &Tensor,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    out: &mut Tensor,
+) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let k = wt.shape[1];
+    assert_eq!(wt.shape, [c, k, k]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    assert_eq!(out.shape, [n, ho, wo, c], "output tensor shape");
     for ni in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -309,7 +436,6 @@ pub fn depthwise_nhwc(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: 
             }
         }
     }
-    out
 }
 
 /// Channel concat in NHWC (innermost axis — requires interleaving).
@@ -318,6 +444,16 @@ pub fn concat_nhwc(xs: &[&Tensor]) -> Tensor {
     let (n, h, w) = (xs[0].shape[0], xs[0].shape[1], xs[0].shape[2]);
     let c_total: usize = xs.iter().map(|x| x.shape[3]).sum();
     let mut out = Tensor::zeros(&[n, h, w, c_total]);
+    concat_nhwc_into(xs, &mut out);
+    out
+}
+
+/// [`concat_nhwc`] into a caller-provided output tensor.
+pub fn concat_nhwc_into(xs: &[&Tensor], out: &mut Tensor) {
+    assert!(!xs.is_empty());
+    let (n, h, w) = (xs[0].shape[0], xs[0].shape[1], xs[0].shape[2]);
+    let c_total: usize = xs.iter().map(|x| x.shape[3]).sum();
+    assert_eq!(out.shape, [n, h, w, c_total], "output tensor shape");
     let pixels = n * h * w;
     for p in 0..pixels {
         let mut co = 0;
@@ -328,7 +464,19 @@ pub fn concat_nhwc(xs: &[&Tensor]) -> Tensor {
             co += c;
         }
     }
-    out
+}
+
+/// Copy one NHWC concat input into `out` at channel offset `c_off`
+/// (per-part twin of [`concat_cnhw_part_into`] for the arena executor).
+pub fn concat_nhwc_part_into(x: &Tensor, c_off: usize, out: &mut Tensor) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(&out.shape[..3], &[n, h, w], "concat spatial mismatch");
+    let c_total = out.shape[3];
+    assert!(c_off + c <= c_total, "concat channel overflow");
+    for p in 0..n * h * w {
+        out.data[p * c_total + c_off..p * c_total + c_off + c]
+            .copy_from_slice(&x.data[p * c..(p + 1) * c]);
+    }
 }
 
 #[cfg(test)]
@@ -420,11 +568,110 @@ mod tests {
         assert!(allclose(&cat_nhwc.data, &cnhw_to_nhwc(&cat_cnhw).data, 0.0, 0.0));
     }
 
+    /// Concatenating part-by-part at explicit channel offsets (the
+    /// arena executor's allocation-free form) must reproduce the
+    /// slice-of-refs concat bitwise in both layouts.
+    #[test]
+    fn concat_part_into_matches_whole_concat() {
+        let mut r = XorShiftRng::new(307);
+        let a_nhwc = Tensor::random(&[2, 3, 3, 4], &mut r, -1.0, 1.0);
+        let b_nhwc = Tensor::random(&[2, 3, 3, 6], &mut r, -1.0, 1.0);
+        let want_nhwc = concat_nhwc(&[&a_nhwc, &b_nhwc]);
+        let mut got_nhwc = Tensor::zeros(&[2, 3, 3, 10]);
+        got_nhwc.data.fill(f32::NAN);
+        concat_nhwc_part_into(&a_nhwc, 0, &mut got_nhwc);
+        concat_nhwc_part_into(&b_nhwc, 4, &mut got_nhwc);
+        assert_eq!(got_nhwc.data, want_nhwc.data);
+
+        let (a, b) = (nhwc_to_cnhw(&a_nhwc), nhwc_to_cnhw(&b_nhwc));
+        let want = concat_cnhw(&[&a, &b]);
+        let mut got = Tensor::zeros(&[10, 2, 3, 3]);
+        got.data.fill(f32::NAN);
+        concat_cnhw_part_into(&a, 0, &mut got);
+        concat_cnhw_part_into(&b, 4, &mut got);
+        assert_eq!(got.data, want.data);
+    }
+
     #[test]
     fn fc_computes_affine() {
         let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
         let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
         let y = fc(&x, &w, &[10.0, 20.0]);
         assert_eq!(y.data, vec![11.0, 25.0]);
+    }
+
+    /// `_into` twins must overwrite a dirty reused buffer completely:
+    /// stale values from a previous occupant of the arena slot must
+    /// never leak into the output (the accumulating ops zero first).
+    #[test]
+    fn into_variants_overwrite_dirty_buffers_bitwise() {
+        let mut r = XorShiftRng::new(307);
+        let x = Tensor::random(&[5, 2, 7, 7], &mut r, -1.0, 1.0); // CNHW
+        let x_nhwc = cnhw_to_nhwc(&x);
+        let wdw = Tensor::random(&[5, 3, 3], &mut r, -0.5, 0.5);
+        let wfc = Tensor::random(&[4, 5], &mut r, -0.5, 0.5);
+        let bias = vec![0.1f32; 4];
+        let dirty = |shape: &[usize]| {
+            let mut t = Tensor::zeros(shape);
+            t.data.fill(f32::NAN);
+            t
+        };
+        // (want, got) pairs across every op family.
+        let checks: Vec<(Tensor, Tensor)> = {
+            let mut v = Vec::new();
+            let want = maxpool_cnhw(&x, 3, 2, 1);
+            let mut got = dirty(&want.shape);
+            maxpool_cnhw_into(&x, 3, 2, 1, &mut got);
+            v.push((want, got));
+            let want = avgpool_cnhw(&x, 2, 2);
+            let mut got = dirty(&want.shape);
+            avgpool_cnhw_into(&x, 2, 2, &mut got);
+            v.push((want, got));
+            let want = gap_cnhw(&x);
+            let mut got = dirty(&want.shape);
+            gap_cnhw_into(&x, &mut got);
+            v.push((want, got));
+            let want = depthwise_cnhw(&x, &wdw, 2, 1, true);
+            let mut got = dirty(&want.shape);
+            depthwise_cnhw_into(&x, &wdw, 2, 1, true, &mut got);
+            v.push((want, got));
+            let want = concat_cnhw(&[&x, &x]);
+            let mut got = dirty(&want.shape);
+            concat_cnhw_into(&[&x, &x], &mut got);
+            v.push((want, got));
+            let want = add(&x, &x, true);
+            let mut got = dirty(&want.shape);
+            add_into(&x, &x, true, &mut got);
+            v.push((want, got));
+            let gap = gap_cnhw(&x);
+            let want = fc(&gap, &wfc, &bias);
+            let mut got = dirty(&want.shape);
+            fc_into(&gap, &wfc, &bias, &mut got);
+            v.push((want, got));
+            let want = maxpool_nhwc(&x_nhwc, 3, 2, 1);
+            let mut got = dirty(&want.shape);
+            maxpool_nhwc_into(&x_nhwc, 3, 2, 1, &mut got);
+            v.push((want, got));
+            let want = avgpool_nhwc(&x_nhwc, 2, 2);
+            let mut got = dirty(&want.shape);
+            avgpool_nhwc_into(&x_nhwc, 2, 2, &mut got);
+            v.push((want, got));
+            let want = gap_nhwc(&x_nhwc);
+            let mut got = dirty(&want.shape);
+            gap_nhwc_into(&x_nhwc, &mut got);
+            v.push((want, got));
+            let want = depthwise_nhwc(&x_nhwc, &wdw, 2, 1, false);
+            let mut got = dirty(&want.shape);
+            depthwise_nhwc_into(&x_nhwc, &wdw, 2, 1, false, &mut got);
+            v.push((want, got));
+            let want = concat_nhwc(&[&x_nhwc, &x_nhwc]);
+            let mut got = dirty(&want.shape);
+            concat_nhwc_into(&[&x_nhwc, &x_nhwc], &mut got);
+            v.push((want, got));
+            v
+        };
+        for (i, (want, got)) in checks.iter().enumerate() {
+            assert_eq!(want.data, got.data, "op family {i} leaked stale data");
+        }
     }
 }

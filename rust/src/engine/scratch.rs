@@ -1,0 +1,238 @@
+//! Plan-sized scratch memory for zero-alloc steady-state inference.
+//!
+//! [`MemoryPlan`] is computed once at executor build time from the
+//! graph's static shapes: every node's output shape is known up front,
+//! so activation storage can be colored onto a small set of reusable
+//! slots by walking the graph in topological (= execution) order with a
+//! free list. A node's output slot is claimed *before* its inputs'
+//! slots are released, so an output never aliases a live input; after
+//! that, plan order equals run order and no liveness bookkeeping is
+//! needed at inference time.
+//!
+//! [`ScratchArena`] materialises a plan: one capacity-preallocated
+//! [`Tensor`] per slot plus a single worst-case-sized [`PackedMatrix`]
+//! panel shared by every conv layer (conv panels are consumed within
+//! the layer, so one suffices). `Executor::run_capped_in` threads the
+//! arena through the `_into` op kernels, making steady-state inference
+//! allocation-free on the compute plane — the property
+//! `rust/tests/zero_alloc.rs` proves with a counting allocator.
+
+use crate::models::{Graph, Node, Op};
+use crate::tensor::Tensor;
+
+use crate::im2col::PackedMatrix;
+
+/// Output shape of `node` given the executor's activation layout.
+/// GAP and FC emit 2-D `[batch, features]`; everything else is 4-D
+/// NHWC or CNHW according to the execution path.
+fn node_out_shape(node: &Node, batch: usize, nhwc: bool) -> Vec<usize> {
+    match node.op {
+        Op::GlobalAvgPool | Op::Fc { .. } => vec![batch, node.out_c],
+        _ => {
+            if nhwc {
+                vec![batch, node.out_h, node.out_w, node.out_c]
+            } else {
+                vec![node.out_c, batch, node.out_h, node.out_w]
+            }
+        }
+    }
+}
+
+/// Static activation-memory plan for one graph + execution path:
+/// which scratch slot each node writes, how big every slot must be,
+/// and the worst-case conv panel size. Build once, reuse per arena.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    /// Node id → scratch slot index.
+    pub node_slot: Vec<usize>,
+    /// Node id → output shape under the planned layout.
+    pub shapes: Vec<Vec<usize>>,
+    /// Slot index → required capacity in elements (max over the nodes
+    /// colored onto that slot).
+    pub slot_elems: Vec<usize>,
+    /// Worst-case packed-panel size in elements over all conv layers
+    /// (0 on the NHWC path, which packs nothing).
+    pub panel_elems: usize,
+}
+
+impl MemoryPlan {
+    /// Color the graph's activations onto reusable slots.
+    ///
+    /// Greedy free-list coloring in topo order: claim (or create) the
+    /// output slot first, then release input slots whose consumer
+    /// counts are exhausted. The final node's slot is never released —
+    /// it holds the logits the caller borrows after a run.
+    pub fn plan(graph: &Graph, nhwc: bool, panel_elems: usize) -> Self {
+        let n_nodes = graph.nodes.len();
+        assert!(n_nodes > 0, "cannot plan an empty graph");
+        let mut remaining = vec![0usize; n_nodes];
+        for node in &graph.nodes {
+            for &i in &node.inputs {
+                remaining[i] += 1;
+            }
+        }
+        // Keep the output alive past the walk.
+        remaining[n_nodes - 1] += 1;
+
+        let mut node_slot = vec![usize::MAX; n_nodes];
+        let mut shapes = Vec::with_capacity(n_nodes);
+        let mut slot_elems: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        for node in &graph.nodes {
+            let shape = node_out_shape(node, graph.batch, nhwc);
+            let elems = shape.iter().product::<usize>();
+            // Output slot before input release: never alias a live input.
+            let slot = free.pop().unwrap_or_else(|| {
+                slot_elems.push(0);
+                slot_elems.len() - 1
+            });
+            slot_elems[slot] = slot_elems[slot].max(elems);
+            node_slot[node.id] = slot;
+            shapes.push(shape);
+            for &i in &node.inputs {
+                remaining[i] -= 1;
+                if remaining[i] == 0 {
+                    free.push(node_slot[i]);
+                }
+            }
+        }
+        Self {
+            node_slot,
+            shapes,
+            slot_elems,
+            panel_elems,
+        }
+    }
+
+    /// Total activation footprint of the plan in bytes (slots + panel).
+    pub fn bytes(&self) -> usize {
+        4 * (self.slot_elems.iter().sum::<usize>() + self.panel_elems)
+    }
+}
+
+/// Materialised scratch memory for one in-flight inference: owns the
+/// slot tensors and the shared conv panel. One arena serves one request
+/// at a time; a server keeps one per dispatcher thread.
+pub struct ScratchArena {
+    pub(crate) plan: MemoryPlan,
+    pub(crate) slots: Vec<Tensor>,
+    pub(crate) panel: PackedMatrix,
+}
+
+impl ScratchArena {
+    /// Allocate every slot (and the conv panel) at full planned
+    /// capacity up front. After construction, running inference through
+    /// the arena performs no heap allocation: slot tensors are resized
+    /// only within their preallocated capacity, and the panel is
+    /// `reset` within its worst-case size.
+    pub fn new(plan: MemoryPlan) -> Self {
+        let slots = plan
+            .slot_elems
+            .iter()
+            .map(|&cap| {
+                let mut t = Tensor {
+                    shape: Vec::with_capacity(4),
+                    data: Vec::with_capacity(cap),
+                };
+                // Touch the pages now, not on first inference.
+                t.data.resize(cap, 0.0);
+                t
+            })
+            .collect();
+        let panel = PackedMatrix::zeros(1, plan.panel_elems.max(1), 1);
+        Self {
+            plan,
+            slots,
+            panel,
+        }
+    }
+
+    /// The plan this arena was built from.
+    pub fn plan(&self) -> &MemoryPlan {
+        &self.plan
+    }
+
+    /// Resident scratch footprint in bytes (slot + panel capacity).
+    pub fn bytes(&self) -> usize {
+        4 * (self.slots.iter().map(|t| t.data.capacity()).sum::<usize>()
+            + self.panel.data.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_model, ModelArch};
+
+    fn plan_for(arch: ModelArch, nhwc: bool) -> (Graph, MemoryPlan) {
+        let g = build_model(arch, 1, 32);
+        let p = MemoryPlan::plan(&g, nhwc, 4096);
+        (g, p)
+    }
+
+    /// A node's output slot must differ from every live input's slot,
+    /// and two simultaneously-live nodes must never share a slot.
+    #[test]
+    fn no_output_aliases_a_live_input() {
+        for arch in [ModelArch::ResNet18, ModelArch::MobileNetV2, ModelArch::DenseNet121] {
+            for nhwc in [false, true] {
+                let (g, p) = plan_for(arch, nhwc);
+                let mut remaining = vec![0usize; g.nodes.len()];
+                for node in &g.nodes {
+                    for &i in &node.inputs {
+                        remaining[i] += 1;
+                    }
+                }
+                remaining[g.nodes.len() - 1] += 1;
+                let mut live: Vec<usize> = Vec::new(); // live node ids
+                for node in &g.nodes {
+                    for &i in &live {
+                        assert_ne!(
+                            p.node_slot[node.id], p.node_slot[i],
+                            "{arch:?}: node {} reuses live slot of node {i}",
+                            node.id
+                        );
+                    }
+                    live.push(node.id);
+                    for &i in &node.inputs {
+                        remaining[i] -= 1;
+                        if remaining[i] == 0 {
+                            live.retain(|&l| l != i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Slot capacities must cover every node colored onto the slot.
+    #[test]
+    fn slot_capacity_covers_every_colored_node() {
+        let (g, p) = plan_for(ModelArch::DenseNet121, false);
+        for node in &g.nodes {
+            let elems = p.shapes[node.id].iter().product::<usize>();
+            assert!(p.slot_elems[p.node_slot[node.id]] >= elems);
+        }
+        // Coloring actually shares: far fewer slots than nodes.
+        assert!(
+            p.slot_elems.len() < g.nodes.len() / 2,
+            "{} slots for {} nodes",
+            p.slot_elems.len(),
+            g.nodes.len()
+        );
+    }
+
+    /// The plan's byte figure bounds the arena's resident footprint,
+    /// and slot tensors come back fully pre-faulted.
+    #[test]
+    fn arena_materialises_plan_capacity() {
+        let (_, p) = plan_for(ModelArch::ResNet18, false);
+        let planned = p.bytes();
+        let arena = ScratchArena::new(p);
+        assert!(arena.bytes() >= planned);
+        for (i, t) in arena.slots.iter().enumerate() {
+            assert_eq!(t.data.len(), arena.plan.slot_elems[i]);
+        }
+        assert!(arena.panel.data.len() >= arena.plan.panel_elems);
+    }
+}

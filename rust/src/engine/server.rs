@@ -38,6 +38,22 @@
 //! `pool size / executors` participants so concurrent batches slice the
 //! pool instead of queueing a full pool's worth of jobs each.
 //!
+//! # Zero-alloc steady state (the memory plane)
+//!
+//! Each dispatcher thread owns one [`ScratchArena`] and one staging
+//! input tensor per compiled batch size, allocated once at startup.
+//! Batches are staged and executed entirely inside them
+//! ([`Executor::run_capped_in`]), so the compute plane performs no
+//! heap allocation in steady state. The claim is measured, not
+//! assumed: every batch's compute region runs under
+//! [`allocwatch::scoped`] and the observed (allocs, bytes) pairs land
+//! in `ServerStats::compute_allocs`, which `rust/tests/zero_alloc.rs`
+//! checks under a counting global allocator. Reply transport (logit
+//! copies, channel sends) allocates and deliberately stays outside
+//! the measured region. Weights can come from an AOT-packed artifact
+//! via [`Server::start_packed`], making model load a validation pass
+//! instead of a re-pack.
+//!
 //! # Load-aware adaptive mode
 //!
 //! `ServerConfig::adaptive` makes three decisions *per drain*, all
@@ -72,11 +88,14 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::models::Graph;
+use crate::runtime::PackedArtifact;
 use crate::tensor::Tensor;
 use crate::util::stats::Summary;
+use crate::util::{allocwatch, ThreadPool};
 
 use super::executor::{ExecConfig, Executor};
 use super::policy::{self, PolicyConfig, Priority, QueueDiscipline, QueueSnapshot};
+use super::scratch::ScratchArena;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -266,6 +285,10 @@ struct StatsInner {
     batch_hist: BTreeMap<usize, usize>,
     /// Per-batch chosen per-run thread cap (adaptive mode only).
     caps: Vec<usize>,
+    /// Per-batch compute-plane heap traffic (allocs, bytes), in batch
+    /// completion order. All zero unless a counting global allocator
+    /// is registered (see `util::allocwatch`).
+    compute: Vec<(u64, u64)>,
     started: Option<Instant>,
     finished: Option<Instant>,
     served: usize,
@@ -313,6 +336,12 @@ pub struct ServerStats {
     /// (compiled batch size, batches executed at that size), ascending —
     /// the observable trace of the gauge-driven batch-size policy.
     pub batch_hist: Vec<(usize, usize)>,
+    /// Per-batch compute-plane heap traffic (allocations, bytes), in
+    /// batch completion order — the observable proof of zero-alloc
+    /// steady-state serving. Entries are measured only when a counting
+    /// global allocator is registered (the zero-alloc integration test
+    /// does); they are all zero otherwise.
+    pub compute_allocs: Vec<(u64, u64)>,
 }
 
 impl ServerStats {
@@ -371,12 +400,51 @@ impl Server {
             // decided per batch from the queue gauge instead.
             exec.default_choice.threads = pool_size.div_ceil(n_exec).max(1);
         }
-        let executors: Arc<Vec<(usize, Executor)>> = Arc::new(
-            sizes
-                .iter()
-                .map(|&b| (b, Executor::new(make_graph(b), exec.clone())))
-                .collect(),
-        );
+        let executors = sizes
+            .iter()
+            .map(|&b| (b, Executor::new(make_graph(b), exec.clone())))
+            .collect();
+        Self::start_with(executors, pool_size, res, cfg)
+    }
+
+    /// [`Server::start`] from an AOT-packed weight artifact: executors
+    /// are built with [`Executor::from_artifact`] — a validation pass
+    /// over frozen weights and tuning choices, not a re-pack — so model
+    /// load is fast and any graph/artifact mismatch is a
+    /// [`RuntimeError`](crate::runtime::RuntimeError) instead of a
+    /// silently different model. One artifact serves every compiled
+    /// batch size (weights are batch-independent). The artifact's
+    /// per-layer thread caps are tuned state and are never widened, so
+    /// the static-mode pool-slicing heuristic of [`Server::start`] does
+    /// not apply here.
+    pub fn start_packed<F: Fn(usize) -> Graph>(
+        make_graph: F,
+        pool: Arc<ThreadPool>,
+        art: &PackedArtifact,
+        cfg: ServerConfig,
+    ) -> crate::runtime::Result<Self> {
+        assert!(!cfg.batch_sizes.is_empty());
+        let mut sizes = cfg.batch_sizes.clone();
+        sizes.sort_unstable();
+        let mut executors = Vec::new();
+        for &b in &sizes {
+            let exec = Executor::from_artifact(make_graph(b), Arc::clone(&pool), art)?;
+            executors.push((b, exec));
+        }
+        Ok(Self::start_with(executors, pool.size(), art.res, cfg))
+    }
+
+    /// Common tail of the constructors: start the dispatcher threads
+    /// over prebuilt per-batch-size executors (ascending sizes).
+    fn start_with(
+        executors: Vec<(usize, Executor)>,
+        pool_size: usize,
+        res: usize,
+        cfg: ServerConfig,
+    ) -> Self {
+        let sizes: Vec<usize> = executors.iter().map(|&(b, _)| b).collect();
+        let n_exec = cfg.executors.max(1);
+        let executors = Arc::new(executors);
         let intake = Arc::new(Intake {
             state: Mutex::new(IntakeState {
                 interactive: BinaryHeap::new(),
@@ -538,6 +606,7 @@ impl Server {
                 }
             }),
             batch_hist: inner.batch_hist.iter().map(|(&b, &n)| (b, n)).collect(),
+            compute_allocs: inner.compute.clone(),
         }
     }
 }
@@ -550,6 +619,16 @@ fn dispatcher(ctx: &Dispatch, idx: usize) {
     // Bounded re-check interval for waiting dispatchers (never 0, or a
     // missed predicate change could strand them).
     let poll = ctx.window.max(Duration::from_millis(1));
+    // The memory plane: one scratch arena and one staging input tensor
+    // per compiled batch size, owned by this dispatcher thread for its
+    // lifetime. Steady-state batches are staged and executed entirely
+    // inside them — the compute plane never touches the heap.
+    let mut arenas: Vec<ScratchArena> = ctx.executors.iter().map(|(_, e)| e.scratch()).collect();
+    let mut staged: Vec<Tensor> = ctx
+        .executors
+        .iter()
+        .map(|&(b, _)| Tensor::zeros(&[b, ctx.res, ctx.res, 3]))
+        .collect();
     // Requests drained in an earlier iteration beyond what that
     // iteration's executor could take (a group size strictly between
     // two compiled batch sizes). They are served first next iteration —
@@ -648,22 +727,16 @@ fn dispatcher(ctx: &Dispatch, idx: usize) {
         // pending against sizes [2, 4]) serves the largest fitting
         // batch and carries the surplus to the next iteration — never
         // overrunning the compiled shape, never dropping a request.
-        let (batch, exec) = ctx
+        let ei = ctx
             .executors
             .iter()
-            .rev()
-            .find(|(b, _)| *b <= group.len())
-            .unwrap_or(&ctx.executors[0]);
+            .rposition(|(b, _)| *b <= group.len())
+            .unwrap_or(0);
+        let (batch, exec) = &ctx.executors[ei];
         let batch = *batch;
         let take = group.len().min(batch);
         pending = group.split_off(take);
-        // Assemble the batched NHWC input; rows [take, batch) stay zero
-        // and their logits are computed but discarded.
-        let mut input = Tensor::zeros(&[batch, ctx.res, ctx.res, 3]);
         let per = ctx.res * ctx.res * 3;
-        for (i, r) in group.iter().enumerate() {
-            input.data[i * per..(i + 1) * per].copy_from_slice(&r.image.data);
-        }
         let t0 = Instant::now();
         {
             let mut s = ctx.stats.lock().unwrap();
@@ -671,7 +744,24 @@ fn dispatcher(ctx: &Dispatch, idx: usize) {
             s.started = Some(s.started.map_or(t0, |prev| prev.min(t0)));
         }
         ctx.busy.fetch_add(1, Ordering::AcqRel);
-        let logits = exec.run_capped(&input, run_cap);
+        // The compute plane: stage the batch into this dispatcher's
+        // preallocated input tensor and run inside its arena. The
+        // scoped region measures heap traffic (all zero in steady
+        // state when a counting allocator is registered); the reply
+        // transport below — logit copies, channel sends — allocates
+        // and deliberately sits outside it.
+        let arena = &mut arenas[ei];
+        let input = &mut staged[ei];
+        let (logits, mem) = allocwatch::scoped(|| {
+            for (i, r) in group.iter().enumerate() {
+                input.data[i * per..(i + 1) * per].copy_from_slice(&r.image.data);
+            }
+            // Rows [take, batch) are padding: clear any residue from
+            // the previous batch staged in this tensor so the padded
+            // rows' (discarded) logits stay deterministic.
+            input.data[take * per..].fill(0.0);
+            exec.run_capped_in(input, run_cap, arena)
+        });
         ctx.busy.fetch_sub(1, Ordering::AcqRel);
         let done = Instant::now();
         if ctx.trace {
@@ -690,6 +780,7 @@ fn dispatcher(ctx: &Dispatch, idx: usize) {
             s.caps.push(run_cap);
         }
         *s.batch_hist.entry(batch).or_insert(0) += 1;
+        s.compute.push((mem.allocs, mem.bytes));
         for (i, r) in group.into_iter().enumerate() {
             let latency = done - r.enqueued;
             let missed = r.deadline.is_some_and(|d| done > d);
@@ -761,6 +852,12 @@ mod tests {
         // The histogram accounts for every served request.
         let hist_total: usize = stats.batch_hist.iter().map(|&(b, n)| b * n).sum();
         assert!(hist_total >= 6, "histogram covers all batches (padding included)");
+        // One compute-plane sample per executed batch; without a
+        // registered counting allocator they all read zero (the
+        // instrumentation is inert in this binary).
+        let batches: usize = stats.batch_hist.iter().map(|&(_, n)| n).sum();
+        assert_eq!(stats.compute_allocs.len(), batches);
+        assert!(stats.compute_allocs.iter().all(|&s| s == (0, 0)));
     }
 
     #[test]
@@ -999,6 +1096,7 @@ mod tests {
             assert_eq!(stats.mean_batch, 0.0);
             assert!(stats.cap_range.is_none());
             assert!(stats.batch_hist.is_empty());
+            assert!(stats.compute_allocs.is_empty());
             for p in Priority::ALL {
                 assert_eq!(stats.class(p).served, 0);
                 assert_eq!(stats.class(p).latency.n, 0);
@@ -1058,6 +1156,50 @@ mod tests {
         for &(b, _) in &adaptive_stats.batch_hist {
             assert!(b == 2 || b == 4, "unknown batch size {b} in histogram");
         }
+    }
+
+    /// Tentpole: a server loading its weights from an AOT-packed
+    /// artifact answers with logits bitwise identical to the server
+    /// that generates and packs them online — including at batch sizes
+    /// the artifact was not packed at (batch-generic loading) — and a
+    /// mismatched artifact is a load-time error, not a silently
+    /// different model.
+    #[test]
+    fn packed_server_matches_online_logits() {
+        let res = 32;
+        let make = |b: usize| build_model(ModelArch::ResNet18, b, res);
+        // Pack at batch 4; serve at sizes [1, 2].
+        let art = Executor::new(make(4), ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5))
+            .to_artifact();
+        let scfg = || ServerConfig {
+            batch_sizes: vec![1, 2],
+            batch_window: Duration::from_millis(2),
+            ..ServerConfig::default()
+        };
+        let collect = |server: Server| -> Vec<Vec<f32>> {
+            let rxs: Vec<_> = (0..6).map(|i| server.submit(image(res, i))).collect();
+            let out = rxs.into_iter().map(|rx| rx.recv().unwrap().logits).collect();
+            server.shutdown();
+            out
+        };
+        let online = collect(Server::start(
+            make,
+            ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
+            res,
+            scfg(),
+        ));
+        let packed = collect(
+            Server::start_packed(make, ThreadPool::shared(2), &art, scfg())
+                .expect("artifact matches the serving graphs"),
+        );
+        assert_eq!(online, packed, "AOT-packed weights changed numerics");
+        let err = Server::start_packed(
+            |b| build_model(ModelArch::MobileNetV2, b, res),
+            ThreadPool::shared(2),
+            &art,
+            scfg(),
+        );
+        assert!(err.is_err(), "mismatched artifact must fail at load");
     }
 
     /// Tentpole: mixed-priority traffic under the Priority discipline

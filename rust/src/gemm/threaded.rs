@@ -41,8 +41,23 @@ pub fn spmm_colwise_parallel_capped(
     pool: &ThreadPool,
     max_workers: Option<usize>,
 ) -> Vec<f32> {
-    assert_eq!(w.cols, a.k);
     let mut c = vec![0.0f32; w.rows * a.cols];
+    spmm_colwise_parallel_capped_into(w, a, pool, max_workers, &mut c);
+    c
+}
+
+/// [`spmm_colwise_parallel_capped`] writing into a caller-provided
+/// output buffer (zero-alloc hot-path entry): every strip fully
+/// overwrites its disjoint column range, so no pre-zeroing is needed.
+pub fn spmm_colwise_parallel_capped_into(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+    c: &mut [f32],
+) {
+    assert_eq!(w.cols, a.k);
+    assert!(c.len() >= w.rows * a.cols, "output buffer too small");
     // Each strip writes a disjoint column range of C. Workers write
     // through a shared raw pointer — never through a `&mut [f32]` over
     // the whole buffer, which would create overlapping exclusive
@@ -56,7 +71,6 @@ pub fn spmm_colwise_parallel_capped(
             unsafe { spmm_colwise_strip_raw(w, a, strip, c_ptr.get(), c_len) };
         }
     });
-    c
 }
 
 /// Parallel dense GEMM over strips.
@@ -79,9 +93,25 @@ pub fn gemm_dense_parallel_capped(
     pool: &ThreadPool,
     max_workers: Option<usize>,
 ) -> Vec<f32> {
+    let mut c = vec![0.0f32; rows * a.cols];
+    gemm_dense_parallel_capped_into(w, rows, a, tile, pool, max_workers, &mut c);
+    c
+}
+
+/// [`gemm_dense_parallel_capped`] writing into a caller-provided output
+/// buffer (zero-alloc hot-path entry).
+pub fn gemm_dense_parallel_capped_into(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+    c: &mut [f32],
+) {
     assert_eq!(w.len(), rows * a.k);
     assert!((1..=MAX_TILE).contains(&tile));
-    let mut c = vec![0.0f32; rows * a.cols];
+    assert!(c.len() >= rows * a.cols, "output buffer too small");
     let c_ptr = SendPtr(c.as_mut_ptr());
     let c_len = c.len();
     pool.parallel_for_capped(a.strips, max_workers, |s0, s1| {
@@ -91,7 +121,6 @@ pub fn gemm_dense_parallel_capped(
             unsafe { dense_strip_raw(w, rows, a, tile, strip, c_ptr.get(), c_len) };
         }
     });
-    c
 }
 
 /// Raw-pointer dense strip kernel (see [`spmm_colwise_strip_raw`] for

@@ -30,11 +30,9 @@ pub fn fused_im2col_pack_cnhw_into(x: &Tensor, s: &ConvShape, v: usize, p: &mut 
 }
 
 fn fill_fused(x: &Tensor, s: &ConvShape, v: usize, p: &mut PackedMatrix) {
-    assert_eq!(
-        x.shape,
-        vec![s.c_in, s.n, s.h_in, s.w_in],
-        "input must be CNHW for {s}"
-    );
+    // Array compare, not vec![] — this assert runs on the zero-alloc
+    // hot path (once per conv invocation).
+    assert_eq!(x.shape, [s.c_in, s.n, s.h_in, s.w_in], "input must be CNHW for {s}");
     let (h_out, w_out) = (s.h_out(), s.w_out());
     let k = s.k();
 

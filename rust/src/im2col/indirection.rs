@@ -82,11 +82,27 @@ pub fn conv2d_indirect_nhwc(
     s: &ConvShape,
     ib: &IndirectionBuffer,
 ) -> Tensor {
-    assert_eq!(x.shape, vec![s.n, s.h_in, s.w_in, s.c_in]);
+    let mut out = Tensor::zeros(&[s.n, s.h_out(), s.w_out(), s.c_out]);
+    conv2d_indirect_nhwc_into(x, filter, s, ib, &mut out);
+    out
+}
+
+/// [`conv2d_indirect_nhwc`] into a caller-provided output tensor. The
+/// kernel accumulates tap-by-tap, so the (possibly reused) output is
+/// zeroed first.
+pub fn conv2d_indirect_nhwc_into(
+    x: &Tensor,
+    filter: &[f32],
+    s: &ConvShape,
+    ib: &IndirectionBuffer,
+    out: &mut Tensor,
+) {
+    assert_eq!(x.shape, [s.n, s.h_in, s.w_in, s.c_in]);
     let k = s.k();
     assert_eq!(filter.len(), s.c_out * k);
     let (h_out, w_out) = (s.h_out(), s.w_out());
-    let mut out = Tensor::zeros(&[s.n, h_out, w_out, s.c_out]);
+    assert_eq!(out.shape, [s.n, h_out, w_out, s.c_out], "output tensor shape");
+    out.data.fill(0.0);
     for pos in 0..ib.out_positions {
         let out_base = pos * s.c_out;
         for tap in 0..ib.taps {
@@ -104,7 +120,6 @@ pub fn conv2d_indirect_nhwc(
             }
         }
     }
-    out
 }
 
 /// Multi-threaded variant parallelising over output positions (each
@@ -130,14 +145,32 @@ pub fn conv2d_indirect_nhwc_parallel_capped(
     pool: &crate::util::threadpool::ThreadPool,
     max_workers: Option<usize>,
 ) -> Tensor {
+    let mut out = Tensor::zeros(&[s.n, s.h_out(), s.w_out(), s.c_out]);
+    conv2d_indirect_nhwc_parallel_capped_into(x, filter, s, ib, pool, max_workers, &mut out);
+    out
+}
+
+/// [`conv2d_indirect_nhwc_parallel_capped`] into a caller-provided
+/// output tensor (zeroed here — the kernel accumulates).
+pub fn conv2d_indirect_nhwc_parallel_capped_into(
+    x: &Tensor,
+    filter: &[f32],
+    s: &ConvShape,
+    ib: &IndirectionBuffer,
+    pool: &crate::util::threadpool::ThreadPool,
+    max_workers: Option<usize>,
+    out: &mut Tensor,
+) {
     if pool.size() <= 1 || max_workers == Some(1) {
-        return conv2d_indirect_nhwc(x, filter, s, ib);
+        conv2d_indirect_nhwc_into(x, filter, s, ib, out);
+        return;
     }
-    assert_eq!(x.shape, vec![s.n, s.h_in, s.w_in, s.c_in]);
+    assert_eq!(x.shape, [s.n, s.h_in, s.w_in, s.c_in]);
     let k = s.k();
     assert_eq!(filter.len(), s.c_out * k);
     let (h_out, w_out) = (s.h_out(), s.w_out());
-    let mut out = Tensor::zeros(&[s.n, h_out, w_out, s.c_out]);
+    assert_eq!(out.shape, [s.n, h_out, w_out, s.c_out], "output tensor shape");
+    out.data.fill(0.0);
     struct SendPtr(*mut f32);
     unsafe impl Send for SendPtr {}
     unsafe impl Sync for SendPtr {}
@@ -169,7 +202,6 @@ pub fn conv2d_indirect_nhwc_parallel_capped(
             }
         }
     });
-    out
 }
 
 #[cfg(test)]

@@ -21,11 +21,12 @@ pub mod nchw;
 pub use fused::{fused_im2col_pack_cnhw, fused_im2col_pack_cnhw_into};
 pub use nchw::{fused_im2col_pack_nchw, nchw_total_strips};
 pub use indirection::{
-    conv2d_indirect_nhwc, conv2d_indirect_nhwc_parallel,
-    conv2d_indirect_nhwc_parallel_capped, IndirectionBuffer,
+    conv2d_indirect_nhwc, conv2d_indirect_nhwc_into, conv2d_indirect_nhwc_parallel,
+    conv2d_indirect_nhwc_parallel_capped, conv2d_indirect_nhwc_parallel_capped_into,
+    IndirectionBuffer,
 };
 pub use naive::im2col_cnhw;
-pub use pack::{pack_data_matrix, PackedMatrix, MAX_STRIP_WIDTH};
+pub use pack::{pack_data_matrix, pack_data_matrix_into, PackedMatrix, MAX_STRIP_WIDTH};
 
 use crate::conv::ConvShape;
 

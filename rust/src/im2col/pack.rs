@@ -106,8 +106,17 @@ impl PackedMatrix {
 /// This is the *separate* packing pass the paper's baseline performs
 /// after a standalone im2col.
 pub fn pack_data_matrix(a: &[f32], k: usize, cols: usize, v: usize) -> PackedMatrix {
-    assert_eq!(a.len(), k * cols, "data matrix shape");
     let mut p = PackedMatrix::zeros(k, cols, v);
+    pack_data_matrix_into(a, k, cols, v, &mut p);
+    p
+}
+
+/// [`pack_data_matrix`] writing into caller-provided storage: the packed
+/// matrix is `reset` in place (keeping its allocation when capacity
+/// suffices), so a warmed buffer makes repeated packing allocation-free.
+pub fn pack_data_matrix_into(a: &[f32], k: usize, cols: usize, v: usize, p: &mut PackedMatrix) {
+    assert_eq!(a.len(), k * cols, "data matrix shape");
+    p.reset(k, cols, v);
     for s in 0..p.strips {
         let valid = p.strip_valid(s);
         for r in 0..k {
@@ -116,7 +125,6 @@ pub fn pack_data_matrix(a: &[f32], k: usize, cols: usize, v: usize) -> PackedMat
             p.data[dst_base..dst_base + valid].copy_from_slice(src);
         }
     }
-    p
 }
 
 #[cfg(test)]
@@ -174,6 +182,20 @@ mod tests {
     fn reset_rejects_oversized_strip_width() {
         let mut p = PackedMatrix::zeros(1, 1, 1);
         p.reset(2, 256, 65);
+    }
+
+    #[test]
+    fn pack_into_reuses_buffer_and_matches_fresh_pack() {
+        let mut r = XorShiftRng::new(43);
+        // Warm with the largest case so later resets stay in capacity.
+        let mut p = PackedMatrix::zeros(8, 64, 16);
+        let cap = p.data.capacity();
+        for (k, cols, v) in [(3, 10, 4), (8, 64, 16), (5, 32, 32), (4, 33, 16)] {
+            let a = r.normal_vec(k * cols, 1.0);
+            pack_data_matrix_into(&a, k, cols, v, &mut p);
+            assert_eq!(p, pack_data_matrix(&a, k, cols, v), "k={k} cols={cols} v={v}");
+        }
+        assert_eq!(p.data.capacity(), cap, "in-capacity reuse must not reallocate");
     }
 
     #[test]

@@ -2,7 +2,13 @@
 //!
 //! Subcommands:
 //!   models                       list model zoo entries with MACs/params
+//!   pack   --model M --out F     AOT-pack pruned conv weights + tuned
+//!                                per-layer choices into a versioned
+//!                                binary artifact (validated on load;
+//!                                --cache picks up `nmprune tune` results)
 //!   run    --model M [...]       single inference, timing report
+//!                                (--artifact F: load an AOT-packed
+//!                                artifact instead of packing at startup)
 //!   serve  --model M [...]       batching server demo with load generator
 //!                                (--executors N: concurrent batch executors;
 //!                                --adaptive: load-aware batch size + caps +
@@ -11,7 +17,9 @@
 //!                                interactive / 1−F background traffic on the
 //!                                priority/deadline intake; --deadline-ms D:
 //!                                interactive deadline; --fifo: keep FIFO
-//!                                intake for comparison)
+//!                                intake for comparison; --artifact F:
+//!                                serve from an AOT-packed artifact —
+//!                                model load is a validation pass)
 //!   tune   --model M [...]       per-layer (LMUL, T, P) auto-tuning
 //!   sim    [--layer i]           RVV-simulator kernel comparison
 //!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
@@ -21,10 +29,14 @@
 //!                                nonzero if any gated record regressed
 //!                                beyond the threshold — the CI perf gate
 
+use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
-use nmprune::engine::{ExecConfig, Priority, QueueDiscipline, Server, ServerConfig};
+use nmprune::conv::ConvPath;
+use nmprune::engine::{ExecConfig, Executor, Priority, QueueDiscipline, Server, ServerConfig};
 use nmprune::models::{build_model, model_names, resnet50_fig5_layers, ModelArch};
+use nmprune::runtime::PackedArtifact;
 use nmprune::tensor::Tensor;
 use nmprune::tuner;
 use nmprune::util::cli::Args;
@@ -34,6 +46,7 @@ fn main() {
     let args = Args::from_env();
     match args.subcommand() {
         Some("models") => cmd_models(),
+        Some("pack") => cmd_pack(&args),
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
         Some("tune") => cmd_tune(&args),
@@ -42,7 +55,7 @@ fn main() {
         Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             eprintln!(
-                "usage: nmprune <models|run|serve|tune|sim|artifacts|bench-diff> [options]\n\
+                "usage: nmprune <models|pack|run|serve|tune|sim|artifacts|bench-diff> [options]\n\
                  common options: --model resnet50 --batch 1 --res 224 \
                  --threads N (default: all hardware threads, or NMPRUNE_THREADS) \
                  --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
@@ -60,7 +73,7 @@ fn parse_model(args: &Args) -> ModelArch {
     })
 }
 
-fn parse_exec(args: &Args) -> ExecConfig {
+fn parse_pool(args: &Args) -> Arc<ThreadPool> {
     // One persistent pool per process: `--threads N` pins the size
     // (N = 0 clamps to 1, i.e. serial, matching the seed CLI); with the
     // flag absent, the global pool (NMPRUNE_THREADS or all hardware
@@ -68,18 +81,20 @@ fn parse_exec(args: &Args) -> ExecConfig {
     // core-pinned pool of the requested size — it bypasses the
     // memoised shared()/global() registry, whose pools honour
     // NMPRUNE_PIN=1 instead.
-    let pool = match (args.get("threads"), args.has_flag("pin")) {
+    match (args.get("threads"), args.has_flag("pin")) {
         (None, false) => ThreadPool::global(),
         (None, true) => {
             // Same sizing rule as the global pool: --pin changes
             // placement only, never the worker count.
-            std::sync::Arc::new(ThreadPool::new_pinned(ThreadPool::default_size()))
+            Arc::new(ThreadPool::new_pinned(ThreadPool::default_size()))
         }
         (Some(_), false) => ThreadPool::shared(args.get_parsed("threads", 1)),
-        (Some(_), true) => {
-            std::sync::Arc::new(ThreadPool::new_pinned(args.get_parsed("threads", 1)))
-        }
-    };
+        (Some(_), true) => Arc::new(ThreadPool::new_pinned(args.get_parsed("threads", 1))),
+    }
+}
+
+fn parse_exec(args: &Args) -> ExecConfig {
+    let pool = parse_pool(args);
     let sparsity = args.get_parsed("sparsity", 0.5f64);
     match args.get_or("path", "sparse").as_str() {
         "nhwc" => ExecConfig::dense_nhwc(pool),
@@ -110,41 +125,128 @@ fn cmd_models() {
     }
 }
 
-fn cmd_run(args: &Args) {
+/// Load a packed artifact or exit with its validation error.
+fn load_artifact(ctx: &str, path: &str) -> PackedArtifact {
+    PackedArtifact::load(Path::new(path)).unwrap_or_else(|e| {
+        eprintln!("{ctx}: {e}");
+        std::process::exit(1);
+    })
+}
+
+/// Resolve the arch name recorded in an artifact to a zoo entry.
+fn artifact_arch(name: &str) -> ModelArch {
+    ModelArch::parse(name).unwrap_or_else(|| {
+        eprintln!("artifact names unknown arch {name:?}; available: {:?}", model_names());
+        std::process::exit(1);
+    })
+}
+
+/// AOT-pack a model's pruned conv weights and tuned per-layer choices
+/// into a versioned binary artifact. Tuned choices are picked up from
+/// the tune cache (`nmprune tune` writes it) keyed exactly as the tuner
+/// keys them; layers without a cache entry keep the default choice.
+fn cmd_pack(args: &Args) {
     let arch = parse_model(args);
     let batch = args.get_parsed("batch", 1usize);
     let res = args.get_parsed("res", 224usize);
-    let cfg = parse_exec(args);
-    let path = cfg.path;
+    let mut cfg = parse_exec(args);
+    let out = args.get_or("out", "artifacts/model.nmpk");
+    let cache_path = args.get_or("cache", "artifacts/tune_cache.tsv");
+    let cache = tuner::TuneCache::load(&cache_path);
+    let g = build_model(arch, batch, res);
+    let sparsity = (cfg.path == ConvPath::SparseCnhw).then_some(cfg.sparsity);
+    let mut tuned = 0usize;
+    for (name, shape) in g.conv_shapes() {
+        if let Some(c) = cache.entries.get(&tuner::cache_key(&shape, sparsity)) {
+            cfg.per_layer.insert(name, *c);
+            tuned += 1;
+        }
+    }
     println!(
-        "building {} batch={batch} res={res} path={path:?}",
-        arch.name()
+        "packing {} batch={batch} res={res} path={:?} ({tuned} tuned layers from {cache_path})",
+        arch.name(),
+        cfg.path
     );
     let t0 = Instant::now();
-    let exec = nmprune::engine::Executor::new(build_model(arch, batch, res), cfg);
-    println!("compile: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let exec = Executor::new(g, cfg);
+    let art = exec.to_artifact();
+    art.save(Path::new(&out)).unwrap_or_else(|e| {
+        eprintln!("pack: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "packed {} conv layers ({:.1} MiB weights) -> {out} in {:.1} ms",
+        art.layers.len(),
+        art.weight_bytes() as f64 / (1 << 20) as f64,
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+}
+
+fn cmd_run(args: &Args) {
+    let batch = args.get_parsed("batch", 1usize);
+    let (exec, res) = if let Some(p) = args.get("artifact") {
+        // AOT path: arch, resolution, weights, and tuning all come from
+        // the artifact; model load is a validation pass, not a re-pack.
+        let t0 = Instant::now();
+        let art = load_artifact("run", p);
+        let arch = artifact_arch(&art.arch);
+        let g = build_model(arch, batch, art.res);
+        let exec = Executor::from_artifact(g, parse_pool(args), &art).unwrap_or_else(|e| {
+            eprintln!("run: {e}");
+            std::process::exit(1);
+        });
+        println!(
+            "loaded {} batch={batch} res={} path={:?} from {p} in {:.1} ms",
+            art.arch,
+            art.res,
+            art.path,
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+        (exec, art.res)
+    } else {
+        let arch = parse_model(args);
+        let res = args.get_parsed("res", 224usize);
+        let cfg = parse_exec(args);
+        let path = cfg.path;
+        println!(
+            "building {} batch={batch} res={res} path={path:?}",
+            arch.name()
+        );
+        let t0 = Instant::now();
+        let exec = Executor::new(build_model(arch, batch, res), cfg);
+        println!("compile: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        (exec, res)
+    };
     let mut rng = XorShiftRng::new(1);
     let x = Tensor::random(&[batch, res, res, 3], &mut rng, 0.0, 1.0);
-    // One warmup + one timed run.
-    exec.run(&x);
+    // One warmup + one timed run, both inside a preallocated scratch
+    // arena (the serving configuration's memory plane).
+    let mut arena = exec.scratch();
+    exec.run_in(&x, &mut arena);
     let t1 = Instant::now();
-    let y = exec.run(&x);
+    let y = exec.run_in(&x, &mut arena);
     let dt = t1.elapsed();
     let top: usize = (0..1000)
         .max_by(|&a, &b| y.data[a].partial_cmp(&y.data[b]).unwrap())
         .unwrap();
     println!(
-        "inference: {:.1} ms  ({:.1} img/s)  argmax={top}  weights={:.1} MiB",
+        "inference: {:.1} ms  ({:.1} img/s)  argmax={top}  weights={:.1} MiB  scratch={:.1} MiB",
         dt.as_secs_f64() * 1e3,
         batch as f64 / dt.as_secs_f64(),
         exec.conv_weight_bytes() as f64 / (1 << 20) as f64,
+        arena.bytes() as f64 / (1 << 20) as f64,
     );
 }
 
 fn cmd_serve(args: &Args) {
-    let arch = parse_model(args);
-    let res = args.get_parsed("res", 224usize);
-    let cfg = parse_exec(args);
+    // With --artifact the model identity (arch, resolution, path) comes
+    // from the packed file and startup is a validation pass; otherwise
+    // the model is generated and packed online as before.
+    let artifact = args.get("artifact").map(|p| load_artifact("serve", p));
+    let (arch, res) = match &artifact {
+        Some(art) => (artifact_arch(&art.arch), art.res),
+        None => (parse_model(args), args.get_parsed("res", 224usize)),
+    };
     let requests = args.get_parsed("requests", 32usize);
     let max_batch = args.get_parsed("max-batch", 4usize);
     // Mixed-traffic flags: --prio-mix F submits fraction F of requests
@@ -162,24 +264,42 @@ fn cmd_serve(args: &Args) {
     } else {
         QueueDiscipline::Fifo
     };
-    let server = Server::start(
-        |b| build_model(arch, b, res),
-        cfg,
-        res,
-        ServerConfig {
-            batch_sizes: (0..)
-                .map(|i| 1usize << i)
-                .take_while(|&b| b <= max_batch)
-                .collect(),
-            batch_window: std::time::Duration::from_millis(
-                args.get_parsed("window-ms", 5u64),
-            ),
-            executors: args.get_parsed("executors", 1usize),
-            adaptive: args.has_flag("adaptive"),
-            discipline,
-            ..ServerConfig::default()
-        },
-    );
+    let scfg = ServerConfig {
+        batch_sizes: (0..)
+            .map(|i| 1usize << i)
+            .take_while(|&b| b <= max_batch)
+            .collect(),
+        batch_window: std::time::Duration::from_millis(
+            args.get_parsed("window-ms", 5u64),
+        ),
+        executors: args.get_parsed("executors", 1usize),
+        adaptive: args.has_flag("adaptive"),
+        discipline,
+        ..ServerConfig::default()
+    };
+    let t0 = Instant::now();
+    let server = match &artifact {
+        Some(art) => {
+            let server = Server::start_packed(
+                |b| build_model(arch, b, res),
+                parse_pool(args),
+                art,
+                scfg,
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            });
+            println!(
+                "model load (AOT artifact): {:.1} ms",
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            server
+        }
+        None => {
+            Server::start(|b| build_model(arch, b, res), parse_exec(args), res, scfg)
+        }
+    };
     println!(
         "serving {requests} requests on {} @{res} ({discipline:?} intake) ...",
         arch.name()

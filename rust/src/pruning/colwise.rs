@@ -85,6 +85,149 @@ impl ColwisePruned {
             .map(|t| 2 * t.indices.len() * t.row_count * v)
             .sum()
     }
+
+    /// Exact byte length of [`Self::encode_into`]'s output — lets a
+    /// caller reserve aligned storage ahead of the write.
+    pub fn encoded_len(&self) -> usize {
+        6 * 4
+            + self
+                .tiles
+                .iter()
+                .map(|t| 3 * 4 + 4 * t.indices.len() + 4 * t.values.len())
+                .sum::<usize>()
+    }
+
+    /// Serialize into caller-provided storage (little-endian, the
+    /// packed-weight artifact's per-layer payload): the six header words
+    /// `rows cols tile n m n_tiles`, then per tile `row_start row_count
+    /// idx_count`, the `u32` retained indices, and the `f32` values.
+    /// Appends exactly [`Self::encoded_len`] bytes to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let w32 = |out: &mut Vec<u8>, v: usize| out.extend_from_slice(&(v as u32).to_le_bytes());
+        w32(out, self.rows);
+        w32(out, self.cols);
+        w32(out, self.tile);
+        w32(out, self.n);
+        w32(out, self.m);
+        w32(out, self.tiles.len());
+        for t in &self.tiles {
+            w32(out, t.row_start);
+            w32(out, t.row_count);
+            w32(out, t.indices.len());
+            for &i in &t.indices {
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+            for &v in &t.values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode an [`Self::encode_into`] payload from `bytes`, returning
+    /// the matrix and the number of bytes consumed. Every structural
+    /// invariant is revalidated with hard (release-mode) checks —
+    /// truncated payloads, out-of-range indices, unsorted index sets,
+    /// or tiles that don't cover the rows exactly all error instead of
+    /// producing a matrix the kernels would mis-execute.
+    pub fn decode(bytes: &[u8]) -> std::result::Result<(Self, usize), String> {
+        fn r32(bytes: &[u8], pos: &mut usize) -> std::result::Result<usize, String> {
+            let end = pos
+                .checked_add(4)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| format!("colwise payload truncated at byte {pos}"))?;
+            let v = u32::from_le_bytes(bytes[*pos..end].try_into().unwrap());
+            *pos = end;
+            Ok(v as usize)
+        }
+        let mut pos = 0usize;
+        let rows = r32(bytes, &mut pos)?;
+        let cols = r32(bytes, &mut pos)?;
+        let tile = r32(bytes, &mut pos)?;
+        let n = r32(bytes, &mut pos)?;
+        let m = r32(bytes, &mut pos)?;
+        let n_tiles = r32(bytes, &mut pos)?;
+        if rows == 0 || cols == 0 || tile == 0 {
+            return Err(format!("colwise payload: zero dims {rows}x{cols} tile {tile}"));
+        }
+        if n == 0 || m == 0 || n > m || cols % m != 0 {
+            return Err(format!("colwise payload: invalid N:M = {n}:{m} for {cols} cols"));
+        }
+        if n_tiles != rows.div_ceil(tile) {
+            return Err(format!(
+                "colwise payload: {n_tiles} tiles but {rows} rows / tile {tile} needs {}",
+                rows.div_ceil(tile)
+            ));
+        }
+        let mut tiles = Vec::with_capacity(n_tiles);
+        let mut expect_row = 0usize;
+        for ti in 0..n_tiles {
+            let row_start = r32(bytes, &mut pos)?;
+            let row_count = r32(bytes, &mut pos)?;
+            let idx_count = r32(bytes, &mut pos)?;
+            if row_start != expect_row
+                || row_count != tile.min(rows - row_start.min(rows))
+                || row_start + row_count > rows
+            {
+                return Err(format!(
+                    "colwise payload: tile {ti} covers rows {row_start}+{row_count}, \
+                     expected start {expect_row}"
+                ));
+            }
+            if idx_count > cols {
+                return Err(format!(
+                    "colwise payload: tile {ti} retains {idx_count} of {cols} columns"
+                ));
+            }
+            let mut indices = Vec::with_capacity(idx_count);
+            for _ in 0..idx_count {
+                let c = r32(bytes, &mut pos)?;
+                if c >= cols {
+                    return Err(format!("colwise payload: column index {c} >= {cols}"));
+                }
+                if let Some(&prev) = indices.last() {
+                    if c as u32 <= prev {
+                        return Err(format!(
+                            "colwise payload: tile {ti} indices not strictly ascending"
+                        ));
+                    }
+                }
+                indices.push(c as u32);
+            }
+            let n_vals = row_count * idx_count;
+            let end = pos
+                .checked_add(4 * n_vals)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| format!("colwise payload truncated in tile {ti} values"))?;
+            let mut values = Vec::with_capacity(n_vals);
+            for off in (pos..end).step_by(4) {
+                values.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            }
+            pos = end;
+            expect_row = row_start + row_count;
+            tiles.push(ColTile {
+                row_start,
+                row_count,
+                indices,
+                values,
+            });
+        }
+        if expect_row != rows {
+            return Err(format!(
+                "colwise payload: tiles cover {expect_row} of {rows} rows"
+            ));
+        }
+        Ok((
+            Self {
+                rows,
+                cols,
+                tile,
+                n,
+                m,
+                tiles,
+            },
+            pos,
+        ))
+    }
 }
 
 /// Prune `w[rows, cols]` column-wise with groups of `M` consecutive
@@ -359,6 +502,58 @@ mod tests {
                 p2.decompress() == d1
             },
         );
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bitwise() {
+        let mut r = XorShiftRng::new(0xA07);
+        for (rows, cols, tile, n, m) in
+            [(5, 8, 2, 2, 4), (16, 64, 8, 4, 64), (1, 4, 3, 1, 2), (7, 12, 7, 3, 12)]
+        {
+            let w = r.normal_vec(rows * cols, 1.0);
+            let p = prune_colwise(&w, rows, cols, tile, n, m);
+            let mut bytes = Vec::new();
+            p.encode_into(&mut bytes);
+            assert_eq!(bytes.len(), p.encoded_len());
+            let (q, used) = ColwisePruned::decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!((q.rows, q.cols, q.tile, q.n, q.m), (rows, cols, tile, n, m));
+            assert_eq!(q.tiles.len(), p.tiles.len());
+            for (a, b) in p.tiles.iter().zip(&q.tiles) {
+                assert_eq!(a.indices, b.indices);
+                // bit-for-bit, not approximate: to_bits comparison.
+                assert_eq!(
+                    a.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corrupted_payloads() {
+        let mut r = XorShiftRng::new(0xA08);
+        let w = r.normal_vec(8 * 16, 1.0);
+        let p = prune_colwise(&w, 8, 16, 4, 2, 4);
+        let mut good = Vec::new();
+        p.encode_into(&mut good);
+        assert!(ColwisePruned::decode(&good).is_ok());
+        // Truncation at every prefix length must error, never panic.
+        for len in 0..good.len() {
+            assert!(ColwisePruned::decode(&good[..len]).is_err(), "prefix {len}");
+        }
+        // Out-of-range retained index.
+        let mut bad = good.clone();
+        bad[6 * 4 + 3 * 4..6 * 4 + 4 * 4].copy_from_slice(&999u32.to_le_bytes());
+        assert!(ColwisePruned::decode(&bad).is_err());
+        // Tile-count / row-coverage mismatch.
+        let mut bad = good.clone();
+        bad[5 * 4..6 * 4].copy_from_slice(&7u32.to_le_bytes());
+        assert!(ColwisePruned::decode(&bad).is_err());
+        // Invalid N:M header.
+        let mut bad = good;
+        bad[3 * 4..4 * 4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(ColwisePruned::decode(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! Versioned binary packed-weight artifacts (`nmprune pack`).
+//!
+//! An artifact freezes everything the executor otherwise derives at
+//! load time: the pruned column-wise N:M conv weights (compressed form,
+//! verbatim), dense filter matrices for unpruned layers, the tuner's
+//! per-layer micro-kernel choices, and the shape/seed metadata needed
+//! to validate that the artifact matches the graph it is loaded into.
+//! Loading becomes a validation pass — no re-pruning, no re-packing —
+//! so logits from an AOT-packed artifact are bitwise identical to the
+//! online-packed path (`rust/tests/zero_alloc.rs` proves it).
+//!
+//! Layout (little-endian throughout):
+//!
+//! ```text
+//! magic "NMPK" | version u32 | arch str | batch u32 | res u32
+//! path u8 | sparsity f64-bits u64 | seed u64 | default choice 3×u32
+//! n_layers u32
+//! per layer:
+//!   name str | kind u8 (0 dense, 1 sparse) | choice 3×u32
+//!   conv shape 9×u32 | payload_len u64
+//!   zero padding to a 64-byte-aligned payload offset | payload
+//! fnv1a-64 checksum u64 over all preceding bytes
+//! ```
+//!
+//! Strings are `u32` length + UTF-8 bytes. Dense payloads are the
+//! `[C_out, K]` filter matrix as raw f32; sparse payloads are
+//! [`ColwisePruned::encode_into`] bytes. Payload 64-byte alignment lets
+//! a future mmap-based loader hand vector kernels aligned weight
+//! pointers without copying.
+//!
+//! Every decode failure — truncation, bad magic/version, checksum
+//! mismatch, misaligned or short payloads, invalid shapes — returns a
+//! [`RuntimeError`](super::RuntimeError); the loader never panics on
+//! file bytes and none of its validation is `debug_assert`-only.
+
+use std::path::Path;
+
+use super::{err, Result};
+use crate::conv::{ConvPath, ConvShape};
+use crate::engine::LayerChoice;
+use crate::pruning::ColwisePruned;
+
+/// File magic: "NMPK" (N:M packed weights).
+pub const MAGIC: [u8; 4] = *b"NMPK";
+/// Current schema version.
+pub const VERSION: u32 = 1;
+/// Payload alignment in bytes.
+pub const PAYLOAD_ALIGN: usize = 64;
+
+/// Weights of one conv layer, in execution-ready form.
+#[derive(Clone, Debug)]
+pub enum LayerWeights {
+    /// Unpruned `[C_out, K]` filter matrix (row-major).
+    Dense(Vec<f32>),
+    /// Column-wise N:M compressed weights, stored verbatim.
+    Sparse(ColwisePruned),
+}
+
+/// One conv layer of a packed artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactLayer {
+    /// Layer name (must match the graph node name on load).
+    pub name: String,
+    /// Tuned micro-kernel parameters for this layer.
+    pub choice: LayerChoice,
+    /// Conv geometry (validated against the graph on load).
+    pub shape: ConvShape,
+    pub weights: LayerWeights,
+}
+
+/// A packed-weight artifact: per-layer conv weights + tuner choices +
+/// enough metadata to validate compatibility with a graph at load time.
+#[derive(Clone, Debug)]
+pub struct PackedArtifact {
+    /// Architecture name (e.g. "resnet18").
+    pub arch: String,
+    /// Batch size the graph was built for.
+    pub batch: usize,
+    /// Input resolution the graph was built for.
+    pub res: usize,
+    /// Execution path the weights were prepared for.
+    pub path: ConvPath,
+    /// Column-wise adaptive sparsity ratio (SparseCnhw path).
+    pub sparsity: f64,
+    /// Weight-generation seed (regenerates depthwise/FC params, which
+    /// the artifact deliberately omits — they are seed-derived and
+    /// path-independent).
+    pub seed: u64,
+    /// Fallback micro-kernel parameters.
+    pub default_choice: LayerChoice,
+    /// Conv layers in graph (topological) order.
+    pub layers: Vec<ArtifactLayer>,
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn path_code(p: ConvPath) -> u8 {
+    match p {
+        ConvPath::DenseNhwc => 0,
+        ConvPath::DenseCnhw => 1,
+        ConvPath::SparseCnhw => 2,
+    }
+}
+
+fn path_from_code(b: u8) -> Result<ConvPath> {
+    match b {
+        0 => Ok(ConvPath::DenseNhwc),
+        1 => Ok(ConvPath::DenseCnhw),
+        2 => Ok(ConvPath::SparseCnhw),
+        _ => Err(err(format!("artifact: unknown path code {b}"))),
+    }
+}
+
+fn w32(out: &mut Vec<u8>, v: usize) {
+    out.extend_from_slice(&(v as u32).to_le_bytes());
+}
+
+fn w64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn wstr(out: &mut Vec<u8>, s: &str) {
+    w32(out, s.len());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn wchoice(out: &mut Vec<u8>, c: LayerChoice) {
+    w32(out, c.v);
+    w32(out, c.tile);
+    w32(out, c.threads);
+}
+
+/// Bounds-checked read cursor: every read that would run past the end
+/// of the buffer is a hard [`RuntimeError`], never a panic.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                err(format!("artifact truncated at byte {} reading {what}", self.pos))
+            })?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<usize> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()) as usize)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)?;
+        let b = self.take(len, what)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| err(format!("artifact: {what} is not valid UTF-8")))
+    }
+
+    fn choice(&mut self, what: &str) -> Result<LayerChoice> {
+        Ok(LayerChoice {
+            v: self.u32(what)?,
+            tile: self.u32(what)?,
+            threads: self.u32(what)?,
+        })
+    }
+}
+
+/// Reconstruct and sanity-check a conv shape from file bytes. Zero
+/// dims, zero stride, or kernels exceeding the padded input (which
+/// would underflow `h_out()`) are all load errors, not panics.
+fn validated_shape(cur: &mut Cur<'_>, layer: &str) -> Result<ConvShape> {
+    let mut f = [0usize; 9];
+    for v in &mut f {
+        *v = cur.u32("conv shape")?;
+    }
+    let [n, c_in, h_in, w_in, c_out, kh, kw, stride, pad] = f;
+    if [n, c_in, h_in, w_in, c_out, kh, kw, stride].contains(&0) {
+        return Err(err(format!("artifact: layer {layer:?} has a zero conv dimension")));
+    }
+    if h_in + 2 * pad < kh || w_in + 2 * pad < kw {
+        return Err(err(format!(
+            "artifact: layer {layer:?} kernel {kh}x{kw} exceeds padded input \
+             {h_in}x{w_in}+{pad}"
+        )));
+    }
+    Ok(ConvShape {
+        n,
+        c_in,
+        h_in,
+        w_in,
+        c_out,
+        kh,
+        kw,
+        stride,
+        pad,
+    })
+}
+
+impl PackedArtifact {
+    /// Serialize to the versioned binary format (checksum included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        w32(&mut out, VERSION as usize);
+        wstr(&mut out, &self.arch);
+        w32(&mut out, self.batch);
+        w32(&mut out, self.res);
+        out.push(path_code(self.path));
+        w64(&mut out, self.sparsity.to_bits());
+        w64(&mut out, self.seed);
+        wchoice(&mut out, self.default_choice);
+        w32(&mut out, self.layers.len());
+        let mut payload = Vec::new();
+        for layer in &self.layers {
+            wstr(&mut out, &layer.name);
+            payload.clear();
+            let kind = match &layer.weights {
+                LayerWeights::Dense(f) => {
+                    for v in f {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                    0u8
+                }
+                LayerWeights::Sparse(p) => {
+                    p.encode_into(&mut payload);
+                    1u8
+                }
+            };
+            out.push(kind);
+            wchoice(&mut out, layer.choice);
+            let s = &layer.shape;
+            for v in [s.n, s.c_in, s.h_in, s.w_in, s.c_out, s.kh, s.kw, s.stride, s.pad] {
+                w32(&mut out, v);
+            }
+            w64(&mut out, payload.len() as u64);
+            while out.len() % PAYLOAD_ALIGN != 0 {
+                out.push(0);
+            }
+            out.extend_from_slice(&payload);
+        }
+        let sum = fnv1a64(&out);
+        w64(&mut out, sum);
+        out
+    }
+
+    /// Parse and fully validate an encoded artifact. Checksum first
+    /// (whole-file integrity), then structure: any corruption yields a
+    /// descriptive [`RuntimeError`](super::RuntimeError).
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 {
+            return Err(err(format!("artifact truncated: {} bytes", bytes.len())));
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        let computed = fnv1a64(body);
+        if stored != computed {
+            return Err(err(format!(
+                "artifact checksum mismatch: stored {stored:016x}, computed {computed:016x}"
+            )));
+        }
+        let mut cur = Cur { b: body, pos: 0 };
+        let magic = cur.take(4, "magic")?;
+        if magic != MAGIC {
+            return Err(err(format!("artifact: bad magic {magic:02x?}, expected \"NMPK\"")));
+        }
+        let version = cur.u32("version")?;
+        if version != VERSION as usize {
+            return Err(err(format!(
+                "artifact: unsupported schema version {version} (this build reads {VERSION})"
+            )));
+        }
+        let arch = cur.str("arch name")?;
+        let batch = cur.u32("batch")?;
+        let res = cur.u32("resolution")?;
+        let path = path_from_code(cur.u8("path")?)?;
+        let sparsity = f64::from_bits(cur.u64("sparsity")?);
+        let seed = cur.u64("seed")?;
+        let default_choice = cur.choice("default choice")?;
+        let n_layers = cur.u32("layer count")?;
+        // Not with_capacity(n_layers): the count is untrusted file data
+        // and must not size an allocation before the layers parse.
+        let mut layers = Vec::new();
+        for li in 0..n_layers {
+            let name = cur.str("layer name")?;
+            let kind = cur.u8("layer kind")?;
+            let choice = cur.choice("layer choice")?;
+            let shape = validated_shape(&mut cur, &name)?;
+            let payload_len = cur.u64("payload length")? as usize;
+            let pad = (PAYLOAD_ALIGN - cur.pos % PAYLOAD_ALIGN) % PAYLOAD_ALIGN;
+            cur.take(pad, "payload alignment padding")?;
+            if cur.pos % PAYLOAD_ALIGN != 0 {
+                return Err(err(format!("artifact: layer {li} payload misaligned")));
+            }
+            let payload = cur.take(payload_len, "layer payload")?;
+            // K = Kh·Kw·C_in in u128: the fields are untrusted u32s and
+            // the product must not overflow before it is checked.
+            let k = shape.kh as u128 * shape.kw as u128 * shape.c_in as u128;
+            let weights = match kind {
+                0 => {
+                    let expect = 4 * shape.c_out as u128 * k;
+                    if payload_len as u128 != expect {
+                        return Err(err(format!(
+                            "artifact: layer {name:?} dense payload is {payload_len} \
+                             bytes, shape needs {expect}"
+                        )));
+                    }
+                    let f = payload
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    LayerWeights::Dense(f)
+                }
+                1 => {
+                    let (p, used) = ColwisePruned::decode(payload)
+                        .map_err(|e| err(format!("artifact: layer {name:?}: {e}")))?;
+                    if used != payload_len {
+                        return Err(err(format!(
+                            "artifact: layer {name:?} sparse payload has {} trailing bytes",
+                            payload_len - used
+                        )));
+                    }
+                    if p.rows as u128 != shape.c_out as u128 || p.cols as u128 != k {
+                        return Err(err(format!(
+                            "artifact: layer {name:?} sparse weights are {}x{}, shape \
+                             needs {}x{k}",
+                            p.rows, p.cols, shape.c_out
+                        )));
+                    }
+                    LayerWeights::Sparse(p)
+                }
+                _ => {
+                    return Err(err(format!(
+                        "artifact: layer {name:?} has unknown weight kind {kind}"
+                    )))
+                }
+            };
+            layers.push(ArtifactLayer {
+                name,
+                choice,
+                shape,
+                weights,
+            });
+        }
+        if cur.pos != body.len() {
+            return Err(err(format!(
+                "artifact: {} trailing bytes after last layer",
+                body.len() - cur.pos
+            )));
+        }
+        Ok(Self {
+            arch,
+            batch,
+            res,
+            path,
+            sparsity,
+            seed,
+            default_choice,
+            layers,
+        })
+    }
+
+    /// Write the encoded artifact to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.encode())
+            .map_err(|e| err(format!("writing artifact {path:?}: {e}")))
+    }
+
+    /// Read and validate an artifact file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| err(format!("reading artifact {path:?}: {e}")))?;
+        Self::decode(&bytes).map_err(|e| err(format!("artifact {path:?}: {e}")))
+    }
+
+    /// Total payload bytes across layers (weight footprint on disk,
+    /// excluding headers/padding).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match &l.weights {
+                LayerWeights::Dense(f) => 4 * f.len(),
+                LayerWeights::Sparse(p) => p.encoded_len(),
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::prune_colwise;
+    use crate::util::XorShiftRng;
+
+    fn sample() -> PackedArtifact {
+        let mut r = XorShiftRng::new(0xA5);
+        let s1 = ConvShape::square(1, 3, 8, 16, 3, 1, 1);
+        let dense: Vec<f32> = r.normal_vec(s1.c_out * s1.k(), 1.0);
+        let s2 = ConvShape::square(1, 16, 8, 8, 3, 1, 1);
+        let w2 = r.normal_vec(s2.c_out * s2.k(), 1.0);
+        let sparse = prune_colwise(&w2, s2.c_out, s2.k(), 4, 2, 4);
+        PackedArtifact {
+            arch: "resnet18".into(),
+            batch: 1,
+            res: 8,
+            path: ConvPath::SparseCnhw,
+            sparsity: 0.5,
+            seed: 42,
+            default_choice: LayerChoice::default(),
+            layers: vec![
+                ArtifactLayer {
+                    name: "stem".into(),
+                    choice: LayerChoice {
+                        v: 16,
+                        tile: 4,
+                        threads: 2,
+                    },
+                    shape: s1,
+                    weights: LayerWeights::Dense(dense),
+                },
+                ArtifactLayer {
+                    name: "s1b0-conv1".into(),
+                    choice: LayerChoice::default(),
+                    shape: s2,
+                    weights: LayerWeights::Sparse(sparse),
+                },
+            ],
+        }
+    }
+
+    /// Re-sign a tampered body so structural validation (not the
+    /// checksum) is what rejects it.
+    fn resign(bytes: &mut Vec<u8>) {
+        let n = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..n]);
+        bytes[n..].copy_from_slice(&sum.to_le_bytes());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bitwise() {
+        let a = sample();
+        let bytes = a.encode();
+        let b = PackedArtifact::decode(&bytes).unwrap();
+        assert_eq!(b.arch, "resnet18");
+        assert_eq!((b.batch, b.res, b.seed), (1, 8, 42));
+        assert_eq!(b.path, ConvPath::SparseCnhw);
+        assert_eq!(b.sparsity.to_bits(), 0.5f64.to_bits());
+        assert_eq!(b.layers.len(), 2);
+        assert_eq!(b.layers[0].name, "stem");
+        assert_eq!(b.layers[1].choice, LayerChoice::default());
+        // Bitwise: re-encoding the decoded artifact reproduces the file.
+        assert_eq!(b.encode(), bytes);
+        assert_eq!(a.weight_bytes(), b.weight_bytes());
+    }
+
+    #[test]
+    fn payloads_are_64_byte_aligned() {
+        let bytes = sample().encode();
+        // Find each payload by re-walking the header structure: the
+        // padding loop in encode() must have landed every payload on a
+        // PAYLOAD_ALIGN boundary. Cheap proxy: the file contains at
+        // least one run of padding and decode (which checks pos %
+        // PAYLOAD_ALIGN == 0 after skipping) accepts it.
+        assert!(PackedArtifact::decode(&bytes).is_ok());
+        assert!(bytes.len() > PAYLOAD_ALIGN);
+    }
+
+    #[test]
+    fn every_truncation_errors_never_panics() {
+        let bytes = sample().encode();
+        for len in 0..bytes.len() {
+            assert!(
+                PackedArtifact::decode(&bytes[..len]).is_err(),
+                "prefix of {len} bytes decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_rejected() {
+        let good = sample().encode();
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                PackedArtifact::decode(&bad).is_err(),
+                "flip at byte {i} decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn structural_corruption_yields_descriptive_errors() {
+        let good = sample().encode();
+        // (offset, corrupt bytes, expected error fragment) — each case
+        // is re-signed so the checksum passes and the structural check
+        // itself must fire.
+        let cases: Vec<(usize, Vec<u8>, &str)> = vec![
+            (0, b"JUNK".to_vec(), "bad magic"),
+            (4, 9u32.to_le_bytes().to_vec(), "unsupported schema version"),
+            // path byte sits after magic+version+arch str+batch+res.
+            (4 + 4 + 4 + 8 + 4 + 4, vec![9], "unknown path code"),
+        ];
+        for (off, bad_bytes, want) in cases {
+            let mut bad = good.clone();
+            bad[off..off + bad_bytes.len()].copy_from_slice(&bad_bytes);
+            resign(&mut bad);
+            let e = PackedArtifact::decode(&bad).unwrap_err().to_string();
+            assert!(e.contains(want), "offset {off}: got {e:?}, want {want:?}");
+        }
+    }
+
+    #[test]
+    fn checksum_mismatch_is_reported_as_such() {
+        let mut bad = sample().encode();
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        let e = PackedArtifact::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "{e}");
+    }
+
+    #[test]
+    fn unknown_layer_kind_is_rejected() {
+        let a = sample();
+        let bytes = a.encode();
+        // Locate layer 0's kind byte: it follows the fixed header and
+        // the layer-0 name string.
+        let header = 4 + 4 + (4 + a.arch.len()) + 4 + 4 + 1 + 8 + 8 + 12 + 4;
+        let kind_off = header + 4 + a.layers[0].name.len();
+        assert_eq!(bytes[kind_off], 0, "expected dense kind byte");
+        let mut bad = bytes.clone();
+        bad[kind_off] = 7;
+        resign(&mut bad);
+        let e = PackedArtifact::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("unknown weight kind"), "{e}");
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_missing_file_error() {
+        let dir = std::env::temp_dir().join("nmprune_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.nmpk");
+        let a = sample();
+        a.save(&p).unwrap();
+        let b = PackedArtifact::load(&p).unwrap();
+        assert_eq!(b.encode(), a.encode());
+        assert!(PackedArtifact::load(&dir.join("missing.nmpk")).is_err());
+        // A truncated file on disk errors with the file path included.
+        let bytes = a.encode();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        let e = PackedArtifact::load(&p).unwrap_err().to_string();
+        assert!(e.contains("m.nmpk"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -14,9 +14,13 @@
 //! implemented and tested; swapping the stub for real PJRT bindings is
 //! confined to [`PjrtRuntime`]'s backend methods.
 
+pub mod artifact;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+
+pub use artifact::{ArtifactLayer, LayerWeights, PackedArtifact};
 
 /// Runtime-layer error (the offline stand-in for `anyhow::Error`).
 #[derive(Debug, Clone)]

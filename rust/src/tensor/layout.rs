@@ -37,6 +37,23 @@ pub fn nhwc_to_cnhw(x: &Tensor) -> Tensor {
     x.permute(&[3, 0, 1, 2])
 }
 
+/// [`nhwc_to_cnhw`] writing into a caller-provided tensor already shaped
+/// `[C, N, H, W]` (zero-alloc hot-path entry for the serving arena).
+pub fn nhwc_to_cnhw_into(x: &Tensor, out: &mut Tensor) {
+    assert_eq!(x.rank(), 4, "activation must be rank 4");
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(out.shape, [c, n, h, w], "output tensor shape");
+    let hw = h * w;
+    for ni in 0..n {
+        for p in 0..hw {
+            let src = &x.data[(ni * hw + p) * c..(ni * hw + p + 1) * c];
+            for (ci, &v) in src.iter().enumerate() {
+                out.data[(ci * n + ni) * hw + p] = v;
+            }
+        }
+    }
+}
+
 /// CNHW `[C, N, H, W]` back to NHWC `[N, H, W, C]`.
 pub fn cnhw_to_nhwc(x: &Tensor) -> Tensor {
     assert_eq!(x.rank(), 4);
@@ -94,6 +111,16 @@ mod tests {
         assert_eq!(c.shape, vec![3, 2, 4, 5]);
         let back = cnhw_to_nhwc(&c);
         assert_eq!(back, x);
+    }
+
+    #[test]
+    fn nhwc_to_cnhw_into_matches_permute() {
+        let mut r = XorShiftRng::new(3);
+        let x = Tensor::random(&[2, 4, 5, 3], &mut r, -1.0, 1.0);
+        let want = nhwc_to_cnhw(&x);
+        let mut out = Tensor::zeros(&[3, 2, 4, 5]);
+        nhwc_to_cnhw_into(&x, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

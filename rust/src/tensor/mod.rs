@@ -73,17 +73,19 @@ impl Tensor {
     }
 
     /// Flat index of a multi-dimensional coordinate (debug-checked).
+    /// Strides are folded in-line rather than materialised — `at` /
+    /// `at_mut` sit inside op inner loops on the zero-alloc serving
+    /// path, so this must not heap-allocate.
     pub fn flat(&self, idx: &[usize]) -> usize {
         debug_assert_eq!(idx.len(), self.shape.len());
-        let strides = self.strides();
-        idx.iter()
-            .zip(&strides)
-            .zip(&self.shape)
-            .map(|((&i, &s), &d)| {
-                debug_assert!(i < d, "index {i} out of bound {d}");
-                i * s
-            })
-            .sum()
+        let mut off = 0;
+        let mut stride = 1;
+        for d in (0..self.shape.len()).rev() {
+            debug_assert!(idx[d] < self.shape[d], "index {} out of bound {}", idx[d], self.shape[d]);
+            off += idx[d] * stride;
+            stride *= self.shape[d];
+        }
+        off
     }
 
     /// Element access by coordinate.

@@ -1,0 +1,122 @@
+//! Opt-in allocation counting for the zero-alloc serving guarantee.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts heap
+//! allocations made while the *current thread* is inside a [`scoped`]
+//! region. It observes nothing unless a binary registers it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: nmprune::util::allocwatch::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! The zero-alloc integration tests (`rust/tests/zero_alloc.rs`) do
+//! exactly that. Production binaries don't, so the `scoped` wrappers on
+//! the serving hot path cost two thread-local stores per batch and
+//! count nothing — the instrumentation is structurally inert outside
+//! the test harness.
+//!
+//! Counting is deliberately per-thread, not process-global: `cargo
+//! test` runs tests on concurrent threads, and a global counter would
+//! pick up every other test's allocations. The serving layer therefore
+//! scopes *inside* each dispatcher thread (the thread doing the
+//! compute) and aggregates the deltas into its stats, where the test
+//! can read them.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocation totals observed inside one [`scoped`] region.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScopeStats {
+    /// Number of heap allocations (malloc + growing realloc).
+    pub allocs: u64,
+    /// Total bytes requested by those allocations.
+    pub bytes: u64,
+}
+
+fn note(bytes: usize) {
+    // try_with, not with: the global allocator can be re-entered during
+    // TLS teardown, when `with` would panic.
+    let _ = ACTIVE.try_with(|a| {
+        if a.get() {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            let _ = BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+        }
+    });
+}
+
+/// System-allocator wrapper that attributes allocations to the current
+/// thread's open [`scoped`] region. Frees are not counted — the
+/// zero-alloc property under test is "no allocation traffic in steady
+/// state", and any steady-state free implies a matching allocation.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A shrinking realloc releases memory; only growth is traffic.
+        if new_size > layout.size() {
+            note(new_size);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Run `f` with allocation counting enabled on this thread; returns its
+/// result plus the totals observed while it ran. Regions nest — an
+/// inner region's traffic is included in the outer region's totals.
+/// Without a registered [`CountingAlloc`] the totals are always zero.
+pub fn scoped<T>(f: impl FnOnce() -> T) -> (T, ScopeStats) {
+    let (a0, b0) = (ALLOCS.with(Cell::get), BYTES.with(Cell::get));
+    let was = ACTIVE.with(|a| a.replace(true));
+    let out = f();
+    ACTIVE.with(|a| a.set(was));
+    let stats = ScopeStats {
+        allocs: ALLOCS.with(Cell::get) - a0,
+        bytes: BYTES.with(Cell::get) - b0,
+    };
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The lib test binary registers no global allocator, so scoped
+    /// regions must pass values through and report zero traffic — the
+    /// inert-in-production contract.
+    #[test]
+    fn inert_without_registered_allocator() {
+        let (v, stats) = scoped(|| vec![1u8; 4096].len());
+        assert_eq!(v, 4096);
+        assert_eq!(stats, ScopeStats::default());
+    }
+
+    #[test]
+    fn scoped_regions_nest_and_restore_the_flag() {
+        let ((inner, s_inner), s_outer) = scoped(|| scoped(|| 7));
+        assert_eq!(inner, 7);
+        assert_eq!(s_inner, ScopeStats::default());
+        assert_eq!(s_outer, ScopeStats::default());
+        assert!(!ACTIVE.with(Cell::get), "flag must be restored");
+    }
+}

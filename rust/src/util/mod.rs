@@ -3,6 +3,7 @@
 //! property-test driver (the vendored crate set has no
 //! rand/rayon/clap/serde/proptest).
 
+pub mod allocwatch;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;

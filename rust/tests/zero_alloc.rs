@@ -1,0 +1,173 @@
+//! Integration proof of the memory-plane refactor: with a counting
+//! global allocator installed for this whole test binary, a warmed
+//! executor and a warmed server perform ZERO heap allocations per
+//! request in the compute plane, and AOT-packed artifacts round-trip
+//! through disk bitwise — across pool sizes and serving modes.
+//!
+//! Counting is per-thread (see `util::allocwatch`), so the concurrent
+//! test threads `cargo test` runs don't pollute each other's scopes;
+//! the server aggregates its dispatcher-thread measurements into
+//! `ServerStats::compute_allocs` where this test reads them.
+//!
+//! The strict zero assertions run on single-worker pools: the pool's
+//! serial fast path executes jobs inline on the calling thread, while
+//! the parallel path boxes jobs per strip (measured, but a scheduling
+//! cost — not part of the per-request compute-plane guarantee).
+
+use std::time::Duration;
+
+use nmprune::engine::{ExecConfig, Executor, Server, ServerConfig};
+use nmprune::models::{build_model, ModelArch};
+use nmprune::runtime::PackedArtifact;
+use nmprune::tensor::Tensor;
+use nmprune::util::allocwatch::{self, CountingAlloc, ScopeStats};
+use nmprune::util::{ThreadPool, XorShiftRng};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn image(batch: usize, res: usize, seed: u64) -> Tensor {
+    let mut r = XorShiftRng::new(seed);
+    Tensor::random(&[batch, res, res, 3], &mut r, 0.0, 1.0)
+}
+
+/// A warmed executor running inside its scratch arena performs no heap
+/// allocation at all — the tentpole guarantee, measured for both CNHW
+/// paths (the paper's sparse path and the dense baseline).
+#[test]
+fn warmed_arena_execution_is_allocation_free() {
+    let res = 32;
+    let configs = [
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+        ExecConfig::dense_cnhw(ThreadPool::shared(1)),
+    ];
+    for cfg in configs {
+        let label = cfg.path;
+        let exec = Executor::new(build_model(ModelArch::ResNet18, 1, res), cfg);
+        let mut arena = exec.scratch();
+        // Warm once. (The arena is fully preallocated and pre-faulted,
+        // so even this first run should be clean — but the guarantee
+        // under test is the steady state.)
+        let x = image(1, res, 1);
+        exec.run_in(&x, &mut arena);
+        for round in 0..3u64 {
+            let x = image(1, res, 2 + round);
+            let (_, stats) = allocwatch::scoped(|| {
+                exec.run_in(&x, &mut arena);
+            });
+            assert_eq!(
+                stats,
+                ScopeStats::default(),
+                "{label:?} round {round} allocated on the compute plane"
+            );
+        }
+    }
+}
+
+/// End-to-end serving: every batch a single-worker server executes —
+/// the first included, because arenas and staging tensors are
+/// preallocated at dispatcher startup — runs its compute plane without
+/// touching the heap. Reply transport is outside the measured region
+/// by design.
+#[test]
+fn server_compute_plane_is_allocation_free() {
+    let res = 32;
+    let server = Server::start(
+        |b| build_model(ModelArch::ResNet18, b, res),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+        res,
+        ServerConfig {
+            batch_sizes: vec![1, 2],
+            batch_window: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    );
+    for i in 0..8u64 {
+        let mut r = XorShiftRng::new(i);
+        let img = Tensor::random(&[res, res, 3], &mut r, 0.0, 1.0);
+        let reply = server.submit(img).recv().expect("reply");
+        assert_eq!(reply.logits.len(), 1000);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 8);
+    assert!(!stats.compute_allocs.is_empty(), "batches must be measured");
+    for (i, &(allocs, bytes)) in stats.compute_allocs.iter().enumerate() {
+        assert_eq!(
+            (allocs, bytes),
+            (0, 0),
+            "batch {i} allocated on the compute plane"
+        );
+    }
+}
+
+/// AOT artifact round-trip through disk: save → load → execute is
+/// bitwise identical to the executor that produced the artifact —
+/// across pool sizes {1, 2, 8}, in and out of the arena path, and when
+/// served by static and adaptive servers built from the same file.
+#[test]
+fn artifact_disk_roundtrip_is_bitwise_across_pools_and_modes() {
+    let res = 32;
+    let dir = std::env::temp_dir().join("nmprune_zero_alloc_artifact");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resnet18_s50.nmpk");
+    let art = Executor::new(
+        build_model(ModelArch::ResNet18, 1, res),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
+    )
+    .to_artifact();
+    art.save(&path).expect("save artifact");
+    let loaded = PackedArtifact::load(&path).expect("load artifact");
+
+    // Online-packed reference on a serial pool; pool size and caps are
+    // scheduling decisions and never change numerics.
+    let x = image(1, res, 9);
+    let want = Executor::new(
+        build_model(ModelArch::ResNet18, 1, res),
+        ExecConfig::sparse_cnhw(ThreadPool::shared(1), 0.5),
+    )
+    .run(&x);
+    for pool in [1usize, 2, 8] {
+        let exec = Executor::from_artifact(
+            build_model(ModelArch::ResNet18, 1, res),
+            ThreadPool::shared(pool),
+            &loaded,
+        )
+        .expect("artifact matches graph");
+        assert_eq!(exec.run(&x).data, want.data, "pool {pool}");
+        let mut arena = exec.scratch();
+        let got = exec.run_in(&x, &mut arena);
+        assert_eq!(got.data, want.data, "pool {pool} (arena)");
+    }
+
+    // Served from the same file, static and adaptive mode agree
+    // bitwise (scheduling is pure), and the first reply matches the
+    // direct run on its image.
+    let collect = |adaptive: bool| -> Vec<Vec<f32>> {
+        let server = Server::start_packed(
+            |b| build_model(ModelArch::ResNet18, b, res),
+            ThreadPool::shared(2),
+            &loaded,
+            ServerConfig {
+                batch_sizes: vec![1, 2],
+                batch_window: Duration::from_millis(2),
+                executors: 2,
+                adaptive,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("start from artifact");
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let mut r = XorShiftRng::new(9 + i);
+                server.submit(Tensor::random(&[res, res, 3], &mut r, 0.0, 1.0))
+            })
+            .collect();
+        let out = rxs.into_iter().map(|rx| rx.recv().unwrap().logits).collect();
+        server.shutdown();
+        out
+    };
+    let fixed = collect(false);
+    assert_eq!(fixed[0], want.data, "served logits match the direct run");
+    assert_eq!(fixed, collect(true), "serving mode changed numerics");
+    std::fs::remove_dir_all(&dir).ok();
+}
