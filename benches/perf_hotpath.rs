@@ -11,7 +11,7 @@ use nmprune::engine::{
     ExecConfig, Executor, Priority, QueueDiscipline, Server, ServerConfig, ServerStats,
 };
 use nmprune::gemm::threaded::spmm_colwise_parallel_capped;
-use nmprune::gemm::{gemm_dense, spmm_colwise};
+use nmprune::gemm::{gemm_dense, gemm_dense_with, kernels, spmm_colwise, spmm_colwise_with, KernelId};
 use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix};
 use nmprune::models::{build_model, ModelArch};
 use nmprune::pruning::prune_colwise_adaptive;
@@ -96,6 +96,46 @@ fn main() {
         format!("{:.3} ms", r.mean_ms()),
         format!("{:.2}", 0.25 * flops / r.mean_ns()),
     ]);
+
+    // Kernel identity: the same GEMM/spMM geometry with the backend
+    // pinned to the scalar oracle and to the best native backend this
+    // host resolves. The Auto rows above already *run* the native
+    // backend; these rows make the scalar-vs-native gap an explicit,
+    // tracked pair in every BENCH_*.json (and in CI's forced-kernel
+    // legs, where NMPRUNE_KERNEL overrides both pins identically).
+    let mut kernel_ids = vec![KernelId::Scalar];
+    let best = kernels::best_available();
+    if best != KernelId::Scalar {
+        kernel_ids.push(best);
+    }
+    for &kid in &kernel_ids {
+        let r = bench("dense-kern", cfg, || gemm_dense_with(&w, rows, &p, tile, kid));
+        rep.record(
+            "gemm_dense 64x576x3136",
+            RecordConfig::new(0, tile, 1).with_kernel(kid),
+            &r.summary,
+            Some(flops),
+        );
+        t.row(&[
+            format!("gemm_dense [{}]", kid.name()),
+            format!("{rows}x{k}x{cols} v{v} t{tile}"),
+            format!("{:.3} ms", r.mean_ms()),
+            format!("{:.2}", flops / r.mean_ns()),
+        ]);
+        let r = bench("colwise-kern", cfg, || spmm_colwise_with(&cp, &p, kid));
+        rep.record(
+            "spmm_colwise 50% 64x576x3136",
+            RecordConfig::new(0, tile, 1).with_kernel(kid),
+            &r.summary,
+            Some(0.5 * flops),
+        );
+        t.row(&[
+            format!("spmm_colwise 50% [{}]", kid.name()),
+            format!("{rows}x{k}x{cols} v{v} t{tile}"),
+            format!("{:.3} ms", r.mean_ms()),
+            format!("{:.2}", 0.5 * flops / r.mean_ns()),
+        ]);
+    }
 
     // Fused pack on the matching conv (64ch 56×56, 3×3 s1 p1).
     let s = ConvShape::square(1, 64, 56, 64, 3, 1, 1);

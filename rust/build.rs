@@ -1,0 +1,40 @@
+//! Build probe: gate AVX-512 kernels on the compiler that is actually
+//! building us. The `core::arch::x86_64::_mm512_*` intrinsics are only
+//! stable from rustc 1.89, but the crate floats on `channel = "stable"`
+//! with `rust-version = "1.75"` — so the AVX-512 backend is compiled in
+//! only when the probe proves the compiler supports it, and the scalar /
+//! AVX2 / NEON backends carry every older toolchain.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-..)" → 89. Nightly/beta suffixes parse too.
+    let semver = text.split_whitespace().nth(1)?;
+    let mut parts = semver.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    if major == 1 {
+        Some(minor)
+    } else {
+        // A hypothetical 2.x compiler supports everything 1.89 does.
+        Some(u32::MAX)
+    }
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let minor = rustc_minor().unwrap_or(0);
+    // `--check-cfg` only exists from 1.80; older cargos would choke on
+    // the directive itself, so it is version-gated like the cfg it
+    // declares.
+    if minor >= 80 {
+        println!("cargo:rustc-check-cfg=cfg(nmprune_avx512)");
+    }
+    let arch = std::env::var("CARGO_CFG_TARGET_ARCH").unwrap_or_default();
+    if arch == "x86_64" && minor >= 89 {
+        println!("cargo:rustc-cfg=nmprune_avx512");
+    }
+}

@@ -22,6 +22,7 @@
 use std::path::{Path, PathBuf};
 
 use super::hardware::{self, HwProfile};
+use crate::gemm::KernelId;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -31,10 +32,11 @@ use crate::util::stats::Summary;
 /// error).
 pub const SCHEMA_VERSION: usize = 1;
 
-/// The `(LMUL, tile, threads)` template configuration a record was
-/// measured at; `0` in any position means "not applicable / uncapped".
-/// Part of the record identity: `bench-diff` only compares records
-/// whose configurations match exactly.
+/// The `(LMUL, tile, threads, kernel)` template configuration a record
+/// was measured at; `0` in any numeric position means "not applicable
+/// / uncapped", and [`KernelId::Auto`] means "runtime dispatch /
+/// unspecified". Part of the record identity: `bench-diff` only
+/// compares records whose configurations match exactly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub struct RecordConfig {
     /// RVV LMUL (strip width / 8 on the 256-bit machine); 0 = n/a.
@@ -43,6 +45,11 @@ pub struct RecordConfig {
     pub tile: usize,
     /// Parallelism degree (pool workers); 0 = n/a or single-threaded.
     pub threads: usize,
+    /// Micro-kernel backend the case was pinned to; Auto = the
+    /// dispatcher's choice (what every record was before the kernel
+    /// dimension existed — Auto is omitted from keys and JSON so
+    /// historical snapshots keep their identities).
+    pub kernel: KernelId,
 }
 
 impl RecordConfig {
@@ -51,15 +58,24 @@ impl RecordConfig {
         lmul: 0,
         tile: 0,
         threads: 0,
+        kernel: KernelId::Auto,
     };
 
-    /// Convenience constructor in `(lmul, tile, threads)` order.
+    /// Convenience constructor in `(lmul, tile, threads)` order
+    /// (kernel = Auto; chain [`RecordConfig::with_kernel`] to pin one).
     pub fn new(lmul: usize, tile: usize, threads: usize) -> Self {
         Self {
             lmul,
             tile,
             threads,
+            kernel: KernelId::Auto,
         }
+    }
+
+    /// Same configuration pinned to a specific micro-kernel backend.
+    pub fn with_kernel(mut self, kernel: KernelId) -> Self {
+        self.kernel = kernel;
+        self
     }
 }
 
@@ -82,8 +98,14 @@ pub struct BenchRecord {
     /// Effective GFLOP/s (executed FLOPs / median ns), when known.
     pub gflops: Option<f64>,
     /// `100 × gflops / peak` for this record's thread count, when the
-    /// hardware probe ran.
+    /// hardware probe ran *and* the probed peak was positive and
+    /// finite — a degenerate peak drops the field rather than
+    /// poisoning the trajectory with Inf/NaN.
     pub pct_of_peak: Option<f64>,
+    /// True when the record measured above the probed roofline
+    /// (`pct_of_peak > 100`) — a probe-understating-the-machine signal
+    /// that is flagged rather than silently emitted.
+    pub over_peak: bool,
     /// Whether `bench-diff` may fail the build on this record. Noisy
     /// end-to-end observables (serving throughput/latency) are
     /// recorded for the trajectory but never gate.
@@ -92,9 +114,17 @@ pub struct BenchRecord {
 
 impl BenchRecord {
     /// Identity used by [`diff_reports`] to match records across runs.
+    /// The kernel field appears only when pinned (non-Auto), so
+    /// records from snapshots predating the kernel dimension keep
+    /// their identities and stay diffable.
     pub fn key(&self) -> String {
+        let kernel = if self.config.kernel == KernelId::Auto {
+            String::new()
+        } else {
+            format!(" kernel={}", self.config.kernel.name())
+        };
         format!(
-            "{}::{} [lmul={} tile={} threads={}]",
+            "{}::{} [lmul={} tile={} threads={}{kernel}]",
             self.bench,
             self.case,
             self.config.lmul,
@@ -235,17 +265,23 @@ fn num_field(v: &Json, key: &str) -> Result<f64, String> {
 }
 
 fn record_to_json(r: &BenchRecord) -> Json {
+    let mut config = vec![
+        ("lmul".into(), Json::Num(r.config.lmul as f64)),
+        ("tile".into(), Json::Num(r.config.tile as f64)),
+        ("threads".into(), Json::Num(r.config.threads as f64)),
+    ];
+    // Auto is the historical default and is omitted so documents from
+    // builds predating the kernel dimension stay byte-comparable.
+    if r.config.kernel != KernelId::Auto {
+        config.push((
+            "kernel".into(),
+            Json::Str(r.config.kernel.name().to_string()),
+        ));
+    }
     let mut pairs = vec![
         ("bench".into(), Json::Str(r.bench.clone())),
         ("case".into(), Json::Str(r.case.clone())),
-        (
-            "config".into(),
-            Json::Obj(vec![
-                ("lmul".into(), Json::Num(r.config.lmul as f64)),
-                ("tile".into(), Json::Num(r.config.tile as f64)),
-                ("threads".into(), Json::Num(r.config.threads as f64)),
-            ]),
-        ),
+        ("config".into(), Json::Obj(config)),
         ("unit".into(), Json::Str(r.unit.clone())),
         ("gate".into(), Json::Bool(r.gate)),
         (
@@ -268,6 +304,10 @@ fn record_to_json(r: &BenchRecord) -> Json {
     if let Some(p) = r.pct_of_peak {
         pairs.push(("pct_of_peak".into(), Json::Num(p)));
     }
+    // Emitted only when set: historical documents stay byte-identical.
+    if r.over_peak {
+        pairs.push(("over_peak".into(), Json::Bool(true)));
+    }
     Json::Obj(pairs)
 }
 
@@ -289,6 +329,13 @@ fn record_from_json(v: &Json) -> Result<BenchRecord, String> {
             lmul: cfg.get("lmul").and_then(Json::as_usize).unwrap_or(0),
             tile: cfg.get("tile").and_then(Json::as_usize).unwrap_or(0),
             threads: cfg.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            // Absent or unrecognised → Auto (tolerant: a newer file on
+            // an older build degrades to the dispatch default).
+            kernel: cfg
+                .get("kernel")
+                .and_then(Json::as_str)
+                .and_then(KernelId::from_name)
+                .unwrap_or(KernelId::Auto),
         },
         unit: v
             .get("unit")
@@ -307,6 +354,7 @@ fn record_from_json(v: &Json) -> Result<BenchRecord, String> {
         },
         gflops: v.get("gflops").and_then(Json::as_f64),
         pct_of_peak: v.get("pct_of_peak").and_then(Json::as_f64),
+        over_peak: v.get("over_peak").and_then(Json::as_bool).unwrap_or(false),
         gate: v.get("gate").and_then(Json::as_bool).unwrap_or(true),
     })
 }
@@ -359,13 +407,21 @@ impl Reporter {
             Some(f) if summary.median > 0.0 => Some(f / summary.median),
             _ => None,
         };
-        let pct_of_peak = gflops.map(|g| {
+        // Guard the normalization: a zero/negative/non-finite peak
+        // (possible if the probe misbehaves on an exotic host) must
+        // drop pct_of_peak — an Inf/NaN here poisons every later
+        // bench-diff of the file. gflops is kept either way.
+        let pct_of_peak = gflops.and_then(|g| {
             let peak = report
                 .hardware
                 .as_ref()
                 .expect("active reporter probes hardware")
                 .peak_gflops(config.threads);
-            100.0 * g / peak
+            if peak.is_finite() && peak > 0.0 {
+                Some(100.0 * g / peak)
+            } else {
+                None
+            }
         });
         let bench = report.suite.clone();
         report.records.push(BenchRecord {
@@ -376,6 +432,8 @@ impl Reporter {
             summary: summary.clone(),
             gflops,
             pct_of_peak,
+            // Above the probed roofline: flagged, never silent.
+            over_peak: pct_of_peak.is_some_and(|p| p > 100.0),
             gate: true,
         });
     }
@@ -404,6 +462,7 @@ impl Reporter {
             summary: Summary::of(&[value]),
             gflops: None,
             pct_of_peak: None,
+            over_peak: false,
             gate,
         });
     }
@@ -599,6 +658,7 @@ mod tests {
             summary: Summary::of(&[median]),
             gflops: pct.map(|_| 1.0),
             pct_of_peak: pct,
+            over_peak: false,
             gate: true,
         }
     }
@@ -710,8 +770,14 @@ mod tests {
             summary: Summary::empty(),
             gflops: None,
             pct_of_peak: None,
+            over_peak: false,
             gate: true,
         });
+        // A kernel-pinned, over-peak record must survive the trip too.
+        let mut pinned = record("pinned", 10.0, Some(104.0));
+        pinned.config = pinned.config.with_kernel(KernelId::Avx2);
+        pinned.over_peak = true;
+        r.records.push(pinned);
         let text = r.render();
         let back = Report::parse(&text).unwrap();
         assert_eq!(back.schema_version, SCHEMA_VERSION);
@@ -727,9 +793,83 @@ mod tests {
             assert_eq!(a.summary, b.summary);
             assert_eq!(a.gflops, b.gflops);
             assert_eq!(a.pct_of_peak, b.pct_of_peak);
+            assert_eq!(a.over_peak, b.over_peak);
+            assert_eq!(a.config, b.config);
         }
         // A round-tripped report self-diffs clean.
         assert!(!diff_reports(&r, &back, 0.001).has_regressions());
+    }
+
+    /// Bugfix: a degenerate roofline (zero or non-finite peak) must
+    /// drop pct_of_peak — not emit Inf/NaN into the trajectory file.
+    /// gflops survives; the over-peak flag stays clear.
+    #[test]
+    fn degenerate_peak_drops_pct_of_peak_keeps_gflops() {
+        for (scalar, fma, agg) in [
+            (0.0, 0.0, 0.0),
+            (1.0, f64::NAN, f64::NAN),
+            (1.0, f64::INFINITY, f64::INFINITY),
+            (1.0, -2.0, -2.0),
+        ] {
+            let mut report = Report::new("suite");
+            report.hardware = Some(HwProfile {
+                threads: 1,
+                scalar_gflops: scalar,
+                fma_gflops: fma,
+                aggregate_gflops: agg,
+            });
+            let mut rep = Reporter {
+                out: Some((PathBuf::from("/tmp/unused.json"), report)),
+            };
+            let s = Summary::of(&[100.0]);
+            rep.record("case", RecordConfig::new(1, 8, 1), &s, Some(1000.0));
+            let rec = &rep.out.as_ref().unwrap().1.records[0];
+            assert_eq!(rec.gflops, Some(10.0), "gflops must survive");
+            assert_eq!(rec.pct_of_peak, None, "peak {fma} must drop pct");
+            assert!(!rec.over_peak);
+            // The emitted document parses back cleanly.
+            let text = rep.out.as_ref().unwrap().1.render();
+            assert!(Report::parse(&text).is_ok());
+        }
+    }
+
+    /// A measurement above the probed roofline is flagged, not silent.
+    #[test]
+    fn over_peak_measurements_are_flagged() {
+        let mut report = Report::new("suite");
+        report.hardware = Some(HwProfile {
+            threads: 1,
+            scalar_gflops: 1.0,
+            fma_gflops: 5.0,
+            aggregate_gflops: 5.0,
+        });
+        let mut rep = Reporter {
+            out: Some((PathBuf::from("/tmp/unused.json"), report)),
+        };
+        let s = Summary::of(&[100.0]);
+        // 10 GFLOP/s against a 5 GFLOP/s roofline → 200% of peak.
+        rep.record("hot", RecordConfig::new(1, 8, 1), &s, Some(1000.0));
+        // 2.5 GFLOP/s → 50% of peak: not flagged.
+        rep.record("cool", RecordConfig::new(1, 8, 1), &s, Some(250.0));
+        let records = &rep.out.as_ref().unwrap().1.records;
+        assert!(records[0].over_peak);
+        assert_eq!(records[0].pct_of_peak, Some(200.0));
+        assert!(!records[1].over_peak);
+    }
+
+    /// Kernel-pinned records get distinct identities; Auto records keep
+    /// the historical key format so old snapshots stay diffable.
+    #[test]
+    fn kernel_appears_in_key_only_when_pinned() {
+        let auto = record("k", 1.0, None);
+        assert_eq!(auto.key(), "suite::k [lmul=2 tile=8 threads=1]");
+        let mut pinned = record("k", 1.0, None);
+        pinned.config = pinned.config.with_kernel(KernelId::Scalar);
+        assert_eq!(
+            pinned.key(),
+            "suite::k [lmul=2 tile=8 threads=1 kernel=scalar]"
+        );
+        assert_ne!(auto.key(), pinned.key());
     }
 
     #[test]

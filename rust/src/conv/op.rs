@@ -22,9 +22,10 @@ use std::cell::RefCell;
 
 use super::shape::ConvShape;
 use crate::gemm::threaded::{
-    gemm_dense_parallel_capped, gemm_dense_parallel_capped_into,
-    spmm_colwise_parallel_capped_into,
+    gemm_dense_parallel_capped, gemm_dense_parallel_capped_into_with,
+    spmm_colwise_parallel_capped_into_with,
 };
+use crate::gemm::KernelId;
 use crate::im2col::{
     conv2d_indirect_nhwc_parallel_capped_into, fused_im2col_pack_cnhw_into, IndirectionBuffer,
     PackedMatrix,
@@ -138,6 +139,9 @@ pub struct Conv2dDenseCnhw {
     pub tile: usize,
     /// Parallelism cap (0 = whole pool).
     pub threads: usize,
+    /// Micro-kernel backend ([`KernelId::Auto`] = runtime dispatch):
+    /// the fourth tuned knob.
+    pub kernel: KernelId,
     filter: Vec<f32>,
 }
 
@@ -156,6 +160,7 @@ impl Conv2dDenseCnhw {
             v,
             tile,
             threads: 0,
+            kernel: KernelId::Auto,
             filter,
         }
     }
@@ -168,6 +173,12 @@ impl Conv2dDenseCnhw {
     /// Set the per-layer parallelism cap (0 = whole pool).
     pub fn with_thread_cap(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Set the micro-kernel backend (tuner/artifact choice).
+    pub fn with_kernel(mut self, kernel: KernelId) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -203,13 +214,14 @@ impl Conv2dDenseCnhw {
         let s = &self.shape;
         assert_eq!(out.shape, [s.c_out, s.n, s.h_out(), s.w_out()], "output tensor shape");
         fused_im2col_pack_cnhw_into(x, s, self.v, packed);
-        gemm_dense_parallel_capped_into(
+        gemm_dense_parallel_capped_into_with(
             &self.filter,
             s.c_out,
             packed,
             self.tile,
             pool,
             compose_caps(self.threads, run_cap),
+            self.kernel,
             &mut out.data,
         );
     }
@@ -282,6 +294,9 @@ pub struct Conv2dSparseCnhw {
     pub v: usize,
     /// Parallelism cap (0 = whole pool).
     pub threads: usize,
+    /// Micro-kernel backend ([`KernelId::Auto`] = runtime dispatch):
+    /// the fourth tuned knob.
+    pub kernel: KernelId,
     pub weights: ColwisePruned,
 }
 
@@ -305,6 +320,7 @@ impl Conv2dSparseCnhw {
             shape,
             v,
             threads: 0,
+            kernel: KernelId::Auto,
             weights,
         }
     }
@@ -322,6 +338,7 @@ impl Conv2dSparseCnhw {
             shape,
             v,
             threads: 0,
+            kernel: KernelId::Auto,
             weights: prune_colwise_adaptive(&f.data, shape.c_out, shape.k(), tile, sparsity),
         }
     }
@@ -329,6 +346,12 @@ impl Conv2dSparseCnhw {
     /// Set the per-layer parallelism cap (0 = whole pool).
     pub fn with_thread_cap(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Set the micro-kernel backend (tuner/artifact choice).
+    pub fn with_kernel(mut self, kernel: KernelId) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -362,11 +385,12 @@ impl Conv2dSparseCnhw {
         let s = &self.shape;
         assert_eq!(out.shape, [s.c_out, s.n, s.h_out(), s.w_out()], "output tensor shape");
         fused_im2col_pack_cnhw_into(x, s, self.v, packed);
-        spmm_colwise_parallel_capped_into(
+        spmm_colwise_parallel_capped_into_with(
             &self.weights,
             packed,
             pool,
             compose_caps(self.threads, run_cap),
+            self.kernel,
             &mut out.data,
         );
     }
@@ -532,6 +556,29 @@ mod tests {
             assert_eq!(out.data, want_sp.data, "sparse round {round}");
             de.run_capped_into(&x, &pool, 0, &mut packed, &mut out);
             assert_eq!(out.data, want_de.data, "dense round {round}");
+        }
+    }
+
+    /// Every available micro-kernel backend is a drop-in on the conv
+    /// ops (strict parity lives in rust/tests/conv_fuzz.rs).
+    #[test]
+    fn explicit_kernel_choices_agree_across_backends() {
+        let s = ConvShape::square(1, 4, 8, 8, 3, 1, 1);
+        let (x, w) = rand_case(31, s);
+        let pool = ThreadPool::new(2);
+        let want_sp = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4)
+            .with_kernel(KernelId::Scalar)
+            .run(&x, &pool);
+        let want_de = Conv2dDenseCnhw::new(s, &w, 16, 4)
+            .with_kernel(KernelId::Scalar)
+            .run(&x, &pool);
+        for id in crate::gemm::kernels::available_ids() {
+            let got_sp = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4)
+                .with_kernel(id)
+                .run(&x, &pool);
+            let got_de = Conv2dDenseCnhw::new(s, &w, 16, 4).with_kernel(id).run(&x, &pool);
+            assert!(allclose(&got_sp.data, &want_sp.data, 1e-4, 1e-5), "sparse {id}");
+            assert!(allclose(&got_de.data, &want_de.data, 1e-4, 1e-5), "dense {id}");
         }
     }
 

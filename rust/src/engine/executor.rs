@@ -11,6 +11,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::conv::{Conv2dDenseCnhw, Conv2dDenseNhwc, Conv2dSparseCnhw, ConvPath, ConvShape};
+use crate::gemm::KernelId;
 use crate::models::{Graph, Op};
 use crate::runtime::artifact::{ArtifactLayer, LayerWeights, PackedArtifact};
 use crate::runtime::RuntimeError;
@@ -23,8 +24,9 @@ use super::ops;
 use super::scratch::{MemoryPlan, ScratchArena};
 
 /// Per-conv-layer micro-kernel parameters: strip width `v` (= VLMAX of
-/// the chosen LMUL), register tile height `tile`, and the parallelism
-/// cap `threads` — the three knobs the tuner (§3.3, extended) selects.
+/// the chosen LMUL), register tile height `tile`, the parallelism
+/// cap `threads`, and the micro-kernel backend `kernel` — the four
+/// knobs the tuner (§3.3, extended) selects.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerChoice {
     pub v: usize,
@@ -33,16 +35,22 @@ pub struct LayerChoice {
     /// 0 = uncapped (whole pool). Small layers where dispatch overhead
     /// dominates tune to small caps.
     pub threads: usize,
+    /// Micro-kernel backend ([`KernelId::Auto`] = runtime dispatch).
+    /// Artifacts record the tuned backend; an unavailable choice on the
+    /// loading host falls back to the best available one.
+    pub kernel: KernelId,
 }
 
 impl Default for LayerChoice {
     /// LMUL=4 (v = 32 lanes on a 256-bit machine) and T=8: the SiFive
-    /// baseline's fixed configuration (§4.4); uncapped parallelism.
+    /// baseline's fixed configuration (§4.4); uncapped parallelism,
+    /// runtime-dispatched backend.
     fn default() -> Self {
         Self {
             v: 32,
             tile: 8,
             threads: 0,
+            kernel: KernelId::Auto,
         }
     }
 }
@@ -197,7 +205,8 @@ impl Executor {
                         ),
                         (_, false) => PreparedConv::Cnhw(
                             Conv2dDenseCnhw::new(*shape, &w, choice.v, choice.tile)
-                                .with_thread_cap(choice.threads),
+                                .with_thread_cap(choice.threads)
+                                .with_kernel(choice.kernel),
                         ),
                         (_, true) => PreparedConv::Sparse(
                             Conv2dSparseCnhw::new_adaptive(
@@ -207,7 +216,8 @@ impl Executor {
                                 choice.tile,
                                 cfg.sparsity,
                             )
-                            .with_thread_cap(choice.threads),
+                            .with_thread_cap(choice.threads)
+                            .with_kernel(choice.kernel),
                         ),
                     };
                     convs.insert(node.id, prepared);
@@ -495,11 +505,13 @@ impl Executor {
                                 choice.v,
                                 choice.tile,
                             )
-                            .with_thread_cap(choice.threads),
+                            .with_thread_cap(choice.threads)
+                            .with_kernel(choice.kernel),
                         ),
                         (LayerWeights::Sparse(p), ConvPath::SparseCnhw) => PreparedConv::Sparse(
                             Conv2dSparseCnhw::from_pruned(*shape, p.clone(), choice.v)
-                                .with_thread_cap(choice.threads),
+                                .with_thread_cap(choice.threads)
+                                .with_kernel(choice.kernel),
                         ),
                         (LayerWeights::Sparse(_), _) => {
                             return Err(e(format!(
@@ -827,7 +839,7 @@ mod tests {
             LayerChoice {
                 v: 8,
                 tile: 4,
-                threads: 0,
+                ..LayerChoice::default()
             },
         );
         let x = input(1, 32, 4);
@@ -836,6 +848,38 @@ mod tests {
             Executor::new(g, ExecConfig::dense_cnhw(ThreadPool::shared(1))).run(&x);
         // Tuning changes execution parameters, never numerics.
         assert!(allclose(&y.data, &y_default.data, 1e-4, 1e-5));
+    }
+
+    /// A tuned backend choice is part of the per-layer configuration:
+    /// every available backend yields logits close to the scalar
+    /// oracle's, and the choice survives the artifact roundtrip.
+    #[test]
+    fn kernel_choice_applied_and_roundtrips() {
+        use crate::gemm::kernels::available_ids;
+        use crate::runtime::PackedArtifact;
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let x = input(1, 32, 9);
+        let run_with_kernel = |kernel: KernelId| {
+            let mut cfg = ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5);
+            cfg.default_choice.kernel = kernel;
+            Executor::new(g.clone(), cfg)
+        };
+        let want = run_with_kernel(KernelId::Scalar).run(&x);
+        for id in available_ids() {
+            let e = run_with_kernel(id);
+            let y = e.run(&x);
+            assert!(
+                allclose(&y.data, &want.data, 1e-2, 1e-3),
+                "{id} diverged from scalar, max diff {}",
+                crate::util::max_abs_diff(&y.data, &want.data)
+            );
+            // The choice is recorded into the artifact and restored.
+            let art = PackedArtifact::decode(&e.to_artifact().encode()).unwrap();
+            assert_eq!(art.default_choice.kernel, id);
+            let e2 = Executor::from_artifact(g.clone(), ThreadPool::shared(1), &art).unwrap();
+            assert_eq!(e2.cfg.default_choice.kernel, id);
+            assert_eq!(e2.run(&x).data, y.data, "{id} artifact run diverged");
+        }
     }
 
     /// Per-run caps (the adaptive server's dispatch-time knob) compose

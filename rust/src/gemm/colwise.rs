@@ -7,97 +7,51 @@
 //! fetched is reused T times; accumulators never touch memory until the
 //! final store — the three properties the paper's design targets.
 
-use crate::im2col::{PackedMatrix, MAX_STRIP_WIDTH};
+use crate::im2col::PackedMatrix;
 use crate::pruning::ColwisePruned;
 
 use super::dense::MAX_TILE;
+use super::kernels::{self, KernelId};
 
 /// `C[rows, cols] = Wc · A`, Wc column-wise compressed, A packed.
+/// Runs on the dispatched backend ([`KernelId::Auto`]).
 pub fn spmm_colwise(w: &ColwisePruned, a: &PackedMatrix) -> Vec<f32> {
+    spmm_colwise_with(w, a, KernelId::Auto)
+}
+
+/// [`spmm_colwise`] on an explicit micro-kernel backend.
+pub fn spmm_colwise_with(w: &ColwisePruned, a: &PackedMatrix, kernel: KernelId) -> Vec<f32> {
     let mut c = vec![0.0f32; w.rows * a.cols];
-    spmm_colwise_into(w, a, &mut c);
+    spmm_colwise_into_with(w, a, kernel, &mut c);
     c
 }
 
-/// In-place variant (hot-path entry).
+/// In-place variant (hot-path entry), dispatched backend.
 pub fn spmm_colwise_into(w: &ColwisePruned, a: &PackedMatrix, c: &mut [f32]) {
-    assert_eq!(w.cols, a.k, "reduction dim mismatch");
-    assert!(c.len() >= w.rows * a.cols);
-    assert!(w.tile <= MAX_TILE, "tile {} > {}", w.tile, MAX_TILE);
-    for strip in 0..a.strips {
-        spmm_colwise_strip(w, a, strip, c);
-    }
+    spmm_colwise_into_with(w, a, KernelId::Auto, c)
 }
 
-/// Process a single strip across all tiles (unit of thread parallelism).
+/// In-place variant on an explicit micro-kernel backend.
 ///
 /// §Perf note: a width-monomorphised variant (const-V dispatch with
 /// array-ref FMA bodies) was tried and *regressed* ~2.3× — the
 /// per-iteration slice→array conversions defeated LLVM's existing
-/// auto-vectorisation of the `zip` loop. Kept dynamic; see
-/// EXPERIMENTS.md §Perf step 2.
-pub fn spmm_colwise_strip(w: &ColwisePruned, a: &PackedMatrix, strip: usize, c: &mut [f32]) {
-    assert!(c.len() >= w.rows * a.cols);
-    // SAFETY: `c` is a unique borrow covering the whole output, so the
-    // raw variant's disjoint-write requirement holds trivially.
-    unsafe { spmm_colwise_strip_raw(w, a, strip, c.as_mut_ptr(), c.len()) }
-}
-
-/// Raw-pointer strip kernel used by the parallel driver. Writing through
-/// the pointer (never through a `&mut [f32]` spanning the shared output)
-/// keeps concurrent strip workers free of overlapping exclusive
-/// references — range-disjoint raw-pointer writes are sound where
-/// overlapping `&mut` slices are not.
-///
-/// # Safety
-/// `c` must be valid for reads and writes of `c_len >= w.rows * a.cols`
-/// f32s, and no other thread may concurrently access this strip's output
-/// ranges (`[r*a.cols + strip*a.v, … + strip_valid)` for each row `r`).
-pub(crate) unsafe fn spmm_colwise_strip_raw(
+/// auto-vectorisation of the `zip` loop. Strip widths stay dynamic in
+/// every backend; see EXPERIMENTS.md §Perf step 2.
+pub fn spmm_colwise_into_with(
     w: &ColwisePruned,
     a: &PackedMatrix,
-    strip: usize,
-    c: *mut f32,
-    c_len: usize,
+    kernel: KernelId,
+    c: &mut [f32],
 ) {
-    // Hard bound, not debug_assert: packing validates too, but the
-    // PackedMatrix fields are public, and an oversized strip would
-    // overrun the fixed accumulator block below in release builds.
-    assert!(
-        a.v <= MAX_STRIP_WIDTH,
-        "strip width {} exceeds accumulator capacity {MAX_STRIP_WIDTH}",
-        a.v
-    );
-    let sdata = a.strip(strip);
-    let valid = a.strip_valid(strip);
-    let col0 = strip * a.v;
-    // One accumulator block for the whole strip; each tile zeroes only
-    // the `t × valid` region it uses (§Perf step 1: the full 8 KiB
-    // memset per tile dominated small tiles).
-    let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-    for tile in &w.tiles {
-        let t = tile.row_count;
-        let nret = tile.indices.len();
-        for row in &mut acc[..t] {
-            row[..valid].fill(0.0);
-        }
-        for (j, &idx) in tile.indices.iter().enumerate() {
-            // Single load of the data row, reused across all T rows.
-            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
-            for ti in 0..t {
-                let wv = tile.values[ti * nret + j]; // scalar weight
-                let accr = &mut acc[ti][..valid];
-                for (aj, xj) in accr.iter_mut().zip(arow) {
-                    *aj += wv * xj; // vfmacc.vf
-                }
-            }
-        }
-        for ti in 0..t {
-            let r = tile.row_start + ti;
-            let off = r * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
-        }
+    assert_eq!(w.cols, a.k, "reduction dim mismatch");
+    assert!(c.len() >= w.rows * a.cols);
+    assert!(w.tile <= MAX_TILE, "tile {} > {}", w.tile, MAX_TILE);
+    let kern = kernels::resolve(kernel);
+    for strip in 0..a.strips {
+        // SAFETY: `c` is a unique borrow covering the whole output, so
+        // the strip kernel's disjoint-write requirement holds trivially.
+        unsafe { kern.spmm_strip(w, a, strip, c.as_mut_ptr(), c.len()) }
     }
 }
 

@@ -1,6 +1,8 @@
 //! Dense tiled GEMM over packed strips — the dense baseline kernel.
 
-use crate::im2col::{PackedMatrix, MAX_STRIP_WIDTH};
+use crate::im2col::PackedMatrix;
+
+use super::kernels::{self, KernelId};
 
 /// Maximum register-tile height supported without heap-allocating
 /// accumulators (32 matches the RVV register file the paper tunes over).
@@ -8,75 +10,48 @@ pub const MAX_TILE: usize = 32;
 
 /// `C[rows, cols] = W[rows, K] · A`, A packed in strips. `tile` output
 /// rows are produced per micro-kernel invocation with accumulators kept
-/// in a stack array (the vector-register analogue).
+/// in a stack array (the vector-register analogue). Runs on the
+/// dispatched backend ([`KernelId::Auto`]).
 pub fn gemm_dense(w: &[f32], rows: usize, a: &PackedMatrix, tile: usize) -> Vec<f32> {
+    gemm_dense_with(w, rows, a, tile, KernelId::Auto)
+}
+
+/// [`gemm_dense`] on an explicit micro-kernel backend.
+pub fn gemm_dense_with(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    kernel: KernelId,
+) -> Vec<f32> {
     let mut c = vec![0.0f32; rows * a.cols];
-    gemm_dense_into(w, rows, a, tile, &mut c);
+    gemm_dense_into_with(w, rows, a, tile, kernel, &mut c);
     c
 }
 
 /// In-place variant writing into a caller-provided output buffer
 /// (hot-path entry: avoids the allocation per conv layer).
 pub fn gemm_dense_into(w: &[f32], rows: usize, a: &PackedMatrix, tile: usize, c: &mut [f32]) {
-    let k = a.k;
-    assert_eq!(w.len(), rows * k, "filter shape");
-    assert!(c.len() >= rows * a.cols);
-    assert!((1..=MAX_TILE).contains(&tile));
-    assert!(
-        a.v <= MAX_STRIP_WIDTH,
-        "strip width {} exceeds accumulator capacity {MAX_STRIP_WIDTH}",
-        a.v
-    );
-    // Accumulator block shared across micro-kernel invocations; each
-    // invocation zeroes only its `t × valid` region (§Perf step 1).
-    let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-    for strip in 0..a.strips {
-        let sdata = a.strip(strip);
-        let valid = a.strip_valid(strip);
-        let col0 = strip * a.v;
-        let mut row = 0;
-        while row < rows {
-            let t = tile.min(rows - row);
-            micro_kernel_dense(w, row, t, k, sdata, a.v, valid, c, a.cols, col0, &mut acc);
-            row += t;
-        }
-    }
+    gemm_dense_into_with(w, rows, a, tile, KernelId::Auto, c)
 }
 
-/// One (strip, row-tile) micro-kernel: T accumulator rows over V lanes.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn micro_kernel_dense(
+/// In-place variant on an explicit micro-kernel backend.
+pub fn gemm_dense_into_with(
     w: &[f32],
-    row0: usize,
-    t: usize,
-    k: usize,
-    sdata: &[f32],
-    v: usize,
-    valid: usize,
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    kernel: KernelId,
     c: &mut [f32],
-    cols: usize,
-    col0: usize,
-    acc: &mut [[f32; MAX_STRIP_WIDTH]; MAX_TILE],
 ) {
-    // acc[t][v] — stack-resident, like the RVV accumulator registers.
-    debug_assert!(v <= MAX_STRIP_WIDTH);
-    for row in &mut acc[..t] {
-        row[..valid].fill(0.0);
-    }
-    for kk in 0..k {
-        let arow = &sdata[kk * v..kk * v + valid];
-        for ti in 0..t {
-            let wv = w[(row0 + ti) * k + kk];
-            let accr = &mut acc[ti][..valid];
-            for (aj, xj) in accr.iter_mut().zip(arow) {
-                *aj += wv * xj; // vfmacc.vf
-            }
-        }
-    }
-    for ti in 0..t {
-        let crow = &mut c[(row0 + ti) * cols + col0..(row0 + ti) * cols + col0 + valid];
-        crow.copy_from_slice(&acc[ti][..valid]);
+    assert_eq!(w.len(), rows * a.k, "filter shape");
+    assert!(c.len() >= rows * a.cols);
+    assert!((1..=MAX_TILE).contains(&tile));
+    let kern = kernels::resolve(kernel);
+    for strip in 0..a.strips {
+        // SAFETY: `c` is a unique borrow covering the whole output, so
+        // the strip kernel's disjoint-write requirement holds trivially.
+        unsafe { kern.dense_strip(w, rows, a, tile, strip, c.as_mut_ptr(), c.len()) }
     }
 }
 

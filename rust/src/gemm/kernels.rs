@@ -1,0 +1,960 @@
+//! Runtime-dispatched SIMD micro-kernel backends.
+//!
+//! The innermost strip/tile compute of the column-wise N:M spMM
+//! (Algorithm 1) and the dense GEMM baseline is abstracted behind the
+//! [`Kernel`] trait. The scalar implementation is the *permanent parity
+//! oracle* — byte-for-byte the arithmetic this crate has always done —
+//! and the `std::arch` implementations (x86_64 AVX2+FMA, AVX-512 where
+//! the compiler supports it, aarch64 NEON) are selected at runtime via
+//! CPU feature detection, the paper's `vfmacc.vf` realised as
+//! `_mm256_fmadd_ps` / `vfmaq_n_f32`.
+//!
+//! Dispatch rules:
+//!
+//! * `NMPRUNE_KERNEL=<name>` forces a kernel process-wide. Forcing a
+//!   kernel that is unknown or unavailable on the host **panics** — CI
+//!   uses this to guarantee dispatch can never silently fall back.
+//! * Without the override, [`KernelId::Auto`] resolves to
+//!   [`best_available`], and an *advisory* non-`Auto` choice (from a
+//!   tune cache or a packed artifact produced on another host) falls
+//!   back to [`best_available`] when the requested kernel is not
+//!   available here — artifacts stay portable.
+//!
+//! Parity contract: for a **fixed** kernel, results are bitwise
+//! identical across serial/parallel/capped/adaptive execution (strip
+//! decomposition never changes per-strip arithmetic). **Across**
+//! kernels, FMA contraction reassociates rounding, so native outputs
+//! are gated against the scalar oracle by the explicit bound
+//! [`within_parity_bound`] in the differential fuzz harness
+//! (`rust/tests/conv_fuzz.rs`).
+
+use std::sync::OnceLock;
+
+use crate::im2col::{PackedMatrix, MAX_STRIP_WIDTH};
+use crate::pruning::ColwisePruned;
+
+use super::dense::MAX_TILE;
+
+/// Identifies a micro-kernel backend. `Auto` is the "let dispatch
+/// decide" value used by tuner/artifact metadata; it is never itself a
+/// registered kernel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    /// Resolve to [`best_available`] at dispatch time.
+    #[default]
+    Auto,
+    /// Plain Rust reference kernel — the parity oracle.
+    Scalar,
+    /// x86_64 AVX2 + FMA (8 f32 lanes).
+    Avx2,
+    /// x86_64 AVX-512F (16 f32 lanes); compiled only when the building
+    /// rustc stabilises the intrinsics (see `rust/build.rs`).
+    Avx512,
+    /// aarch64 NEON (4 f32 lanes).
+    Neon,
+}
+
+/// Every identifier, in artifact-code order.
+pub const ALL_KERNEL_IDS: [KernelId; 5] = [
+    KernelId::Auto,
+    KernelId::Scalar,
+    KernelId::Avx2,
+    KernelId::Avx512,
+    KernelId::Neon,
+];
+
+impl KernelId {
+    /// Stable lower-case name (TSV / env / CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelId::Auto => "auto",
+            KernelId::Scalar => "scalar",
+            KernelId::Avx2 => "avx2",
+            KernelId::Avx512 => "avx512",
+            KernelId::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`KernelId::name`].
+    pub fn from_name(s: &str) -> Option<KernelId> {
+        ALL_KERNEL_IDS.into_iter().find(|id| id.name() == s)
+    }
+
+    /// Stable numeric code used by the packed-artifact format.
+    pub fn code(self) -> u32 {
+        match self {
+            KernelId::Auto => 0,
+            KernelId::Scalar => 1,
+            KernelId::Avx2 => 2,
+            KernelId::Avx512 => 3,
+            KernelId::Neon => 4,
+        }
+    }
+
+    /// Inverse of [`KernelId::code`].
+    pub fn from_code(c: u32) -> Option<KernelId> {
+        ALL_KERNEL_IDS.into_iter().find(|id| id.code() == c)
+    }
+}
+
+impl std::fmt::Display for KernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A strip-level micro-kernel backend: the unit of compute both the
+/// serial and the pool-parallel drivers dispatch per strip.
+pub trait Kernel: Sync {
+    /// Which backend this is.
+    fn id(&self) -> KernelId;
+
+    /// Whether the host CPU can run this backend (checked at runtime).
+    fn available(&self) -> bool;
+
+    /// Column-wise N:M spMM over one strip, all tiles (Algorithm 1).
+    ///
+    /// # Safety
+    /// `c` must be valid for reads and writes of `c_len >= w.rows *
+    /// a.cols` f32s, `strip < a.strips`, and no other thread may
+    /// concurrently access this strip's output column ranges.
+    unsafe fn spmm_strip(
+        &self,
+        w: &ColwisePruned,
+        a: &PackedMatrix,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    );
+
+    /// Dense GEMM over one strip, all row-tiles of height `tile`.
+    ///
+    /// # Safety
+    /// `c` must be valid for reads and writes of `c_len >= rows *
+    /// a.cols` f32s, `w.len() == rows * a.k`, `strip < a.strips`,
+    /// `1 <= tile <= MAX_TILE`, and no other thread may concurrently
+    /// access this strip's output column ranges.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn dense_strip(
+        &self,
+        w: &[f32],
+        rows: usize,
+        a: &PackedMatrix,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    );
+}
+
+/// Shared prologue: strip data, valid lane count, first output column.
+/// The `v` bound is a hard assert, not `debug_assert` — `PackedMatrix`
+/// fields are public and an oversized strip would overrun the fixed
+/// accumulator block in release builds.
+#[inline]
+fn strip_geometry(a: &PackedMatrix, strip: usize) -> (&[f32], usize, usize) {
+    assert!(
+        a.v <= MAX_STRIP_WIDTH,
+        "strip width {} exceeds accumulator capacity {MAX_STRIP_WIDTH}",
+        a.v
+    );
+    (a.strip(strip), a.strip_valid(strip), strip * a.v)
+}
+
+// ---------------------------------------------------------------- scalar
+
+/// The plain-Rust reference backend (auto-vectorised by LLVM, no
+/// contraction: `a + w*x` rounds twice, deterministically).
+pub struct ScalarKernel;
+
+impl Kernel for ScalarKernel {
+    fn id(&self) -> KernelId {
+        KernelId::Scalar
+    }
+
+    fn available(&self) -> bool {
+        true
+    }
+
+    unsafe fn spmm_strip(
+        &self,
+        w: &ColwisePruned,
+        a: &PackedMatrix,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        let (sdata, valid, col0) = strip_geometry(a, strip);
+        // One accumulator block for the whole strip; each tile zeroes
+        // only the `t × valid` region it uses (§Perf step 1: the full
+        // 8 KiB memset per tile dominated small tiles).
+        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+        for tile in &w.tiles {
+            let t = tile.row_count;
+            let nret = tile.indices.len();
+            for row in &mut acc[..t] {
+                row[..valid].fill(0.0);
+            }
+            for (j, &idx) in tile.indices.iter().enumerate() {
+                // Single load of the data row, reused across all T rows.
+                let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+                for ti in 0..t {
+                    let wv = tile.values[ti * nret + j]; // scalar weight
+                    let accr = &mut acc[ti][..valid];
+                    for (aj, xj) in accr.iter_mut().zip(arow) {
+                        *aj += wv * xj; // vfmacc.vf
+                    }
+                }
+            }
+            for ti in 0..t {
+                let r = tile.row_start + ti;
+                let off = r * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
+        }
+    }
+
+    unsafe fn dense_strip(
+        &self,
+        w: &[f32],
+        rows: usize,
+        a: &PackedMatrix,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        let (sdata, valid, col0) = strip_geometry(a, strip);
+        let k = a.k;
+        let mut row = 0;
+        while row < rows {
+            let t = tile.min(rows - row);
+            let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+            for kk in 0..k {
+                let arow = &sdata[kk * a.v..kk * a.v + valid];
+                for ti in 0..t {
+                    let wv = w[(row + ti) * k + kk];
+                    for (aj, xj) in acc[ti][..valid].iter_mut().zip(arow) {
+                        *aj += wv * xj;
+                    }
+                }
+            }
+            for ti in 0..t {
+                let off = (row + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
+            row += t;
+        }
+    }
+}
+
+// ------------------------------------------------------------ x86_64 AVX2
+
+/// AVX2 + FMA backend: 8-lane fused multiply-add with a scalar tail.
+#[cfg(target_arch = "x86_64")]
+pub struct Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+impl Kernel for Avx2Kernel {
+    fn id(&self) -> KernelId {
+        KernelId::Avx2
+    }
+
+    fn available(&self) -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    unsafe fn spmm_strip(
+        &self,
+        w: &ColwisePruned,
+        a: &PackedMatrix,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        spmm_strip_avx2(w, a, strip, c, c_len)
+    }
+
+    unsafe fn dense_strip(
+        &self,
+        w: &[f32],
+        rows: usize,
+        a: &PackedMatrix,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        dense_strip_avx2(w, rows, a, tile, strip, c, c_len)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn spmm_strip_avx2(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::x86_64::*;
+    let (sdata, valid, col0) = strip_geometry(a, strip);
+    let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+    for tile in &w.tiles {
+        let t = tile.row_count;
+        let nret = tile.indices.len();
+        for row in &mut acc[..t] {
+            row[..valid].fill(0.0);
+        }
+        for (j, &idx) in tile.indices.iter().enumerate() {
+            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+            let ap = arow.as_ptr();
+            for ti in 0..t {
+                let ws = tile.values[ti * nret + j];
+                let wv = _mm256_set1_ps(ws);
+                let accp = acc[ti].as_mut_ptr();
+                let mut x = 0;
+                while x + 8 <= valid {
+                    let av = _mm256_loadu_ps(ap.add(x));
+                    let cv = _mm256_loadu_ps(accp.add(x));
+                    _mm256_storeu_ps(accp.add(x), _mm256_fmadd_ps(wv, av, cv));
+                    x += 8;
+                }
+                while x < valid {
+                    *accp.add(x) += ws * *ap.add(x);
+                    x += 1;
+                }
+            }
+        }
+        for ti in 0..t {
+            let off = (tile.row_start + ti) * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn dense_strip_avx2(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::x86_64::*;
+    let (sdata, valid, col0) = strip_geometry(a, strip);
+    let k = a.k;
+    let mut row = 0;
+    while row < rows {
+        let t = tile.min(rows - row);
+        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+        for kk in 0..k {
+            let arow = &sdata[kk * a.v..kk * a.v + valid];
+            let ap = arow.as_ptr();
+            for ti in 0..t {
+                let ws = w[(row + ti) * k + kk];
+                let wv = _mm256_set1_ps(ws);
+                let accp = acc[ti].as_mut_ptr();
+                let mut x = 0;
+                while x + 8 <= valid {
+                    let av = _mm256_loadu_ps(ap.add(x));
+                    let cv = _mm256_loadu_ps(accp.add(x));
+                    _mm256_storeu_ps(accp.add(x), _mm256_fmadd_ps(wv, av, cv));
+                    x += 8;
+                }
+                while x < valid {
+                    *accp.add(x) += ws * *ap.add(x);
+                    x += 1;
+                }
+            }
+        }
+        for ti in 0..t {
+            let off = (row + ti) * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+        }
+        row += t;
+    }
+}
+
+// --------------------------------------------------------- x86_64 AVX-512
+
+/// AVX-512F backend: 16-lane fused multiply-add with a scalar tail.
+/// Compiled only when the building rustc stabilises the `_mm512_*`
+/// intrinsics (rustc ≥ 1.89; probed by `rust/build.rs`).
+#[cfg(all(target_arch = "x86_64", nmprune_avx512))]
+pub struct Avx512Kernel;
+
+#[cfg(all(target_arch = "x86_64", nmprune_avx512))]
+impl Kernel for Avx512Kernel {
+    fn id(&self) -> KernelId {
+        KernelId::Avx512
+    }
+
+    fn available(&self) -> bool {
+        is_x86_feature_detected!("avx512f")
+    }
+
+    unsafe fn spmm_strip(
+        &self,
+        w: &ColwisePruned,
+        a: &PackedMatrix,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        spmm_strip_avx512(w, a, strip, c, c_len)
+    }
+
+    unsafe fn dense_strip(
+        &self,
+        w: &[f32],
+        rows: usize,
+        a: &PackedMatrix,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        dense_strip_avx512(w, rows, a, tile, strip, c, c_len)
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", nmprune_avx512))]
+#[target_feature(enable = "avx512f")]
+unsafe fn spmm_strip_avx512(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::x86_64::*;
+    let (sdata, valid, col0) = strip_geometry(a, strip);
+    let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+    for tile in &w.tiles {
+        let t = tile.row_count;
+        let nret = tile.indices.len();
+        for row in &mut acc[..t] {
+            row[..valid].fill(0.0);
+        }
+        for (j, &idx) in tile.indices.iter().enumerate() {
+            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+            let ap = arow.as_ptr();
+            for ti in 0..t {
+                let ws = tile.values[ti * nret + j];
+                let wv = _mm512_set1_ps(ws);
+                let accp = acc[ti].as_mut_ptr();
+                let mut x = 0;
+                while x + 16 <= valid {
+                    let av = _mm512_loadu_ps(ap.add(x));
+                    let cv = _mm512_loadu_ps(accp.add(x));
+                    _mm512_storeu_ps(accp.add(x), _mm512_fmadd_ps(wv, av, cv));
+                    x += 16;
+                }
+                while x < valid {
+                    *accp.add(x) += ws * *ap.add(x);
+                    x += 1;
+                }
+            }
+        }
+        for ti in 0..t {
+            let off = (tile.row_start + ti) * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+        }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", nmprune_avx512))]
+#[target_feature(enable = "avx512f")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn dense_strip_avx512(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::x86_64::*;
+    let (sdata, valid, col0) = strip_geometry(a, strip);
+    let k = a.k;
+    let mut row = 0;
+    while row < rows {
+        let t = tile.min(rows - row);
+        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+        for kk in 0..k {
+            let arow = &sdata[kk * a.v..kk * a.v + valid];
+            let ap = arow.as_ptr();
+            for ti in 0..t {
+                let ws = w[(row + ti) * k + kk];
+                let wv = _mm512_set1_ps(ws);
+                let accp = acc[ti].as_mut_ptr();
+                let mut x = 0;
+                while x + 16 <= valid {
+                    let av = _mm512_loadu_ps(ap.add(x));
+                    let cv = _mm512_loadu_ps(accp.add(x));
+                    _mm512_storeu_ps(accp.add(x), _mm512_fmadd_ps(wv, av, cv));
+                    x += 16;
+                }
+                while x < valid {
+                    *accp.add(x) += ws * *ap.add(x);
+                    x += 1;
+                }
+            }
+        }
+        for ti in 0..t {
+            let off = (row + ti) * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+        }
+        row += t;
+    }
+}
+
+// ------------------------------------------------------------ aarch64 NEON
+
+/// NEON backend: 4-lane fused multiply-add with a scalar tail.
+#[cfg(target_arch = "aarch64")]
+pub struct NeonKernel;
+
+#[cfg(target_arch = "aarch64")]
+impl Kernel for NeonKernel {
+    fn id(&self) -> KernelId {
+        KernelId::Neon
+    }
+
+    fn available(&self) -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    unsafe fn spmm_strip(
+        &self,
+        w: &ColwisePruned,
+        a: &PackedMatrix,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        spmm_strip_neon(w, a, strip, c, c_len)
+    }
+
+    unsafe fn dense_strip(
+        &self,
+        w: &[f32],
+        rows: usize,
+        a: &PackedMatrix,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        dense_strip_neon(w, rows, a, tile, strip, c, c_len)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn spmm_strip_neon(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::aarch64::*;
+    let (sdata, valid, col0) = strip_geometry(a, strip);
+    let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+    for tile in &w.tiles {
+        let t = tile.row_count;
+        let nret = tile.indices.len();
+        for row in &mut acc[..t] {
+            row[..valid].fill(0.0);
+        }
+        for (j, &idx) in tile.indices.iter().enumerate() {
+            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+            let ap = arow.as_ptr();
+            for ti in 0..t {
+                let ws = tile.values[ti * nret + j];
+                let accp = acc[ti].as_mut_ptr();
+                let mut x = 0;
+                while x + 4 <= valid {
+                    let av = vld1q_f32(ap.add(x));
+                    let cv = vld1q_f32(accp.add(x));
+                    vst1q_f32(accp.add(x), vfmaq_n_f32(cv, av, ws));
+                    x += 4;
+                }
+                while x < valid {
+                    *accp.add(x) += ws * *ap.add(x);
+                    x += 1;
+                }
+            }
+        }
+        for ti in 0..t {
+            let off = (tile.row_start + ti) * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn dense_strip_neon(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::aarch64::*;
+    let (sdata, valid, col0) = strip_geometry(a, strip);
+    let k = a.k;
+    let mut row = 0;
+    while row < rows {
+        let t = tile.min(rows - row);
+        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+        for kk in 0..k {
+            let arow = &sdata[kk * a.v..kk * a.v + valid];
+            let ap = arow.as_ptr();
+            for ti in 0..t {
+                let ws = w[(row + ti) * k + kk];
+                let accp = acc[ti].as_mut_ptr();
+                let mut x = 0;
+                while x + 4 <= valid {
+                    let av = vld1q_f32(ap.add(x));
+                    let cv = vld1q_f32(accp.add(x));
+                    vst1q_f32(accp.add(x), vfmaq_n_f32(cv, av, ws));
+                    x += 4;
+                }
+                while x < valid {
+                    *accp.add(x) += ws * *ap.add(x);
+                    x += 1;
+                }
+            }
+        }
+        for ti in 0..t {
+            let off = (row + ti) * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+        }
+        row += t;
+    }
+}
+
+// ------------------------------------------------------ registry/dispatch
+
+static SCALAR: ScalarKernel = ScalarKernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2: Avx2Kernel = Avx2Kernel;
+#[cfg(all(target_arch = "x86_64", nmprune_avx512))]
+static AVX512: Avx512Kernel = Avx512Kernel;
+#[cfg(target_arch = "aarch64")]
+static NEON: NeonKernel = NeonKernel;
+
+/// Every backend compiled into this binary (availability still depends
+/// on the host CPU — see [`Kernel::available`]). The scalar oracle is
+/// always first.
+pub fn registry() -> &'static [&'static dyn Kernel] {
+    // A static table (not a function-local borrow): references to
+    // statics are not promotable inside a function body, but a static
+    // initializer may point at other statics freely.
+    static REGISTRY: &[&dyn Kernel] = &[
+        &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        &AVX2,
+        #[cfg(all(target_arch = "x86_64", nmprune_avx512))]
+        &AVX512,
+        #[cfg(target_arch = "aarch64")]
+        &NEON,
+    ];
+    REGISTRY
+}
+
+/// Look a compiled-in backend up by id (`Auto` has no backend).
+pub fn by_id(id: KernelId) -> Option<&'static dyn Kernel> {
+    registry().iter().copied().find(|k| k.id() == id)
+}
+
+/// Ids of every backend that is both compiled in and available on this
+/// host, scalar first.
+pub fn available_ids() -> Vec<KernelId> {
+    registry()
+        .iter()
+        .filter(|k| k.available())
+        .map(|k| k.id())
+        .collect()
+}
+
+/// The fastest available backend: AVX-512 > AVX2 > NEON > scalar.
+pub fn best_available() -> KernelId {
+    static BEST: OnceLock<KernelId> = OnceLock::new();
+    *BEST.get_or_init(|| {
+        for id in [KernelId::Avx512, KernelId::Avx2, KernelId::Neon] {
+            if by_id(id).is_some_and(|k| k.available()) {
+                return id;
+            }
+        }
+        KernelId::Scalar
+    })
+}
+
+fn known_names() -> String {
+    ALL_KERNEL_IDS
+        .iter()
+        .map(|id| id.name())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Parse an `NMPRUNE_KERNEL` value. `Ok(None)` means no forcing
+/// (unset/empty/`auto`); `Err` carries the loud-failure message for an
+/// unknown or host-unavailable kernel.
+fn parse_forced(raw: &str) -> Result<Option<KernelId>, String> {
+    let name = raw.trim().to_ascii_lowercase();
+    if name.is_empty() || name == "auto" {
+        return Ok(None);
+    }
+    let id = KernelId::from_name(&name).ok_or_else(|| {
+        format!("NMPRUNE_KERNEL={raw}: unknown kernel (known: {})", known_names())
+    })?;
+    if by_id(id).is_some_and(|k| k.available()) {
+        Ok(Some(id))
+    } else {
+        let avail = available_ids()
+            .iter()
+            .map(|id| id.name())
+            .collect::<Vec<_>>()
+            .join(", ");
+        Err(format!(
+            "NMPRUNE_KERNEL={raw}: kernel not available on this host (available: {avail})"
+        ))
+    }
+}
+
+/// The process-wide forced kernel from `NMPRUNE_KERNEL`, memoised.
+/// Panics (once, loudly) if the variable names an unknown or
+/// unavailable kernel — forcing must never silently fall back.
+pub fn forced() -> Option<KernelId> {
+    static FORCED: OnceLock<Option<KernelId>> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var("NMPRUNE_KERNEL") {
+        Ok(v) => parse_forced(&v).unwrap_or_else(|e| panic!("{e}")),
+        Err(_) => None,
+    })
+}
+
+/// Resolve an advisory kernel choice to a runnable backend.
+///
+/// `NMPRUNE_KERNEL` (if set) wins unconditionally. Otherwise `Auto`
+/// resolves to [`best_available`], and a concrete choice that is not
+/// available on this host (e.g. an artifact tuned elsewhere) gracefully
+/// falls back to [`best_available`].
+pub fn resolve(requested: KernelId) -> &'static dyn Kernel {
+    let id = match forced() {
+        Some(f) => f,
+        None => match requested {
+            KernelId::Auto => best_available(),
+            id if by_id(id).is_some_and(|k| k.available()) => id,
+            _ => best_available(),
+        },
+    };
+    by_id(id).expect("resolved kernel is always registered")
+}
+
+// ------------------------------------------------------------ parity bound
+
+/// Max ULP distance allowed between a native kernel and the scalar
+/// oracle for one output element (covers reassociation noise away from
+/// cancellation).
+pub const PARITY_ULPS: u32 = 256;
+
+/// Fallback absolute-tolerance factor: where accumulation nearly
+/// cancels, ULPs of a tiny result overstate the error, so outputs also
+/// pass when `|native − scalar| ≤ PARITY_EPS_FACTOR · ε · mag` with
+/// `mag = Σ|wᵢ·xᵢ|` accumulated for that element.
+pub const PARITY_EPS_FACTOR: f32 = 32.0;
+
+/// Distance in units-in-the-last-place between two f32s (0 for exact
+/// equality incl. `-0.0 == 0.0`; `u32::MAX` if either is non-finite).
+pub fn ulp_distance(a: f32, b: f32) -> u32 {
+    if a == b {
+        return 0;
+    }
+    if !a.is_finite() || !b.is_finite() {
+        return u32::MAX;
+    }
+    fn monotone(x: f32) -> i64 {
+        let u = x.to_bits();
+        if u & 0x8000_0000 != 0 {
+            -((u & 0x7fff_ffff) as i64)
+        } else {
+            u as i64
+        }
+    }
+    (monotone(a) - monotone(b)).unsigned_abs().min(u64::from(u32::MAX)) as u32
+}
+
+/// The documented scalar-vs-native parity gate (see
+/// docs/ARCHITECTURE.md "Kernel dispatch"): within [`PARITY_ULPS`]
+/// ULPs, or within the magnitude-scaled absolute bound for
+/// near-cancelling accumulations.
+pub fn within_parity_bound(native: f32, scalar: f32, mag: f32) -> bool {
+    ulp_distance(native, scalar) <= PARITY_ULPS
+        || (native - scalar).abs() <= PARITY_EPS_FACTOR * f32::EPSILON * mag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{gemm_dense, matmul_ref, spmm_colwise};
+    use crate::im2col::pack_data_matrix;
+    use crate::pruning::prune_colwise;
+    use crate::util::{allclose, XorShiftRng};
+
+    #[test]
+    fn id_name_and_code_round_trip() {
+        for id in ALL_KERNEL_IDS {
+            assert_eq!(KernelId::from_name(id.name()), Some(id));
+            assert_eq!(KernelId::from_code(id.code()), Some(id));
+            assert_eq!(format!("{id}"), id.name());
+        }
+        assert_eq!(KernelId::from_name("vmx"), None);
+        assert_eq!(KernelId::from_code(99), None);
+        assert_eq!(KernelId::default(), KernelId::Auto);
+    }
+
+    #[test]
+    fn scalar_is_always_registered_and_available() {
+        let k = by_id(KernelId::Scalar).expect("scalar registered");
+        assert!(k.available());
+        assert_eq!(registry()[0].id(), KernelId::Scalar);
+        assert!(available_ids().contains(&KernelId::Scalar));
+    }
+
+    #[test]
+    fn best_available_is_available_and_auto_is_never_registered() {
+        let best = best_available();
+        assert!(by_id(best).expect("best registered").available());
+        assert!(by_id(KernelId::Auto).is_none());
+    }
+
+    #[test]
+    fn resolve_auto_and_unavailable_fall_back() {
+        // These run without NMPRUNE_KERNEL in the normal test env; when
+        // CI forces a kernel, forcing wins by design, so only check the
+        // resolved kernel is available either way.
+        assert!(resolve(KernelId::Auto).available());
+        // Neon is never available on x86_64 and vice versa — an
+        // advisory choice from another host must fall back, not panic.
+        let foreign = if cfg!(target_arch = "x86_64") {
+            KernelId::Neon
+        } else {
+            KernelId::Avx2
+        };
+        assert!(resolve(foreign).available());
+    }
+
+    #[test]
+    fn parse_forced_accepts_auto_and_rejects_junk() {
+        assert_eq!(parse_forced("").unwrap(), None);
+        assert_eq!(parse_forced("auto").unwrap(), None);
+        assert_eq!(parse_forced(" AUTO ").unwrap(), None);
+        assert_eq!(parse_forced("scalar").unwrap(), Some(KernelId::Scalar));
+        assert!(parse_forced("vmx").is_err());
+        let foreign = if cfg!(target_arch = "x86_64") { "neon" } else { "avx2" };
+        assert!(parse_forced(foreign).is_err(), "foreign-arch forcing must be loud");
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(1.0, f32::NAN), u32::MAX);
+        // Symmetric, and crossing zero counts both sides.
+        let a = f32::from_bits(3);
+        assert_eq!(ulp_distance(a, -a), 6);
+        assert_eq!(ulp_distance(-a, a), 6);
+        assert!(within_parity_bound(1.0, 1.0, 1.0));
+        assert!(!within_parity_bound(1.0, 2.0, 1.0));
+    }
+
+    /// Every compiled-in, host-available backend must agree with the
+    /// scalar oracle on both kernels (loose tolerance here; the strict
+    /// ULP gate lives in rust/tests/conv_fuzz.rs).
+    #[test]
+    fn every_available_backend_matches_scalar_oracle() {
+        let mut r = XorShiftRng::new(0x517);
+        let (rows, k, cols) = (19, 32, 77);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+        for v in [8, 16, 64] {
+            let p = pack_data_matrix(&a, k, cols, v);
+            let want_s = matmul_ref(&cp.decompress(), &a, rows, k, cols);
+            let want_d = matmul_ref(&w, &a, rows, k, cols);
+            for kern in registry() {
+                if !kern.available() {
+                    continue;
+                }
+                let mut got_s = vec![0.0f32; rows * cols];
+                let mut got_d = vec![0.0f32; rows * cols];
+                for strip in 0..p.strips {
+                    // SAFETY: unique buffers sized rows*cols, serial.
+                    unsafe {
+                        kern.spmm_strip(&cp, &p, strip, got_s.as_mut_ptr(), got_s.len());
+                        kern.dense_strip(&w, rows, &p, 7, strip, got_d.as_mut_ptr(), got_d.len());
+                    }
+                }
+                let name = kern.id().name();
+                assert!(allclose(&got_s, &want_s, 1e-4, 1e-5), "spmm {name} v={v}");
+                assert!(allclose(&got_d, &want_d, 1e-4, 1e-5), "dense {name} v={v}");
+            }
+        }
+    }
+
+    /// Serial entry points and a fixed backend agree bitwise — the
+    /// per-kernel bitwise invariant at its smallest.
+    #[test]
+    fn scalar_backend_is_bitwise_the_reference_entry_points() {
+        let mut r = XorShiftRng::new(0x518);
+        let (rows, k, cols) = (12, 16, 40);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 4, 2, 4);
+        let p = pack_data_matrix(&a, k, cols, 16);
+        let via_entry_s = super::super::colwise::spmm_colwise_with(&cp, &p, KernelId::Scalar);
+        let via_entry_d = super::super::dense::gemm_dense_with(&w, rows, &p, 5, KernelId::Scalar);
+        let kern = by_id(KernelId::Scalar).unwrap();
+        let mut got_s = vec![0.0f32; rows * cols];
+        let mut got_d = vec![0.0f32; rows * cols];
+        for strip in 0..p.strips {
+            // SAFETY: unique buffers sized rows*cols, serial.
+            unsafe {
+                kern.spmm_strip(&cp, &p, strip, got_s.as_mut_ptr(), got_s.len());
+                kern.dense_strip(&w, rows, &p, 5, strip, got_d.as_mut_ptr(), got_d.len());
+            }
+        }
+        assert_eq!(got_s, via_entry_s);
+        assert_eq!(got_d, via_entry_d);
+        // And the default (Auto) entry points match whatever they
+        // resolve to exactly — dispatch adds no arithmetic.
+        let auto_s = spmm_colwise(&cp, &p);
+        let auto_d = gemm_dense(&w, rows, &p, 5);
+        assert!(allclose(&auto_s, &got_s, 1e-4, 1e-5));
+        assert!(allclose(&auto_d, &got_d, 1e-4, 1e-5));
+    }
+}

@@ -17,16 +17,22 @@
 //!   redundant-*store* pathology, §3.1). This is the "conventional N:M"
 //!   configuration of Fig. 5.
 //! * [`threaded`] — output-tile parallel driver shared by all kernels.
+//! * [`kernels`] — runtime-dispatched SIMD micro-kernel backends (the
+//!   scalar parity oracle plus AVX2/AVX-512/NEON `std::arch`
+//!   implementations) behind the [`kernels::Kernel`] trait; the dense
+//!   and colwise drivers above route every strip through it.
 
 pub mod dense;
 pub mod colwise;
 pub mod inner;
+pub mod kernels;
 pub mod outer;
 pub mod threaded;
 
-pub use colwise::spmm_colwise;
-pub use dense::gemm_dense;
+pub use colwise::{spmm_colwise, spmm_colwise_with};
+pub use dense::{gemm_dense, gemm_dense_with};
 pub use inner::spmm_inner_rownm;
+pub use kernels::KernelId;
 pub use outer::spmm_outer_rownm;
 
 /// Reference dense matmul `C[rows, cols] = W[rows, K] · A[K, cols]`,

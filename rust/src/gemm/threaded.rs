@@ -19,9 +19,8 @@ use crate::im2col::PackedMatrix;
 use crate::pruning::ColwisePruned;
 use crate::util::threadpool::ThreadPool;
 
-use super::colwise::spmm_colwise_strip_raw;
 use super::dense::MAX_TILE;
-use crate::im2col::MAX_STRIP_WIDTH;
+use super::kernels::{self, KernelId};
 
 /// Parallel column-wise SpMM: strips are distributed over the pool's
 /// workers (plus the calling thread).
@@ -56,8 +55,24 @@ pub fn spmm_colwise_parallel_capped_into(
     max_workers: Option<usize>,
     c: &mut [f32],
 ) {
+    spmm_colwise_parallel_capped_into_with(w, a, pool, max_workers, KernelId::Auto, c)
+}
+
+/// [`spmm_colwise_parallel_capped_into`] on an explicit micro-kernel
+/// backend. The backend is resolved once, before the fan-out, so every
+/// strip of one call runs identical arithmetic — the per-kernel bitwise
+/// invariant across pool sizes and caps.
+pub fn spmm_colwise_parallel_capped_into_with(
+    w: &ColwisePruned,
+    a: &PackedMatrix,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+    kernel: KernelId,
+    c: &mut [f32],
+) {
     assert_eq!(w.cols, a.k);
     assert!(c.len() >= w.rows * a.cols, "output buffer too small");
+    let kern = kernels::resolve(kernel);
     // Each strip writes a disjoint column range of C. Workers write
     // through a shared raw pointer — never through a `&mut [f32]` over
     // the whole buffer, which would create overlapping exclusive
@@ -68,7 +83,7 @@ pub fn spmm_colwise_parallel_capped_into(
         for strip in s0..s1 {
             // SAFETY: strip output ranges are disjoint by construction,
             // and `c` outlives the parallel_for barrier.
-            unsafe { spmm_colwise_strip_raw(w, a, strip, c_ptr.get(), c_len) };
+            unsafe { kern.spmm_strip(w, a, strip, c_ptr.get(), c_len) };
         }
     });
 }
@@ -109,62 +124,36 @@ pub fn gemm_dense_parallel_capped_into(
     max_workers: Option<usize>,
     c: &mut [f32],
 ) {
+    gemm_dense_parallel_capped_into_with(w, rows, a, tile, pool, max_workers, KernelId::Auto, c)
+}
+
+/// [`gemm_dense_parallel_capped_into`] on an explicit micro-kernel
+/// backend (resolved once before the fan-out — see
+/// [`spmm_colwise_parallel_capped_into_with`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_dense_parallel_capped_into_with(
+    w: &[f32],
+    rows: usize,
+    a: &PackedMatrix,
+    tile: usize,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+    kernel: KernelId,
+    c: &mut [f32],
+) {
     assert_eq!(w.len(), rows * a.k);
     assert!((1..=MAX_TILE).contains(&tile));
     assert!(c.len() >= rows * a.cols, "output buffer too small");
+    let kern = kernels::resolve(kernel);
     let c_ptr = SendPtr(c.as_mut_ptr());
     let c_len = c.len();
     pool.parallel_for_capped(a.strips, max_workers, |s0, s1| {
         for strip in s0..s1 {
             // SAFETY: as above — disjoint strip ranges, caller blocks
             // until all workers finish.
-            unsafe { dense_strip_raw(w, rows, a, tile, strip, c_ptr.get(), c_len) };
+            unsafe { kern.dense_strip(w, rows, a, tile, strip, c_ptr.get(), c_len) };
         }
     });
-}
-
-/// Raw-pointer dense strip kernel (see [`spmm_colwise_strip_raw`] for
-/// the aliasing rationale).
-///
-/// # Safety
-/// `c` must be valid for reads and writes of `c_len >= rows * a.cols`
-/// f32s, and no other thread may concurrently access this strip's
-/// output ranges.
-unsafe fn dense_strip_raw(
-    w: &[f32],
-    rows: usize,
-    a: &PackedMatrix,
-    tile: usize,
-    strip: usize,
-    c: *mut f32,
-    c_len: usize,
-) {
-    assert!(a.v <= MAX_STRIP_WIDTH, "strip width {} exceeds {}", a.v, MAX_STRIP_WIDTH);
-    let sdata = a.strip(strip);
-    let valid = a.strip_valid(strip);
-    let col0 = strip * a.v;
-    let k = a.k;
-    let mut row = 0;
-    while row < rows {
-        let t = tile.min(rows - row);
-        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-        for kk in 0..k {
-            let arow = &sdata[kk * a.v..kk * a.v + valid];
-            for ti in 0..t {
-                let wv = w[(row + ti) * k + kk];
-                for (aj, xj) in acc[ti][..valid].iter_mut().zip(arow) {
-                    *aj += wv * xj;
-                }
-            }
-        }
-        for ti in 0..t {
-            let r = row + ti;
-            let off = r * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
-        }
-        row += t;
-    }
 }
 
 /// Shareable raw pointer for disjoint-range writes across pool workers.

@@ -20,7 +20,12 @@
 //!                                intake for comparison; --artifact F:
 //!                                serve from an AOT-packed artifact —
 //!                                model load is a validation pass)
-//!   tune   --model M [...]       per-layer (LMUL, T, P) auto-tuning
+//!   tune   --model M [...]       per-layer (LMUL, T, P, kernel) auto-tuning
+//!   kernels [--best]             list compiled-in micro-kernel backends and
+//!                                their availability on this host (--best:
+//!                                print just the best available backend's
+//!                                name — used by CI to force it via
+//!                                NMPRUNE_KERNEL)
 //!   sim    [--layer i]           RVV-simulator kernel comparison
 //!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
 //!   bench-diff OLD NEW [...]     compare two NMPRUNE_BENCH_JSON reports
@@ -50,12 +55,13 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
         Some("tune") => cmd_tune(&args),
+        Some("kernels") => cmd_kernels(&args),
         Some("sim") => cmd_sim(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             eprintln!(
-                "usage: nmprune <models|pack|run|serve|tune|sim|artifacts|bench-diff> [options]\n\
+                "usage: nmprune <models|pack|run|serve|tune|kernels|sim|artifacts|bench-diff> [options]\n\
                  common options: --model resnet50 --batch 1 --res 224 \
                  --threads N (default: all hardware threads, or NMPRUNE_THREADS) \
                  --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
@@ -380,8 +386,8 @@ fn cmd_tune(args: &Args) {
         if use_sim { "sim cycles" } else { "native wall-clock" }
     );
     println!(
-        "{:<16} {:>6} {:>6} {:>6} {:>14}",
-        "layer", "LMUL", "T", "P", "score"
+        "{:<16} {:>6} {:>6} {:>6} {:>8} {:>14}",
+        "layer", "LMUL", "T", "P", "kernel", "score"
     );
     // Native profiling must run on the deployment-sized pool: the tuner
     // now also selects each layer's parallelism degree P, and a cap is
@@ -400,14 +406,47 @@ fn cmd_tune(args: &Args) {
                 tuner::tune_native(&shape, Some(sparsity), &profile_pool, tile_cap)
             };
             println!(
-                "{:<16} {:>6} {:>6} {:>6} {:>14.0}",
-                name, r.best.lmul, r.best.tile, r.best.threads, r.best.score
+                "{:<16} {:>6} {:>6} {:>6} {:>8} {:>14.0}",
+                name,
+                r.best.lmul,
+                r.best.tile,
+                r.best.threads,
+                r.best.kernel.name(),
+                r.best.score
             );
             r.choice()
         });
     }
     cache.save(&cache_path).expect("save cache");
     println!("saved {} entries", cache.entries.len());
+}
+
+/// List the compiled-in micro-kernel backends and their availability on
+/// this host. `--best` prints only the best available backend's name —
+/// the scripting hook CI uses to force the native backend
+/// (`NMPRUNE_KERNEL=$(nmprune kernels --best)`).
+fn cmd_kernels(args: &Args) {
+    use nmprune::gemm::kernels;
+
+    let best = kernels::best_available();
+    if args.has_flag("best") {
+        println!("{}", best.name());
+        return;
+    }
+    println!("{:<10} {:>10} {:>6}", "kernel", "available", "best");
+    for k in kernels::registry() {
+        let id = k.id();
+        println!(
+            "{:<10} {:>10} {:>6}",
+            id.name(),
+            if k.available() { "yes" } else { "no" },
+            if id == best { "*" } else { "" },
+        );
+    }
+    match kernels::forced() {
+        Some(f) => println!("NMPRUNE_KERNEL forces: {}", f.name()),
+        None => println!("no NMPRUNE_KERNEL override (auto -> {})", best.name()),
+    }
 }
 
 fn cmd_sim(args: &Args) {

@@ -13,14 +13,19 @@
 //!
 //! ```text
 //! magic "NMPK" | version u32 | arch str | batch u32 | res u32
-//! path u8 | sparsity f64-bits u64 | seed u64 | default choice 3×u32
+//! path u8 | sparsity f64-bits u64 | seed u64 | default choice 4×u32
 //! n_layers u32
 //! per layer:
-//!   name str | kind u8 (0 dense, 1 sparse) | choice 3×u32
+//!   name str | kind u8 (0 dense, 1 sparse) | choice 4×u32
 //!   conv shape 9×u32 | payload_len u64
 //!   zero padding to a 64-byte-aligned payload offset | payload
 //! fnv1a-64 checksum u64 over all preceding bytes
 //! ```
+//!
+//! Choices are `v, tile, threads, kernel` (the kernel backend code,
+//! [`KernelId::code`]). Version 1 artifacts — written before the
+//! kernel dimension existed — carry 3×u32 choices and still load, with
+//! `kernel = auto` (runtime dispatch).
 //!
 //! Strings are `u32` length + UTF-8 bytes. Dense payloads are the
 //! `[C_out, K]` filter matrix as raw f32; sparse payloads are
@@ -38,12 +43,15 @@ use std::path::Path;
 use super::{err, Result};
 use crate::conv::{ConvPath, ConvShape};
 use crate::engine::LayerChoice;
+use crate::gemm::KernelId;
 use crate::pruning::ColwisePruned;
 
 /// File magic: "NMPK" (N:M packed weights).
 pub const MAGIC: [u8; 4] = *b"NMPK";
-/// Current schema version.
-pub const VERSION: u32 = 1;
+/// Current schema version (2: 4-field choices with a kernel code).
+pub const VERSION: u32 = 2;
+/// Oldest schema version this build still reads.
+pub const MIN_VERSION: u32 = 1;
 /// Payload alignment in bytes.
 pub const PAYLOAD_ALIGN: usize = 64;
 
@@ -135,6 +143,7 @@ fn wchoice(out: &mut Vec<u8>, c: LayerChoice) {
     w32(out, c.v);
     w32(out, c.tile);
     w32(out, c.threads);
+    w32(out, c.kernel.code() as usize);
 }
 
 /// Bounds-checked read cursor: every read that would run past the end
@@ -179,11 +188,24 @@ impl<'a> Cur<'a> {
             .map_err(|_| err(format!("artifact: {what} is not valid UTF-8")))
     }
 
-    fn choice(&mut self, what: &str) -> Result<LayerChoice> {
+    /// Version-aware choice read: v1 carried 3×u32 (no kernel field →
+    /// Auto); v2 carries 4×u32 with a validated kernel code.
+    fn choice(&mut self, version: usize, what: &str) -> Result<LayerChoice> {
+        let v = self.u32(what)?;
+        let tile = self.u32(what)?;
+        let threads = self.u32(what)?;
+        let kernel = if version >= 2 {
+            let code = self.u32(what)?;
+            KernelId::from_code(code as u32)
+                .ok_or_else(|| err(format!("artifact: {what} has unknown kernel code {code}")))?
+        } else {
+            KernelId::Auto
+        };
         Ok(LayerChoice {
-            v: self.u32(what)?,
-            tile: self.u32(what)?,
-            threads: self.u32(what)?,
+            v,
+            tile,
+            threads,
+            kernel,
         })
     }
 }
@@ -287,9 +309,10 @@ impl PackedArtifact {
             return Err(err(format!("artifact: bad magic {magic:02x?}, expected \"NMPK\"")));
         }
         let version = cur.u32("version")?;
-        if version != VERSION as usize {
+        if !(MIN_VERSION as usize..=VERSION as usize).contains(&version) {
             return Err(err(format!(
-                "artifact: unsupported schema version {version} (this build reads {VERSION})"
+                "artifact: unsupported schema version {version} \
+                 (this build reads {MIN_VERSION}..={VERSION})"
             )));
         }
         let arch = cur.str("arch name")?;
@@ -298,7 +321,7 @@ impl PackedArtifact {
         let path = path_from_code(cur.u8("path")?)?;
         let sparsity = f64::from_bits(cur.u64("sparsity")?);
         let seed = cur.u64("seed")?;
-        let default_choice = cur.choice("default choice")?;
+        let default_choice = cur.choice(version, "default choice")?;
         let n_layers = cur.u32("layer count")?;
         // Not with_capacity(n_layers): the count is untrusted file data
         // and must not size an allocation before the layers parse.
@@ -306,7 +329,7 @@ impl PackedArtifact {
         for li in 0..n_layers {
             let name = cur.str("layer name")?;
             let kind = cur.u8("layer kind")?;
-            let choice = cur.choice("layer choice")?;
+            let choice = cur.choice(version, "layer choice")?;
             let shape = validated_shape(&mut cur, &name)?;
             let payload_len = cur.u64("payload length")? as usize;
             let pad = (PAYLOAD_ALIGN - cur.pos % PAYLOAD_ALIGN) % PAYLOAD_ALIGN;
@@ -436,6 +459,7 @@ mod tests {
                         v: 16,
                         tile: 4,
                         threads: 2,
+                        kernel: KernelId::Scalar,
                     },
                     shape: s1,
                     weights: LayerWeights::Dense(dense),
@@ -546,8 +570,8 @@ mod tests {
         let a = sample();
         let bytes = a.encode();
         // Locate layer 0's kind byte: it follows the fixed header and
-        // the layer-0 name string.
-        let header = 4 + 4 + (4 + a.arch.len()) + 4 + 4 + 1 + 8 + 8 + 12 + 4;
+        // the layer-0 name string (default choice is 4×u32 = 16 bytes).
+        let header = 4 + 4 + (4 + a.arch.len()) + 4 + 4 + 1 + 8 + 8 + 16 + 4;
         let kind_off = header + 4 + a.layers[0].name.len();
         assert_eq!(bytes[kind_off], 0, "expected dense kind byte");
         let mut bad = bytes.clone();
@@ -555,6 +579,104 @@ mod tests {
         resign(&mut bad);
         let e = PackedArtifact::decode(&bad).unwrap_err().to_string();
         assert!(e.contains("unknown weight kind"), "{e}");
+    }
+
+    /// Encode `a` in the legacy v1 layout (3-field choices) — the exact
+    /// byte stream a pre-kernel build wrote. Kernel choices are dropped.
+    fn encode_v1(a: &PackedArtifact) -> Vec<u8> {
+        fn wchoice3(out: &mut Vec<u8>, c: LayerChoice) {
+            w32(out, c.v);
+            w32(out, c.tile);
+            w32(out, c.threads);
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        w32(&mut out, 1);
+        wstr(&mut out, &a.arch);
+        w32(&mut out, a.batch);
+        w32(&mut out, a.res);
+        out.push(path_code(a.path));
+        w64(&mut out, a.sparsity.to_bits());
+        w64(&mut out, a.seed);
+        wchoice3(&mut out, a.default_choice);
+        w32(&mut out, a.layers.len());
+        let mut payload = Vec::new();
+        for layer in &a.layers {
+            wstr(&mut out, &layer.name);
+            payload.clear();
+            let kind = match &layer.weights {
+                LayerWeights::Dense(f) => {
+                    for v in f {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                    0u8
+                }
+                LayerWeights::Sparse(p) => {
+                    p.encode_into(&mut payload);
+                    1u8
+                }
+            };
+            out.push(kind);
+            wchoice3(&mut out, layer.choice);
+            let s = &layer.shape;
+            for v in [s.n, s.c_in, s.h_in, s.w_in, s.c_out, s.kh, s.kw, s.stride, s.pad] {
+                w32(&mut out, v);
+            }
+            w64(&mut out, payload.len() as u64);
+            while out.len() % PAYLOAD_ALIGN != 0 {
+                out.push(0);
+            }
+            out.extend_from_slice(&payload);
+        }
+        let sum = fnv1a64(&out);
+        w64(&mut out, sum);
+        out
+    }
+
+    /// Satellite: artifacts written before the kernel dimension existed
+    /// (schema v1, 3-field choices) still load; every choice gets
+    /// `kernel = auto` and all other fields survive intact.
+    #[test]
+    fn version1_artifact_still_loads_with_auto_kernel() {
+        let a = sample();
+        let bytes = encode_v1(&a);
+        let b = PackedArtifact::decode(&bytes).unwrap();
+        assert_eq!(b.arch, a.arch);
+        assert_eq!((b.batch, b.res, b.seed), (a.batch, a.res, a.seed));
+        assert_eq!(b.layers.len(), a.layers.len());
+        assert_eq!(
+            b.default_choice,
+            LayerChoice {
+                kernel: KernelId::Auto,
+                ..a.default_choice
+            }
+        );
+        for (got, want) in b.layers.iter().zip(&a.layers) {
+            assert_eq!(got.name, want.name);
+            assert_eq!(
+                got.choice,
+                LayerChoice {
+                    kernel: KernelId::Auto,
+                    ..want.choice
+                }
+            );
+        }
+    }
+
+    /// A v2 choice carrying an unknown kernel code is a load error with
+    /// a descriptive message, not a panic or a silent Auto.
+    #[test]
+    fn unknown_kernel_code_is_rejected() {
+        let a = sample();
+        let bytes = a.encode();
+        // The kernel code is the last u32 of the default choice's
+        // 16-byte block in the fixed header.
+        let kernel_off = 4 + 4 + (4 + a.arch.len()) + 4 + 4 + 1 + 8 + 8 + 12;
+        let mut bad = bytes.clone();
+        bad[kernel_off..kernel_off + 4].copy_from_slice(&99u32.to_le_bytes());
+        resign(&mut bad);
+        let e = PackedArtifact::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("unknown kernel code"), "{e}");
     }
 
     #[test]

@@ -5,20 +5,25 @@
 //!
 //! Two profiling backends:
 //! * **native** — wall-clock of the native Rust conv path on this host
-//!   (what a deployment would use); sweeps `(LMUL, T, P)` with
-//!   `P` over [`thread_candidates`] of the profiling pool, so each
-//!   layer also picks how many pool workers it is worth waking —
-//!   hardware-shaped execution decisions are per layer, not global
-//!   (Kang 2019; Chen et al. 2021);
+//!   (what a deployment would use); sweeps `(LMUL, T, P, kernel)` with
+//!   `P` over [`thread_candidates`] of the profiling pool and `kernel`
+//!   over the micro-kernel backends available on the host
+//!   ([`crate::gemm::kernels::available_ids`]), so each layer also
+//!   picks how many pool workers it is worth waking and which SIMD
+//!   backend wins at its shape — hardware-shaped execution decisions
+//!   are per layer, not global (Kang 2019; Chen et al. 2021);
 //! * **sim** — deterministic cycle counts from the single-core RVV
 //!   simulator (what reproduces the paper's K1 numbers; used by the
-//!   figure benches). The simulator models one hart, so sim candidates
-//!   carry `threads = 0` (no cap information).
+//!   figure benches). The simulator models one hart and its own RVV
+//!   ISA, so sim candidates carry `threads = 0` and
+//!   `kernel = Auto` (runtime dispatch on whatever host later loads
+//!   the choice).
 //!
 //! Results are memoised in a [`TuneCache`] persisted as TSV, mirroring
-//! AITemplate's profiling cache. The TSV gained a fourth `threads`
-//! column; legacy three-column files still load (threads defaults to
-//! 0 = uncapped).
+//! AITemplate's profiling cache. The TSV is five columns
+//! (`key  v  tile  threads  kernel`); legacy three-column (no threads)
+//! and four-column (no kernel) files still load, defaulting the
+//! missing fields to 0 = uncapped and `auto`.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -26,6 +31,8 @@ use std::io::Write;
 use crate::benchlib::{bench, BenchConfig};
 use crate::conv::{Conv2dDenseCnhw, Conv2dSparseCnhw, ConvShape};
 use crate::engine::LayerChoice;
+use crate::gemm::kernels;
+use crate::gemm::KernelId;
 use crate::im2col::pack_data_matrix;
 use crate::pruning::prune_colwise_adaptive;
 use crate::rvv::kernels::{max_tile_for_lmul, sim_spmm_colwise};
@@ -48,6 +55,10 @@ pub struct Candidate {
     pub tile: usize,
     /// Parallelism degree profiled (0 = uncapped / not profiled).
     pub threads: usize,
+    /// Micro-kernel backend profiled ([`KernelId::Auto`] = runtime
+    /// dispatch; what sim candidates carry, since the simulator does
+    /// not run the native backends).
+    pub kernel: KernelId,
     /// Profiling score (ns for native, cycles for sim) — lower is better.
     pub score: f64,
 }
@@ -120,6 +131,10 @@ pub fn tune_sim_colwise(shape: &ConvShape, sparsity: f64, tile_cap: usize) -> Tu
             v,
             tile,
             threads: 0, // single-hart simulator: no parallelism dimension
+            // The simulator models its own RVV ISA, not this host's
+            // SIMD: the choice stays Auto so the deployment host
+            // dispatches its own best backend.
+            kernel: KernelId::Auto,
             score: rep.cycles as f64 * scale,
         });
     }
@@ -156,6 +171,11 @@ pub fn tune_native(
     );
     let cfg = BenchConfig::tuning();
     let threads_space = thread_candidates(pool.size());
+    // Fourth sweep dimension: every micro-kernel backend available on
+    // this host (always includes the scalar oracle). Forced choices
+    // (NMPRUNE_KERNEL) are honoured at run time by the dispatcher, so
+    // the tuner still profiles the full space.
+    let kernel_space = kernels::available_ids();
     let mut candidates = Vec::new();
     for (lmul, tile) in candidate_space(tile_cap) {
         let v = 8 * lmul;
@@ -171,34 +191,42 @@ pub fn tune_native(
             caps.push(t);
         }
         // Weight compression/packing happens once per (LMUL, T); the
-        // parallelism sweep only flips the dispatch cap.
+        // parallelism and kernel sweeps only flip dispatch fields.
         match sparsity {
             None => {
                 let mut op = Conv2dDenseCnhw::new(*shape, &w, v, tile);
-                for &threads in &caps {
-                    op.threads = threads;
-                    let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
-                    candidates.push(Candidate {
-                        lmul,
-                        v,
-                        tile,
-                        threads,
-                        score,
-                    });
+                for &kernel in &kernel_space {
+                    op.kernel = kernel;
+                    for &threads in &caps {
+                        op.threads = threads;
+                        let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
+                        candidates.push(Candidate {
+                            lmul,
+                            v,
+                            tile,
+                            threads,
+                            kernel,
+                            score,
+                        });
+                    }
                 }
             }
             Some(s) => {
                 let mut op = Conv2dSparseCnhw::new_adaptive(*shape, &w, v, tile, s);
-                for &threads in &caps {
-                    op.threads = threads;
-                    let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
-                    candidates.push(Candidate {
-                        lmul,
-                        v,
-                        tile,
-                        threads,
-                        score,
-                    });
+                for &kernel in &kernel_space {
+                    op.kernel = kernel;
+                    for &threads in &caps {
+                        op.threads = threads;
+                        let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
+                        candidates.push(Candidate {
+                            lmul,
+                            v,
+                            tile,
+                            threads,
+                            kernel,
+                            score,
+                        });
+                    }
                 }
             }
         };
@@ -206,10 +234,19 @@ pub fn tune_native(
     pick(candidates)
 }
 
+/// Select the winning candidate. A non-finite score (a timer glitch or
+/// an arithmetic accident upstream) must neither win nor crash the
+/// sweep: `partial_cmp(...).unwrap()` on a NaN score would panic, so
+/// non-finite candidates are filtered out of the ranking and ties are
+/// settled by [`f64::total_cmp`]. If *every* score is non-finite the
+/// first candidate wins deterministically — a degraded answer, never a
+/// panic mid-tune.
 fn pick(candidates: Vec<Candidate>) -> TuneResult {
     let best = *candidates
         .iter()
-        .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+        .filter(|c| c.score.is_finite())
+        .min_by(|a, b| a.score.total_cmp(&b.score))
+        .or_else(|| candidates.first())
         .expect("empty candidate space");
     TuneResult { best, candidates }
 }
@@ -221,6 +258,7 @@ impl TuneResult {
             v: self.best.v,
             tile: self.best.tile,
             threads: self.best.threads,
+            kernel: self.best.kernel,
         }
     }
 }
@@ -253,11 +291,12 @@ pub fn cache_key(shape: &ConvShape, sparsity: Option<f64>) -> String {
 }
 
 impl TuneCache {
-    /// Load from a TSV file (missing file → empty cache). Accepts both
-    /// the current four-column format (`key  v  tile  threads`) and the
-    /// legacy three-column one — rows without a threads column load
-    /// with `threads = 0` (uncapped), so caches written before the
-    /// parallelism dimension existed keep working.
+    /// Load from a TSV file (missing file → empty cache). Accepts the
+    /// current five-column format (`key  v  tile  threads  kernel`) and
+    /// both legacy layouts — three columns (no threads) and four
+    /// columns (no kernel). Missing fields default to `threads = 0`
+    /// (uncapped) and `kernel = auto` (runtime dispatch), so caches
+    /// written before either dimension existed keep working.
     ///
     /// Robust against a corrupted cache (satellite): truncated rows, a
     /// trailing partial write (a row cut mid-field by a crash), rows
@@ -285,9 +324,10 @@ impl TuneCache {
             return None;
         }
         let fields: Vec<&str> = line.split('\t').collect();
-        let (k, v, t, threads) = match fields.as_slice() {
-            [k, v, t] => (*k, *v, *t, None),
-            [k, v, t, th] => (*k, *v, *t, Some(*th)),
+        let (k, v, t, threads, kernel) = match fields.as_slice() {
+            [k, v, t] => (*k, *v, *t, None, None),
+            [k, v, t, th] => (*k, *v, *t, Some(*th), None),
+            [k, v, t, th, kn] => (*k, *v, *t, Some(*th), Some(*kn)),
             _ => return None, // truncated or overlong row
         };
         if k.is_empty() {
@@ -295,23 +335,42 @@ impl TuneCache {
         }
         let v: usize = v.trim().parse().ok()?;
         let tile: usize = t.trim().parse().ok()?;
-        // A present-but-garbled threads column means the row was cut
-        // mid-write: skip it entirely rather than guessing 0.
+        // A present-but-garbled threads or kernel column means the row
+        // was cut mid-write: skip it entirely rather than guessing.
         let threads: usize = match threads {
             None => 0,
             Some(th) => th.trim().parse().ok()?,
         };
-        Some((k.to_string(), LayerChoice { v, tile, threads }))
+        let kernel: KernelId = match kernel {
+            None => KernelId::Auto,
+            Some(kn) => KernelId::from_name(kn.trim())?,
+        };
+        Some((
+            k.to_string(),
+            LayerChoice {
+                v,
+                tile,
+                threads,
+                kernel,
+            },
+        ))
     }
 
-    /// Persist as TSV (`key  v  tile  threads`).
+    /// Persist as TSV (`key  v  tile  threads  kernel`).
     pub fn save(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
         for (k, c) in &self.entries {
-            writeln!(f, "{k}\t{}\t{}\t{}", c.v, c.tile, c.threads)?;
+            writeln!(
+                f,
+                "{k}\t{}\t{}\t{}\t{}",
+                c.v,
+                c.tile,
+                c.threads,
+                c.kernel.name()
+            )?;
         }
         Ok(())
     }
@@ -383,6 +442,15 @@ mod tests {
         // A size-1 pool has exactly one parallelism candidate.
         assert_eq!(c.threads, 1);
         assert!(r.candidates.iter().all(|cand| cand.threads == 1));
+        // Every backend available on this host was profiled, and the
+        // winner is one of them (never Auto — the tuner picks concretely).
+        for id in kernels::available_ids() {
+            assert!(
+                r.candidates.iter().any(|cand| cand.kernel == id),
+                "backend {id} not profiled"
+            );
+        }
+        assert_ne!(c.kernel, KernelId::Auto);
     }
 
     #[test]
@@ -409,8 +477,12 @@ mod tests {
             lmul8.iter().all(|c| c.threads == 1),
             "single-strip layers must not re-profile redundant caps"
         );
-        // No duplicate (lmul, tile, threads) configurations anywhere.
-        let mut keys: Vec<_> = r.candidates.iter().map(|c| (c.lmul, c.tile, c.threads)).collect();
+        // No duplicate (lmul, tile, threads, kernel) configurations anywhere.
+        let mut keys: Vec<_> = r
+            .candidates
+            .iter()
+            .map(|c| (c.lmul, c.tile, c.threads, c.kernel.code()))
+            .collect();
         keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), r.candidates.len(), "duplicate candidates profiled");
@@ -434,6 +506,7 @@ mod tests {
             v: 16,
             tile: 4,
             threads: 2,
+            kernel: KernelId::Avx2,
         };
         let choice = cache.get_or_tune(key.clone(), || want);
         assert_eq!(choice, want);
@@ -447,10 +520,12 @@ mod tests {
         std::fs::remove_file(path).ok();
     }
 
-    /// Satellite: the four-column TSV (threads included) re-loads
-    /// identically, for caps of every flavour (uncapped 0, small, large).
+    /// Satellite: the five-column TSV (threads and kernel included)
+    /// re-loads identically, for caps of every flavour (uncapped 0,
+    /// small, large) and every kernel id, Auto included.
     #[test]
     fn cache_roundtrip_preserves_thread_caps() {
+        use crate::gemm::kernels::ALL_KERNEL_IDS;
         let mut cache = TuneCache::default();
         let shape = ConvShape::square(1, 8, 8, 16, 3, 1, 1);
         for (i, threads) in [0usize, 1, 2, 16].into_iter().enumerate() {
@@ -461,6 +536,7 @@ mod tests {
                     v: 8 << (i % 3),
                     tile: 1 + i,
                     threads,
+                    kernel: ALL_KERNEL_IDS[i % ALL_KERNEL_IDS.len()],
                 },
             );
         }
@@ -485,7 +561,8 @@ mod tests {
             Some(&LayerChoice {
                 v: 16,
                 tile: 4,
-                threads: 0
+                threads: 0,
+                kernel: KernelId::Auto
             })
         );
         assert_eq!(
@@ -493,7 +570,27 @@ mod tests {
             Some(&LayerChoice {
                 v: 32,
                 tile: 8,
-                threads: 0
+                threads: 0,
+                kernel: KernelId::Auto
+            })
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Satellite: a four-column TSV (written before the kernel column
+    /// existed) loads with `kernel = auto` instead of erroring.
+    #[test]
+    fn cache_loads_legacy_tsv_without_kernel_column() {
+        let path = "/tmp/nmprune_tune_cache_legacy_kernel_test.tsv";
+        std::fs::write(path, "layerA\t16\t4\t2\n").unwrap();
+        let loaded = TuneCache::load(path);
+        assert_eq!(
+            loaded.entries.get("layerA"),
+            Some(&LayerChoice {
+                v: 16,
+                tile: 4,
+                threads: 2,
+                kernel: KernelId::Auto
             })
         );
         std::fs::remove_file(path).ok();
@@ -507,32 +604,38 @@ mod tests {
     fn cache_load_skips_malformed_rows_and_roundtrips_survivors() {
         let path = "/tmp/nmprune_tune_cache_malformed_test.tsv";
         let text = concat!(
-            "good1\t16\t4\t2\n",              // valid 4-col
-            "good2\t32\t8\n",                 // valid legacy 3-col → threads 0
-            "truncated\t16\n",                // too few columns
-            "nonnum\tsixteen\t4\t2\n",        // non-numeric v
-            "nonnum2\t16\tfour\t2\n",         // non-numeric tile
-            "nonnum3\t16\t4\ttwo\n",          // non-numeric threads → skip, not 0
-            "\t16\t4\t2\n",                   // empty key
-            "overlong\t16\t4\t2\t9\textra\n", // too many columns
-            "\n",                             // blank line
-            "good3\t8\t1\t0\n",               // valid after the garbage
-            "partial\t1"                      // trailing partial write (crash mid-row)
+            "good1\t16\t4\t2\n",                  // valid legacy 4-col → kernel auto
+            "good2\t32\t8\n",                     // valid legacy 3-col → threads 0
+            "good4\t16\t8\t1\tscalar\n",          // valid 5-col
+            "truncated\t16\n",                    // too few columns
+            "nonnum\tsixteen\t4\t2\n",            // non-numeric v
+            "nonnum2\t16\tfour\t2\n",             // non-numeric tile
+            "nonnum3\t16\t4\ttwo\n",              // non-numeric threads → skip, not 0
+            "badkern\t16\t4\t2\twarp9\n",         // unknown kernel name → skip, not auto
+            "\t16\t4\t2\n",                       // empty key
+            "overlong\t16\t4\t2\tscalar\textra\n", // too many columns
+            "\n",                                 // blank line
+            "good3\t8\t1\t0\n",                   // valid after the garbage
+            "partial\t1"                          // trailing partial write (crash mid-row)
         );
         std::fs::write(path, text).unwrap();
         let loaded = TuneCache::load(path);
         assert_eq!(
             loaded.entries.keys().map(String::as_str).collect::<Vec<_>>(),
-            vec!["good1", "good2", "good3"],
+            vec!["good1", "good2", "good3", "good4"],
             "exactly the well-formed rows survive"
         );
         assert_eq!(
             loaded.entries.get("good1"),
-            Some(&LayerChoice { v: 16, tile: 4, threads: 2 })
+            Some(&LayerChoice { v: 16, tile: 4, threads: 2, kernel: KernelId::Auto })
         );
         assert_eq!(
             loaded.entries.get("good2"),
-            Some(&LayerChoice { v: 32, tile: 8, threads: 0 })
+            Some(&LayerChoice { v: 32, tile: 8, threads: 0, kernel: KernelId::Auto })
+        );
+        assert_eq!(
+            loaded.entries.get("good4"),
+            Some(&LayerChoice { v: 16, tile: 8, threads: 1, kernel: KernelId::Scalar })
         );
         // Round-trip: saving the survivors and re-loading is identity.
         loaded.save(path).unwrap();
@@ -545,17 +648,58 @@ mod tests {
     #[test]
     fn cache_load_tolerates_crlf() {
         let path = "/tmp/nmprune_tune_cache_crlf_test.tsv";
-        std::fs::write(path, "layerA\t16\t4\t1\r\nlayerB\t32\t8\r\n").unwrap();
+        std::fs::write(path, "layerA\t16\t4\t1\tscalar\r\nlayerB\t32\t8\r\n").unwrap();
         let loaded = TuneCache::load(path);
         assert_eq!(
             loaded.entries.get("layerA"),
-            Some(&LayerChoice { v: 16, tile: 4, threads: 1 })
+            Some(&LayerChoice { v: 16, tile: 4, threads: 1, kernel: KernelId::Scalar })
         );
         assert_eq!(
             loaded.entries.get("layerB"),
-            Some(&LayerChoice { v: 32, tile: 8, threads: 0 })
+            Some(&LayerChoice { v: 32, tile: 8, threads: 0, kernel: KernelId::Auto })
         );
         std::fs::remove_file(path).ok();
+    }
+
+    /// Bugfix: a NaN score (a garbled probe) used to panic `pick` via
+    /// `partial_cmp(...).unwrap()`. Non-finite scores must never win
+    /// and never crash the sweep.
+    #[test]
+    fn pick_ignores_non_finite_scores() {
+        let cand = |score: f64| Candidate {
+            lmul: 1,
+            v: 8,
+            tile: 1,
+            threads: 1,
+            kernel: KernelId::Scalar,
+            score,
+        };
+        let r = pick(vec![
+            cand(5.0),
+            cand(f64::NAN),
+            cand(3.0),
+            cand(f64::INFINITY),
+            cand(4.0),
+        ]);
+        assert_eq!(r.best.score, 3.0);
+        assert_eq!(r.candidates.len(), 5, "candidates are reported unfiltered");
+    }
+
+    /// Bugfix companion: an all-non-finite sweep degrades to the first
+    /// candidate deterministically instead of panicking.
+    #[test]
+    fn pick_survives_all_non_finite_scores() {
+        let cand = |tile: usize, score: f64| Candidate {
+            lmul: 1,
+            v: 8,
+            tile,
+            threads: 1,
+            kernel: KernelId::Scalar,
+            score,
+        };
+        let r = pick(vec![cand(1, f64::NAN), cand(2, f64::NAN)]);
+        assert_eq!(r.best.tile, 1, "falls back to the first candidate");
+        assert!(r.best.score.is_nan());
     }
 
     #[test]

@@ -18,11 +18,22 @@
 //! racing cap path, a ragged-edge overrun — breaks exact equality and
 //! shrinks to a small counterexample.
 //!
+//! The bitwise properties pin `KernelId::Scalar`: native SIMD backends
+//! (AVX2/AVX-512/NEON) reassociate the FMA reduction, so the bitwise
+//! bar applies to the scalar oracle only. The kernel axis gets its own
+//! differential suite below: every registered-and-available backend
+//! vs the scalar oracle under the explicit parity bound
+//! (`within_parity_bound`: ≤ `PARITY_ULPS` ULPs, or the
+//! magnitude-scaled epsilon arm when cancellation makes ULP distance
+//! meaningless).
+//!
 //! Runs from fixed seeds via `util::prop::check` (with shrinking), so
 //! CI is deterministic; `NMPRUNE_PROP_CASES=512` (the scheduled
 //! `fuzz-extended` job) scales the same suites up without code changes.
 
 use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
+use nmprune::gemm::kernels::{available_ids, within_parity_bound};
+use nmprune::gemm::KernelId;
 use nmprune::im2col::im2col_cnhw;
 use nmprune::tensor::Tensor;
 use nmprune::util::{prop, ThreadPool, XorShiftRng};
@@ -89,8 +100,11 @@ fn sparse_path_matches_naive_dense(c: &Case) -> bool {
     let mut r = XorShiftRng::new(c.data_seed);
     let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
     let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -0.5, 0.5);
+    // Scalar-pinned: the bitwise bar is the scalar oracle's contract;
+    // native backends are covered by the parity-bound suite below.
     let op = Conv2dSparseCnhw::new(s, &w, c.v, c.tile, c.n_keep, c.m)
-        .with_thread_cap(c.layer_cap);
+        .with_thread_cap(c.layer_cap)
+        .with_kernel(KernelId::Scalar);
     let pool = ThreadPool::shared(c.pool_size);
     let got = op.run_capped(&x, &pool, c.run_cap);
     if got.shape != vec![s.c_out, s.n, s.h_out(), s.w_out()] {
@@ -146,6 +160,68 @@ fn fuzz_sparse_conv_serial_bitwise_vs_naive_dense() {
             c
         },
         sparse_path_matches_naive_dense,
+    );
+}
+
+/// The kernel axis: every registered-and-available native backend runs
+/// the same case as the scalar oracle and must agree per element under
+/// [`within_parity_bound`] — ≤ `PARITY_ULPS` ULPs, or within the
+/// magnitude-scaled epsilon arm when the output is the result of heavy
+/// cancellation. The magnitude scale `Σ|wᵢ·xᵢ|` is accumulated in the
+/// same naive loop that defines the oracle, so the bound tightens
+/// exactly where the reduction is well-conditioned.
+fn every_kernel_matches_scalar_oracle(c: &Case) -> bool {
+    let s = c.shape;
+    let mut r = XorShiftRng::new(c.data_seed);
+    let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+    let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -0.5, 0.5);
+    let pool = ThreadPool::shared(c.pool_size);
+    let oracle_op = Conv2dSparseCnhw::new(s, &w, c.v, c.tile, c.n_keep, c.m)
+        .with_thread_cap(c.layer_cap)
+        .with_kernel(KernelId::Scalar);
+    let oracle = oracle_op.run_capped(&x, &pool, c.run_cap);
+    // Per-element |w|·|x| magnitude over the masked weights: the
+    // cancellation-aware scale for the epsilon arm of the bound.
+    let a = im2col_cnhw(&x, &s);
+    let wm = oracle_op.weights.decompress();
+    let (k, cols) = (s.k(), s.gemm_cols());
+    let mut mag = vec![0.0f32; s.c_out * cols];
+    for o in 0..s.c_out {
+        for col in 0..cols {
+            let mut m = 0.0f32;
+            for kk in 0..k {
+                m += (wm[o * k + kk] * a[kk * cols + col]).abs();
+            }
+            mag[o * cols + col] = m;
+        }
+    }
+    for id in available_ids() {
+        let op = Conv2dSparseCnhw::new(s, &w, c.v, c.tile, c.n_keep, c.m)
+            .with_thread_cap(c.layer_cap)
+            .with_kernel(id);
+        let got = op.run_capped(&x, &pool, c.run_cap);
+        if got.shape != oracle.shape {
+            return false;
+        }
+        for i in 0..got.data.len() {
+            if !within_parity_bound(got.data[i], oracle.data[i], mag[i]) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[test]
+fn fuzz_every_kernel_backend_vs_scalar_oracle() {
+    prop::check(
+        prop::Config {
+            cases: prop::cases_from_env(48),
+            seed: 0xF22C,
+            max_size: 48,
+        },
+        gen_case,
+        every_kernel_matches_scalar_oracle,
     );
 }
 
