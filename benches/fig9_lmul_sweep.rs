@@ -68,7 +68,7 @@ fn main() {
         let (bi, &bv) = times
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let wv = times.iter().cloned().fold(0.0f64, f64::max);
         cells.push(format!("LMUL={}", LMULS[bi]));
@@ -107,7 +107,7 @@ fn main() {
         let (bi, &bv) = cycs
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let wv = cycs.iter().cloned().fold(0.0f64, f64::max);
         cells.push(format!("LMUL={}", LMULS[bi]));

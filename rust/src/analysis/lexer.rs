@@ -1,0 +1,422 @@
+//! A small line-oriented Rust lexer for the lint pass.
+//!
+//! [`lex`] splits a source file into [`Line`]s, each carrying three
+//! views of the same text: the raw line, a *code view* with every
+//! comment removed and every string/char literal blanked to its
+//! delimiters, and a *comment view* holding the comment text. Rules
+//! match invariants against the code view (so `unsafe` inside a string
+//! or a comment can never trip a rule) and read SAFETY justifications
+//! and suppression directives from the comment view.
+//!
+//! The lexer understands exactly the token classes that can hide rule
+//! patterns from a naive `grep` — the whole reason this pass exists:
+//!
+//! * line comments (`//`, `///`, `//!`) and *nested* block comments
+//!   (`/* /* */ */`), including doc blocks;
+//! * string literals with escapes (`"\" // not a comment"`), byte
+//!   strings, and multi-line strings;
+//! * raw strings `r"…"` / `r#"…"#` / `br##"…"##` with any hash depth
+//!   (no escapes inside — the closing delimiter is quote-plus-hashes);
+//! * char and byte-char literals (`'"'`, `b'\''`) versus lifetimes
+//!   (`&'a T`, `'outer:`) — a lifetime's `'` must not open a "literal"
+//!   that swallows the rest of the file;
+//! * CRLF line endings (`\r` is dropped from every view).
+//!
+//! It does not build a token tree: rules are line-anchored substring
+//! and word matches over the cleaned views, which is exactly enough for
+//! the repo invariants and keeps the pass dependency-free.
+
+/// One source line in three views.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// The original text (without the trailing `\n` / `\r\n`).
+    pub raw: String,
+    /// Code only: comments removed, string/char contents blanked (the
+    /// delimiters and raw-string hashes are kept so tokens stay
+    /// separated).
+    pub code: String,
+    /// Comment text on this line, markers included (`// …`, `/* …`).
+    pub comment: String,
+}
+
+/// Lexer state that survives a line break.
+enum State {
+    /// Plain code.
+    Code,
+    /// Inside a block comment, `depth` levels deep (they nest).
+    Block(u32),
+    /// Inside a `"…"` string literal (escapes active).
+    Str,
+    /// Inside a raw string closed by `"` followed by this many `#`s.
+    RawStr(u32),
+}
+
+/// Does `c` continue an identifier? Used to keep `r`/`b` prefixes of
+/// raw/byte strings apart from identifiers that merely end in `r`/`b`.
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Try to read a raw-string opener `r##"` at `chars[i]` (the `r`).
+/// Returns the hash count and the index just past the opening quote.
+fn raw_opener(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    debug_assert_eq!(chars[i], 'r');
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Lex `src` into per-line code/comment views. Never fails: unterminated
+/// literals or comments simply run to end of file (the compiler will
+/// have plenty to say about such a file; the lint pass stays total).
+pub fn lex(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut prev_code_char = ' ';
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\r' {
+            // CRLF: the carriage return is invisible to every view.
+            i += 1;
+            continue;
+        }
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            prev_code_char = ' ';
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    // Line comment (incl. `///` and `//!`): the rest of
+                    // the line is comment text.
+                    while i < chars.len() && chars[i] != '\n' {
+                        if chars[i] != '\r' {
+                            cur.raw.push(chars[i]);
+                            cur.comment.push(chars[i]);
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    cur.raw.push_str("/*");
+                    cur.comment.push_str("/*");
+                    state = State::Block(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    cur.raw.push('"');
+                    cur.code.push('"');
+                    state = State::Str;
+                    i += 1;
+                    continue;
+                }
+                if c == 'r' && !is_ident(prev_code_char) {
+                    if let Some((hashes, after)) = raw_opener(&chars, i) {
+                        for &rc in &chars[i..after] {
+                            cur.raw.push(rc);
+                            cur.code.push(rc);
+                        }
+                        state = State::RawStr(hashes);
+                        i = after;
+                        continue;
+                    }
+                }
+                if c == 'b' && !is_ident(prev_code_char) {
+                    if next == Some('r') {
+                        if let Some((hashes, after)) = raw_opener(&chars, i + 1) {
+                            for &rc in &chars[i..after] {
+                                cur.raw.push(rc);
+                                cur.code.push(rc);
+                            }
+                            state = State::RawStr(hashes);
+                            i = after;
+                            continue;
+                        }
+                    }
+                    if next == Some('"') {
+                        cur.raw.push_str("b\"");
+                        cur.code.push_str("b\"");
+                        state = State::Str;
+                        i += 2;
+                        continue;
+                    }
+                    // `b'…'` falls through to the `'` branch below once
+                    // the `b` has been emitted as a plain code char.
+                }
+                if c == '\'' {
+                    // Char literal or lifetime. A char literal is `'`
+                    // followed by an escape, or by exactly one char and
+                    // a closing `'`. Anything else (`'a`, `'outer:`,
+                    // `<'a>`) is a lifetime/label: emit the quote alone.
+                    let is_char_lit = match chars.get(i + 1) {
+                        Some('\\') => true,
+                        Some(_) => chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    if is_char_lit {
+                        cur.raw.push('\'');
+                        cur.code.push('\'');
+                        let mut j = i + 1;
+                        if chars.get(j) == Some(&'\\') {
+                            // Skip the escape head so `'\''` and `'\\'`
+                            // don't close early; then run to the quote.
+                            cur.raw.push('\\');
+                            j += 1;
+                            if let Some(&e) = chars.get(j) {
+                                cur.raw.push(e);
+                                j += 1;
+                            }
+                        }
+                        while j < chars.len() && chars[j] != '\'' {
+                            cur.raw.push(chars[j]);
+                            j += 1;
+                        }
+                        if j < chars.len() {
+                            cur.raw.push('\'');
+                            cur.code.push('\'');
+                            j += 1;
+                        }
+                        prev_code_char = '\'';
+                        i = j;
+                        continue;
+                    }
+                    cur.raw.push('\'');
+                    cur.code.push('\'');
+                    prev_code_char = '\'';
+                    i += 1;
+                    continue;
+                }
+                cur.raw.push(c);
+                cur.code.push(c);
+                prev_code_char = c;
+                i += 1;
+            }
+            State::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    cur.raw.push_str("/*");
+                    cur.comment.push_str("/*");
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    cur.raw.push_str("*/");
+                    cur.comment.push_str("*/");
+                    state = if depth > 1 { State::Block(depth - 1) } else { State::Code };
+                    i += 2;
+                } else {
+                    cur.raw.push(c);
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                cur.raw.push(c);
+                if c == '\\' {
+                    if let Some(&e) = chars.get(i + 1) {
+                        if e != '\n' && e != '\r' {
+                            cur.raw.push(e);
+                            i += 1;
+                        }
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Code;
+                }
+                i += 1;
+            }
+            State::RawStr(hashes) => {
+                cur.raw.push(c);
+                if c == '"' {
+                    let n = hashes as usize;
+                    let closes = (0..n).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closes {
+                        cur.code.push('"');
+                        for _ in 0..n {
+                            cur.raw.push('#');
+                            cur.code.push('#');
+                        }
+                        state = State::Code;
+                        i += 1 + n;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    // Final line without a trailing newline.
+    if !cur.raw.is_empty() || !lines.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Does `code` contain `word` bounded by non-identifier chars? The
+/// word-level match rules (`unsafe`, `elapsed`, `debug_assert` …) use
+/// this so `unsafe_op_in_unsafe_fn` or `non_elapsed_field` never match.
+pub fn contains_word(code: &str, word: &str) -> bool {
+    find_word(code, word).is_some()
+}
+
+/// Byte offset of the first word-bounded occurrence of `word` in
+/// `code`. The right boundary tolerates a following `!` (macro names:
+/// `debug_assert!`/`vec!` are still the banned token).
+pub fn find_word(code: &str, word: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(word) {
+        let at = from + rel;
+        let left_ok = at == 0 || {
+            let b = bytes[at - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let end = at + word.len();
+        let right_ok = end >= bytes.len() || {
+            let b = bytes[end];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if left_ok && right_ok {
+            return Some(at);
+        }
+        from = at + word.len().max(1);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_and_doc_comments() {
+        let lines = lex("let x = 1; // unsafe here\n/// docs unsafe\nlet y = 2;");
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert!(lines[0].comment.contains("unsafe here"));
+        assert_eq!(lines[1].code, "");
+        assert!(lines[1].comment.contains("docs unsafe"));
+        assert_eq!(lines[2].code, "let y = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = lex("a /* one /* two */ still */ b\nc");
+        assert_eq!(lines[0].code, "a  b");
+        assert!(lines[0].comment.contains("two"));
+        assert_eq!(lines[1].code, "c");
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let lines = lex("x /* unsafe\nthread::spawn\n*/ y");
+        assert_eq!(lines[0].code, "x ");
+        assert_eq!(lines[1].code, "");
+        assert!(lines[1].comment.contains("thread::spawn"));
+        assert_eq!(lines[2].code, " y");
+    }
+
+    #[test]
+    fn blanks_string_contents_and_keeps_delimiters() {
+        let lines = lex("let s = \"unsafe // not a comment\"; call();");
+        assert_eq!(lines[0].code, "let s = \"\"; call();");
+        assert!(lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn string_escapes_do_not_close_early() {
+        let lines = lex(r#"let s = "quote \" then // still string"; x"#);
+        assert_eq!(lines[0].code, "let s = \"\"; x");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let lines = lex("let s = r#\"unsafe \" inner\"#; y();");
+        assert_eq!(lines[0].code, "let s = r#\"\"#; y();");
+        let lines = lex("let s = r\"unsafe\"; z();");
+        assert_eq!(lines[0].code, "let s = r\"\"; z();");
+        let lines = lex("let s = br##\"thread::spawn\"##; w();");
+        assert_eq!(lines[0].code, "let s = br##\"\"##; w();");
+    }
+
+    #[test]
+    fn raw_string_spans_lines() {
+        let lines = lex("let s = r#\"line one\nunsafe two\"#;\nnext");
+        assert_eq!(lines[0].code, "let s = r#\"");
+        assert_eq!(lines[1].code, "\"#;");
+        assert_eq!(lines[2].code, "next");
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_a_raw_string() {
+        // `var"x"` is nonsense Rust but the lexer must not treat the
+        // `r` of an identifier as a raw-string prefix; more realistic:
+        // a macro arg like `write!(f, "…")` after an ident ending in r.
+        let lines = lex("let ptr = other;\nlet s = \"x\";");
+        assert_eq!(lines[0].code, "let ptr = other;");
+        assert_eq!(lines[1].code, "let s = \"\";");
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_pass() {
+        assert_eq!(code_of("let c = '\"'; f::<'_>();")[0], "let c = ''; f::<'_>();");
+        assert_eq!(code_of("let c = '\\''; g();")[0], "let c = ''; g();");
+        assert_eq!(code_of("fn f<'a>(x: &'a str) {}")[0], "fn f<'a>(x: &'a str) {}");
+        // A quote inside a char literal must not open a string that
+        // swallows the following code.
+        let mixed = code_of("let c = '\"'; let s = \"k\"; h();");
+        assert_eq!(mixed[0], "let c = ''; let s = \"\"; h();");
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        assert_eq!(code_of("let b = b\"unsafe\"; x();")[0], "let b = b\"\"; x();");
+        assert_eq!(code_of("let b = b'\\''; y();")[0], "let b = b''; y();");
+    }
+
+    #[test]
+    fn crlf_is_invisible() {
+        let lines = lex("let a = 1;\r\nlet b = 2; // tail\r\n");
+        assert_eq!(lines[0].code, "let a = 1;");
+        assert_eq!(lines[1].code, "let b = 2; ");
+        assert!(lines[1].comment.contains("tail"));
+        assert!(!lines[0].raw.contains('\r'));
+    }
+
+    #[test]
+    fn unterminated_string_runs_to_eof_without_panic() {
+        let lines = lex("let s = \"never closed\nmore");
+        assert_eq!(lines[0].code, "let s = \"");
+        assert_eq!(lines[1].code, "");
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("unsafe {", "unsafe"));
+        assert!(contains_word("pub unsafe fn f()", "unsafe"));
+        assert!(!contains_word("unsafe_op_in_unsafe_fn", "unsafe"));
+        assert!(!contains_word("deny(unsafe_code)", "unsafe"));
+        assert!(contains_word("debug_assert!(x)", "debug_assert"));
+        assert!(!contains_word("debug_assert_eq_helper", "debug_assert"));
+        assert!(contains_word("t.elapsed()", "elapsed"));
+        assert!(!contains_word("elapsed_ns", "elapsed"));
+    }
+}

@@ -1,0 +1,154 @@
+//! `nmprune lint`: a dependency-free static-analysis pass over the
+//! crate's own source tree.
+//!
+//! The repo carries invariants that `rustc` cannot check — every
+//! `unsafe` justified in a `// SAFETY:` comment, no thread spawns
+//! outside the pool, a clock-free policy module, release-mode artifact
+//! validation, NaN-safe comparisons, allocation-free `_into` paths.
+//! Until this pass they were enforced by convention and one CI `grep`
+//! (which false-positived on a doc comment). This module makes them
+//! machine-checked: [`lexer`] strips comments/strings so rules only
+//! ever see code, [`rules`] anchors each invariant to file:line
+//! findings, and the CLI (`nmprune lint [--json] [path]`) exits with
+//! bench-diff-style codes: 0 clean, 1 findings, 2 usage/IO error.
+//!
+//! See `docs/SAFETY.md` for the rule catalogue and suppression policy.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{Finding, Rule, SUPPRESS_PREFIX, ZERO_ALLOC_MARKER};
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Lint one in-memory source file. `file` is the path label findings
+/// will carry; the path-scoped rules (S1/P1/A1) match on its suffix,
+/// so pass something ending in the repo-relative path.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    rules::lint_lines(file, &lexer::lex(src))
+}
+
+/// Recursively collect `.rs` files under `dir`, skipping hidden
+/// entries and build output (`target/`). Deterministic order.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    for path in paths {
+        let name = match path.file_name() {
+            Some(n) => n.to_string_lossy().into_owned(),
+            None => continue,
+        };
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself if it is a
+/// file). Findings carry `/`-separated paths relative to `root`.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    if root.is_file() {
+        files.push(root.to_path_buf());
+    } else if root.is_dir() {
+        collect_rs_files(root, &mut files)?;
+    } else {
+        return Err(format!("no such path: {}", root.display()));
+    }
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let label: String = match path.strip_prefix(root) {
+            Ok(rel) if rel.as_os_str().is_empty() => path.to_string_lossy().into_owned(),
+            Ok(rel) => rel.to_string_lossy().into_owned(),
+            Err(_) => path.to_string_lossy().into_owned(),
+        };
+        let label = label.replace('\\', "/");
+        findings.extend(lint_source(&label, &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule.id()).cmp(&(&b.file, b.line, b.rule.id())));
+    Ok(findings)
+}
+
+/// Human-readable report: one `file:line: [RULE] message` block per
+/// finding with the offending line indented beneath, then a summary.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule.id(), f.message));
+        if !f.snippet.is_empty() {
+            s.push_str(&format!("    {}\n", f.snippet));
+        }
+    }
+    if findings.is_empty() {
+        s.push_str("lint: clean\n");
+    } else {
+        s.push_str(&format!("lint: {} finding(s)\n", findings.len()));
+    }
+    s
+}
+
+/// Machine-readable report for CI, rendered with the crate's own JSON
+/// writer (schema_version 1).
+pub fn render_json(root: &str, findings: &[Finding]) -> String {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::Obj(vec![
+                ("file".into(), Json::Str(f.file.clone())),
+                ("line".into(), Json::Num(f.line as f64)),
+                ("rule".into(), Json::Str(f.rule.id().into())),
+                ("message".into(), Json::Str(f.message.clone())),
+                ("snippet".into(), Json::Str(f.snippet.clone())),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema_version".into(), Json::Num(1.0)),
+        ("root".into(), Json::Str(root.to_string())),
+        ("count".into(), Json::Num(findings.len() as f64)),
+        ("findings".into(), Json::Arr(items)),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_json_roundtrips_through_parser() {
+        let findings = lint_source("src/x.rs", "unsafe fn f() {}\n");
+        assert_eq!(findings.len(), 1);
+        let text = render_json(".", &findings);
+        let parsed = Json::parse(&text).expect("lint JSON must parse");
+        assert_eq!(parsed.get("count").and_then(Json::as_f64), Some(1.0));
+        let arr = parsed.get("findings").and_then(Json::as_arr).expect("findings array");
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("U1"));
+        assert_eq!(arr[0].get("line").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn render_text_reports_clean_and_findings() {
+        assert_eq!(render_text(&[]), "lint: clean\n");
+        let findings = lint_source("src/x.rs", "unsafe fn f() {}\n");
+        let text = render_text(&findings);
+        assert!(text.contains("src/x.rs:1: [U1]"));
+        assert!(text.contains("lint: 1 finding(s)"));
+    }
+}

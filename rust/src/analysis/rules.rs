@@ -1,0 +1,539 @@
+//! Line-anchored rules over the lexed views, plus the suppression
+//! directive grammar.
+//!
+//! Each rule encodes an invariant the repo already claims elsewhere
+//! (ARCHITECTURE.md "Invariants", docs/SAFETY.md):
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | U1 | every `unsafe` is immediately preceded by a `// SAFETY:` comment (or a `# Safety` doc section) |
+//! | S1 | no `thread::spawn` outside `util/threadpool.rs` — all parallelism goes through the persistent pool |
+//! | P1 | `engine/policy.rs` is clock-free: no `Instant::now` / `SystemTime` / `.elapsed()` |
+//! | A1 | `runtime/artifact.rs` never uses `debug_assert` — loader validation must survive release builds |
+//! | N1 | no `.partial_cmp(…).unwrap()` anywhere — NaN turns it into a panic (use `total_cmp`) |
+//! | Z1 | no allocating calls inside a zero-alloc-marked region (the `_into` twins) |
+//! | L1 | lint hygiene: suppression directives must parse and carry a non-empty justification |
+//!
+//! Suppression is explicit and always justified:
+//!
+//! ```text
+//! // nmprune-lint: allow(S1) -- dispatcher threads live for the server lifetime
+//! ```
+//!
+//! A directive covers its own line and the next line, so it works both
+//! as a trailing comment and as a comment above the flagged statement.
+//! A directive that does not parse, names an unknown rule, or has an
+//! empty justification is itself an L1 finding — and L1 cannot be
+//! suppressed.
+
+use super::lexer::{contains_word, find_word, Line};
+
+/// The marker comment that opens a zero-alloc region: the next `fn` is
+/// checked by Z1 over its whole body.
+pub const ZERO_ALLOC_MARKER: &str = "nmprune: zero-alloc";
+
+/// Prefix of a suppression directive inside a comment.
+pub const SUPPRESS_PREFIX: &str = "nmprune-lint:";
+
+/// Rule identifiers. `L1` is the meta-rule for malformed suppressions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    U1,
+    S1,
+    P1,
+    A1,
+    N1,
+    Z1,
+    L1,
+}
+
+impl Rule {
+    /// Every rule, in report order.
+    pub const ALL: [Rule; 7] =
+        [Rule::U1, Rule::S1, Rule::P1, Rule::A1, Rule::N1, Rule::Z1, Rule::L1];
+
+    /// Stable id used in reports and `allow(..)` directives.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::U1 => "U1",
+            Rule::S1 => "S1",
+            Rule::P1 => "P1",
+            Rule::A1 => "A1",
+            Rule::N1 => "N1",
+            Rule::Z1 => "Z1",
+            Rule::L1 => "L1",
+        }
+    }
+
+    /// Parse an id as written in an `allow(..)` directive.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.id() == id)
+    }
+}
+
+/// One lint finding, anchored to a file and 1-based line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+    /// The offending source line, trimmed and capped for display.
+    pub snippet: String,
+}
+
+/// A parsed, well-formed suppression directive.
+struct Directive {
+    /// 0-based line the directive sits on.
+    line: usize,
+    rules: Vec<Rule>,
+}
+
+fn snippet_of(line: &Line) -> String {
+    let t = line.raw.trim();
+    if t.chars().count() > 120 {
+        let cut: String = t.chars().take(117).collect();
+        format!("{cut}...")
+    } else {
+        t.to_string()
+    }
+}
+
+fn finding(file: &str, idx: usize, rule: Rule, message: String, lines: &[Line]) -> Finding {
+    Finding {
+        file: file.to_string(),
+        line: idx + 1,
+        rule,
+        message,
+        snippet: snippet_of(&lines[idx]),
+    }
+}
+
+/// Find `pat` in `code` requiring only a *left* identifier boundary, so
+/// `debug_assert` also matches `debug_assert_eq!` while `my_debug_assert`
+/// does not. Patterns that begin with a non-identifier char (`.to_vec(`)
+/// trivially pass the boundary check at any position.
+fn find_ident_prefix(code: &str, pat: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(pat) {
+        let at = from + rel;
+        let left_ok = at == 0 || {
+            let b = bytes[at - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if left_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// Parse every suppression directive in `lines`. Malformed directives
+/// come back as L1 findings instead.
+fn parse_directives(file: &str, lines: &[Line]) -> (Vec<Directive>, Vec<Finding>) {
+    let mut directives = Vec::new();
+    let mut bad = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some(pos) = line.comment.find(SUPPRESS_PREFIX) else {
+            continue;
+        };
+        let rest = line.comment[pos + SUPPRESS_PREFIX.len()..].trim_start();
+        let Some(inner_start) = rest.strip_prefix("allow(") else {
+            let msg = format!("malformed directive: expected `{SUPPRESS_PREFIX} allow(<rule>)`");
+            bad.push(finding(file, idx, Rule::L1, msg, lines));
+            continue;
+        };
+        let Some(close) = inner_start.find(')') else {
+            let msg = "malformed directive: unterminated allow(...)".to_string();
+            bad.push(finding(file, idx, Rule::L1, msg, lines));
+            continue;
+        };
+        let mut rules = Vec::new();
+        let mut ok = true;
+        for id in inner_start[..close].split(',') {
+            let id = id.trim();
+            match Rule::from_id(id) {
+                Some(Rule::L1) => {
+                    let msg = "L1 cannot be suppressed".to_string();
+                    bad.push(finding(file, idx, Rule::L1, msg, lines));
+                    ok = false;
+                }
+                Some(r) => rules.push(r),
+                None => {
+                    let msg = format!("unknown rule id `{id}` in allow(...)");
+                    bad.push(finding(file, idx, Rule::L1, msg, lines));
+                    ok = false;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let tail = inner_start[close + 1..].trim_start();
+        let Some(just) = tail.strip_prefix("--") else {
+            let msg = "suppression without justification: append `-- <why>`".to_string();
+            bad.push(finding(file, idx, Rule::L1, msg, lines));
+            continue;
+        };
+        if just.trim().is_empty() {
+            let msg = "suppression with empty justification".to_string();
+            bad.push(finding(file, idx, Rule::L1, msg, lines));
+            continue;
+        }
+        if rules.is_empty() {
+            let msg = "allow() names no rules".to_string();
+            bad.push(finding(file, idx, Rule::L1, msg, lines));
+            continue;
+        }
+        directives.push(Directive { line: idx, rules });
+    }
+    (directives, bad)
+}
+
+/// U1 justification scan: is the `unsafe` on line `idx` covered by a
+/// trailing `SAFETY:` comment or an immediately preceding comment block
+/// containing `SAFETY:` (or a `# Safety` rustdoc section, which covers
+/// trait-level `unsafe fn` declarations)?
+///
+/// The upward scan skips attribute lines (`#[...]`, `#![...]`) and
+/// statement-continuation lines (code not ending in `;`/`{`/`}`), so a
+/// comment above `let ptr = { unsafe { .. } }` split across lines still
+/// counts. It stops — and the check fails — at a blank line or a
+/// completed statement: "immediately preceding" is the contract.
+fn unsafe_is_justified(lines: &[Line], idx: usize) -> bool {
+    let has_safety = |c: &str| c.contains("SAFETY:") || c.contains("# Safety");
+    if has_safety(&lines[idx].comment) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let comment = lines[j].comment.trim();
+        if code.is_empty() && comment.is_empty() {
+            return false; // blank line: not "immediately preceding"
+        }
+        if code.is_empty() {
+            // Comment-only line: accept if its contiguous comment block
+            // carries the justification.
+            let mut k = j + 1;
+            while k > 0 {
+                let l = &lines[k - 1];
+                if !l.code.trim().is_empty() || l.comment.trim().is_empty() {
+                    break;
+                }
+                if has_safety(&l.comment) {
+                    return true;
+                }
+                k -= 1;
+            }
+            return false;
+        }
+        if has_safety(comment) {
+            return true;
+        }
+        if code.starts_with("#[") || code.starts_with("#!") {
+            continue; // attributes sit between the comment and the item
+        }
+        if code.ends_with(';') || code.ends_with('{') || code.ends_with('}') {
+            return false; // previous statement completed: no comment
+        }
+        // Otherwise this is an earlier line of the same statement
+        // (e.g. `let f: &T =` above an `unsafe { .. }`): keep scanning.
+    }
+    false
+}
+
+/// N1: `.partial_cmp(..).unwrap()` / `.expect(..)` chains, matched over
+/// the concatenated code view so rustfmt line breaks between the call
+/// and the unwrap cannot hide the pattern.
+fn scan_partial_cmp_unwrap(file: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    let mut flat = String::new();
+    let mut line_of = Vec::new(); // char index -> 0-based line
+    for (idx, line) in lines.iter().enumerate() {
+        for c in line.code.chars() {
+            flat.push(c);
+            line_of.push(idx);
+        }
+        flat.push('\n');
+        line_of.push(idx);
+    }
+    let chars: Vec<char> = flat.chars().collect();
+    let mut from = 0;
+    while let Some(rel) = flat[from..].find(".partial_cmp") {
+        let at = from + rel;
+        from = at + ".partial_cmp".len();
+        // flat is pushed char-by-char, so byte offsets == char offsets
+        // only for ASCII; recover the char index by counting.
+        let char_at = flat[..at].chars().count();
+        let mut i = char_at + ".partial_cmp".chars().count();
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        if chars.get(i) != Some(&'(') {
+            continue;
+        }
+        let mut depth = 0i32;
+        while i < chars.len() {
+            match chars[i] {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        if chars.get(i) != Some(&'.') {
+            continue;
+        }
+        i += 1;
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        let mut ident = String::new();
+        while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+            ident.push(chars[i]);
+            i += 1;
+        }
+        if ident == "unwrap" || ident == "expect" {
+            let idx = line_of[char_at];
+            let msg = format!(".partial_cmp(..).{ident}() panics on NaN; use total_cmp");
+            out.push(finding(file, idx, Rule::N1, msg, lines));
+        }
+    }
+}
+
+/// Z1: from each [`ZERO_ALLOC_MARKER`] comment, locate the next `fn`,
+/// brace-match its body on the code view, and flag allocating calls
+/// inside the span.
+fn scan_zero_alloc_regions(file: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    const ALLOC_PATTERNS: [(&str, &str); 6] = [
+        ("Vec::new", "Vec::new allocates"),
+        ("vec!", "vec! allocates"),
+        (".to_vec(", ".to_vec() allocates"),
+        ("Box::new", "Box::new allocates"),
+        ("String::from", "String::from allocates"),
+        (".collect", ".collect() allocates"),
+    ];
+    for (midx, mline) in lines.iter().enumerate() {
+        if !mline.comment.contains(ZERO_ALLOC_MARKER) {
+            continue;
+        }
+        // Find the fn this marker annotates: skip comments/attrs/blank.
+        let mut fn_idx = None;
+        for (j, line) in lines.iter().enumerate().skip(midx).take(12) {
+            if contains_word(&line.code, "fn") {
+                fn_idx = Some(j);
+                break;
+            }
+        }
+        let Some(fn_idx) = fn_idx else {
+            let msg = format!("`{ZERO_ALLOC_MARKER}` marker is not followed by a fn");
+            out.push(finding(file, midx, Rule::Z1, msg, lines));
+            continue;
+        };
+        // Fn name, for the message.
+        let fn_code = &lines[fn_idx].code;
+        let name: String = find_word(fn_code, "fn")
+            .map(|p| {
+                fn_code[p + 2..]
+                    .trim_start()
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect()
+            })
+            .unwrap_or_default();
+        // Body span: first '{' at or after the fn line, brace-matched.
+        let mut depth = 0i32;
+        let mut opened = false;
+        let mut end_idx = lines.len().saturating_sub(1);
+        'span: for (j, line) in lines.iter().enumerate().skip(fn_idx) {
+            for c in line.code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            end_idx = j;
+                            break 'span;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for (j, line) in lines.iter().enumerate().take(end_idx + 1).skip(fn_idx) {
+            for (pat, what) in ALLOC_PATTERNS {
+                if find_ident_prefix(&line.code, pat).is_some() {
+                    let msg = format!("{what} inside zero-alloc region `fn {name}`");
+                    out.push(finding(file, j, Rule::Z1, msg, lines));
+                }
+            }
+        }
+    }
+}
+
+/// Run every rule over one lexed file. `file` should be a
+/// `/`-separated path relative to the lint root — the path-scoped
+/// rules (S1/P1/A1) match on its suffix.
+pub fn lint_lines(file: &str, lines: &[Line]) -> Vec<Finding> {
+    let (directives, mut findings) = parse_directives(file, lines);
+
+    let in_pool = file.ends_with("util/threadpool.rs");
+    let in_policy = file.ends_with("engine/policy.rs");
+    let in_artifact = file.ends_with("runtime/artifact.rs");
+
+    let mut raw = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if contains_word(code, "unsafe") && !unsafe_is_justified(lines, idx) {
+            let msg = "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string();
+            raw.push(finding(file, idx, Rule::U1, msg, lines));
+        }
+        if !in_pool && find_ident_prefix(code, "thread::spawn").is_some() {
+            let msg =
+                "thread::spawn outside util/threadpool.rs -- use the persistent pool".to_string();
+            raw.push(finding(file, idx, Rule::S1, msg, lines));
+        }
+        if in_policy
+            && (find_ident_prefix(code, "Instant::now").is_some()
+                || contains_word(code, "SystemTime")
+                || contains_word(code, "elapsed"))
+        {
+            let msg = "clock source in engine/policy.rs -- policies must stay pure".to_string();
+            raw.push(finding(file, idx, Rule::P1, msg, lines));
+        }
+        if in_artifact && find_ident_prefix(code, "debug_assert").is_some() {
+            let msg =
+                "debug_assert in the artifact loader compiles out of release builds".to_string();
+            raw.push(finding(file, idx, Rule::A1, msg, lines));
+        }
+    }
+    scan_partial_cmp_unwrap(file, lines, &mut raw);
+    scan_zero_alloc_regions(file, lines, &mut raw);
+
+    // Apply suppressions: a directive covers its own line and the next.
+    for f in raw {
+        let idx = f.line - 1;
+        let suppressed = directives
+            .iter()
+            .any(|d| (d.line == idx || d.line + 1 == idx) && d.rules.contains(&f.rule));
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule.id()).cmp(&(b.line, b.rule.id())));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run(file: &str, src: &str) -> Vec<Finding> {
+        lint_lines(file, &lex(src))
+    }
+
+    #[test]
+    fn u1_flags_bare_unsafe_and_accepts_safety() {
+        let bad = run("x.rs", "fn f() {\n    unsafe { work() }\n}\n");
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].rule, Rule::U1);
+        assert_eq!(bad[0].line, 2);
+        let good = run(
+            "x.rs",
+            "fn f() {\n    // SAFETY: bounds checked above.\n    unsafe { work() }\n}\n",
+        );
+        assert!(good.is_empty(), "{good:?}");
+    }
+
+    #[test]
+    fn u1_accepts_doc_safety_section_and_attributes_between() {
+        let src = "/// # Safety\n/// Caller upholds X.\n#[inline]\npub unsafe fn f() {}\n";
+        assert!(run("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u1_blank_line_breaks_adjacency() {
+        let src = "// SAFETY: stale comment.\n\nunsafe fn f() {}\n";
+        let f = run("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::U1);
+    }
+
+    #[test]
+    fn u1_ignores_unsafe_in_strings_and_comments() {
+        let src = "let s = \"unsafe\"; // unsafe in a comment\nlet r = r#\"unsafe\"#;\n";
+        assert!(run("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn s1_scoped_to_pool_file() {
+        let src = "std::thread::spawn(|| {});\n";
+        assert_eq!(run("src/engine/server.rs", src).len(), 1);
+        assert!(run("src/util/threadpool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn n1_spots_split_lines_and_expect() {
+        let src = "v.sort_by(|a, b| a\n    .partial_cmp(b)\n    .unwrap());\n";
+        let f = run("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::N1);
+        assert_eq!(f[0].line, 2);
+        let ok = run("x.rs", "let c = a.partial_cmp(b).unwrap_or(Ordering::Equal);\n");
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn z1_flags_alloc_in_marked_fn_only() {
+        let src = concat!(
+            "// nmprune: zero-alloc\n",
+            "fn into_twin(out: &mut [f32]) {\n",
+            "    let v = Vec::new();\n",
+            "}\n",
+            "fn free() {\n",
+            "    let v = vec![1];\n",
+            "}\n",
+        );
+        let f = run("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::Z1);
+        assert_eq!(f[0].line, 3);
+        assert!(f[0].message.contains("into_twin"));
+    }
+
+    #[test]
+    fn suppression_covers_line_and_next_and_requires_reason() {
+        let src = "// nmprune-lint: allow(S1) -- joined on drop\nstd::thread::spawn(|| {});\n";
+        assert!(run("x.rs", src).is_empty());
+        let trailing = "std::thread::spawn(|| {}); // nmprune-lint: allow(S1) -- one-shot\n";
+        assert!(run("x.rs", trailing).is_empty());
+        let empty = "// nmprune-lint: allow(S1) --\nstd::thread::spawn(|| {});\n";
+        let f = run("x.rs", empty);
+        assert_eq!(f.len(), 2, "{f:?}"); // L1 for the directive + S1 not suppressed
+        assert!(f.iter().any(|x| x.rule == Rule::L1));
+        assert!(f.iter().any(|x| x.rule == Rule::S1));
+    }
+
+    #[test]
+    fn l1_on_unknown_rule() {
+        let f = run("x.rs", "// nmprune-lint: allow(Q9) -- whatever\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::L1);
+    }
+}

@@ -119,6 +119,7 @@ impl Conv2dDenseNhwc {
 
     /// [`Conv2dDenseNhwc::run_capped`] into a caller-provided output
     /// tensor shaped `[N, H_out, W_out, C_out]` (zero-alloc path).
+    // nmprune: zero-alloc
     pub fn run_capped_into(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize, out: &mut Tensor) {
         conv2d_indirect_nhwc_parallel_capped_into(
             x,
@@ -203,6 +204,7 @@ impl Conv2dDenseCnhw {
     /// [`PackedMatrix`] and writing a caller-provided CNHW output
     /// tensor — the arena-driven zero-alloc path. Bitwise identical to
     /// `run_capped`, which routes through this body.
+    // nmprune: zero-alloc
     pub fn run_capped_into(
         &self,
         x: &Tensor,
@@ -374,6 +376,7 @@ impl Conv2dSparseCnhw {
     /// [`Conv2dSparseCnhw::run_capped`] packing into a caller-provided
     /// [`PackedMatrix`] and writing a caller-provided CNHW output
     /// tensor — the arena-driven zero-alloc path.
+    // nmprune: zero-alloc
     pub fn run_capped_into(
         &self,
         x: &Tensor,

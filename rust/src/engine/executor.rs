@@ -579,6 +579,7 @@ impl Executor {
     }
 
     /// [`Executor::run`] inside a preallocated arena (uncapped).
+    // nmprune: zero-alloc
     pub fn run_in<'a>(&self, input_nhwc: &Tensor, arena: &'a mut ScratchArena) -> &'a Tensor {
         self.run_capped_in(input_nhwc, 0, arena)
     }
@@ -594,6 +595,7 @@ impl Executor {
     /// Unlike [`Executor::run_capped`] this path never consults
     /// `NMPRUNE_TRACE`: reading an env var allocates a `CString` per
     /// call, which would break the zero-alloc guarantee.
+    // nmprune: zero-alloc
     pub fn run_capped_in<'a>(
         &self,
         input_nhwc: &Tensor,
@@ -616,7 +618,7 @@ impl Executor {
             let mut out = std::mem::replace(
                 &mut arena.slots[oslot],
                 Tensor {
-                    shape: Vec::new(),
+                    shape: Vec::new(), // nmprune-lint: allow(Z1) -- Vec::new is alloc-free
                     data: Vec::new(),
                 },
             );

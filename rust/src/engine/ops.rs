@@ -36,6 +36,7 @@ pub fn add(a: &Tensor, b: &Tensor, relu: bool) -> Tensor {
 }
 
 /// [`add`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn add_into(a: &Tensor, b: &Tensor, relu: bool, out: &mut Tensor) {
     assert_eq!(a.shape, b.shape, "residual add shape mismatch");
     assert_eq!(out.shape, a.shape, "output tensor shape");
@@ -58,6 +59,7 @@ pub fn maxpool_cnhw(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
 }
 
 /// [`maxpool_cnhw`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn maxpool_cnhw_into(x: &Tensor, k: usize, stride: usize, pad: usize, out: &mut Tensor) {
     let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let ho = (h + 2 * pad - k) / stride + 1;
@@ -105,6 +107,7 @@ pub fn avgpool_cnhw(x: &Tensor, k: usize, stride: usize) -> Tensor {
 }
 
 /// [`avgpool_cnhw`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn avgpool_cnhw_into(x: &Tensor, k: usize, stride: usize, out: &mut Tensor) {
     let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let ho = (h - k) / stride + 1;
@@ -137,6 +140,7 @@ pub fn gap_cnhw(x: &Tensor) -> Tensor {
 }
 
 /// [`gap_cnhw`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn gap_cnhw_into(x: &Tensor, out: &mut Tensor) {
     let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     assert_eq!(out.shape, [n, c], "output tensor shape");
@@ -162,6 +166,7 @@ pub fn depthwise_cnhw(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: 
 }
 
 /// [`depthwise_cnhw`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn depthwise_cnhw_into(
     x: &Tensor,
     wt: &Tensor,
@@ -217,6 +222,7 @@ pub fn concat_cnhw(xs: &[&Tensor]) -> Tensor {
 }
 
 /// [`concat_cnhw`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn concat_cnhw_into(xs: &[&Tensor], out: &mut Tensor) {
     assert!(!xs.is_empty());
     let (n, h, w) = (xs[0].shape[1], xs[0].shape[2], xs[0].shape[3]);
@@ -234,6 +240,7 @@ pub fn concat_cnhw_into(xs: &[&Tensor], out: &mut Tensor) {
 /// Per-part form so the arena executor can concatenate without
 /// collecting a `Vec<&Tensor>` per run (that collect is a heap
 /// allocation on the zero-alloc path).
+// nmprune: zero-alloc
 pub fn concat_cnhw_part_into(x: &Tensor, c_off: usize, out: &mut Tensor) {
     let (c, n, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     assert_eq!(&out.shape[1..], &[n, h, w], "concat spatial mismatch");
@@ -250,6 +257,7 @@ pub fn fc(x: &Tensor, wt: &Tensor, bias: &[f32]) -> Tensor {
 }
 
 /// [`fc`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn fc_into(x: &Tensor, wt: &Tensor, bias: &[f32], out: &mut Tensor) {
     let (n, fin) = (x.shape[0], x.shape[1]);
     let fout = wt.shape[0];
@@ -283,6 +291,7 @@ pub fn maxpool_nhwc(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
 }
 
 /// [`maxpool_nhwc`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn maxpool_nhwc_into(x: &Tensor, k: usize, stride: usize, pad: usize, out: &mut Tensor) {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let ho = (h + 2 * pad - k) / stride + 1;
@@ -331,6 +340,7 @@ pub fn avgpool_nhwc(x: &Tensor, k: usize, stride: usize) -> Tensor {
 }
 
 /// [`avgpool_nhwc`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn avgpool_nhwc_into(x: &Tensor, k: usize, stride: usize, out: &mut Tensor) {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let ho = (h - k) / stride + 1;
@@ -363,6 +373,7 @@ pub fn gap_nhwc(x: &Tensor) -> Tensor {
 }
 
 /// [`gap_nhwc`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn gap_nhwc_into(x: &Tensor, out: &mut Tensor) {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     assert_eq!(out.shape, [n, c], "output tensor shape");
@@ -395,6 +406,7 @@ pub fn depthwise_nhwc(x: &Tensor, wt: &Tensor, stride: usize, pad: usize, relu: 
 }
 
 /// [`depthwise_nhwc`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn depthwise_nhwc_into(
     x: &Tensor,
     wt: &Tensor,
@@ -449,6 +461,7 @@ pub fn concat_nhwc(xs: &[&Tensor]) -> Tensor {
 }
 
 /// [`concat_nhwc`] into a caller-provided output tensor.
+// nmprune: zero-alloc
 pub fn concat_nhwc_into(xs: &[&Tensor], out: &mut Tensor) {
     assert!(!xs.is_empty());
     let (n, h, w) = (xs[0].shape[0], xs[0].shape[1], xs[0].shape[2]);
@@ -468,6 +481,7 @@ pub fn concat_nhwc_into(xs: &[&Tensor], out: &mut Tensor) {
 
 /// Copy one NHWC concat input into `out` at channel offset `c_off`
 /// (per-part twin of [`concat_cnhw_part_into`] for the arena executor).
+// nmprune: zero-alloc
 pub fn concat_nhwc_part_into(x: &Tensor, c_off: usize, out: &mut Tensor) {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     assert_eq!(&out.shape[..3], &[n, h, w], "concat spatial mismatch");

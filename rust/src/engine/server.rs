@@ -476,6 +476,7 @@ impl Server {
         let workers = (0..n_exec)
             .map(|idx| {
                 let ctx = Arc::clone(&ctx);
+                // nmprune-lint: allow(S1) -- one long-lived dispatcher per executor, joined on Drop
                 std::thread::spawn(move || dispatcher(&ctx, idx))
             })
             .collect();
@@ -910,6 +911,7 @@ mod tests {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 let server = Arc::clone(&server);
+                // nmprune-lint: allow(S1) -- test-only load generator, joined below
                 std::thread::spawn(move || {
                     let mut replies = 0usize;
                     for i in 0..per_client {

@@ -27,6 +27,7 @@ pub fn spmm_colwise_with(w: &ColwisePruned, a: &PackedMatrix, kernel: KernelId) 
 }
 
 /// In-place variant (hot-path entry), dispatched backend.
+// nmprune: zero-alloc
 pub fn spmm_colwise_into(w: &ColwisePruned, a: &PackedMatrix, c: &mut [f32]) {
     spmm_colwise_into_with(w, a, KernelId::Auto, c)
 }
@@ -38,6 +39,7 @@ pub fn spmm_colwise_into(w: &ColwisePruned, a: &PackedMatrix, c: &mut [f32]) {
 /// per-iteration slice→array conversions defeated LLVM's existing
 /// auto-vectorisation of the `zip` loop. Strip widths stay dynamic in
 /// every backend; see EXPERIMENTS.md §Perf step 2.
+// nmprune: zero-alloc
 pub fn spmm_colwise_into_with(
     w: &ColwisePruned,
     a: &PackedMatrix,

@@ -31,11 +31,13 @@ pub fn gemm_dense_with(
 
 /// In-place variant writing into a caller-provided output buffer
 /// (hot-path entry: avoids the allocation per conv layer).
+// nmprune: zero-alloc
 pub fn gemm_dense_into(w: &[f32], rows: usize, a: &PackedMatrix, tile: usize, c: &mut [f32]) {
     gemm_dense_into_with(w, rows, a, tile, KernelId::Auto, c)
 }
 
 /// In-place variant on an explicit micro-kernel backend.
+// nmprune: zero-alloc
 pub fn gemm_dense_into_with(
     w: &[f32],
     rows: usize,

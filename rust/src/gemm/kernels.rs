@@ -176,6 +176,9 @@ impl Kernel for ScalarKernel {
         true
     }
 
+    // SAFETY: caller upholds the `Kernel::spmm_strip` contract (c valid
+    // for c_len f32s, strip in range, exclusive access to this strip's
+    // output columns).
     unsafe fn spmm_strip(
         &self,
         w: &ColwisePruned,
@@ -210,11 +213,17 @@ impl Kernel for ScalarKernel {
                 let r = tile.row_start + ti;
                 let off = r * a.cols + col0;
                 assert!(off + valid <= c_len, "output out of bounds");
-                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+                // SAFETY: asserted off+valid <= c_len, the source is the
+                // local accumulator row (valid <= MAX_STRIP_WIDTH), and
+                // the contract gives exclusive access to these columns.
+                unsafe { std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid) };
             }
         }
     }
 
+    // SAFETY: caller upholds the `Kernel::dense_strip` contract (c
+    // valid for c_len f32s, w sized rows*k, tile <= MAX_TILE, strip in
+    // range, exclusive access to this strip's output columns).
     unsafe fn dense_strip(
         &self,
         w: &[f32],
@@ -243,7 +252,10 @@ impl Kernel for ScalarKernel {
             for ti in 0..t {
                 let off = (row + ti) * a.cols + col0;
                 assert!(off + valid <= c_len, "output out of bounds");
-                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+                // SAFETY: asserted off+valid <= c_len, the source is the
+                // local accumulator row (valid <= MAX_STRIP_WIDTH), and
+                // the contract gives exclusive access to these columns.
+                unsafe { std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid) };
             }
             row += t;
         }
@@ -266,6 +278,7 @@ impl Kernel for Avx2Kernel {
         is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
     }
 
+    // SAFETY: caller upholds the `Kernel::spmm_strip` contract.
     unsafe fn spmm_strip(
         &self,
         w: &ColwisePruned,
@@ -274,9 +287,12 @@ impl Kernel for Avx2Kernel {
         c: *mut f32,
         c_len: usize,
     ) {
-        spmm_strip_avx2(w, a, strip, c, c_len)
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so avx2+fma are present on this CPU.
+        unsafe { spmm_strip_avx2(w, a, strip, c, c_len) }
     }
 
+    // SAFETY: caller upholds the `Kernel::dense_strip` contract.
     unsafe fn dense_strip(
         &self,
         w: &[f32],
@@ -287,10 +303,17 @@ impl Kernel for Avx2Kernel {
         c: *mut f32,
         c_len: usize,
     ) {
-        dense_strip_avx2(w, rows, a, tile, strip, c, c_len)
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so avx2+fma are present on this CPU.
+        unsafe { dense_strip_avx2(w, rows, a, tile, strip, c, c_len) }
     }
 }
 
+/// AVX2 strip body behind `Avx2Kernel::spmm_strip`.
+///
+/// # Safety
+/// Same contract as `Kernel::spmm_strip`, plus: the host CPU must
+/// support avx2+fma (guaranteed by `available()`-gated dispatch).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn spmm_strip_avx2(
@@ -303,40 +326,53 @@ unsafe fn spmm_strip_avx2(
     use std::arch::x86_64::*;
     let (sdata, valid, col0) = strip_geometry(a, strip);
     let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-    for tile in &w.tiles {
-        let t = tile.row_count;
-        let nret = tile.indices.len();
-        for row in &mut acc[..t] {
-            row[..valid].fill(0.0);
-        }
-        for (j, &idx) in tile.indices.iter().enumerate() {
-            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
-            let ap = arow.as_ptr();
-            for ti in 0..t {
-                let ws = tile.values[ti * nret + j];
-                let wv = _mm256_set1_ps(ws);
-                let accp = acc[ti].as_mut_ptr();
-                let mut x = 0;
-                while x + 8 <= valid {
-                    let av = _mm256_loadu_ps(ap.add(x));
-                    let cv = _mm256_loadu_ps(accp.add(x));
-                    _mm256_storeu_ps(accp.add(x), _mm256_fmadd_ps(wv, av, cv));
-                    x += 8;
-                }
-                while x < valid {
-                    *accp.add(x) += ws * *ap.add(x);
-                    x += 1;
+    // SAFETY: one region for the whole strip body. Intrinsics are
+    // runnable (avx2+fma per the fn contract); unaligned loads/stores
+    // stay inside `arow`/`acc[ti]` because x+8 <= valid and
+    // valid <= MAX_STRIP_WIDTH (asserted in strip_geometry); the final
+    // copy targets c[off..off+valid] with off+valid <= c_len asserted,
+    // and the contract gives exclusive access to those columns.
+    unsafe {
+        for tile in &w.tiles {
+            let t = tile.row_count;
+            let nret = tile.indices.len();
+            for row in &mut acc[..t] {
+                row[..valid].fill(0.0);
+            }
+            for (j, &idx) in tile.indices.iter().enumerate() {
+                let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+                let ap = arow.as_ptr();
+                for ti in 0..t {
+                    let ws = tile.values[ti * nret + j];
+                    let wv = _mm256_set1_ps(ws);
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 8 <= valid {
+                        let av = _mm256_loadu_ps(ap.add(x));
+                        let cv = _mm256_loadu_ps(accp.add(x));
+                        _mm256_storeu_ps(accp.add(x), _mm256_fmadd_ps(wv, av, cv));
+                        x += 8;
+                    }
+                    while x < valid {
+                        *accp.add(x) += ws * *ap.add(x);
+                        x += 1;
+                    }
                 }
             }
-        }
-        for ti in 0..t {
-            let off = (tile.row_start + ti) * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            for ti in 0..t {
+                let off = (tile.row_start + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
         }
     }
 }
 
+/// AVX2 dense body behind `Avx2Kernel::dense_strip`.
+///
+/// # Safety
+/// Same contract as `Kernel::dense_strip`, plus: the host CPU must
+/// support avx2+fma (guaranteed by `available()`-gated dispatch).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[allow(clippy::too_many_arguments)]
@@ -353,35 +389,40 @@ unsafe fn dense_strip_avx2(
     let (sdata, valid, col0) = strip_geometry(a, strip);
     let k = a.k;
     let mut row = 0;
-    while row < rows {
-        let t = tile.min(rows - row);
-        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-        for kk in 0..k {
-            let arow = &sdata[kk * a.v..kk * a.v + valid];
-            let ap = arow.as_ptr();
-            for ti in 0..t {
-                let ws = w[(row + ti) * k + kk];
-                let wv = _mm256_set1_ps(ws);
-                let accp = acc[ti].as_mut_ptr();
-                let mut x = 0;
-                while x + 8 <= valid {
-                    let av = _mm256_loadu_ps(ap.add(x));
-                    let cv = _mm256_loadu_ps(accp.add(x));
-                    _mm256_storeu_ps(accp.add(x), _mm256_fmadd_ps(wv, av, cv));
-                    x += 8;
-                }
-                while x < valid {
-                    *accp.add(x) += ws * *ap.add(x);
-                    x += 1;
+    // SAFETY: one region for the whole strip body; same argument as
+    // spmm_strip_avx2 (feature-gated intrinsics, x+8 <= valid lane
+    // bounds, asserted off+valid <= c_len output range).
+    unsafe {
+        while row < rows {
+            let t = tile.min(rows - row);
+            let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+            for kk in 0..k {
+                let arow = &sdata[kk * a.v..kk * a.v + valid];
+                let ap = arow.as_ptr();
+                for ti in 0..t {
+                    let ws = w[(row + ti) * k + kk];
+                    let wv = _mm256_set1_ps(ws);
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 8 <= valid {
+                        let av = _mm256_loadu_ps(ap.add(x));
+                        let cv = _mm256_loadu_ps(accp.add(x));
+                        _mm256_storeu_ps(accp.add(x), _mm256_fmadd_ps(wv, av, cv));
+                        x += 8;
+                    }
+                    while x < valid {
+                        *accp.add(x) += ws * *ap.add(x);
+                        x += 1;
+                    }
                 }
             }
+            for ti in 0..t {
+                let off = (row + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
+            row += t;
         }
-        for ti in 0..t {
-            let off = (row + ti) * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
-        }
-        row += t;
     }
 }
 
@@ -403,6 +444,7 @@ impl Kernel for Avx512Kernel {
         is_x86_feature_detected!("avx512f")
     }
 
+    // SAFETY: caller upholds the `Kernel::spmm_strip` contract.
     unsafe fn spmm_strip(
         &self,
         w: &ColwisePruned,
@@ -411,9 +453,12 @@ impl Kernel for Avx512Kernel {
         c: *mut f32,
         c_len: usize,
     ) {
-        spmm_strip_avx512(w, a, strip, c, c_len)
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so avx512f is present on this CPU.
+        unsafe { spmm_strip_avx512(w, a, strip, c, c_len) }
     }
 
+    // SAFETY: caller upholds the `Kernel::dense_strip` contract.
     unsafe fn dense_strip(
         &self,
         w: &[f32],
@@ -424,10 +469,17 @@ impl Kernel for Avx512Kernel {
         c: *mut f32,
         c_len: usize,
     ) {
-        dense_strip_avx512(w, rows, a, tile, strip, c, c_len)
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so avx512f is present on this CPU.
+        unsafe { dense_strip_avx512(w, rows, a, tile, strip, c, c_len) }
     }
 }
 
+/// AVX-512 strip body behind `Avx512Kernel::spmm_strip`.
+///
+/// # Safety
+/// Same contract as `Kernel::spmm_strip`, plus: the host CPU must
+/// support avx512f (guaranteed by `available()`-gated dispatch).
 #[cfg(all(target_arch = "x86_64", nmprune_avx512))]
 #[target_feature(enable = "avx512f")]
 unsafe fn spmm_strip_avx512(
@@ -440,40 +492,50 @@ unsafe fn spmm_strip_avx512(
     use std::arch::x86_64::*;
     let (sdata, valid, col0) = strip_geometry(a, strip);
     let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-    for tile in &w.tiles {
-        let t = tile.row_count;
-        let nret = tile.indices.len();
-        for row in &mut acc[..t] {
-            row[..valid].fill(0.0);
-        }
-        for (j, &idx) in tile.indices.iter().enumerate() {
-            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
-            let ap = arow.as_ptr();
-            for ti in 0..t {
-                let ws = tile.values[ti * nret + j];
-                let wv = _mm512_set1_ps(ws);
-                let accp = acc[ti].as_mut_ptr();
-                let mut x = 0;
-                while x + 16 <= valid {
-                    let av = _mm512_loadu_ps(ap.add(x));
-                    let cv = _mm512_loadu_ps(accp.add(x));
-                    _mm512_storeu_ps(accp.add(x), _mm512_fmadd_ps(wv, av, cv));
-                    x += 16;
-                }
-                while x < valid {
-                    *accp.add(x) += ws * *ap.add(x);
-                    x += 1;
+    // SAFETY: one region for the whole strip body; same argument as
+    // spmm_strip_avx2 with 16-lane bounds (x+16 <= valid, asserted
+    // off+valid <= c_len output range, feature-gated intrinsics).
+    unsafe {
+        for tile in &w.tiles {
+            let t = tile.row_count;
+            let nret = tile.indices.len();
+            for row in &mut acc[..t] {
+                row[..valid].fill(0.0);
+            }
+            for (j, &idx) in tile.indices.iter().enumerate() {
+                let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+                let ap = arow.as_ptr();
+                for ti in 0..t {
+                    let ws = tile.values[ti * nret + j];
+                    let wv = _mm512_set1_ps(ws);
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 16 <= valid {
+                        let av = _mm512_loadu_ps(ap.add(x));
+                        let cv = _mm512_loadu_ps(accp.add(x));
+                        _mm512_storeu_ps(accp.add(x), _mm512_fmadd_ps(wv, av, cv));
+                        x += 16;
+                    }
+                    while x < valid {
+                        *accp.add(x) += ws * *ap.add(x);
+                        x += 1;
+                    }
                 }
             }
-        }
-        for ti in 0..t {
-            let off = (tile.row_start + ti) * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            for ti in 0..t {
+                let off = (tile.row_start + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
         }
     }
 }
 
+/// AVX-512 dense body behind `Avx512Kernel::dense_strip`.
+///
+/// # Safety
+/// Same contract as `Kernel::dense_strip`, plus: the host CPU must
+/// support avx512f (guaranteed by `available()`-gated dispatch).
 #[cfg(all(target_arch = "x86_64", nmprune_avx512))]
 #[target_feature(enable = "avx512f")]
 #[allow(clippy::too_many_arguments)]
@@ -490,35 +552,40 @@ unsafe fn dense_strip_avx512(
     let (sdata, valid, col0) = strip_geometry(a, strip);
     let k = a.k;
     let mut row = 0;
-    while row < rows {
-        let t = tile.min(rows - row);
-        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-        for kk in 0..k {
-            let arow = &sdata[kk * a.v..kk * a.v + valid];
-            let ap = arow.as_ptr();
-            for ti in 0..t {
-                let ws = w[(row + ti) * k + kk];
-                let wv = _mm512_set1_ps(ws);
-                let accp = acc[ti].as_mut_ptr();
-                let mut x = 0;
-                while x + 16 <= valid {
-                    let av = _mm512_loadu_ps(ap.add(x));
-                    let cv = _mm512_loadu_ps(accp.add(x));
-                    _mm512_storeu_ps(accp.add(x), _mm512_fmadd_ps(wv, av, cv));
-                    x += 16;
-                }
-                while x < valid {
-                    *accp.add(x) += ws * *ap.add(x);
-                    x += 1;
+    // SAFETY: one region for the whole strip body; same argument as
+    // spmm_strip_avx2 with 16-lane bounds (x+16 <= valid, asserted
+    // off+valid <= c_len output range, feature-gated intrinsics).
+    unsafe {
+        while row < rows {
+            let t = tile.min(rows - row);
+            let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+            for kk in 0..k {
+                let arow = &sdata[kk * a.v..kk * a.v + valid];
+                let ap = arow.as_ptr();
+                for ti in 0..t {
+                    let ws = w[(row + ti) * k + kk];
+                    let wv = _mm512_set1_ps(ws);
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 16 <= valid {
+                        let av = _mm512_loadu_ps(ap.add(x));
+                        let cv = _mm512_loadu_ps(accp.add(x));
+                        _mm512_storeu_ps(accp.add(x), _mm512_fmadd_ps(wv, av, cv));
+                        x += 16;
+                    }
+                    while x < valid {
+                        *accp.add(x) += ws * *ap.add(x);
+                        x += 1;
+                    }
                 }
             }
+            for ti in 0..t {
+                let off = (row + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
+            row += t;
         }
-        for ti in 0..t {
-            let off = (row + ti) * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
-        }
-        row += t;
     }
 }
 
@@ -538,6 +605,7 @@ impl Kernel for NeonKernel {
         std::arch::is_aarch64_feature_detected!("neon")
     }
 
+    // SAFETY: caller upholds the `Kernel::spmm_strip` contract.
     unsafe fn spmm_strip(
         &self,
         w: &ColwisePruned,
@@ -546,9 +614,12 @@ impl Kernel for NeonKernel {
         c: *mut f32,
         c_len: usize,
     ) {
-        spmm_strip_neon(w, a, strip, c, c_len)
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so neon is present on this CPU.
+        unsafe { spmm_strip_neon(w, a, strip, c, c_len) }
     }
 
+    // SAFETY: caller upholds the `Kernel::dense_strip` contract.
     unsafe fn dense_strip(
         &self,
         w: &[f32],
@@ -559,10 +630,17 @@ impl Kernel for NeonKernel {
         c: *mut f32,
         c_len: usize,
     ) {
-        dense_strip_neon(w, rows, a, tile, strip, c, c_len)
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so neon is present on this CPU.
+        unsafe { dense_strip_neon(w, rows, a, tile, strip, c, c_len) }
     }
 }
 
+/// NEON strip body behind `NeonKernel::spmm_strip`.
+///
+/// # Safety
+/// Same contract as `Kernel::spmm_strip`, plus: the host CPU must
+/// support neon (guaranteed by `available()`-gated dispatch).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn spmm_strip_neon(
@@ -575,39 +653,49 @@ unsafe fn spmm_strip_neon(
     use std::arch::aarch64::*;
     let (sdata, valid, col0) = strip_geometry(a, strip);
     let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-    for tile in &w.tiles {
-        let t = tile.row_count;
-        let nret = tile.indices.len();
-        for row in &mut acc[..t] {
-            row[..valid].fill(0.0);
-        }
-        for (j, &idx) in tile.indices.iter().enumerate() {
-            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
-            let ap = arow.as_ptr();
-            for ti in 0..t {
-                let ws = tile.values[ti * nret + j];
-                let accp = acc[ti].as_mut_ptr();
-                let mut x = 0;
-                while x + 4 <= valid {
-                    let av = vld1q_f32(ap.add(x));
-                    let cv = vld1q_f32(accp.add(x));
-                    vst1q_f32(accp.add(x), vfmaq_n_f32(cv, av, ws));
-                    x += 4;
-                }
-                while x < valid {
-                    *accp.add(x) += ws * *ap.add(x);
-                    x += 1;
+    // SAFETY: one region for the whole strip body; same argument as
+    // spmm_strip_avx2 with 4-lane bounds (x+4 <= valid, asserted
+    // off+valid <= c_len output range, feature-gated intrinsics).
+    unsafe {
+        for tile in &w.tiles {
+            let t = tile.row_count;
+            let nret = tile.indices.len();
+            for row in &mut acc[..t] {
+                row[..valid].fill(0.0);
+            }
+            for (j, &idx) in tile.indices.iter().enumerate() {
+                let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+                let ap = arow.as_ptr();
+                for ti in 0..t {
+                    let ws = tile.values[ti * nret + j];
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 4 <= valid {
+                        let av = vld1q_f32(ap.add(x));
+                        let cv = vld1q_f32(accp.add(x));
+                        vst1q_f32(accp.add(x), vfmaq_n_f32(cv, av, ws));
+                        x += 4;
+                    }
+                    while x < valid {
+                        *accp.add(x) += ws * *ap.add(x);
+                        x += 1;
+                    }
                 }
             }
-        }
-        for ti in 0..t {
-            let off = (tile.row_start + ti) * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            for ti in 0..t {
+                let off = (tile.row_start + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
         }
     }
 }
 
+/// NEON dense body behind `NeonKernel::dense_strip`.
+///
+/// # Safety
+/// Same contract as `Kernel::dense_strip`, plus: the host CPU must
+/// support neon (guaranteed by `available()`-gated dispatch).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 #[allow(clippy::too_many_arguments)]
@@ -624,34 +712,39 @@ unsafe fn dense_strip_neon(
     let (sdata, valid, col0) = strip_geometry(a, strip);
     let k = a.k;
     let mut row = 0;
-    while row < rows {
-        let t = tile.min(rows - row);
-        let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
-        for kk in 0..k {
-            let arow = &sdata[kk * a.v..kk * a.v + valid];
-            let ap = arow.as_ptr();
-            for ti in 0..t {
-                let ws = w[(row + ti) * k + kk];
-                let accp = acc[ti].as_mut_ptr();
-                let mut x = 0;
-                while x + 4 <= valid {
-                    let av = vld1q_f32(ap.add(x));
-                    let cv = vld1q_f32(accp.add(x));
-                    vst1q_f32(accp.add(x), vfmaq_n_f32(cv, av, ws));
-                    x += 4;
-                }
-                while x < valid {
-                    *accp.add(x) += ws * *ap.add(x);
-                    x += 1;
+    // SAFETY: one region for the whole strip body; same argument as
+    // spmm_strip_avx2 with 4-lane bounds (x+4 <= valid, asserted
+    // off+valid <= c_len output range, feature-gated intrinsics).
+    unsafe {
+        while row < rows {
+            let t = tile.min(rows - row);
+            let mut acc = [[0.0f32; MAX_STRIP_WIDTH]; MAX_TILE];
+            for kk in 0..k {
+                let arow = &sdata[kk * a.v..kk * a.v + valid];
+                let ap = arow.as_ptr();
+                for ti in 0..t {
+                    let ws = w[(row + ti) * k + kk];
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 4 <= valid {
+                        let av = vld1q_f32(ap.add(x));
+                        let cv = vld1q_f32(accp.add(x));
+                        vst1q_f32(accp.add(x), vfmaq_n_f32(cv, av, ws));
+                        x += 4;
+                    }
+                    while x < valid {
+                        *accp.add(x) += ws * *ap.add(x);
+                        x += 1;
+                    }
                 }
             }
+            for ti in 0..t {
+                let off = (row + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
+            }
+            row += t;
         }
-        for ti in 0..t {
-            let off = (row + ti) * a.cols + col0;
-            assert!(off + valid <= c_len, "output out of bounds");
-            std::ptr::copy_nonoverlapping(acc[ti].as_ptr(), c.add(off), valid);
-        }
-        row += t;
     }
 }
 

@@ -48,6 +48,7 @@ pub fn spmm_colwise_parallel_capped(
 /// [`spmm_colwise_parallel_capped`] writing into a caller-provided
 /// output buffer (zero-alloc hot-path entry): every strip fully
 /// overwrites its disjoint column range, so no pre-zeroing is needed.
+// nmprune: zero-alloc
 pub fn spmm_colwise_parallel_capped_into(
     w: &ColwisePruned,
     a: &PackedMatrix,
@@ -62,6 +63,7 @@ pub fn spmm_colwise_parallel_capped_into(
 /// backend. The backend is resolved once, before the fan-out, so every
 /// strip of one call runs identical arithmetic — the per-kernel bitwise
 /// invariant across pool sizes and caps.
+// nmprune: zero-alloc
 pub fn spmm_colwise_parallel_capped_into_with(
     w: &ColwisePruned,
     a: &PackedMatrix,
@@ -115,6 +117,7 @@ pub fn gemm_dense_parallel_capped(
 
 /// [`gemm_dense_parallel_capped`] writing into a caller-provided output
 /// buffer (zero-alloc hot-path entry).
+// nmprune: zero-alloc
 pub fn gemm_dense_parallel_capped_into(
     w: &[f32],
     rows: usize,
@@ -130,6 +133,7 @@ pub fn gemm_dense_parallel_capped_into(
 /// [`gemm_dense_parallel_capped_into`] on an explicit micro-kernel
 /// backend (resolved once before the fan-out — see
 /// [`spmm_colwise_parallel_capped_into_with`]).
+// nmprune: zero-alloc
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_dense_parallel_capped_into_with(
     w: &[f32],
@@ -158,7 +162,13 @@ pub fn gemm_dense_parallel_capped_into_with(
 
 /// Shareable raw pointer for disjoint-range writes across pool workers.
 struct SendPtr(*mut f32);
+// SAFETY: the wrapped pointer is only dereferenced inside kernel strip
+// calls whose output column ranges are disjoint per strip, and the
+// spawning call blocks on the pool barrier until all workers finish —
+// no use-after-free, no overlapping writes.
 unsafe impl Send for SendPtr {}
+// SAFETY: as above — shared access is only ever disjoint-range writes
+// bounded by the parallel_for barrier.
 unsafe impl Sync for SendPtr {}
 impl SendPtr {
     fn get(&self) -> *mut f32 {

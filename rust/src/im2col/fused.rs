@@ -24,6 +24,7 @@ pub fn fused_im2col_pack_cnhw(x: &Tensor, s: &ConvShape, v: usize) -> PackedMatr
 
 /// In-place variant: reuses `p`'s buffer (§Perf step 3 — avoids the
 /// multi-MB allocation + page-fault churn per conv invocation).
+// nmprune: zero-alloc
 pub fn fused_im2col_pack_cnhw_into(x: &Tensor, s: &ConvShape, v: usize, p: &mut PackedMatrix) {
     p.reset(s.k(), s.gemm_cols(), v);
     fill_fused(x, s, v, p);

@@ -90,6 +90,7 @@ pub fn conv2d_indirect_nhwc(
 /// [`conv2d_indirect_nhwc`] into a caller-provided output tensor. The
 /// kernel accumulates tap-by-tap, so the (possibly reused) output is
 /// zeroed first.
+// nmprune: zero-alloc
 pub fn conv2d_indirect_nhwc_into(
     x: &Tensor,
     filter: &[f32],
@@ -152,6 +153,7 @@ pub fn conv2d_indirect_nhwc_parallel_capped(
 
 /// [`conv2d_indirect_nhwc_parallel_capped`] into a caller-provided
 /// output tensor (zeroed here — the kernel accumulates).
+// nmprune: zero-alloc
 pub fn conv2d_indirect_nhwc_parallel_capped_into(
     x: &Tensor,
     filter: &[f32],
@@ -172,7 +174,12 @@ pub fn conv2d_indirect_nhwc_parallel_capped_into(
     assert_eq!(out.shape, [s.n, h_out, w_out, s.c_out], "output tensor shape");
     out.data.fill(0.0);
     struct SendPtr(*mut f32);
+    // SAFETY: workers write only their own position's disjoint [C_out]
+    // range through the pointer, and `out` outlives the parallel_for
+    // barrier below.
     unsafe impl Send for SendPtr {}
+    // SAFETY: as above — concurrent access is disjoint-range writes
+    // bounded by the pool barrier.
     unsafe impl Sync for SendPtr {}
     impl SendPtr {
         fn get(&self) -> *mut f32 {

@@ -114,6 +114,7 @@ pub fn pack_data_matrix(a: &[f32], k: usize, cols: usize, v: usize) -> PackedMat
 /// [`pack_data_matrix`] writing into caller-provided storage: the packed
 /// matrix is `reset` in place (keeping its allocation when capacity
 /// suffices), so a warmed buffer makes repeated packing allocation-free.
+// nmprune: zero-alloc
 pub fn pack_data_matrix_into(a: &[f32], k: usize, cols: usize, v: usize, p: &mut PackedMatrix) {
     assert_eq!(a.len(), k * cols, "data matrix shape");
     p.reset(k, cols, v);

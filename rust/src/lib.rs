@@ -11,7 +11,17 @@
 //! paper's CNN architectures, and a batching inference engine.  AOT
 //! compiled JAX/Pallas artifacts (HLO text) are loaded and executed via
 //! PJRT in [`runtime`].
+//!
+//! Repo-wide invariants (SAFETY-commented `unsafe`, pool-only threads,
+//! clock-free policies, zero-alloc `_into` paths, …) are machine-checked
+//! by [`analysis`] (`nmprune lint`); see `docs/SAFETY.md`.
 
+// Every `unsafe` operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own `// SAFETY:` comment (checked by the U1
+// lint rule) — the fn-level `unsafe` only states the caller's contract.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod util;
 pub mod tensor;
 pub mod pruning;

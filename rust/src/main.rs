@@ -33,6 +33,14 @@
 //!                                regression/improvement table and exits
 //!                                nonzero if any gated record regressed
 //!                                beyond the threshold — the CI perf gate
+//!   lint [--json] [path]         static-analysis pass over the source
+//!                                tree (default `rust/src`): checks the
+//!                                repo invariants (SAFETY comments on
+//!                                unsafe, pool-only thread spawns,
+//!                                clock-free policy, release-mode
+//!                                artifact validation, NaN-safe sorts,
+//!                                zero-alloc regions); exit 0 clean,
+//!                                1 findings, 2 usage — the CI lint gate
 
 use std::path::Path;
 use std::sync::Arc;
@@ -59,9 +67,10 @@ fn main() {
         Some("sim") => cmd_sim(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: nmprune <models|pack|run|serve|tune|kernels|sim|artifacts|bench-diff> [options]\n\
+                "usage: nmprune <models|pack|run|serve|tune|kernels|sim|artifacts|bench-diff|lint> [options]\n\
                  common options: --model resnet50 --batch 1 --res 224 \
                  --threads N (default: all hardware threads, or NMPRUNE_THREADS) \
                  --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
@@ -233,7 +242,7 @@ fn cmd_run(args: &Args) {
     let y = exec.run_in(&x, &mut arena);
     let dt = t1.elapsed();
     let top: usize = (0..1000)
-        .max_by(|&a, &b| y.data[a].partial_cmp(&y.data[b]).unwrap())
+        .max_by(|&a, &b| y.data[a].total_cmp(&y.data[b]))
         .unwrap();
     println!(
         "inference: {:.1} ms  ({:.1} img/s)  argmax={top}  weights={:.1} MiB  scratch={:.1} MiB",
@@ -578,6 +587,35 @@ fn cmd_bench_diff(args: &Args) {
     );
     if diff.has_regressions() {
         eprintln!("bench-diff: FAIL — gated regressions beyond threshold");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_lint(args: &Args) {
+    use nmprune::analysis;
+
+    // Default to the whole working tree so the CI gate also covers
+    // tests, benches and examples — the invariants hold everywhere.
+    // The arg parser binds `--json <path>` as an option whose value is
+    // the path, so accept the path from either position.
+    let json = args.has_flag("json") || args.get("json").is_some();
+    let root = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("json"))
+        .unwrap_or(".")
+        .to_string();
+    let findings = analysis::lint_tree(Path::new(&root)).unwrap_or_else(|e| {
+        eprintln!("lint: {e}");
+        std::process::exit(2);
+    });
+    if json {
+        println!("{}", analysis::render_json(&root, &findings));
+    } else {
+        print!("{}", analysis::render_text(&findings));
+    }
+    if !findings.is_empty() {
         std::process::exit(1);
     }
 }

@@ -81,7 +81,7 @@ impl Csr {
 pub fn prune_unstructured(w: &[f32], sparsity: f64) -> Vec<f32> {
     assert!((0.0..=1.0).contains(&sparsity));
     let mut order: Vec<usize> = (0..w.len()).collect();
-    order.sort_by(|&a, &b| w[a].abs().partial_cmp(&w[b].abs()).unwrap());
+    order.sort_by(|&a, &b| w[a].abs().total_cmp(&w[b].abs()));
     let drop = (w.len() as f64 * sparsity).round() as usize;
     let mut out = w.to_vec();
     for &i in &order[..drop] {

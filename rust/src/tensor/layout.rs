@@ -39,6 +39,7 @@ pub fn nhwc_to_cnhw(x: &Tensor) -> Tensor {
 
 /// [`nhwc_to_cnhw`] writing into a caller-provided tensor already shaped
 /// `[C, N, H, W]` (zero-alloc hot-path entry for the serving arena).
+// nmprune: zero-alloc
 pub fn nhwc_to_cnhw_into(x: &Tensor, out: &mut Tensor) {
     assert_eq!(x.rank(), 4, "activation must be rank 4");
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);

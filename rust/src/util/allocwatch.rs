@@ -57,27 +57,38 @@ fn note(bytes: usize) {
 /// state", and any steady-state free implies a matching allocation.
 pub struct CountingAlloc;
 
+// SAFETY: a pure pass-through to `System` — layout handling, alignment
+// and the GlobalAlloc protocol are exactly the system allocator's; the
+// only addition is thread-local bookkeeping that never allocates.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds the `GlobalAlloc::alloc` contract.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         note(layout.size());
-        System.alloc(layout)
+        // SAFETY: same layout forwarded unchanged to `System`.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc::alloc_zeroed` contract.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         note(layout.size());
-        System.alloc_zeroed(layout)
+        // SAFETY: same layout forwarded unchanged to `System`.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc::realloc` contract.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         // A shrinking realloc releases memory; only growth is traffic.
         if new_size > layout.size() {
             note(new_size);
         }
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: ptr/layout/new_size forwarded unchanged to `System`.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc::dealloc` contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: ptr/layout forwarded unchanged to `System`.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

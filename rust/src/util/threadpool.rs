@@ -85,6 +85,9 @@ pub mod affinity {
         let mut mask = [0u64; WORDS];
         let bit = core % (WORDS * 64);
         mask[bit / 64] |= 1u64 << (bit % 64);
+        // SAFETY: the mask outlives the call and cpusetsize (WORDS*8
+        // bytes) matches its allocation exactly; pid 0 targets only the
+        // calling thread, so no other thread's state is touched.
         unsafe { sched_setaffinity(0, WORDS * 8, mask.as_ptr()) == 0 }
     }
 
@@ -106,6 +109,9 @@ pub mod affinity {
         }
         let mut mask = [0u64; WORDS];
         let mut cpus = Vec::new();
+        // SAFETY: the kernel writes at most cpusetsize (WORDS*8) bytes
+        // into `mask`, which is exactly the buffer's size; pid 0 reads
+        // the calling thread's own mask.
         if unsafe { sched_getaffinity(0, WORDS * 8, mask.as_mut_ptr()) == 0 } {
             for (w, &bits) in mask.iter().enumerate() {
                 for b in 0..64 {
@@ -387,12 +393,14 @@ impl ThreadPool {
             done: Condvar::new(),
             panicked: AtomicBool::new(false),
         });
-        // Lifetime erasure: pool jobs require 'static, but `f` borrows
-        // the caller's stack. Sound because this function blocks (the
-        // `wait_workers` barrier below) until every submitted job has
-        // finished touching `f` and `state`, and panics on either side
-        // are contained until after that barrier.
         let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only — the pointee type is unchanged.
+        // Pool jobs require 'static, but `f` borrows the caller's
+        // stack. Sound because this function blocks (the `wait_workers`
+        // barrier below) until every submitted job has finished
+        // touching `f` and `state`, and panics on either side are
+        // contained until after that barrier, so the erased reference
+        // never outlives the borrow.
         let f_static: &'static (dyn Fn(usize, usize) + Sync) =
             unsafe { std::mem::transmute(f_ref) };
         for home in 1..workers {

@@ -1,0 +1,263 @@
+//! Fixture coverage for `nmprune lint`: every rule has true-positive
+//! and true-negative fixtures, the suppression grammar round-trips,
+//! strings/comments stay invisible to rules, the CLI obeys the
+//! bench-diff exit-code contract (0 clean / 1 findings / 2 usage) —
+//! and, the gate that matters, the repository's own tree lints clean.
+
+use std::path::Path;
+use std::process::{Command, Output};
+
+use nmprune::analysis::{lint_source, lint_tree, render_text, Rule};
+use nmprune::util::json::Json;
+
+#[test]
+fn u1_unsafe_requires_safety_comment() {
+    let f = lint_source("src/a.rs", "unsafe fn f() {}\n");
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::U1);
+    assert_eq!(f[0].line, 1);
+    assert_eq!(f[0].file, "src/a.rs");
+    assert!(f[0].snippet.contains("fn f"));
+
+    let above = "// SAFETY: fixture, pointer is valid\nlet x = unsafe { g() };\n";
+    assert!(lint_source("src/a.rs", above).is_empty());
+    let trailing = "let x = unsafe { g() }; // SAFETY: fine\n";
+    assert!(lint_source("src/a.rs", trailing).is_empty());
+    let doc_section = "/// # Safety\n/// caller checks bounds\nunsafe fn f() {}\n";
+    assert!(lint_source("src/a.rs", doc_section).is_empty());
+
+    // A blank line breaks "immediately preceding".
+    let gap = "// SAFETY: stale, too far away\n\nlet x = unsafe { g() };\n";
+    let f = lint_source("src/a.rs", gap);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::U1, 3));
+
+    // Multi-line statement: the comment above the statement head counts.
+    let split = concat!(
+        "// SAFETY: lifetime erasure only, pool blocks until jobs drain\n",
+        "let f: &'static F =\n",
+        "    unsafe { transmute(r) };\n",
+    );
+    assert!(lint_source("src/a.rs", split).is_empty());
+}
+
+#[test]
+fn s1_spawn_only_in_threadpool() {
+    let src = "fn f() { std::thread::spawn(|| {}); }\n";
+    let f = lint_source("rust/src/engine/server.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::S1, 1));
+    // The pool's own implementation file is the one exempt location.
+    assert!(lint_source("rust/src/util/threadpool.rs", src).is_empty());
+}
+
+#[test]
+fn p1_policy_module_is_clock_free() {
+    for src in [
+        "fn f() { let t = std::time::Instant::now(); }\n",
+        "fn f() { let t = std::time::SystemTime::now(); }\n",
+        "fn f(t: std::time::Instant) -> u128 { t.elapsed().as_micros() }\n",
+    ] {
+        let f = lint_source("rust/src/engine/policy.rs", src);
+        assert_eq!(f.len(), 1, "{src}");
+        assert_eq!(f[0].rule, Rule::P1, "{src}");
+        // The same code is fine outside the policy module.
+        assert!(lint_source("rust/src/engine/server.rs", src).is_empty(), "{src}");
+    }
+}
+
+#[test]
+fn a1_no_debug_assert_in_artifact_loader() {
+    let src = "fn f(x: u32) { debug_assert!(x > 0); }\n";
+    let f = lint_source("rust/src/runtime/artifact.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::A1, 1));
+    // The `_eq!` / `_ne!` variants share the identifier prefix.
+    let eq = "fn f(x: u32) { debug_assert_eq!(x, 1); }\n";
+    assert_eq!(lint_source("rust/src/runtime/artifact.rs", eq)[0].rule, Rule::A1);
+    // A doc-comment mention is prose, not code — the old CI grep
+    // false-positived exactly here.
+    let doc = "/// Unlike debug_assert, this check survives release.\nfn f() {}\n";
+    assert!(lint_source("rust/src/runtime/artifact.rs", doc).is_empty());
+    // Other files may keep their debug_asserts.
+    assert!(lint_source("rust/src/gemm/dense.rs", src).is_empty());
+}
+
+#[test]
+fn n1_partial_cmp_unwrap_even_across_lines() {
+    let one = "let o = a.partial_cmp(&b).unwrap();\n";
+    let f = lint_source("src/a.rs", one);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::N1, 1));
+    assert!(f[0].message.contains("total_cmp"));
+
+    // rustfmt splits long chains — the scan runs on the joined view.
+    let multi = "let o = a\n    .partial_cmp(&b)\n    .unwrap();\n";
+    let f = lint_source("src/a.rs", multi);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::N1, 2));
+
+    let expect = "let o = a.partial_cmp(&b).expect(\"cmp\");\n";
+    assert_eq!(lint_source("src/a.rs", expect)[0].rule, Rule::N1);
+
+    // total_cmp and NaN-tolerant unwrap_or are the approved forms.
+    assert!(lint_source("src/a.rs", "let o = a.total_cmp(&b);\n").is_empty());
+    let tolerant = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));\n";
+    assert!(lint_source("src/a.rs", tolerant).is_empty());
+}
+
+#[test]
+fn z1_alloc_calls_inside_marked_region() {
+    let src = concat!(
+        "// nmprune: zero-alloc\n",
+        "fn hot(out: &mut [f32]) {\n",
+        "    let v = Vec::new();\n",
+        "    let w = xs.iter().collect();\n",
+        "}\n",
+    );
+    let f = lint_source("src/a.rs", src);
+    assert_eq!(f.len(), 2);
+    assert_eq!((f[0].rule, f[0].line), (Rule::Z1, 3));
+    assert_eq!((f[1].rule, f[1].line), (Rule::Z1, 4));
+    assert!(f[0].message.contains("fn hot"));
+
+    // The same body without the marker is not Z1's business.
+    let unmarked = "fn cold() {\n    let v = Vec::new();\n}\n";
+    assert!(lint_source("src/a.rs", unmarked).is_empty());
+
+    // The check is lexical: allocations in callees are out of scope,
+    // and an alloc after the fn's closing brace is outside the region.
+    let clean = concat!(
+        "// nmprune: zero-alloc\n",
+        "fn hot(out: &mut [f32]) {\n",
+        "    helper(out);\n",
+        "}\n",
+        "fn later() {\n",
+        "    let v = Vec::new();\n",
+        "}\n",
+    );
+    assert!(lint_source("src/a.rs", clean).is_empty());
+
+    // A dangling marker is itself a finding.
+    let dangling = "// nmprune: zero-alloc\n";
+    let f = lint_source("src/a.rs", dangling);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::Z1, 1));
+}
+
+#[test]
+fn suppression_round_trip_and_hygiene() {
+    // A justified allow on the line above silences the finding.
+    let ok = concat!(
+        "// nmprune-lint: allow(S1) -- fixture spawn, joined below\n",
+        "std::thread::spawn(|| {});\n",
+    );
+    assert!(lint_source("src/a.rs", ok).is_empty());
+
+    // Trailing form covers its own line too.
+    let trailing = "std::thread::spawn(|| {}); // nmprune-lint: allow(S1) -- fixture\n";
+    assert!(lint_source("src/a.rs", trailing).is_empty());
+
+    // The directive reaches exactly one line: two lines away it lapses.
+    let far = concat!(
+        "// nmprune-lint: allow(S1) -- too far away\n",
+        "\n",
+        "std::thread::spawn(|| {});\n",
+    );
+    let f = lint_source("src/a.rs", far);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::S1, 3));
+
+    // Empty justification: L1, and the suppression does not take effect.
+    let empty = concat!(
+        "// nmprune-lint: allow(S1) --\n",
+        "std::thread::spawn(|| {});\n",
+    );
+    let f = lint_source("src/a.rs", empty);
+    assert_eq!(f.len(), 2);
+    assert_eq!((f[0].rule, f[0].line), (Rule::L1, 1));
+    assert_eq!((f[1].rule, f[1].line), (Rule::S1, 2));
+
+    // Missing `--`, unknown rule id, and allow(L1) are all L1 findings.
+    let missing = "// nmprune-lint: allow(N1) because reasons\n";
+    assert_eq!(lint_source("src/a.rs", missing)[0].rule, Rule::L1);
+    let unknown = "// nmprune-lint: allow(Q9) -- no such rule\n";
+    assert_eq!(lint_source("src/a.rs", unknown)[0].rule, Rule::L1);
+    let meta = "// nmprune-lint: allow(L1) -- nice try\n";
+    let f = lint_source("src/a.rs", meta);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::L1);
+    assert!(f[0].message.contains("cannot be suppressed"));
+}
+
+#[test]
+fn strings_and_comments_are_invisible_to_rules() {
+    let in_str = "let s = \"unsafe thread::spawn debug_assert\";\n";
+    assert!(lint_source("rust/src/runtime/artifact.rs", in_str).is_empty());
+
+    let in_raw = "let s = r#\"unsafe { thread::spawn }\"#;\n";
+    assert!(lint_source("src/a.rs", in_raw).is_empty());
+
+    let in_comment = "// unsafe is discussed here, thread::spawn too\nfn f() {}\n";
+    assert!(lint_source("src/a.rs", in_comment).is_empty());
+
+    let in_block = "/* spanning\n   unsafe thread::spawn\n */\nfn f() {}\n";
+    assert!(lint_source("src/a.rs", in_block).is_empty());
+
+    // And the converse: code after a comment on the same line still fires.
+    let mixed = "let x = unsafe { g() }; // not a safety comment\n";
+    assert_eq!(lint_source("src/a.rs", mixed)[0].rule, Rule::U1);
+}
+
+fn run_lint(args: &[&str]) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_nmprune"));
+    cmd.arg("lint").args(args);
+    cmd.output().expect("spawn nmprune lint")
+}
+
+#[test]
+fn lint_cli_exit_codes_and_json() {
+    let dir = std::env::temp_dir().join(format!("nmprune_lint_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("engine")).unwrap();
+    let dirty = "fn f() { let x = 1; }\nunsafe fn g() {}\n";
+    std::fs::write(dir.join("engine/bad.rs"), dirty).unwrap();
+
+    // Findings: exit 1, text report anchored to file:line.
+    let out = run_lint(&[dir.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("engine/bad.rs:2: [U1]"), "{text}");
+    assert!(text.contains("lint: 1 finding(s)"), "{text}");
+
+    // Same findings in machine-readable form under --json.
+    let out = run_lint(&["--json", dir.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1));
+    let doc = String::from_utf8_lossy(&out.stdout).into_owned();
+    let doc = Json::parse(&doc).expect("lint --json output must parse");
+    assert_eq!(doc.get("count").and_then(Json::as_f64), Some(1.0));
+    let arr = doc.get("findings").and_then(Json::as_arr).expect("findings");
+    assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("U1"));
+    assert_eq!(arr[0].get("file").and_then(Json::as_str), Some("engine/bad.rs"));
+    assert_eq!(arr[0].get("line").and_then(Json::as_f64), Some(2.0));
+
+    // Fixed tree: exit 0.
+    std::fs::write(dir.join("engine/bad.rs"), "fn f() {}\n").unwrap();
+    let out = run_lint(&[dir.to_str().unwrap()]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("lint: clean"));
+
+    // Nonexistent path: usage/IO error, exit 2.
+    let out = run_lint(&["/nonexistent/nmprune_lint_fixture"]);
+    assert_eq!(out.status.code(), Some(2));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    // The CI gate in miniature: the crate's own repository — sources,
+    // tests, benches, examples — must carry zero findings.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+    let findings = lint_tree(root).expect("lint walks the repo tree");
+    assert!(findings.is_empty(), "repo must self-lint clean:\n{}", render_text(&findings));
+}
