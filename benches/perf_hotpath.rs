@@ -11,12 +11,15 @@ use nmprune::engine::{
     ExecConfig, Executor, Priority, QueueDiscipline, Server, ServerConfig, ServerStats,
 };
 use nmprune::gemm::threaded::spmm_colwise_parallel_capped;
-use nmprune::gemm::{gemm_dense, gemm_dense_with, kernels, spmm_colwise, spmm_colwise_with, KernelId};
-use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix};
+use nmprune::gemm::{
+    gemm_dense, gemm_dense_i8_with, gemm_dense_with, kernels, spmm_colwise, spmm_colwise_i8_with,
+    spmm_colwise_with, KernelId,
+};
+use nmprune::im2col::{fused_im2col_pack_cnhw, pack_data_matrix, quantize_panel_into, QuantPanel};
 use nmprune::models::{build_model, ModelArch};
-use nmprune::pruning::prune_colwise_adaptive;
+use nmprune::pruning::{prune_colwise_adaptive, ColwiseQuant, QuantDense};
 use nmprune::runtime::PackedArtifact;
-use nmprune::tensor::Tensor;
+use nmprune::tensor::{Dtype, Tensor};
 use nmprune::util::allocwatch::{self, CountingAlloc};
 use nmprune::util::XorShiftRng;
 
@@ -131,6 +134,51 @@ fn main() {
         );
         t.row(&[
             format!("spmm_colwise 50% [{}]", kid.name()),
+            format!("{rows}x{k}x{cols} v{v} t{tile}"),
+            format!("{:.3} ms", r.mean_ms()),
+            format!("{:.2}", 0.5 * flops / r.mean_ns()),
+        ]);
+    }
+
+    // Quantized plane: the same geometry through the int8 strip kernels
+    // (i8×i8→i32 accumulate, requantize-to-f32 epilogue), scalar oracle
+    // next to the best native backend. Quantization runs outside the
+    // timed region, mirroring the serving path where activations are
+    // staged into the arena's QuantPanel once per conv, not per strip.
+    // Records carry dtype=i8 and normalize against the int8 roofline.
+    // GOP/s counts one multiply-add as 2 ops, same as the f32 rows, so
+    // the int8-vs-f32 speedup reads directly off the table.
+    let qw = QuantDense::quantize(&w, rows, k);
+    let mut qp = QuantPanel::zeros(k, cols, v);
+    quantize_panel_into(&p, &mut qp);
+    let qcp = ColwiseQuant::quantize(&cp);
+    for &kid in &kernel_ids {
+        let r = bench("dense-i8", cfg, || gemm_dense_i8_with(&qw, &qp, tile, kid));
+        rep.record(
+            "gemm_dense 64x576x3136",
+            RecordConfig::new(0, tile, 1)
+                .with_kernel(kid)
+                .with_dtype(Dtype::I8),
+            &r.summary,
+            Some(flops),
+        );
+        t.row(&[
+            format!("gemm_dense i8 [{}]", kid.name()),
+            format!("{rows}x{k}x{cols} v{v} t{tile}"),
+            format!("{:.3} ms", r.mean_ms()),
+            format!("{:.2}", flops / r.mean_ns()),
+        ]);
+        let r = bench("colwise-i8", cfg, || spmm_colwise_i8_with(&qcp, &qp, kid));
+        rep.record(
+            "spmm_colwise 50% 64x576x3136",
+            RecordConfig::new(0, tile, 1)
+                .with_kernel(kid)
+                .with_dtype(Dtype::I8),
+            &r.summary,
+            Some(0.5 * flops),
+        );
+        t.row(&[
+            format!("spmm_colwise 50% i8 [{}]", kid.name()),
             format!("{rows}x{k}x{cols} v{v} t{tile}"),
             format!("{:.3} ms", r.mean_ms()),
             format!("{:.2}", 0.5 * flops / r.mean_ns()),
@@ -481,6 +529,39 @@ fn main() {
     ]);
     pt.print();
     std::fs::remove_dir_all(&dir).ok();
+
+    // End-to-end dtype pair: the same graph and warmed arena at f32 and
+    // int8 (per-layer requantize epilogues included). Whole-request
+    // latency is scheduler-noise-bound, so both rows are trajectory-
+    // only (never a CI gate); the kernel-level int8 speedup is gated
+    // above.
+    let mut icfg = ExecConfig::sparse_cnhw(bench_pool(1), 0.5);
+    icfg.default_choice.dtype = Dtype::I8;
+    let iexec = Executor::new(build_model(ModelArch::ResNet18, 1, lres), icfg);
+    let mut iarena = iexec.scratch();
+    iexec.run_in(&x, &mut iarena);
+    let r_f32 = bench("e2e-f32", cfg, || exec.run_in(&x, &mut arena));
+    let r_i8 = bench("e2e-i8", cfg, || iexec.run_in(&x, &mut iarena));
+    rep.record_value(
+        "e2e request resnet18@64 sparse 50%",
+        RecordConfig::new(0, 0, 1),
+        r_f32.summary.median,
+        "ns",
+        false,
+    );
+    rep.record_value(
+        "e2e request resnet18@64 sparse 50%",
+        RecordConfig::new(0, 0, 1).with_dtype(Dtype::I8),
+        r_i8.summary.median,
+        "ns",
+        false,
+    );
+    println!(
+        "e2e dtype pair (ResNet-18 @64, sparse 50%, 1 thread): \
+         f32 {:.2} ms vs i8 {:.2} ms per request",
+        r_f32.mean_ms(),
+        r_i8.mean_ms()
+    );
 
     println!(
         "small-layer dispatch: cap=2 {:.3} ms vs pool-wide {:.3} ms ({})",

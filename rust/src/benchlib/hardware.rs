@@ -8,7 +8,7 @@
 //! [`super::report::BenchRecord`] can carry a `%-of-peak` figure that
 //! is comparable across hosts.
 //!
-//! Three numbers are probed:
+//! Four numbers are probed:
 //!
 //! * **scalar** — one dependent multiply-add chain: the latency-bound
 //!   floor a serial reduction pays;
@@ -24,7 +24,13 @@
 //!   roofline is a machine property, not a configuration;
 //! * **aggregate** — the fma probe on every available hardware thread
 //!   simultaneously (barrier-started), capturing the frequency/SMT
-//!   scaling loss that makes `N × single-core` an overestimate.
+//!   scaling loss that makes `N × single-core` an overestimate;
+//! * **i8** — the same dispatched micro-kernel layer running the
+//!   quantized `dense_strip_i8` path (i8×i8→i32 accumulate,
+//!   requantize-to-f32 epilogue) on the same L1-resident problem, so
+//!   int8 records normalize against the int8 ceiling rather than the
+//!   f32 one. One multiply-add counts as 2 ops, matching the f32
+//!   convention, so int8-vs-f32 %-of-peak figures are comparable.
 //!
 //! The probe costs ~100 ms, runs once per process (memoised), and is
 //! only triggered when JSON output is requested — plain table runs
@@ -34,7 +40,9 @@ use std::sync::{Barrier, OnceLock};
 use std::time::Instant;
 
 use crate::gemm::kernels;
-use crate::im2col::pack_data_matrix;
+use crate::im2col::{pack_data_matrix, quantize_panel_into, QuantPanel};
+use crate::pruning::QuantDense;
+use crate::tensor::Dtype;
 
 /// Measured peak throughput of the probing machine.
 #[derive(Clone, Copy, Debug)]
@@ -54,6 +62,10 @@ pub struct HwProfile {
     /// Sum of per-thread fma throughput with all threads running
     /// (GFLOP/s); at most `threads × fma_gflops`, typically less.
     pub aggregate_gflops: f64,
+    /// Best-available micro-kernel backend int8 dense-strip throughput
+    /// on the same L1-resident problem, one thread (Gop/s; one
+    /// multiply-add = 2 ops, same convention as the f32 fields).
+    pub i8_gops: f64,
 }
 
 impl HwProfile {
@@ -70,6 +82,20 @@ impl HwProfile {
         }
         let frac = (t - 1) as f64 / (self.threads - 1) as f64;
         self.fma_gflops + (self.aggregate_gflops - self.fma_gflops) * frac
+    }
+
+    /// Dtype-aware roofline: f32 records use [`Self::peak_gflops`]
+    /// directly; int8 records scale the single-thread i8 peak by the
+    /// *measured f32 multi-thread curve* (`peak_gflops(t) /
+    /// fma_gflops`). The i8 aggregate is not probed separately —
+    /// contention scaling is dominated by frequency/SMT effects that
+    /// are dtype-independent, and a second barrier probe would double
+    /// the startup cost for a second-order correction.
+    pub fn peak_gops(&self, threads: usize, dtype: Dtype) -> f64 {
+        match dtype {
+            Dtype::F32 => self.peak_gflops(threads),
+            Dtype::I8 => self.i8_gops * (self.peak_gflops(threads) / self.fma_gflops.max(1e-12)),
+        }
     }
 }
 
@@ -98,11 +124,13 @@ fn measure() -> HwProfile {
         .unwrap_or(1);
     let scalar_iters = calibrate(run_scalar);
     let kernel_iters = calibrate(run_kernel);
+    let i8_iters = calibrate(run_kernel_i8);
     HwProfile {
         threads,
         scalar_gflops: best_of(3, || scalar_flops(scalar_iters) / run_scalar(scalar_iters)),
         fma_gflops: best_of(3, || kernel_flops(kernel_iters) / run_kernel(kernel_iters)),
         aggregate_gflops: best_of(2, || run_aggregate(threads, kernel_iters)),
+        i8_gops: best_of(3, || kernel_flops(i8_iters) / run_kernel_i8(i8_iters)),
     }
 }
 
@@ -178,6 +206,38 @@ fn run_kernel(iters: usize) -> f64 {
     ns.max(1.0)
 }
 
+/// The best available backend's quantized `dense_strip_i8` path on the
+/// same probe problem; returns elapsed nanoseconds for `iters` strip
+/// invocations. Quantization happens outside the timed region — the
+/// serving path stages activations once per panel, not per strip.
+fn run_kernel_i8(iters: usize) -> f64 {
+    let kern = kernels::by_id(kernels::best_available()).expect("best kernel is registered");
+    let w: Vec<f32> = (0..PROBE_ROWS * PROBE_K)
+        .map(|i| 0.5 + (i % 13) as f32 * 0.01)
+        .collect();
+    let qw = QuantDense::quantize(&w, PROBE_ROWS, PROBE_K);
+    let a: Vec<f32> = (0..PROBE_K * PROBE_V)
+        .map(|i| 0.25 + (i % 17) as f32 * 0.005)
+        .collect();
+    let p = pack_data_matrix(&a, PROBE_K, PROBE_V, PROBE_V);
+    let mut q = QuantPanel::zeros(PROBE_K, PROBE_V, PROBE_V);
+    quantize_panel_into(&p, &mut q);
+    let mut c = vec![0.0f32; PROBE_ROWS * PROBE_V];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        // SAFETY: `c` covers the whole single-strip output and is
+        // uniquely borrowed here; strip 0 exists, tile = PROBE_ROWS
+        // is within MAX_TILE, and qw.k == q.k by construction.
+        unsafe {
+            kern.dense_strip_i8(&qw, &q, PROBE_ROWS, 0, c.as_mut_ptr(), c.len());
+        }
+        std::hint::black_box(&mut c);
+    }
+    let ns = t0.elapsed().as_nanos() as f64;
+    std::hint::black_box(c);
+    ns.max(1.0)
+}
+
 /// The kernel probe on `n` plain threads at once (barrier-started so
 /// every thread measures under full contention); returns the sum of
 /// per-thread GFLOP/s. Startup-only code — spawning OS threads here is
@@ -209,7 +269,7 @@ mod tests {
     fn probe_reports_positive_finite_peaks() {
         let p = probe();
         assert!(p.threads >= 1);
-        for v in [p.scalar_gflops, p.fma_gflops, p.aggregate_gflops] {
+        for v in [p.scalar_gflops, p.fma_gflops, p.aggregate_gflops, p.i8_gops] {
             assert!(v.is_finite() && v > 0.0, "non-positive peak {v}");
         }
         // Independent lanes can never be slower than a dependent chain
@@ -241,6 +301,7 @@ mod tests {
             scalar_gflops: 1.0,
             fma_gflops: 10.0,
             aggregate_gflops: 28.0,
+            i8_gops: 25.0,
         };
         assert_eq!(p.peak_gflops(0), 10.0); // uncapped records = 1 thread
         assert_eq!(p.peak_gflops(1), 10.0);
@@ -251,12 +312,36 @@ mod tests {
     }
 
     #[test]
+    fn i8_peak_follows_the_f32_scaling_curve() {
+        let p = HwProfile {
+            threads: 4,
+            scalar_gflops: 1.0,
+            fma_gflops: 10.0,
+            aggregate_gflops: 28.0,
+            i8_gops: 25.0,
+        };
+        assert_eq!(p.peak_gops(1, Dtype::F32), 10.0);
+        assert_eq!(p.peak_gops(1, Dtype::I8), 25.0);
+        // Full occupancy: i8 peak scales by the measured 2.8× f32 curve.
+        assert!((p.peak_gops(4, Dtype::I8) - 70.0).abs() < 1e-9);
+        let mid = p.peak_gops(2, Dtype::I8);
+        assert!(mid > 25.0 && mid < 70.0);
+    }
+
+    #[test]
+    fn i8_kernel_probe_runs_and_is_positive() {
+        let ns = run_kernel_i8(10);
+        assert!(ns.is_finite() && ns >= 1.0, "{ns}");
+    }
+
+    #[test]
     fn single_core_machines_use_the_fma_peak_everywhere() {
         let p = HwProfile {
             threads: 1,
             scalar_gflops: 1.0,
             fma_gflops: 8.0,
             aggregate_gflops: 8.0,
+            i8_gops: 16.0,
         };
         assert_eq!(p.peak_gflops(1), 8.0);
         assert_eq!(p.peak_gflops(16), 8.0);

@@ -23,12 +23,15 @@ pub use report::{diff_reports, BenchRecord, RecordConfig, Report, Reporter};
 use crate::util::stats::{fmt_ns, trimmed, Summary};
 use crate::util::threadpool::ThreadPool;
 
-/// Whether `NMPRUNE_BENCH_QUICK=1` (or any non-empty value) asked for
-/// the reduced-case CI profile. Every bench target must consult this
-/// single predicate — both for [`BenchConfig::quick`] budgets and for
-/// shrinking its case list — so "quick" means the same thing suite-wide.
+/// Whether `NMPRUNE_BENCH_QUICK` asked for the reduced-case CI
+/// profile. Every bench target must consult this single predicate —
+/// both for [`BenchConfig::quick`] budgets and for shrinking its case
+/// list — so "quick" means the same thing suite-wide. Parsed by
+/// [`crate::util::env::flag`]: it used to accept any non-empty value,
+/// so `NMPRUNE_BENCH_QUICK=0` *triggered* quick mode; `""`/`"0"`/
+/// `"false"` are now off like every other flag.
 pub fn is_quick() -> bool {
-    std::env::var_os("NMPRUNE_BENCH_QUICK").is_some_and(|v| !v.is_empty())
+    crate::util::env::flag("NMPRUNE_BENCH_QUICK")
 }
 
 /// Persistent, per-size worker pools shared by every bench target.
@@ -203,6 +206,29 @@ pub fn fmt_speedup(base_ns: f64, other_ns: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Satellite (env-flag unification): `NMPRUNE_BENCH_QUICK=0` used
+    /// to *enable* quick mode (any non-empty value counted). Off values
+    /// must now read as off, on values as on.
+    #[test]
+    fn is_quick_follows_the_flag_convention() {
+        let k = "NMPRUNE_BENCH_QUICK";
+        let saved = std::env::var(k).ok();
+        std::env::remove_var(k);
+        assert!(!is_quick(), "unset is off");
+        for v in ["0", "false", ""] {
+            std::env::set_var(k, v);
+            assert!(!is_quick(), "{v:?} must be off");
+        }
+        for v in ["1", "true", "yes"] {
+            std::env::set_var(k, v);
+            assert!(is_quick(), "{v:?} must be on");
+        }
+        match saved {
+            Some(v) => std::env::set_var(k, v),
+            None => std::env::remove_var(k),
+        }
+    }
 
     #[test]
     fn bench_measures_positive_time() {

@@ -23,6 +23,7 @@ use std::path::{Path, PathBuf};
 
 use super::hardware::{self, HwProfile};
 use crate::gemm::KernelId;
+use crate::tensor::Dtype;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -50,6 +51,10 @@ pub struct RecordConfig {
     /// dimension existed — Auto is omitted from keys and JSON so
     /// historical snapshots keep their identities).
     pub kernel: KernelId,
+    /// Compute dtype the case ran at; F32 = the historical default and
+    /// is omitted from keys and JSON (same compatibility scheme as
+    /// `kernel`). I8 records normalize against the int8 roofline.
+    pub dtype: Dtype,
 }
 
 impl RecordConfig {
@@ -59,22 +64,31 @@ impl RecordConfig {
         tile: 0,
         threads: 0,
         kernel: KernelId::Auto,
+        dtype: Dtype::F32,
     };
 
     /// Convenience constructor in `(lmul, tile, threads)` order
-    /// (kernel = Auto; chain [`RecordConfig::with_kernel`] to pin one).
+    /// (kernel = Auto, dtype = F32; chain [`RecordConfig::with_kernel`]
+    /// / [`RecordConfig::with_dtype`] to pin them).
     pub fn new(lmul: usize, tile: usize, threads: usize) -> Self {
         Self {
             lmul,
             tile,
             threads,
             kernel: KernelId::Auto,
+            dtype: Dtype::F32,
         }
     }
 
     /// Same configuration pinned to a specific micro-kernel backend.
     pub fn with_kernel(mut self, kernel: KernelId) -> Self {
         self.kernel = kernel;
+        self
+    }
+
+    /// Same configuration at a specific compute dtype.
+    pub fn with_dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
         self
     }
 }
@@ -123,8 +137,13 @@ impl BenchRecord {
         } else {
             format!(" kernel={}", self.config.kernel.name())
         };
+        let dtype = if self.config.dtype == Dtype::F32 {
+            String::new()
+        } else {
+            format!(" dtype={}", self.config.dtype.name())
+        };
         format!(
-            "{}::{} [lmul={} tile={} threads={}{kernel}]",
+            "{}::{} [lmul={} tile={} threads={}{kernel}{dtype}]",
             self.bench,
             self.case,
             self.config.lmul,
@@ -179,6 +198,7 @@ impl Report {
                     ("scalar_gflops".into(), Json::Num(hw.scalar_gflops)),
                     ("fma_gflops".into(), Json::Num(hw.fma_gflops)),
                     ("aggregate_gflops".into(), Json::Num(hw.aggregate_gflops)),
+                    ("i8_gops".into(), Json::Num(hw.i8_gops)),
                 ]),
             ));
         }
@@ -218,6 +238,10 @@ impl Report {
                 scalar_gflops: num_field(h, "scalar_gflops")?,
                 fma_gflops: num_field(h, "fma_gflops")?,
                 aggregate_gflops: num_field(h, "aggregate_gflops")?,
+                // Absent in snapshots predating the int8 plane; 0.0
+                // keeps them loadable (a zero peak drops pct_of_peak
+                // for i8 records, never poisons the diff).
+                i8_gops: h.get("i8_gops").and_then(Json::as_f64).unwrap_or(0.0),
             }),
         };
         let records = v
@@ -278,6 +302,10 @@ fn record_to_json(r: &BenchRecord) -> Json {
             Json::Str(r.config.kernel.name().to_string()),
         ));
     }
+    // Same scheme for dtype: F32 (the historical default) is omitted.
+    if r.config.dtype != Dtype::F32 {
+        config.push(("dtype".into(), Json::Str(r.config.dtype.name().to_string())));
+    }
     let mut pairs = vec![
         ("bench".into(), Json::Str(r.bench.clone())),
         ("case".into(), Json::Str(r.case.clone())),
@@ -336,6 +364,11 @@ fn record_from_json(v: &Json) -> Result<BenchRecord, String> {
                 .and_then(Json::as_str)
                 .and_then(KernelId::from_name)
                 .unwrap_or(KernelId::Auto),
+            dtype: cfg
+                .get("dtype")
+                .and_then(Json::as_str)
+                .and_then(Dtype::from_name)
+                .unwrap_or(Dtype::F32),
         },
         unit: v
             .get("unit")
@@ -392,7 +425,7 @@ impl Reporter {
     /// Record a wall-clock measurement (unit `ns`, gating). When
     /// `flops` (executed FLOPs per iteration) is given, the record
     /// carries effective GFLOP/s (`flops / median ns`) and %-of-peak
-    /// for `config.threads` workers.
+    /// for `config.threads` workers against `config.dtype`'s roofline.
     pub fn record(
         &mut self,
         case: &str,
@@ -416,7 +449,7 @@ impl Reporter {
                 .hardware
                 .as_ref()
                 .expect("active reporter probes hardware")
-                .peak_gflops(config.threads);
+                .peak_gops(config.threads, config.dtype);
             if peak.is_finite() && peak > 0.0 {
                 Some(100.0 * g / peak)
             } else {
@@ -758,6 +791,7 @@ mod tests {
             scalar_gflops: 1.25,
             fma_gflops: 9.5,
             aggregate_gflops: 40.0,
+            i8_gops: 22.0,
         });
         r.records[1].unit = "cycles".into();
         r.records[1].gate = false;
@@ -778,6 +812,10 @@ mod tests {
         pinned.config = pinned.config.with_kernel(KernelId::Avx2);
         pinned.over_peak = true;
         r.records.push(pinned);
+        // ... and a dtype-pinned one.
+        let mut quant = record("quant", 10.0, Some(33.0));
+        quant.config = quant.config.with_dtype(Dtype::I8);
+        r.records.push(quant);
         let text = r.render();
         let back = Report::parse(&text).unwrap();
         assert_eq!(back.schema_version, SCHEMA_VERSION);
@@ -785,6 +823,7 @@ mod tests {
         let hw = back.hardware.unwrap();
         assert_eq!(hw.threads, 8);
         assert_eq!(hw.fma_gflops, 9.5);
+        assert_eq!(hw.i8_gops, 22.0);
         assert_eq!(back.records.len(), r.records.len());
         for (a, b) in back.records.iter().zip(&r.records) {
             assert_eq!(a.key(), b.key());
@@ -817,6 +856,7 @@ mod tests {
                 scalar_gflops: scalar,
                 fma_gflops: fma,
                 aggregate_gflops: agg,
+                i8_gops: 0.0,
             });
             let mut rep = Reporter {
                 out: Some((PathBuf::from("/tmp/unused.json"), report)),
@@ -842,6 +882,7 @@ mod tests {
             scalar_gflops: 1.0,
             fma_gflops: 5.0,
             aggregate_gflops: 5.0,
+            i8_gops: 5.0,
         });
         let mut rep = Reporter {
             out: Some((PathBuf::from("/tmp/unused.json"), report)),
@@ -870,6 +911,60 @@ mod tests {
             "suite::k [lmul=2 tile=8 threads=1 kernel=scalar]"
         );
         assert_ne!(auto.key(), pinned.key());
+    }
+
+    /// Int8 records get distinct identities; F32 records keep the
+    /// historical key format so old snapshots stay diffable.
+    #[test]
+    fn dtype_appears_in_key_only_when_i8() {
+        let f32rec = record("k", 1.0, None);
+        assert_eq!(f32rec.key(), "suite::k [lmul=2 tile=8 threads=1]");
+        let mut quant = record("k", 1.0, None);
+        quant.config = quant.config.with_dtype(Dtype::I8);
+        assert_eq!(quant.key(), "suite::k [lmul=2 tile=8 threads=1 dtype=i8]");
+        assert_ne!(f32rec.key(), quant.key());
+    }
+
+    /// Int8 records normalize against the int8 roofline, not the f32
+    /// one — and a snapshot predating the i8 probe (i8_gops absent →
+    /// 0.0) drops pct_of_peak for i8 records instead of emitting Inf.
+    #[test]
+    fn i8_records_normalize_against_the_i8_peak() {
+        let mut report = Report::new("suite");
+        report.hardware = Some(HwProfile {
+            threads: 1,
+            scalar_gflops: 1.0,
+            fma_gflops: 5.0,
+            aggregate_gflops: 5.0,
+            i8_gops: 20.0,
+        });
+        let mut rep = Reporter {
+            out: Some((PathBuf::from("/tmp/unused.json"), report)),
+        };
+        let s = Summary::of(&[100.0]);
+        // 10 Gop/s: 200% of the 5 GFLOP/s f32 peak, but 50% of the
+        // 20 Gop/s i8 peak.
+        let cfg = RecordConfig::new(1, 8, 1).with_dtype(Dtype::I8);
+        rep.record("quant", cfg, &s, Some(1000.0));
+        let rec = &rep.out.as_ref().unwrap().1.records[0];
+        assert_eq!(rec.pct_of_peak, Some(50.0));
+        assert!(!rec.over_peak);
+
+        let mut legacy = Report::new("suite");
+        legacy.hardware = Some(HwProfile {
+            threads: 1,
+            scalar_gflops: 1.0,
+            fma_gflops: 5.0,
+            aggregate_gflops: 5.0,
+            i8_gops: 0.0,
+        });
+        let mut rep = Reporter {
+            out: Some((PathBuf::from("/tmp/unused.json"), legacy)),
+        };
+        rep.record("quant", cfg, &s, Some(1000.0));
+        let rec = &rep.out.as_ref().unwrap().1.records[0];
+        assert_eq!(rec.gflops, Some(10.0));
+        assert_eq!(rec.pct_of_peak, None);
     }
 
     #[test]

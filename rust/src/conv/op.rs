@@ -22,17 +22,20 @@ use std::cell::RefCell;
 
 use super::shape::ConvShape;
 use crate::gemm::threaded::{
-    gemm_dense_parallel_capped, gemm_dense_parallel_capped_into_with,
+    gemm_dense_i8_parallel_capped_into_with, gemm_dense_parallel_capped,
+    gemm_dense_parallel_capped_into_with, spmm_colwise_i8_parallel_capped_into_with,
     spmm_colwise_parallel_capped_into_with,
 };
 use crate::gemm::KernelId;
 use crate::im2col::{
-    conv2d_indirect_nhwc_parallel_capped_into, fused_im2col_pack_cnhw_into, IndirectionBuffer,
-    PackedMatrix,
+    conv2d_indirect_nhwc_parallel_capped_into, fused_im2col_pack_cnhw_into, quantize_panel_into,
+    IndirectionBuffer, PackedMatrix, QuantPanel,
 };
-use crate::pruning::{prune_colwise, prune_colwise_adaptive, ColwisePruned};
+use crate::pruning::{
+    prune_colwise, prune_colwise_adaptive, ColwisePruned, ColwiseQuant, QuantDense,
+};
 use crate::tensor::layout::oihw_to_filter_matrix;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use crate::util::threadpool::ThreadPool;
 
 thread_local! {
@@ -40,6 +43,9 @@ thread_local! {
     /// (§Perf step 3): keeps the multi-MB strip buffer's pages resident
     /// instead of re-faulting a fresh allocation per layer.
     static PACK_SCRATCH: RefCell<PackedMatrix> = RefCell::new(PackedMatrix::zeros(1, 1, 1));
+    /// Per-thread quantized-panel scratch for i8 layers, same reuse
+    /// rationale (the arena path supplies its own instead).
+    static QUANT_SCRATCH: RefCell<QuantPanel> = RefCell::new(QuantPanel::zeros(1, 1, 1));
 }
 
 /// Which execution path a layer uses (tuner output / config input).
@@ -143,7 +149,14 @@ pub struct Conv2dDenseCnhw {
     /// Micro-kernel backend ([`KernelId::Auto`] = runtime dispatch):
     /// the fourth tuned knob.
     pub kernel: KernelId,
+    /// Compute datatype — the fifth tuned knob. `I8` quantizes weights
+    /// at construction ([`Conv2dDenseCnhw::with_dtype`]) and the packed
+    /// panel per run; `F32` is the historical path, untouched.
+    pub dtype: Dtype,
     filter: Vec<f32>,
+    /// Quantized filter, present iff `dtype == I8` (derived from
+    /// `filter` deterministically — never stored in artifacts).
+    qfilter: Option<QuantDense>,
 }
 
 impl Conv2dDenseCnhw {
@@ -162,7 +175,9 @@ impl Conv2dDenseCnhw {
             tile,
             threads: 0,
             kernel: KernelId::Auto,
+            dtype: Dtype::F32,
             filter,
+            qfilter: None,
         }
     }
 
@@ -183,6 +198,22 @@ impl Conv2dDenseCnhw {
         self
     }
 
+    /// Set the compute datatype (tuner/artifact choice). Quantizes the
+    /// filter here, at construction — off the hot path; the f32 master
+    /// filter is kept as the source of truth for artifact writing.
+    pub fn with_dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
+        self.qfilter = match dtype {
+            Dtype::I8 => Some(QuantDense::quantize(
+                &self.filter,
+                self.shape.c_out,
+                self.shape.k(),
+            )),
+            Dtype::F32 => None,
+        };
+        self
+    }
+
     /// Run on a CNHW input, producing CNHW output
     /// `[C_out, N, H_out, W_out]`.
     pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
@@ -194,16 +225,26 @@ impl Conv2dDenseCnhw {
     pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         let s = &self.shape;
         let mut out = Tensor::zeros(&[s.c_out, s.n, s.h_out(), s.w_out()]);
-        PACK_SCRATCH.with(|cell| {
-            self.run_capped_into(x, pool, run_cap, &mut cell.borrow_mut(), &mut out);
+        PACK_SCRATCH.with(|pack| {
+            QUANT_SCRATCH.with(|quant| {
+                self.run_capped_into(
+                    x,
+                    pool,
+                    run_cap,
+                    &mut pack.borrow_mut(),
+                    &mut quant.borrow_mut(),
+                    &mut out,
+                );
+            });
         });
         out
     }
 
     /// [`Conv2dDenseCnhw::run_capped`] packing into a caller-provided
-    /// [`PackedMatrix`] and writing a caller-provided CNHW output
-    /// tensor — the arena-driven zero-alloc path. Bitwise identical to
-    /// `run_capped`, which routes through this body.
+    /// [`PackedMatrix`] (plus a [`QuantPanel`], used only on i8 layers)
+    /// and writing a caller-provided CNHW output tensor — the
+    /// arena-driven zero-alloc path. Bitwise identical to `run_capped`,
+    /// which routes through this body.
     // nmprune: zero-alloc
     pub fn run_capped_into(
         &self,
@@ -211,21 +252,40 @@ impl Conv2dDenseCnhw {
         pool: &ThreadPool,
         run_cap: usize,
         packed: &mut PackedMatrix,
+        qpanel: &mut QuantPanel,
         out: &mut Tensor,
     ) {
         let s = &self.shape;
         assert_eq!(out.shape, [s.c_out, s.n, s.h_out(), s.w_out()], "output tensor shape");
         fused_im2col_pack_cnhw_into(x, s, self.v, packed);
-        gemm_dense_parallel_capped_into_with(
-            &self.filter,
-            s.c_out,
-            packed,
-            self.tile,
-            pool,
-            compose_caps(self.threads, run_cap),
-            self.kernel,
-            &mut out.data,
-        );
+        match self.dtype {
+            Dtype::F32 => gemm_dense_parallel_capped_into_with(
+                &self.filter,
+                s.c_out,
+                packed,
+                self.tile,
+                pool,
+                compose_caps(self.threads, run_cap),
+                self.kernel,
+                &mut out.data,
+            ),
+            Dtype::I8 => {
+                quantize_panel_into(packed, qpanel);
+                let qf = self
+                    .qfilter
+                    .as_ref()
+                    .expect("i8 dtype always carries a quantized filter (with_dtype)");
+                gemm_dense_i8_parallel_capped_into_with(
+                    qf,
+                    qpanel,
+                    self.tile,
+                    pool,
+                    compose_caps(self.threads, run_cap),
+                    self.kernel,
+                    &mut out.data,
+                );
+            }
+        }
     }
 }
 
@@ -299,7 +359,13 @@ pub struct Conv2dSparseCnhw {
     /// Micro-kernel backend ([`KernelId::Auto`] = runtime dispatch):
     /// the fourth tuned knob.
     pub kernel: KernelId,
+    /// Compute datatype — the fifth tuned knob (see
+    /// [`Conv2dSparseCnhw::with_dtype`]).
+    pub dtype: Dtype,
     pub weights: ColwisePruned,
+    /// Quantized weights, present iff `dtype == I8` (derived from
+    /// `weights` deterministically — never stored in artifacts).
+    qweights: Option<ColwiseQuant>,
 }
 
 impl Conv2dSparseCnhw {
@@ -323,7 +389,9 @@ impl Conv2dSparseCnhw {
             v,
             threads: 0,
             kernel: KernelId::Auto,
+            dtype: Dtype::F32,
             weights,
+            qweights: None,
         }
     }
 
@@ -341,7 +409,9 @@ impl Conv2dSparseCnhw {
             v,
             threads: 0,
             kernel: KernelId::Auto,
+            dtype: Dtype::F32,
             weights: prune_colwise_adaptive(&f.data, shape.c_out, shape.k(), tile, sparsity),
+            qweights: None,
         }
     }
 
@@ -357,6 +427,18 @@ impl Conv2dSparseCnhw {
         self
     }
 
+    /// Set the compute datatype (tuner/artifact choice). Quantizes the
+    /// compressed weights here, at construction — off the hot path; the
+    /// f32 compressed form stays the source of truth for artifacts.
+    pub fn with_dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
+        self.qweights = match dtype {
+            Dtype::I8 => Some(ColwiseQuant::quantize(&self.weights)),
+            Dtype::F32 => None,
+        };
+        self
+    }
+
     /// Run on a CNHW input, producing CNHW output.
     pub fn run(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
         self.run_capped(x, pool, 0)
@@ -367,15 +449,25 @@ impl Conv2dSparseCnhw {
     pub fn run_capped(&self, x: &Tensor, pool: &ThreadPool, run_cap: usize) -> Tensor {
         let s = &self.shape;
         let mut out = Tensor::zeros(&[s.c_out, s.n, s.h_out(), s.w_out()]);
-        PACK_SCRATCH.with(|cell| {
-            self.run_capped_into(x, pool, run_cap, &mut cell.borrow_mut(), &mut out);
+        PACK_SCRATCH.with(|pack| {
+            QUANT_SCRATCH.with(|quant| {
+                self.run_capped_into(
+                    x,
+                    pool,
+                    run_cap,
+                    &mut pack.borrow_mut(),
+                    &mut quant.borrow_mut(),
+                    &mut out,
+                );
+            });
         });
         out
     }
 
     /// [`Conv2dSparseCnhw::run_capped`] packing into a caller-provided
-    /// [`PackedMatrix`] and writing a caller-provided CNHW output
-    /// tensor — the arena-driven zero-alloc path.
+    /// [`PackedMatrix`] (plus a [`QuantPanel`], used only on i8 layers)
+    /// and writing a caller-provided CNHW output tensor — the
+    /// arena-driven zero-alloc path.
     // nmprune: zero-alloc
     pub fn run_capped_into(
         &self,
@@ -383,19 +475,37 @@ impl Conv2dSparseCnhw {
         pool: &ThreadPool,
         run_cap: usize,
         packed: &mut PackedMatrix,
+        qpanel: &mut QuantPanel,
         out: &mut Tensor,
     ) {
         let s = &self.shape;
         assert_eq!(out.shape, [s.c_out, s.n, s.h_out(), s.w_out()], "output tensor shape");
         fused_im2col_pack_cnhw_into(x, s, self.v, packed);
-        spmm_colwise_parallel_capped_into_with(
-            &self.weights,
-            packed,
-            pool,
-            compose_caps(self.threads, run_cap),
-            self.kernel,
-            &mut out.data,
-        );
+        match self.dtype {
+            Dtype::F32 => spmm_colwise_parallel_capped_into_with(
+                &self.weights,
+                packed,
+                pool,
+                compose_caps(self.threads, run_cap),
+                self.kernel,
+                &mut out.data,
+            ),
+            Dtype::I8 => {
+                quantize_panel_into(packed, qpanel);
+                let qw = self
+                    .qweights
+                    .as_ref()
+                    .expect("i8 dtype always carries quantized weights (with_dtype)");
+                spmm_colwise_i8_parallel_capped_into_with(
+                    qw,
+                    qpanel,
+                    pool,
+                    compose_caps(self.threads, run_cap),
+                    self.kernel,
+                    &mut out.data,
+                );
+            }
+        }
     }
 
     /// Effective sparsity of the compressed weights.
@@ -553,13 +663,62 @@ mod tests {
         let want_sp = sp.run(&x, &pool);
         let want_de = de.run(&x, &pool);
         let mut packed = PackedMatrix::zeros(1, 1, 1);
+        let mut qpanel = QuantPanel::zeros(1, 1, 1);
         let mut out = Tensor::zeros(&want_sp.shape);
         for round in 0..3 {
-            sp.run_capped_into(&x, &pool, 0, &mut packed, &mut out);
+            sp.run_capped_into(&x, &pool, 0, &mut packed, &mut qpanel, &mut out);
             assert_eq!(out.data, want_sp.data, "sparse round {round}");
-            de.run_capped_into(&x, &pool, 0, &mut packed, &mut out);
+            de.run_capped_into(&x, &pool, 0, &mut packed, &mut qpanel, &mut out);
             assert_eq!(out.data, want_de.data, "dense round {round}");
         }
+    }
+
+    /// The i8 dtype knob: outputs approximate the f32 path within the
+    /// quantization budget, are bitwise identical across thread caps
+    /// and kernels, and the arena path reproduces the thread-local
+    /// scratch path exactly.
+    #[test]
+    fn i8_dtype_tracks_f32_and_is_deterministic() {
+        use crate::tensor::Dtype;
+        let s = ConvShape::square(1, 4, 8, 8, 3, 1, 1);
+        let (x, w) = rand_case(37, s);
+        let pool = ThreadPool::new(4);
+        let sp_f32 = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4);
+        let de_f32 = Conv2dDenseCnhw::new(s, &w, 16, 4);
+        let sp_i8 = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4).with_dtype(Dtype::I8);
+        let de_i8 = Conv2dDenseCnhw::new(s, &w, 16, 4).with_dtype(Dtype::I8);
+        let want_sp = sp_i8.run(&x, &pool);
+        let want_de = de_i8.run(&x, &pool);
+        // Approximation: inputs in [-1,1], weights in [-0.5,0.5],
+        // k = 36 — the worst-case bound is far below this tolerance.
+        assert!(allclose(&want_sp.data, &sp_f32.run(&x, &pool).data, 0.0, 0.2));
+        assert!(allclose(&want_de.data, &de_f32.run(&x, &pool).data, 0.0, 0.2));
+        // Determinism across caps and backends (i8 is bitwise across
+        // kernels, stronger than the f32 per-kernel contract).
+        for cap in [1usize, 2, 3, 7] {
+            let spc = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4)
+                .with_dtype(Dtype::I8)
+                .with_thread_cap(cap);
+            assert_eq!(spc.run(&x, &pool).data, want_sp.data, "sparse cap={cap}");
+        }
+        for id in crate::gemm::kernels::available_ids() {
+            let spk = Conv2dSparseCnhw::new(s, &w, 16, 4, 2, 4)
+                .with_dtype(Dtype::I8)
+                .with_kernel(id);
+            let dek = Conv2dDenseCnhw::new(s, &w, 16, 4)
+                .with_dtype(Dtype::I8)
+                .with_kernel(id);
+            assert_eq!(spk.run(&x, &pool).data, want_sp.data, "sparse {id}");
+            assert_eq!(dek.run(&x, &pool).data, want_de.data, "dense {id}");
+        }
+        // Arena path bitwise-matches the thread-local scratch path.
+        let mut packed = PackedMatrix::zeros(1, 1, 1);
+        let mut qpanel = QuantPanel::zeros(1, 1, 1);
+        let mut out = Tensor::zeros(&want_sp.shape);
+        sp_i8.run_capped_into(&x, &pool, 0, &mut packed, &mut qpanel, &mut out);
+        assert_eq!(out.data, want_sp.data);
+        de_i8.run_capped_into(&x, &pool, 0, &mut packed, &mut qpanel, &mut out);
+        assert_eq!(out.data, want_de.data);
     }
 
     /// Every available micro-kernel backend is a drop-in on the conv

@@ -16,7 +16,7 @@ use crate::models::{Graph, Op};
 use crate::runtime::artifact::{ArtifactLayer, LayerWeights, PackedArtifact};
 use crate::runtime::RuntimeError;
 use crate::tensor::layout::{nhwc_to_cnhw, nhwc_to_cnhw_into};
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use crate::util::threadpool::ThreadPool;
 use crate::util::XorShiftRng;
 
@@ -25,8 +25,8 @@ use super::scratch::{MemoryPlan, ScratchArena};
 
 /// Per-conv-layer micro-kernel parameters: strip width `v` (= VLMAX of
 /// the chosen LMUL), register tile height `tile`, the parallelism
-/// cap `threads`, and the micro-kernel backend `kernel` — the four
-/// knobs the tuner (§3.3, extended) selects.
+/// cap `threads`, the micro-kernel backend `kernel`, and the compute
+/// `dtype` — the five knobs the tuner (§3.3, extended) selects.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerChoice {
     pub v: usize,
@@ -39,6 +39,13 @@ pub struct LayerChoice {
     /// Artifacts record the tuned backend; an unavailable choice on the
     /// loading host falls back to the best available one.
     pub kernel: KernelId,
+    /// Compute dtype for this layer's GEMM ([`Dtype::F32`] = master
+    /// weights as-is; [`Dtype::I8`] = symmetric per-output-channel
+    /// weight quantization + per-panel activation quantization with an
+    /// i32-accumulating kernel). CNHW paths only — the NHWC baseline
+    /// always runs f32. `NMPRUNE_DTYPE` overrides this at executor
+    /// *build* time (never on the zero-alloc run path).
+    pub dtype: Dtype,
 }
 
 impl Default for LayerChoice {
@@ -51,8 +58,18 @@ impl Default for LayerChoice {
             tile: 8,
             threads: 0,
             kernel: KernelId::Auto,
+            dtype: Dtype::F32,
         }
     }
+}
+
+/// Effective dtype for a layer: the configured choice unless
+/// `NMPRUNE_DTYPE` forces one process-wide (applied when operators are
+/// *built* — `new`/`from_artifact` — so the run path stays env-free and
+/// zero-alloc). Artifacts always record the configured choice, not the
+/// forced one.
+fn effective_dtype(choice: &LayerChoice) -> Dtype {
+    crate::tensor::dtype::forced().unwrap_or(choice.dtype)
 }
 
 /// Executor configuration. Pool-aware: instead of a raw `threads`
@@ -206,7 +223,8 @@ impl Executor {
                         (_, false) => PreparedConv::Cnhw(
                             Conv2dDenseCnhw::new(*shape, &w, choice.v, choice.tile)
                                 .with_thread_cap(choice.threads)
-                                .with_kernel(choice.kernel),
+                                .with_kernel(choice.kernel)
+                                .with_dtype(effective_dtype(&choice)),
                         ),
                         (_, true) => PreparedConv::Sparse(
                             Conv2dSparseCnhw::new_adaptive(
@@ -217,7 +235,8 @@ impl Executor {
                                 cfg.sparsity,
                             )
                             .with_thread_cap(choice.threads)
-                            .with_kernel(choice.kernel),
+                            .with_kernel(choice.kernel)
+                            .with_dtype(effective_dtype(&choice)),
                         ),
                     };
                     convs.insert(node.id, prepared);
@@ -274,7 +293,9 @@ impl Executor {
         }
         // Per-node wall-clock trace for profiling (§Perf): set
         // NMPRUNE_TRACE=1 to print layer-by-layer timings to stderr.
-        let trace = std::env::var("NMPRUNE_TRACE").is_ok();
+        // Shared flag convention: ""/"0"/"false" are off (this site
+        // used to test `is_ok()`, so NMPRUNE_TRACE=0 enabled tracing).
+        let trace = crate::util::env::flag("NMPRUNE_TRACE");
         for node in &self.graph.nodes {
             let t_node = std::time::Instant::now();
             let out = match &node.op {
@@ -506,12 +527,14 @@ impl Executor {
                                 choice.tile,
                             )
                             .with_thread_cap(choice.threads)
-                            .with_kernel(choice.kernel),
+                            .with_kernel(choice.kernel)
+                            .with_dtype(effective_dtype(&choice)),
                         ),
                         (LayerWeights::Sparse(p), ConvPath::SparseCnhw) => PreparedConv::Sparse(
                             Conv2dSparseCnhw::from_pruned(*shape, p.clone(), choice.v)
                                 .with_thread_cap(choice.threads)
-                                .with_kernel(choice.kernel),
+                                .with_kernel(choice.kernel)
+                                .with_dtype(effective_dtype(&choice)),
                         ),
                         (LayerWeights::Sparse(_), _) => {
                             return Err(e(format!(
@@ -557,20 +580,26 @@ impl Executor {
     }
 
     /// Static activation-memory plan for this executor's graph and
-    /// execution path, including the worst-case conv panel size.
+    /// execution path, including the worst-case conv panel size and the
+    /// worst-case i8 staging panel over the layers that run quantized.
     pub fn memory_plan(&self) -> MemoryPlan {
         let nhwc = self.cfg.path == ConvPath::DenseNhwc;
         let mut panel_elems = 0usize;
+        let mut qpanel_elems = 0usize;
         if !nhwc {
             for node in &self.graph.nodes {
                 if let Op::Conv { shape, .. } = &node.op {
-                    let v = self.cfg.choice_for(&node.name).v;
-                    let strips = shape.gemm_cols().div_ceil(v).max(1);
-                    panel_elems = panel_elems.max(strips * v * shape.k());
+                    let choice = self.cfg.choice_for(&node.name);
+                    let strips = shape.gemm_cols().div_ceil(choice.v).max(1);
+                    let elems = strips * choice.v * shape.k();
+                    panel_elems = panel_elems.max(elems);
+                    if effective_dtype(&choice) == Dtype::I8 {
+                        qpanel_elems = qpanel_elems.max(elems);
+                    }
                 }
             }
         }
-        MemoryPlan::plan(&self.graph, nhwc, panel_elems)
+        MemoryPlan::plan(&self.graph, nhwc, panel_elems, qpanel_elems)
     }
 
     /// Allocate a scratch arena sized for this executor's plan.
@@ -646,12 +675,22 @@ impl Executor {
                         PreparedConv::Nhwc(op) => {
                             op.run_capped_into(x, pool, run_cap, &mut out)
                         }
-                        PreparedConv::Cnhw(op) => {
-                            op.run_capped_into(x, pool, run_cap, &mut arena.panel, &mut out)
-                        }
-                        PreparedConv::Sparse(op) => {
-                            op.run_capped_into(x, pool, run_cap, &mut arena.panel, &mut out)
-                        }
+                        PreparedConv::Cnhw(op) => op.run_capped_into(
+                            x,
+                            pool,
+                            run_cap,
+                            &mut arena.panel,
+                            &mut arena.qpanel,
+                            &mut out,
+                        ),
+                        PreparedConv::Sparse(op) => op.run_capped_into(
+                            x,
+                            pool,
+                            run_cap,
+                            &mut arena.panel,
+                            &mut arena.qpanel,
+                            &mut out,
+                        ),
                     }
                     if *relu {
                         ops::relu_inplace(&mut out);
@@ -881,6 +920,49 @@ mod tests {
             let e2 = Executor::from_artifact(g.clone(), ThreadPool::shared(1), &art).unwrap();
             assert_eq!(e2.cfg.default_choice.kernel, id);
             assert_eq!(e2.run(&x).data, y.data, "{id} artifact run diverged");
+        }
+    }
+
+    /// An i8 dtype choice runs end-to-end on both CNHW paths: logits
+    /// stay finite and close to the f32 executor's (the precise
+    /// per-element quantization bound is asserted at the GEMM layer and
+    /// in the conv fuzz harness), the arena path stays bitwise identical
+    /// to the allocating path, and the choice survives the artifact
+    /// roundtrip bitwise.
+    #[test]
+    fn i8_dtype_runs_end_to_end_and_roundtrips() {
+        use crate::runtime::PackedArtifact;
+        let g = build_model(ModelArch::ResNet18, 1, 32);
+        let x = input(1, 32, 21);
+        let cfgs = [
+            ExecConfig::dense_cnhw(ThreadPool::shared(2)),
+            ExecConfig::sparse_cnhw(ThreadPool::shared(2), 0.5),
+        ];
+        for mut cfg in cfgs {
+            let path = cfg.path;
+            let f32_logits = Executor::new(g.clone(), cfg.clone()).run(&x);
+            cfg.default_choice.dtype = Dtype::I8;
+            let e = Executor::new(g.clone(), cfg);
+            let y = e.run(&x);
+            assert!(y.data.iter().all(|v| v.is_finite()), "{path:?}");
+            // The i8 path actually engaged (quantization perturbs
+            // *something*) yet stays coarsely close to f32.
+            assert_ne!(y.data, f32_logits.data, "{path:?} i8 ran as f32");
+            assert!(
+                allclose(&y.data, &f32_logits.data, 0.0, 2.0),
+                "{path:?} i8 diverged, max diff {}",
+                crate::util::max_abs_diff(&y.data, &f32_logits.data)
+            );
+            // The arena path is bitwise identical to the allocating one.
+            let mut arena = e.scratch();
+            assert_eq!(e.run_in(&x, &mut arena).data, y.data, "{path:?} arena diverged");
+            // Dtype rides the artifact: re-quantizing the stored f32
+            // master weights on load is deterministic, so logits stay
+            // bitwise across the roundtrip.
+            let art = PackedArtifact::decode(&e.to_artifact().encode()).unwrap();
+            assert_eq!(art.default_choice.dtype, Dtype::I8);
+            let e2 = Executor::from_artifact(g.clone(), ThreadPool::shared(1), &art).unwrap();
+            assert_eq!(e2.run(&x).data, y.data, "{path:?} artifact run diverged");
         }
     }
 

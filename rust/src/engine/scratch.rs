@@ -20,7 +20,7 @@
 use crate::models::{Graph, Node, Op};
 use crate::tensor::Tensor;
 
-use crate::im2col::PackedMatrix;
+use crate::im2col::{PackedMatrix, QuantPanel};
 
 /// Output shape of `node` given the executor's activation layout.
 /// GAP and FC emit 2-D `[batch, features]`; everything else is 4-D
@@ -53,6 +53,10 @@ pub struct MemoryPlan {
     /// Worst-case packed-panel size in elements over all conv layers
     /// (0 on the NHWC path, which packs nothing).
     pub panel_elems: usize,
+    /// Worst-case quantized-panel size in elements over the conv layers
+    /// that run int8 (0 when every layer stays f32): the i8 staging
+    /// buffer activations are quantized into before the int8 GEMM.
+    pub qpanel_elems: usize,
 }
 
 impl MemoryPlan {
@@ -62,7 +66,7 @@ impl MemoryPlan {
     /// output slot first, then release input slots whose consumer
     /// counts are exhausted. The final node's slot is never released —
     /// it holds the logits the caller borrows after a run.
-    pub fn plan(graph: &Graph, nhwc: bool, panel_elems: usize) -> Self {
+    pub fn plan(graph: &Graph, nhwc: bool, panel_elems: usize, qpanel_elems: usize) -> Self {
         let n_nodes = graph.nodes.len();
         assert!(n_nodes > 0, "cannot plan an empty graph");
         let mut remaining = vec![0usize; n_nodes];
@@ -101,12 +105,14 @@ impl MemoryPlan {
             shapes,
             slot_elems,
             panel_elems,
+            qpanel_elems,
         }
     }
 
-    /// Total activation footprint of the plan in bytes (slots + panel).
+    /// Total activation footprint of the plan in bytes (slots + panel +
+    /// the 1-byte-per-element quantized panel).
     pub fn bytes(&self) -> usize {
-        4 * (self.slot_elems.iter().sum::<usize>() + self.panel_elems)
+        4 * (self.slot_elems.iter().sum::<usize>() + self.panel_elems) + self.qpanel_elems
     }
 }
 
@@ -117,6 +123,7 @@ pub struct ScratchArena {
     pub(crate) plan: MemoryPlan,
     pub(crate) slots: Vec<Tensor>,
     pub(crate) panel: PackedMatrix,
+    pub(crate) qpanel: QuantPanel,
 }
 
 impl ScratchArena {
@@ -140,10 +147,12 @@ impl ScratchArena {
             })
             .collect();
         let panel = PackedMatrix::zeros(1, plan.panel_elems.max(1), 1);
+        let qpanel = QuantPanel::zeros(1, plan.qpanel_elems.max(1), 1);
         Self {
             plan,
             slots,
             panel,
+            qpanel,
         }
     }
 
@@ -152,10 +161,12 @@ impl ScratchArena {
         &self.plan
     }
 
-    /// Resident scratch footprint in bytes (slot + panel capacity).
+    /// Resident scratch footprint in bytes (slot + panel + qpanel
+    /// capacity).
     pub fn bytes(&self) -> usize {
         4 * (self.slots.iter().map(|t| t.data.capacity()).sum::<usize>()
             + self.panel.data.capacity())
+            + self.qpanel.data.capacity()
     }
 }
 
@@ -166,7 +177,7 @@ mod tests {
 
     fn plan_for(arch: ModelArch, nhwc: bool) -> (Graph, MemoryPlan) {
         let g = build_model(arch, 1, 32);
-        let p = MemoryPlan::plan(&g, nhwc, 4096);
+        let p = MemoryPlan::plan(&g, nhwc, 4096, 4096);
         (g, p)
     }
 
@@ -234,5 +245,6 @@ mod tests {
             assert_eq!(t.data.len(), arena.plan.slot_elems[i]);
         }
         assert!(arena.panel.data.len() >= arena.plan.panel_elems);
+        assert!(arena.qpanel.data.len() >= arena.plan.qpanel_elems);
     }
 }

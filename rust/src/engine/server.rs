@@ -470,8 +470,8 @@ impl Server {
                 starvation_limit: cfg.starvation_limit,
                 slack_floor: cfg.slack_floor,
             },
-            // `=1` to enable, like NMPRUNE_PIN (so `=0` really is off).
-            trace: std::env::var("NMPRUNE_SERVE_TRACE").map(|v| v == "1").unwrap_or(false),
+            // Shared flag convention: ""/"0"/"false" are off.
+            trace: crate::util::env::flag("NMPRUNE_SERVE_TRACE"),
         });
         let workers = (0..n_exec)
             .map(|idx| {

@@ -7,8 +7,8 @@
 //! fetched is reused T times; accumulators never touch memory until the
 //! final store — the three properties the paper's design targets.
 
-use crate::im2col::PackedMatrix;
-use crate::pruning::ColwisePruned;
+use crate::im2col::{PackedMatrix, QuantPanel};
+use crate::pruning::{ColwisePruned, ColwiseQuant};
 
 use super::dense::MAX_TILE;
 use super::kernels::{self, KernelId};
@@ -54,6 +54,38 @@ pub fn spmm_colwise_into_with(
         // SAFETY: `c` is a unique borrow covering the whole output, so
         // the strip kernel's disjoint-write requirement holds trivially.
         unsafe { kern.spmm_strip(w, a, strip, c.as_mut_ptr(), c.len()) }
+    }
+}
+
+/// Quantized `C = dequant(Wq · Aq)`: i8×i8→i32 strip kernels with a
+/// requantize-to-f32 epilogue. Dispatched backend.
+pub fn spmm_colwise_i8(w: &ColwiseQuant, a: &QuantPanel) -> Vec<f32> {
+    spmm_colwise_i8_with(w, a, KernelId::Auto)
+}
+
+/// [`spmm_colwise_i8`] on an explicit micro-kernel backend.
+pub fn spmm_colwise_i8_with(w: &ColwiseQuant, a: &QuantPanel, kernel: KernelId) -> Vec<f32> {
+    let mut c = vec![0.0f32; w.rows * a.cols];
+    spmm_colwise_i8_into_with(w, a, kernel, &mut c);
+    c
+}
+
+/// In-place quantized variant on an explicit backend (hot-path entry).
+// nmprune: zero-alloc
+pub fn spmm_colwise_i8_into_with(
+    w: &ColwiseQuant,
+    a: &QuantPanel,
+    kernel: KernelId,
+    c: &mut [f32],
+) {
+    assert_eq!(w.cols, a.k, "reduction dim mismatch");
+    assert!(c.len() >= w.rows * a.cols);
+    assert!(w.tile <= MAX_TILE, "tile {} > {}", w.tile, MAX_TILE);
+    let kern = kernels::resolve(kernel);
+    for strip in 0..a.strips {
+        // SAFETY: `c` is a unique borrow covering the whole output, so
+        // the strip kernel's disjoint-write requirement holds trivially.
+        unsafe { kern.spmm_strip_i8(w, a, strip, c.as_mut_ptr(), c.len()) }
     }
 }
 
@@ -127,6 +159,45 @@ mod tests {
         let p = pack_data_matrix(&a, 8, 6, 4);
         let got = spmm_colwise(&cp, &p);
         assert!(got.iter().all(|&x| x == 0.0));
+    }
+
+    /// Documented quantization-error contract: per output element,
+    /// `|y_i8 − y_f32| ≤ Σ_retained (|w|·sa/2 + |a|·sw/2 + sw·sa/4)`
+    /// plus f32 summation slack — the bound the conv fuzz harness
+    /// rechecks end-to-end.
+    #[test]
+    fn i8_matches_f32_within_quantization_bound() {
+        use crate::im2col::{quantize_panel_into, QuantPanel};
+        use crate::pruning::ColwiseQuant;
+        let mut r = XorShiftRng::new(74);
+        let (rows, k, cols) = (12, 32, 33);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 4, 2, 4);
+        let qw = ColwiseQuant::quantize(&cp);
+        let p = pack_data_matrix(&a, k, cols, 8);
+        let mut qa = QuantPanel::zeros(1, 1, 1);
+        quantize_panel_into(&p, &mut qa);
+        let f32_out = spmm_colwise_with(&cp, &p, KernelId::Scalar);
+        let i8_out = spmm_colwise_i8(&qw, &qa);
+        let dense = cp.decompress();
+        for r_ in 0..rows {
+            let sw = qw.scales[r_];
+            for col in 0..cols {
+                let mut bound = 1e-4f32;
+                for kk in 0..k {
+                    let wv = dense[r_ * k + kk];
+                    if wv != 0.0 {
+                        let av = a[kk * cols + col];
+                        bound += wv.abs() * qa.scale * 0.5
+                            + av.abs() * sw * 0.5
+                            + sw * qa.scale * 0.25;
+                    }
+                }
+                let d = (f32_out[r_ * cols + col] - i8_out[r_ * cols + col]).abs();
+                assert!(d <= bound, "row {r_} col {col}: {d} > {bound}");
+            }
+        }
     }
 
     #[test]

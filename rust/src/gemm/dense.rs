@@ -1,6 +1,7 @@
 //! Dense tiled GEMM over packed strips — the dense baseline kernel.
 
-use crate::im2col::PackedMatrix;
+use crate::im2col::{PackedMatrix, QuantPanel};
+use crate::pruning::QuantDense;
 
 use super::kernels::{self, KernelId};
 
@@ -57,6 +58,45 @@ pub fn gemm_dense_into_with(
     }
 }
 
+/// Quantized dense GEMM: i8×i8→i32 strip kernels with a requantize-to-
+/// f32 epilogue. Dispatched backend.
+pub fn gemm_dense_i8(w: &QuantDense, a: &QuantPanel, tile: usize) -> Vec<f32> {
+    gemm_dense_i8_with(w, a, tile, KernelId::Auto)
+}
+
+/// [`gemm_dense_i8`] on an explicit micro-kernel backend.
+pub fn gemm_dense_i8_with(
+    w: &QuantDense,
+    a: &QuantPanel,
+    tile: usize,
+    kernel: KernelId,
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; w.rows * a.cols];
+    gemm_dense_i8_into_with(w, a, tile, kernel, &mut c);
+    c
+}
+
+/// In-place quantized variant on an explicit backend (hot-path entry).
+// nmprune: zero-alloc
+pub fn gemm_dense_i8_into_with(
+    w: &QuantDense,
+    a: &QuantPanel,
+    tile: usize,
+    kernel: KernelId,
+    c: &mut [f32],
+) {
+    assert_eq!(w.k, a.k, "reduction dim mismatch");
+    assert_eq!(w.values.len(), w.rows * w.k, "filter shape");
+    assert!(c.len() >= w.rows * a.cols);
+    assert!((1..=MAX_TILE).contains(&tile));
+    let kern = kernels::resolve(kernel);
+    for strip in 0..a.strips {
+        // SAFETY: `c` is a unique borrow covering the whole output, so
+        // the strip kernel's disjoint-write requirement holds trivially.
+        unsafe { kern.dense_strip_i8(w, a, tile, strip, c.as_mut_ptr(), c.len()) }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +128,40 @@ mod tests {
         let p = pack_data_matrix(&[3.0], 1, 1, 8);
         let got = gemm_dense(&[2.0], 1, &p, 1);
         assert_eq!(got, vec![6.0]);
+    }
+
+    /// i8 dense path approximates f32 closely on well-scaled data and
+    /// is invariant to the tile parameter (tiling never changes integer
+    /// arithmetic).
+    #[test]
+    fn i8_dense_tracks_f32_and_is_tile_invariant() {
+        use crate::im2col::{quantize_panel_into, QuantPanel};
+        let mut r = XorShiftRng::new(62);
+        let (rows, k, cols) = (13, 24, 40);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let qw = QuantDense::quantize(&w, rows, k);
+        let p = pack_data_matrix(&a, k, cols, 8);
+        let mut qa = QuantPanel::zeros(1, 1, 1);
+        quantize_panel_into(&p, &mut qa);
+        let want = matmul_ref(&w, &a, rows, k, cols);
+        let base = gemm_dense_i8(&qw, &qa, 1);
+        // Coarse closeness only — comfortably inside the worst-case
+        // quantization bound for k=24 (the precise per-element bound is
+        // asserted in colwise.rs and the conv fuzz harness).
+        assert!(allclose(&base, &want, 0.0, 0.75));
+        for tile in [2, 4, 7, 13, 32] {
+            assert_eq!(base, gemm_dense_i8(&qw, &qa, tile), "tile={tile}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "reduction dim mismatch")]
+    fn i8_reduction_mismatch_panics() {
+        let qw = QuantDense::quantize(&[1.0, 2.0], 1, 2);
+        let mut qa = QuantPanel::zeros(3, 4, 4);
+        qa.scale = 1.0;
+        gemm_dense_i8(&qw, &qa, 1);
     }
 
     #[test]

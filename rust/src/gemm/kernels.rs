@@ -30,8 +30,8 @@
 
 use std::sync::OnceLock;
 
-use crate::im2col::{PackedMatrix, MAX_STRIP_WIDTH};
-use crate::pruning::ColwisePruned;
+use crate::im2col::{PackedMatrix, QuantPanel, MAX_STRIP_WIDTH};
+use crate::pruning::{ColwisePruned, ColwiseQuant, QuantDense};
 
 use super::dense::MAX_TILE;
 
@@ -145,6 +145,61 @@ pub trait Kernel: Sync {
         c: *mut f32,
         c_len: usize,
     );
+
+    /// Whether this backend has a *native* (SIMD) i8 path, as opposed
+    /// to inheriting the shared scalar i8 body. Listing/roofline
+    /// metadata only — dispatch always works either way.
+    fn i8_native(&self) -> bool {
+        false
+    }
+
+    /// Quantized column-wise N:M spMM over one strip, all tiles:
+    /// i8×i8→i32 accumulation, requantize-to-f32 epilogue
+    /// (`acc as f32 * (w.scales[row] * a.scale)`).
+    ///
+    /// Unlike the f32 kernels, **every** backend is bitwise identical
+    /// here: integer accumulation is order-independent (no rounding
+    /// until the single f32 multiply in the epilogue, which is the same
+    /// scalar expression in all bodies). The conv fuzz harness asserts
+    /// this cross-backend equality exactly.
+    ///
+    /// # Safety
+    /// Same contract as [`Kernel::spmm_strip`]: `c` valid for
+    /// reads/writes of `c_len >= w.rows * a.cols` f32s, `strip <
+    /// a.strips`, exclusive access to this strip's output columns.
+    unsafe fn spmm_strip_i8(
+        &self,
+        w: &ColwiseQuant,
+        a: &QuantPanel,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // SAFETY: contract forwarded verbatim to the shared scalar body.
+        unsafe { spmm_strip_i8_scalar(w, a, strip, c, c_len) }
+    }
+
+    /// Quantized dense GEMM over one strip, all row-tiles of height
+    /// `tile`. Same bitwise-identical-across-backends contract as
+    /// [`Kernel::spmm_strip_i8`].
+    ///
+    /// # Safety
+    /// Same contract as [`Kernel::dense_strip`] with `rows = w.rows`:
+    /// `c` valid for reads/writes of `c_len >= w.rows * a.cols` f32s,
+    /// `w.k == a.k`, `strip < a.strips`, `1 <= tile <= MAX_TILE`,
+    /// exclusive access to this strip's output columns.
+    unsafe fn dense_strip_i8(
+        &self,
+        w: &QuantDense,
+        a: &QuantPanel,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // SAFETY: contract forwarded verbatim to the shared scalar body.
+        unsafe { dense_strip_i8_scalar(w, a, tile, strip, c, c_len) }
+    }
 }
 
 /// Shared prologue: strip data, valid lane count, first output column.
@@ -159,6 +214,110 @@ fn strip_geometry(a: &PackedMatrix, strip: usize) -> (&[f32], usize, usize) {
         a.v
     );
     (a.strip(strip), a.strip_valid(strip), strip * a.v)
+}
+
+/// [`strip_geometry`] for the quantized panel (same invariants).
+#[inline]
+fn quant_strip_geometry(a: &QuantPanel, strip: usize) -> (&[i8], usize, usize) {
+    assert!(
+        a.v <= MAX_STRIP_WIDTH,
+        "strip width {} exceeds accumulator capacity {MAX_STRIP_WIDTH}",
+        a.v
+    );
+    (a.strip(strip), a.strip_valid(strip), strip * a.v)
+}
+
+// ----------------------------------------------------- shared i8 bodies
+//
+// The scalar i8 bodies are free functions (not `ScalarKernel` methods)
+// because they double as the default `Kernel` trait implementation:
+// every backend without a native i8 path runs exactly this arithmetic.
+// i32 accumulation of i8×i8 products is exact (|acc| <= K·127² — i32
+// overflows only past K ≈ 133k, far beyond any conv reduction here),
+// so the only rounding is the one f32 multiply in the epilogue.
+
+/// Scalar quantized spMM strip body (and the trait default).
+///
+/// # Safety
+/// Same contract as [`Kernel::spmm_strip_i8`].
+unsafe fn spmm_strip_i8_scalar(
+    w: &ColwiseQuant,
+    a: &QuantPanel,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    let (sdata, valid, col0) = quant_strip_geometry(a, strip);
+    let mut acc = [[0i32; MAX_STRIP_WIDTH]; MAX_TILE];
+    for tile in &w.tiles {
+        let t = tile.row_count;
+        let nret = tile.indices.len();
+        for row in &mut acc[..t] {
+            row[..valid].fill(0);
+        }
+        for (j, &idx) in tile.indices.iter().enumerate() {
+            let arow = &sdata[idx as usize * a.v..idx as usize * a.v + valid];
+            for ti in 0..t {
+                let wv = tile.values[ti * nret + j] as i32;
+                for (aj, &xj) in acc[ti][..valid].iter_mut().zip(arow) {
+                    *aj += wv * xj as i32;
+                }
+            }
+        }
+        for ti in 0..t {
+            let r = tile.row_start + ti;
+            let s = w.scales[r] * a.scale;
+            let off = r * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            for (x, &av) in acc[ti][..valid].iter().enumerate() {
+                // SAFETY: asserted off+valid <= c_len and the contract
+                // gives exclusive access to these output columns.
+                unsafe { *c.add(off + x) = av as f32 * s };
+            }
+        }
+    }
+}
+
+/// Scalar quantized dense strip body (and the trait default).
+///
+/// # Safety
+/// Same contract as [`Kernel::dense_strip_i8`].
+unsafe fn dense_strip_i8_scalar(
+    w: &QuantDense,
+    a: &QuantPanel,
+    tile: usize,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    let (sdata, valid, col0) = quant_strip_geometry(a, strip);
+    let k = a.k;
+    let rows = w.rows;
+    let mut row = 0;
+    while row < rows {
+        let t = tile.min(rows - row);
+        let mut acc = [[0i32; MAX_STRIP_WIDTH]; MAX_TILE];
+        for kk in 0..k {
+            let arow = &sdata[kk * a.v..kk * a.v + valid];
+            for ti in 0..t {
+                let wv = w.values[(row + ti) * k + kk] as i32;
+                for (aj, &xj) in acc[ti][..valid].iter_mut().zip(arow) {
+                    *aj += wv * xj as i32;
+                }
+            }
+        }
+        for ti in 0..t {
+            let s = w.scales[row + ti] * a.scale;
+            let off = (row + ti) * a.cols + col0;
+            assert!(off + valid <= c_len, "output out of bounds");
+            for (x, &av) in acc[ti][..valid].iter().enumerate() {
+                // SAFETY: asserted off+valid <= c_len and the contract
+                // gives exclusive access to these output columns.
+                unsafe { *c.add(off + x) = av as f32 * s };
+            }
+        }
+        row += t;
+    }
 }
 
 // ---------------------------------------------------------------- scalar
@@ -306,6 +465,214 @@ impl Kernel for Avx2Kernel {
         // SAFETY: same contract forwarded; dispatch is gated on
         // `available()`, so avx2+fma are present on this CPU.
         unsafe { dense_strip_avx2(w, rows, a, tile, strip, c, c_len) }
+    }
+
+    fn i8_native(&self) -> bool {
+        true
+    }
+
+    // SAFETY: caller upholds the `Kernel::spmm_strip_i8` contract.
+    unsafe fn spmm_strip_i8(
+        &self,
+        w: &ColwiseQuant,
+        a: &QuantPanel,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so avx2 is present on this CPU.
+        unsafe { spmm_strip_i8_avx2(w, a, strip, c, c_len) }
+    }
+
+    // SAFETY: caller upholds the `Kernel::dense_strip_i8` contract.
+    unsafe fn dense_strip_i8(
+        &self,
+        w: &QuantDense,
+        a: &QuantPanel,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so avx2 is present on this CPU.
+        unsafe { dense_strip_i8_avx2(w, a, tile, strip, c, c_len) }
+    }
+}
+
+/// Pack two i8 weights into the `(lo, hi)` i16 halves of one i32, for
+/// broadcasting against [`_mm256_madd_epi16`]'s pairwise dot product.
+/// `i8 as u16` sign-extends, so each half is the weight's i16 two's
+/// complement.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn madd_weight_pair(w0: i8, w1: i8) -> i32 {
+    (((w1 as u16 as u32) << 16) | (w0 as u16 as u32)) as i32
+}
+
+/// AVX2 quantized spMM strip body: retained columns are consumed in
+/// *pairs* so each `_mm256_madd_epi16` computes `a0·w0 + a1·w1` for 8
+/// output lanes at once. Exactness: both operands are clamped to ±127
+/// at quantization, so every i16 pair-sum is `<= 2·127² = 32258 <
+/// i16::MAX` away from `madd`'s only overflow case (`(-32768)²`), and
+/// the i32 adds are exact — bitwise identical to the scalar body.
+///
+/// # Safety
+/// Same contract as `Kernel::spmm_strip_i8`, plus: the host CPU must
+/// support avx2 (guaranteed by `available()`-gated dispatch).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn spmm_strip_i8_avx2(
+    w: &ColwiseQuant,
+    a: &QuantPanel,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::x86_64::*;
+    let (sdata, valid, col0) = quant_strip_geometry(a, strip);
+    let mut acc = [[0i32; MAX_STRIP_WIDTH]; MAX_TILE];
+    // SAFETY: one region for the whole strip body. Intrinsics are
+    // runnable (avx2 per the fn contract); the 8-byte loads stay inside
+    // the strip rows because x+8 <= valid <= a.v and each row holds a.v
+    // bytes (an unpaired trailing column aliases p1 to p0 with w1 = 0,
+    // so both loads still target a real row); accumulator loads/stores
+    // stay inside acc[ti] because x+8 <= valid <= MAX_STRIP_WIDTH; the
+    // epilogue writes c[off..off+valid] with off+valid <= c_len
+    // asserted, and the contract gives exclusive access to those
+    // columns.
+    unsafe {
+        for tile in &w.tiles {
+            let t = tile.row_count;
+            let nret = tile.indices.len();
+            for row in &mut acc[..t] {
+                row[..valid].fill(0);
+            }
+            let mut j = 0;
+            while j < nret {
+                let paired = j + 1 < nret;
+                let idx0 = tile.indices[j] as usize;
+                let idx1 = if paired { tile.indices[j + 1] as usize } else { idx0 };
+                let p0 = sdata.as_ptr().add(idx0 * a.v);
+                let p1 = sdata.as_ptr().add(idx1 * a.v);
+                for ti in 0..t {
+                    let w0 = tile.values[ti * nret + j];
+                    let w1 = if paired { tile.values[ti * nret + j + 1] } else { 0 };
+                    let wv = _mm256_set1_epi32(madd_weight_pair(w0, w1));
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 8 <= valid {
+                        // 8 bytes of each column row, interleaved to
+                        // (a0[i], a1[i]) i16 pairs for the madd.
+                        let a0 = _mm_loadl_epi64(p0.add(x) as *const __m128i);
+                        let a1 = _mm_loadl_epi64(p1.add(x) as *const __m128i);
+                        let il = _mm_unpacklo_epi8(a0, a1);
+                        let pairs = _mm256_cvtepi8_epi16(il);
+                        let prod = _mm256_madd_epi16(pairs, wv);
+                        let cv = _mm256_loadu_si256(accp.add(x) as *const __m256i);
+                        _mm256_storeu_si256(
+                            accp.add(x) as *mut __m256i,
+                            _mm256_add_epi32(cv, prod),
+                        );
+                        x += 8;
+                    }
+                    while x < valid {
+                        *accp.add(x) +=
+                            w0 as i32 * *p0.add(x) as i32 + w1 as i32 * *p1.add(x) as i32;
+                        x += 1;
+                    }
+                }
+                j += 2;
+            }
+            for ti in 0..t {
+                let r = tile.row_start + ti;
+                let s = w.scales[r] * a.scale;
+                let off = r * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                // Requantize epilogue: scalar on purpose — identical
+                // expression in every backend keeps i8 outputs bitwise
+                // equal across kernels.
+                for (x, &av) in acc[ti][..valid].iter().enumerate() {
+                    *c.add(off + x) = av as f32 * s;
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 quantized dense strip body: consecutive reduction rows are
+/// consumed in pairs, same `madd` scheme (and the same exactness
+/// argument) as [`spmm_strip_i8_avx2`].
+///
+/// # Safety
+/// Same contract as `Kernel::dense_strip_i8`, plus: the host CPU must
+/// support avx2 (guaranteed by `available()`-gated dispatch).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dense_strip_i8_avx2(
+    w: &QuantDense,
+    a: &QuantPanel,
+    tile: usize,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::x86_64::*;
+    let (sdata, valid, col0) = quant_strip_geometry(a, strip);
+    let k = a.k;
+    let rows = w.rows;
+    let mut row = 0;
+    // SAFETY: one region for the whole strip body; same argument as
+    // spmm_strip_i8_avx2 (feature-gated intrinsics, x+8 <= valid lane
+    // bounds, a trailing odd reduction row aliases p1 to p0 with
+    // w1 = 0, asserted off+valid <= c_len output range).
+    unsafe {
+        while row < rows {
+            let t = tile.min(rows - row);
+            let mut acc = [[0i32; MAX_STRIP_WIDTH]; MAX_TILE];
+            let mut kk = 0;
+            while kk < k {
+                let paired = kk + 1 < k;
+                let p0 = sdata.as_ptr().add(kk * a.v);
+                let p1 = if paired { sdata.as_ptr().add((kk + 1) * a.v) } else { p0 };
+                for ti in 0..t {
+                    let w0 = w.values[(row + ti) * k + kk];
+                    let w1 = if paired { w.values[(row + ti) * k + kk + 1] } else { 0 };
+                    let wv = _mm256_set1_epi32(madd_weight_pair(w0, w1));
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 8 <= valid {
+                        let a0 = _mm_loadl_epi64(p0.add(x) as *const __m128i);
+                        let a1 = _mm_loadl_epi64(p1.add(x) as *const __m128i);
+                        let il = _mm_unpacklo_epi8(a0, a1);
+                        let pairs = _mm256_cvtepi8_epi16(il);
+                        let prod = _mm256_madd_epi16(pairs, wv);
+                        let cv = _mm256_loadu_si256(accp.add(x) as *const __m256i);
+                        _mm256_storeu_si256(
+                            accp.add(x) as *mut __m256i,
+                            _mm256_add_epi32(cv, prod),
+                        );
+                        x += 8;
+                    }
+                    while x < valid {
+                        *accp.add(x) +=
+                            w0 as i32 * *p0.add(x) as i32 + w1 as i32 * *p1.add(x) as i32;
+                        x += 1;
+                    }
+                }
+                kk += 2;
+            }
+            for ti in 0..t {
+                let s = w.scales[row + ti] * a.scale;
+                let off = (row + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                for (x, &av) in acc[ti][..valid].iter().enumerate() {
+                    *c.add(off + x) = av as f32 * s;
+                }
+            }
+            row += t;
+        }
     }
 }
 
@@ -473,6 +840,42 @@ impl Kernel for Avx512Kernel {
         // `available()`, so avx512f is present on this CPU.
         unsafe { dense_strip_avx512(w, rows, a, tile, strip, c, c_len) }
     }
+
+    fn i8_native(&self) -> bool {
+        true
+    }
+
+    // SAFETY: caller upholds the `Kernel::spmm_strip_i8` contract.
+    unsafe fn spmm_strip_i8(
+        &self,
+        w: &ColwiseQuant,
+        a: &QuantPanel,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // The i8 plane reuses the AVX2 madd bodies: without VNNI there
+        // is no profitable 512-bit widening scheme, and bitwise parity
+        // across backends matters more than lane count here.
+        // SAFETY: same contract forwarded; every avx512f CPU also
+        // reports avx2, so the avx2 target-feature body is runnable.
+        unsafe { spmm_strip_i8_avx2(w, a, strip, c, c_len) }
+    }
+
+    // SAFETY: caller upholds the `Kernel::dense_strip_i8` contract.
+    unsafe fn dense_strip_i8(
+        &self,
+        w: &QuantDense,
+        a: &QuantPanel,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // SAFETY: same contract forwarded; every avx512f CPU also
+        // reports avx2, so the avx2 target-feature body is runnable.
+        unsafe { dense_strip_i8_avx2(w, a, tile, strip, c, c_len) }
+    }
 }
 
 /// AVX-512 strip body behind `Avx512Kernel::spmm_strip`.
@@ -633,6 +1036,171 @@ impl Kernel for NeonKernel {
         // SAFETY: same contract forwarded; dispatch is gated on
         // `available()`, so neon is present on this CPU.
         unsafe { dense_strip_neon(w, rows, a, tile, strip, c, c_len) }
+    }
+
+    fn i8_native(&self) -> bool {
+        true
+    }
+
+    // SAFETY: caller upholds the `Kernel::spmm_strip_i8` contract.
+    unsafe fn spmm_strip_i8(
+        &self,
+        w: &ColwiseQuant,
+        a: &QuantPanel,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so neon is present on this CPU.
+        unsafe { spmm_strip_i8_neon(w, a, strip, c, c_len) }
+    }
+
+    // SAFETY: caller upholds the `Kernel::dense_strip_i8` contract.
+    unsafe fn dense_strip_i8(
+        &self,
+        w: &QuantDense,
+        a: &QuantPanel,
+        tile: usize,
+        strip: usize,
+        c: *mut f32,
+        c_len: usize,
+    ) {
+        // SAFETY: same contract forwarded; dispatch is gated on
+        // `available()`, so neon is present on this CPU.
+        unsafe { dense_strip_i8_neon(w, a, tile, strip, c, c_len) }
+    }
+}
+
+/// NEON quantized spMM strip body: 8 i8 lanes widened to i16
+/// (`vmovl_s8`), then widening multiply-accumulate into two i32x4
+/// accumulators (`vmlal_n_s16`). Every step is exact integer
+/// arithmetic, so the result is bitwise identical to the scalar body.
+///
+/// # Safety
+/// Same contract as `Kernel::spmm_strip_i8`, plus: the host CPU must
+/// support neon (guaranteed by `available()`-gated dispatch).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn spmm_strip_i8_neon(
+    w: &ColwiseQuant,
+    a: &QuantPanel,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::aarch64::*;
+    let (sdata, valid, col0) = quant_strip_geometry(a, strip);
+    let mut acc = [[0i32; MAX_STRIP_WIDTH]; MAX_TILE];
+    // SAFETY: one region for the whole strip body. Intrinsics are
+    // runnable (neon per the fn contract); the 8-byte loads stay inside
+    // the strip row because x+8 <= valid <= a.v and the row holds a.v
+    // bytes; accumulator loads/stores stay inside acc[ti] because
+    // x+8 <= valid <= MAX_STRIP_WIDTH; the epilogue writes
+    // c[off..off+valid] with off+valid <= c_len asserted, and the
+    // contract gives exclusive access to those columns.
+    unsafe {
+        for tile in &w.tiles {
+            let t = tile.row_count;
+            let nret = tile.indices.len();
+            for row in &mut acc[..t] {
+                row[..valid].fill(0);
+            }
+            for (j, &idx) in tile.indices.iter().enumerate() {
+                let p0 = sdata.as_ptr().add(idx as usize * a.v);
+                for ti in 0..t {
+                    let wq = tile.values[ti * nret + j] as i16;
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 8 <= valid {
+                        let a16 = vmovl_s8(vld1_s8(p0.add(x)));
+                        let lo = vmlal_n_s16(vld1q_s32(accp.add(x)), vget_low_s16(a16), wq);
+                        let hi =
+                            vmlal_n_s16(vld1q_s32(accp.add(x + 4)), vget_high_s16(a16), wq);
+                        vst1q_s32(accp.add(x), lo);
+                        vst1q_s32(accp.add(x + 4), hi);
+                        x += 8;
+                    }
+                    while x < valid {
+                        *accp.add(x) += wq as i32 * *p0.add(x) as i32;
+                        x += 1;
+                    }
+                }
+            }
+            for ti in 0..t {
+                let r = tile.row_start + ti;
+                let s = w.scales[r] * a.scale;
+                let off = r * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                // Scalar requantize epilogue — identical expression in
+                // every backend (bitwise cross-kernel contract).
+                for (x, &av) in acc[ti][..valid].iter().enumerate() {
+                    *c.add(off + x) = av as f32 * s;
+                }
+            }
+        }
+    }
+}
+
+/// NEON quantized dense strip body; same scheme and exactness argument
+/// as [`spmm_strip_i8_neon`].
+///
+/// # Safety
+/// Same contract as `Kernel::dense_strip_i8`, plus: the host CPU must
+/// support neon (guaranteed by `available()`-gated dispatch).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dense_strip_i8_neon(
+    w: &QuantDense,
+    a: &QuantPanel,
+    tile: usize,
+    strip: usize,
+    c: *mut f32,
+    c_len: usize,
+) {
+    use std::arch::aarch64::*;
+    let (sdata, valid, col0) = quant_strip_geometry(a, strip);
+    let k = a.k;
+    let rows = w.rows;
+    let mut row = 0;
+    // SAFETY: one region for the whole strip body; same argument as
+    // spmm_strip_i8_neon (feature-gated intrinsics, x+8 <= valid lane
+    // bounds, asserted off+valid <= c_len output range).
+    unsafe {
+        while row < rows {
+            let t = tile.min(rows - row);
+            let mut acc = [[0i32; MAX_STRIP_WIDTH]; MAX_TILE];
+            for kk in 0..k {
+                let p0 = sdata.as_ptr().add(kk * a.v);
+                for ti in 0..t {
+                    let wq = w.values[(row + ti) * k + kk] as i16;
+                    let accp = acc[ti].as_mut_ptr();
+                    let mut x = 0;
+                    while x + 8 <= valid {
+                        let a16 = vmovl_s8(vld1_s8(p0.add(x)));
+                        let lo = vmlal_n_s16(vld1q_s32(accp.add(x)), vget_low_s16(a16), wq);
+                        let hi =
+                            vmlal_n_s16(vld1q_s32(accp.add(x + 4)), vget_high_s16(a16), wq);
+                        vst1q_s32(accp.add(x), lo);
+                        vst1q_s32(accp.add(x + 4), hi);
+                        x += 8;
+                    }
+                    while x < valid {
+                        *accp.add(x) += wq as i32 * *p0.add(x) as i32;
+                        x += 1;
+                    }
+                }
+            }
+            for ti in 0..t {
+                let s = w.scales[row + ti] * a.scale;
+                let off = (row + ti) * a.cols + col0;
+                assert!(off + valid <= c_len, "output out of bounds");
+                for (x, &av) in acc[ti][..valid].iter().enumerate() {
+                    *c.add(off + x) = av as f32 * s;
+                }
+            }
+            row += t;
+        }
     }
 }
 
@@ -1049,5 +1617,132 @@ mod tests {
         let auto_d = gemm_dense(&w, rows, &p, 5);
         assert!(allclose(&auto_s, &got_s, 1e-4, 1e-5));
         assert!(allclose(&auto_d, &got_d, 1e-4, 1e-5));
+    }
+
+    // ------------------------------------------------------- i8 plane
+
+    /// Bit-exact naive reference for the quantized spMM: integer dot
+    /// product per output, then the identical requantize expression.
+    fn naive_spmm_i8(w: &ColwiseQuant, a: &QuantPanel) -> Vec<f32> {
+        let mut c = vec![0.0f32; w.rows * a.cols];
+        for t in &w.tiles {
+            let nret = t.indices.len();
+            for ti in 0..t.row_count {
+                let r = t.row_start + ti;
+                let s = w.scales[r] * a.scale;
+                for col in 0..a.cols {
+                    let mut acc = 0i32;
+                    for (j, &idx) in t.indices.iter().enumerate() {
+                        acc += t.values[ti * nret + j] as i32
+                            * a.at(col / a.v, idx as usize, col % a.v) as i32;
+                    }
+                    c[r * a.cols + col] = acc as f32 * s;
+                }
+            }
+        }
+        c
+    }
+
+    /// Bit-exact naive reference for the quantized dense GEMM.
+    fn naive_dense_i8(w: &QuantDense, a: &QuantPanel) -> Vec<f32> {
+        let mut c = vec![0.0f32; w.rows * a.cols];
+        for r in 0..w.rows {
+            let s = w.scales[r] * a.scale;
+            for col in 0..a.cols {
+                let mut acc = 0i32;
+                for kk in 0..w.k {
+                    acc += w.values[r * w.k + kk] as i32
+                        * a.at(col / a.v, kk, col % a.v) as i32;
+                }
+                c[r * a.cols + col] = acc as f32 * s;
+            }
+        }
+        c
+    }
+
+    fn assert_i8_backends_bitwise(w: &[f32], a: &[f32], rows: usize, k: usize, cols: usize) {
+        use crate::im2col::{quantize_panel_into, QuantPanel};
+        let cp = prune_colwise(w, rows, k, 8, 2, 4);
+        let qw = ColwiseQuant::quantize(&cp);
+        let qd = QuantDense::quantize(w, rows, k);
+        for v in [8, 16, 64] {
+            let p = pack_data_matrix(a, k, cols, v);
+            let mut qa = QuantPanel::zeros(1, 1, 1);
+            quantize_panel_into(&p, &mut qa);
+            let want_s = naive_spmm_i8(&qw, &qa);
+            let want_d = naive_dense_i8(&qd, &qa);
+            for kern in registry() {
+                if !kern.available() {
+                    continue;
+                }
+                let mut got_s = vec![0.0f32; rows * cols];
+                let mut got_d = vec![0.0f32; rows * cols];
+                for strip in 0..qa.strips {
+                    // SAFETY: unique buffers sized rows*cols, serial.
+                    unsafe {
+                        kern.spmm_strip_i8(&qw, &qa, strip, got_s.as_mut_ptr(), got_s.len());
+                        kern.dense_strip_i8(&qd, &qa, 7, strip, got_d.as_mut_ptr(), got_d.len());
+                    }
+                }
+                let name = kern.id().name();
+                assert_eq!(got_s, want_s, "spmm i8 {name} v={v}");
+                assert_eq!(got_d, want_d, "dense i8 {name} v={v}");
+            }
+        }
+    }
+
+    /// Every backend's i8 path — native or inherited scalar — must be
+    /// *bitwise* equal to the naive integer reference (a stronger
+    /// contract than the f32 ULP gate: integer accumulation admits no
+    /// reassociation noise). cols = 77 exercises the partial tail strip
+    /// and odd retained-column pairing in the AVX2 madd scheme.
+    #[test]
+    fn i8_backends_are_bitwise_identical_to_naive_reference() {
+        let mut r = XorShiftRng::new(0x519);
+        let (rows, k, cols) = (19, 32, 77);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        assert_i8_backends_bitwise(&w, &a, rows, k, cols);
+    }
+
+    /// Saturation fixture: every operand at the ±127 rails. The madd
+    /// pair-sum then sits at its extreme |2·127²| = 32258 < i16::MAX —
+    /// the overflow case (−128·−128·2) is unreachable because
+    /// quantization clamps both sides to ±127.
+    #[test]
+    fn i8_rail_values_do_not_overflow_the_pairwise_madd() {
+        let (rows, k, cols) = (8, 64, 24);
+        // Alternating-sign extremes quantize to exactly ±127.
+        let w: Vec<f32> = (0..rows * k).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let a: Vec<f32> = (0..k * cols).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+        assert_i8_backends_bitwise(&w, &a, rows, k, cols);
+    }
+
+    /// All-zero weights and activations: zero scales, zero outputs, no
+    /// NaNs from the 0·0 requant.
+    #[test]
+    fn i8_all_zero_inputs_yield_exact_zero() {
+        let (rows, k, cols) = (6, 16, 20);
+        let w = vec![0.0f32; rows * k];
+        let a = vec![0.0f32; k * cols];
+        assert_i8_backends_bitwise(&w, &a, rows, k, cols);
+        let qd = QuantDense::quantize(&w, rows, k);
+        let p = pack_data_matrix(&a, k, cols, 8);
+        let mut qa = crate::im2col::QuantPanel::zeros(1, 1, 1);
+        crate::im2col::quantize_panel_into(&p, &mut qa);
+        assert!(naive_dense_i8(&qd, &qa).iter().all(|&x| x == 0.0 && !x.is_nan()));
+    }
+
+    /// The scalar oracle never claims a native i8 path; every SIMD
+    /// backend compiled in does (it overrides the shared scalar body).
+    #[test]
+    fn i8_native_flags_match_backend_kind() {
+        for kern in registry() {
+            let native = kern.i8_native();
+            match kern.id() {
+                KernelId::Scalar => assert!(!native, "scalar is the shared body"),
+                _ => assert!(native, "{} should be i8-native", kern.id().name()),
+            }
+        }
     }
 }

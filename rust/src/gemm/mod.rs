@@ -29,8 +29,8 @@ pub mod kernels;
 pub mod outer;
 pub mod threaded;
 
-pub use colwise::{spmm_colwise, spmm_colwise_with};
-pub use dense::{gemm_dense, gemm_dense_with};
+pub use colwise::{spmm_colwise, spmm_colwise_i8, spmm_colwise_i8_with, spmm_colwise_with};
+pub use dense::{gemm_dense, gemm_dense_i8, gemm_dense_i8_with, gemm_dense_with};
 pub use inner::spmm_inner_rownm;
 pub use kernels::KernelId;
 pub use outer::spmm_outer_rownm;

@@ -15,8 +15,8 @@
 //! plain pool-wide dispatch; caps never change which strip computes
 //! which output, so capped results stay bit-for-bit equal to serial.
 
-use crate::im2col::PackedMatrix;
-use crate::pruning::ColwisePruned;
+use crate::im2col::{PackedMatrix, QuantPanel};
+use crate::pruning::{ColwisePruned, ColwiseQuant, QuantDense};
 use crate::util::threadpool::ThreadPool;
 
 use super::dense::MAX_TILE;
@@ -160,6 +160,61 @@ pub fn gemm_dense_parallel_capped_into_with(
     });
 }
 
+/// Quantized twin of [`spmm_colwise_parallel_capped_into_with`]: the
+/// i8 strip kernels write requantized f32 outputs into the same
+/// disjoint column ranges, so the fan-out scheme (and the bitwise-
+/// equal-to-serial contract) carries over unchanged — strengthened,
+/// even: i8 results are bitwise identical across *backends* too.
+// nmprune: zero-alloc
+pub fn spmm_colwise_i8_parallel_capped_into_with(
+    w: &ColwiseQuant,
+    a: &QuantPanel,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+    kernel: KernelId,
+    c: &mut [f32],
+) {
+    assert_eq!(w.cols, a.k);
+    assert!(c.len() >= w.rows * a.cols, "output buffer too small");
+    let kern = kernels::resolve(kernel);
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    let c_len = c.len();
+    pool.parallel_for_capped(a.strips, max_workers, |s0, s1| {
+        for strip in s0..s1 {
+            // SAFETY: strip output ranges are disjoint by construction,
+            // and `c` outlives the parallel_for barrier.
+            unsafe { kern.spmm_strip_i8(w, a, strip, c_ptr.get(), c_len) };
+        }
+    });
+}
+
+/// Quantized twin of [`gemm_dense_parallel_capped_into_with`].
+// nmprune: zero-alloc
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_dense_i8_parallel_capped_into_with(
+    w: &QuantDense,
+    a: &QuantPanel,
+    tile: usize,
+    pool: &ThreadPool,
+    max_workers: Option<usize>,
+    kernel: KernelId,
+    c: &mut [f32],
+) {
+    assert_eq!(w.k, a.k);
+    assert!((1..=MAX_TILE).contains(&tile));
+    assert!(c.len() >= w.rows * a.cols, "output buffer too small");
+    let kern = kernels::resolve(kernel);
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    let c_len = c.len();
+    pool.parallel_for_capped(a.strips, max_workers, |s0, s1| {
+        for strip in s0..s1 {
+            // SAFETY: as above — disjoint strip ranges, caller blocks
+            // until all workers finish.
+            unsafe { kern.dense_strip_i8(w, a, tile, strip, c_ptr.get(), c_len) };
+        }
+    });
+}
+
 /// Shareable raw pointer for disjoint-range writes across pool workers.
 struct SendPtr(*mut f32);
 // SAFETY: the wrapped pointer is only dereferenced inside kernel strip
@@ -253,6 +308,37 @@ mod tests {
                 serial_dense,
                 "dense cap={cap:?}"
             );
+        }
+    }
+
+    #[test]
+    fn i8_parallel_and_capped_match_serial_bitwise() {
+        use crate::gemm::{gemm_dense_i8, spmm_colwise_i8};
+        use crate::im2col::{quantize_panel_into, QuantPanel};
+        use crate::pruning::{ColwiseQuant, QuantDense};
+        let mut r = XorShiftRng::new(106);
+        let (rows, k, cols) = (24, 36, 200);
+        let w = r.normal_vec(rows * k, 1.0);
+        let a = r.normal_vec(k * cols, 1.0);
+        let cp = prune_colwise(&w, rows, k, 8, 2, 4);
+        let qw = ColwiseQuant::quantize(&cp);
+        let qd = QuantDense::quantize(&w, rows, k);
+        let p = pack_data_matrix(&a, k, cols, 16);
+        let mut qa = QuantPanel::zeros(1, 1, 1);
+        quantize_panel_into(&p, &mut qa);
+        let serial_sparse = spmm_colwise_i8(&qw, &qa);
+        let serial_dense = gemm_dense_i8(&qd, &qa, 8);
+        let pool = ThreadPool::new(4);
+        let mut got = vec![0.0f32; rows * cols];
+        for cap in [Some(1), Some(2), Some(4), Some(7), None] {
+            spmm_colwise_i8_parallel_capped_into_with(
+                &qw, &qa, &pool, cap, KernelId::Auto, &mut got,
+            );
+            assert_eq!(got, serial_sparse, "sparse i8 cap={cap:?}");
+            gemm_dense_i8_parallel_capped_into_with(
+                &qd, &qa, 8, &pool, cap, KernelId::Auto, &mut got,
+            );
+            assert_eq!(got, serial_dense, "dense i8 cap={cap:?}");
         }
     }
 

@@ -17,6 +17,7 @@ pub mod pack;
 pub mod fused;
 pub mod indirection;
 pub mod nchw;
+pub mod quant;
 
 pub use fused::{fused_im2col_pack_cnhw, fused_im2col_pack_cnhw_into};
 pub use nchw::{fused_im2col_pack_nchw, nchw_total_strips};
@@ -27,6 +28,7 @@ pub use indirection::{
 };
 pub use naive::im2col_cnhw;
 pub use pack::{pack_data_matrix, pack_data_matrix_into, PackedMatrix, MAX_STRIP_WIDTH};
+pub use quant::{quantize_panel_into, QuantPanel};
 
 use crate::conv::ConvShape;
 

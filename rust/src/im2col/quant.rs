@@ -1,0 +1,181 @@
+//! Quantized activation panel: the i8 twin of [`super::PackedMatrix`].
+//!
+//! Activations are quantized **per panel** (one scale for the whole
+//! packed data matrix of one conv invocation): `sa = max|a| / 127`,
+//! `q = round(a / sa)` clamped to `[-127, 127]`. The layout is exactly
+//! the f32 strip layout — `[strips, k, v]` row-major, tail strip
+//! zero-padded — so the i8 micro-kernels reuse the same strip walk and
+//! the quantization pass is a single linear sweep over the already
+//! packed buffer (no second im2col).
+//!
+//! Clamping to ±127 on *both* operands is load-bearing: it keeps every
+//! AVX2 `_mm256_madd_epi16` pair-sum within i16·i16 exact range (see
+//! [`crate::pruning::quant`]).
+
+use super::pack::{PackedMatrix, MAX_STRIP_WIDTH};
+
+/// Packed data matrix quantized to i8 with one panel-wide scale.
+/// `data` layout matches [`PackedMatrix`]: `[strips, k, v]` row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPanel {
+    /// Strip width in lanes.
+    pub v: usize,
+    /// Reduction rows (K).
+    pub k: usize,
+    /// Logical (unpadded) column count.
+    pub cols: usize,
+    /// Number of strips = ceil(cols / v).
+    pub strips: usize,
+    pub data: Vec<i8>,
+    /// Panel-wide dequantization scale (`0.0` for an all-zero panel).
+    pub scale: f32,
+}
+
+impl QuantPanel {
+    /// Zero-initialised panel.
+    pub fn zeros(k: usize, cols: usize, v: usize) -> Self {
+        assert!(
+            (1..=MAX_STRIP_WIDTH).contains(&v),
+            "strip width {v} outside 1..={MAX_STRIP_WIDTH} (accumulator capacity)"
+        );
+        let strips = cols.div_ceil(v).max(1);
+        Self {
+            v,
+            k,
+            cols,
+            strips,
+            data: vec![0; strips * k * v],
+            scale: 0.0,
+        }
+    }
+
+    /// Re-shape for reuse, zero-filling in place; keeps the allocation
+    /// when capacity suffices (same contract as `PackedMatrix::reset`).
+    pub fn reset(&mut self, k: usize, cols: usize, v: usize) {
+        assert!(
+            (1..=MAX_STRIP_WIDTH).contains(&v),
+            "strip width {v} outside 1..={MAX_STRIP_WIDTH} (accumulator capacity)"
+        );
+        let strips = cols.div_ceil(v).max(1);
+        self.v = v;
+        self.k = k;
+        self.cols = cols;
+        self.strips = strips;
+        self.scale = 0.0;
+        let len = strips * k * v;
+        self.data.clear();
+        self.data.resize(len, 0);
+    }
+
+    /// Element at (strip, row, lane).
+    #[inline]
+    pub fn at(&self, strip: usize, row: usize, lane: usize) -> i8 {
+        self.data[(strip * self.k + row) * self.v + lane]
+    }
+
+    /// Contiguous `[k, v]` slice of one strip.
+    #[inline]
+    pub fn strip(&self, strip: usize) -> &[i8] {
+        &self.data[strip * self.k * self.v..(strip + 1) * self.k * self.v]
+    }
+
+    /// Valid (unpadded) lane count of a strip.
+    #[inline]
+    pub fn strip_valid(&self, strip: usize) -> usize {
+        if (strip + 1) * self.v <= self.cols {
+            self.v
+        } else {
+            self.cols - strip * self.v
+        }
+    }
+}
+
+/// Quantize a packed f32 panel into caller-provided i8 storage. The
+/// panel is `reset` in place (keeping its allocation when capacity
+/// suffices), so a warmed buffer makes repeated quantization
+/// allocation-free — this is the per-inference activation-quantization
+/// pass of the i8 path, and it must not touch the allocator.
+// nmprune: zero-alloc
+pub fn quantize_panel_into(p: &PackedMatrix, q: &mut QuantPanel) {
+    q.reset(p.k, p.cols, p.v);
+    let mut maxabs = 0.0f32;
+    for &x in &p.data {
+        maxabs = maxabs.max(x.abs());
+    }
+    if maxabs == 0.0 {
+        // All-zero panel: scale 0, data already zero from reset.
+        return;
+    }
+    q.scale = maxabs / 127.0;
+    let inv = 127.0 / maxabs;
+    for (dst, &x) in q.data.iter_mut().zip(&p.data) {
+        *dst = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::pack_data_matrix;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn quantize_roundtrip_error_within_half_step() {
+        let mut r = XorShiftRng::new(0x2B01);
+        let (k, cols, v) = (6, 21, 8);
+        let a = r.normal_vec(k * cols, 1.0);
+        let p = pack_data_matrix(&a, k, cols, v);
+        let mut q = QuantPanel::zeros(1, 1, 1);
+        quantize_panel_into(&p, &mut q);
+        assert_eq!((q.strips, q.k, q.v, q.cols), (p.strips, p.k, p.v, p.cols));
+        let half_step = q.scale * 0.5 + 1e-6;
+        for (i, (&qi, &xi)) in q.data.iter().zip(&p.data).enumerate() {
+            let d = (qi as f32 * q.scale - xi).abs();
+            assert!(d <= half_step, "elem {i}: err {d} > {half_step}");
+            assert!(qi >= -127, "elem {i} hit -128");
+        }
+    }
+
+    #[test]
+    fn extreme_values_saturate_at_127_not_128() {
+        // A panel whose max element is exactly representable: ±max maps
+        // to ±127, everything else scales proportionally.
+        let a = vec![8.0f32, -8.0, 4.0, 0.0];
+        let p = pack_data_matrix(&a, 2, 2, 2);
+        let mut q = QuantPanel::zeros(2, 2, 2);
+        quantize_panel_into(&p, &mut q);
+        assert_eq!(q.at(0, 0, 0), 127);
+        assert_eq!(q.at(0, 0, 1), -127);
+        assert_eq!(q.at(0, 1, 0), 64); // round(4/8 * 127) = 64
+        assert_eq!(q.at(0, 1, 1), 0);
+    }
+
+    #[test]
+    fn all_zero_panel_gets_zero_scale() {
+        let p = pack_data_matrix(&vec![0.0f32; 3 * 5], 3, 5, 4);
+        let mut q = QuantPanel::zeros(1, 1, 1);
+        quantize_panel_into(&p, &mut q);
+        assert_eq!(q.scale, 0.0);
+        assert!(q.data.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn reset_within_capacity_does_not_reallocate() {
+        let mut q = QuantPanel::zeros(8, 64, 16);
+        let cap = q.data.capacity();
+        let mut r = XorShiftRng::new(0x2B02);
+        for (k, cols, v) in [(3, 10, 4), (8, 64, 16), (5, 32, 32)] {
+            let a = r.normal_vec(k * cols, 1.0);
+            let p = pack_data_matrix(&a, k, cols, v);
+            quantize_panel_into(&p, &mut q);
+            assert_eq!(q.strips, p.strips);
+        }
+        assert_eq!(q.data.capacity(), cap, "in-capacity reuse must not reallocate");
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulator capacity")]
+    fn oversized_strip_width_rejected() {
+        QuantPanel::zeros(2, 128, 65);
+    }
+}

@@ -5,10 +5,14 @@
 //!   pack   --model M --out F     AOT-pack pruned conv weights + tuned
 //!                                per-layer choices into a versioned
 //!                                binary artifact (validated on load;
-//!                                --cache picks up `nmprune tune` results)
+//!                                --cache picks up `nmprune tune` results;
+//!                                --dtype {f32|i8} sets the default
+//!                                compute dtype baked into the artifact)
 //!   run    --model M [...]       single inference, timing report
 //!                                (--artifact F: load an AOT-packed
-//!                                artifact instead of packing at startup)
+//!                                artifact instead of packing at startup;
+//!                                --dtype {f32|i8}: default per-layer
+//!                                compute dtype for online builds)
 //!   serve  --model M [...]       batching server demo with load generator
 //!                                (--executors N: concurrent batch executors;
 //!                                --adaptive: load-aware batch size + caps +
@@ -20,12 +24,14 @@
 //!                                intake for comparison; --artifact F:
 //!                                serve from an AOT-packed artifact —
 //!                                model load is a validation pass)
-//!   tune   --model M [...]       per-layer (LMUL, T, P, kernel) auto-tuning
-//!   kernels [--best]             list compiled-in micro-kernel backends and
-//!                                their availability on this host (--best:
-//!                                print just the best available backend's
-//!                                name — used by CI to force it via
-//!                                NMPRUNE_KERNEL)
+//!   tune   --model M [...]       per-layer (LMUL, T, P, kernel, dtype)
+//!                                auto-tuning
+//!   kernels [--best]             list compiled-in micro-kernel backends,
+//!                                their availability on this host and
+//!                                whether each carries a native int8
+//!                                micro-kernel (--best: print just the
+//!                                best available backend's name — used by
+//!                                CI to force it via NMPRUNE_KERNEL)
 //!   sim    [--layer i]           RVV-simulator kernel comparison
 //!   artifacts [--manifest path]  load + smoke-run AOT artifacts via PJRT
 //!   bench-diff OLD NEW [...]     compare two NMPRUNE_BENCH_JSON reports
@@ -50,7 +56,7 @@ use nmprune::conv::ConvPath;
 use nmprune::engine::{ExecConfig, Executor, Priority, QueueDiscipline, Server, ServerConfig};
 use nmprune::models::{build_model, model_names, resnet50_fig5_layers, ModelArch};
 use nmprune::runtime::PackedArtifact;
-use nmprune::tensor::Tensor;
+use nmprune::tensor::{Dtype, Tensor};
 use nmprune::tuner;
 use nmprune::util::cli::Args;
 use nmprune::util::{ThreadPool, XorShiftRng};
@@ -73,7 +79,7 @@ fn main() {
                 "usage: nmprune <models|pack|run|serve|tune|kernels|sim|artifacts|bench-diff|lint> [options]\n\
                  common options: --model resnet50 --batch 1 --res 224 \
                  --threads N (default: all hardware threads, or NMPRUNE_THREADS) \
-                 --path {{nhwc|cnhw|sparse}} --sparsity 0.5"
+                 --path {{nhwc|cnhw|sparse}} --sparsity 0.5 --dtype {{f32|i8}}"
             );
             std::process::exit(2);
         }
@@ -108,10 +114,22 @@ fn parse_pool(args: &Args) -> Arc<ThreadPool> {
     }
 }
 
+/// `--dtype {f32|i8}`: the default per-layer compute dtype for ops
+/// built online (pack/run/serve without an artifact). Tuned per-layer
+/// cache entries still override it layer-by-layer, and NMPRUNE_DTYPE
+/// forces it process-wide at executor build time.
+fn parse_dtype(args: &Args) -> Dtype {
+    let name = args.get_or("dtype", "f32");
+    Dtype::from_name(name.trim()).unwrap_or_else(|| {
+        eprintln!("unknown dtype {name:?} (f32|i8)");
+        std::process::exit(2);
+    })
+}
+
 fn parse_exec(args: &Args) -> ExecConfig {
     let pool = parse_pool(args);
     let sparsity = args.get_parsed("sparsity", 0.5f64);
-    match args.get_or("path", "sparse").as_str() {
+    let mut cfg = match args.get_or("path", "sparse").as_str() {
         "nhwc" => ExecConfig::dense_nhwc(pool),
         "cnhw" => ExecConfig::dense_cnhw(pool),
         "sparse" => ExecConfig::sparse_cnhw(pool, sparsity),
@@ -119,7 +137,9 @@ fn parse_exec(args: &Args) -> ExecConfig {
             eprintln!("unknown path {p:?} (nhwc|cnhw|sparse)");
             std::process::exit(2);
         }
-    }
+    };
+    cfg.default_choice.dtype = parse_dtype(args);
+    cfg
 }
 
 fn cmd_models() {
@@ -395,8 +415,8 @@ fn cmd_tune(args: &Args) {
         if use_sim { "sim cycles" } else { "native wall-clock" }
     );
     println!(
-        "{:<16} {:>6} {:>6} {:>6} {:>8} {:>14}",
-        "layer", "LMUL", "T", "P", "kernel", "score"
+        "{:<16} {:>6} {:>6} {:>6} {:>8} {:>6} {:>14}",
+        "layer", "LMUL", "T", "P", "kernel", "dtype", "score"
     );
     // Native profiling must run on the deployment-sized pool: the tuner
     // now also selects each layer's parallelism degree P, and a cap is
@@ -415,12 +435,13 @@ fn cmd_tune(args: &Args) {
                 tuner::tune_native(&shape, Some(sparsity), &profile_pool, tile_cap)
             };
             println!(
-                "{:<16} {:>6} {:>6} {:>6} {:>8} {:>14.0}",
+                "{:<16} {:>6} {:>6} {:>6} {:>8} {:>6} {:>14.0}",
                 name,
                 r.best.lmul,
                 r.best.tile,
                 r.best.threads,
                 r.best.kernel.name(),
+                r.best.dtype.name(),
                 r.best.score
             );
             r.choice()
@@ -442,13 +463,17 @@ fn cmd_kernels(args: &Args) {
         println!("{}", best.name());
         return;
     }
-    println!("{:<10} {:>10} {:>6}", "kernel", "available", "best");
+    println!(
+        "{:<10} {:>10} {:>6} {:>6}",
+        "kernel", "available", "int8", "best"
+    );
     for k in kernels::registry() {
         let id = k.id();
         println!(
-            "{:<10} {:>10} {:>6}",
+            "{:<10} {:>10} {:>6} {:>6}",
             id.name(),
             if k.available() { "yes" } else { "no" },
+            if k.i8_native() { "yes" } else { "no" },
             if id == best { "*" } else { "" },
         );
     }

@@ -18,11 +18,13 @@ pub mod mask;
 pub mod rownm;
 pub mod colwise;
 pub mod csr;
+pub mod quant;
 
 pub use colwise::{prune_colwise, prune_colwise_adaptive, ColTile, ColwisePruned};
 pub use mask::{apply_mask, sparsity_of};
 pub use rownm::{prune_rownm, RowNmPruned};
 pub use csr::{prune_unstructured, Csr};
+pub use quant::{ColwiseQuant, QuantDense, QuantTile};
 
 /// Number of retained elements per group for a target sparsity ratio:
 /// `N = round((1 - sparsity) * M)`, clamped to [0, M] (§3.1).

@@ -1,0 +1,253 @@
+//! Symmetric int8 weight quantization for the quantized GEMM plane.
+//!
+//! Weights are quantized **per output channel** (per row of the filter
+//! matrix): row `r` gets scale `s_r = max|w_r| / 127` and stores
+//! `q = round(w / s_r)` clamped to `[-127, 127]`. Keeping the range
+//! symmetric and excluding `-128` guarantees every i16 product pair
+//! `|a·w0 + a·w1| <= 2·127·127 = 32258 < 32767`, so the AVX2
+//! `_mm256_madd_epi16` reduction is exact — integer accumulation is
+//! therefore order-independent and **all** i8 backends are bitwise
+//! identical (a stronger contract than the f32 kernels' ULP bound).
+//!
+//! The f32 master weights stay the source of truth everywhere
+//! (artifacts store f32; quantization is a deterministic function of
+//! them, so re-quantizing on load reproduces identical i8 values and
+//! scales, keeping artifact roundtrips bitwise).
+
+use super::colwise::ColwisePruned;
+
+/// Quantize one value with a per-row scale. `scale == 0` (an all-zero
+/// row) maps everything to 0.
+#[inline]
+pub fn quantize_value(v: f32, scale: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// One T-row tile of a quantized column-wise pruned matrix — the i8
+/// twin of [`super::ColTile`], sharing its retained-column index set.
+#[derive(Clone, Debug)]
+pub struct QuantTile {
+    /// First row of this tile in the original matrix.
+    pub row_start: usize,
+    /// Rows in this tile (== T except possibly the last tile).
+    pub row_count: usize,
+    /// Retained column indices, ascending (same set as the f32 tile).
+    pub indices: Vec<u32>,
+    /// Quantized values, row-major `[row_count, indices.len()]`.
+    pub values: Vec<i8>,
+}
+
+/// Column-wise N:M compressed weights on the int8 plane: i8 tile
+/// values plus one f32 scale per output row.
+#[derive(Clone, Debug)]
+pub struct ColwiseQuant {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile: usize,
+    pub n: usize,
+    pub m: usize,
+    pub tiles: Vec<QuantTile>,
+    /// Per-output-row dequantization scales, `len == rows`.
+    pub scales: Vec<f32>,
+}
+
+impl ColwiseQuant {
+    /// Quantize a column-wise pruned matrix per output row. Purely a
+    /// function of the f32 values — deterministic, so artifact reload
+    /// reproduces identical i8 weights.
+    pub fn quantize(w: &ColwisePruned) -> Self {
+        let mut maxabs = vec![0.0f32; w.rows];
+        for t in &w.tiles {
+            let nret = t.indices.len();
+            for ti in 0..t.row_count {
+                let m = &mut maxabs[t.row_start + ti];
+                for j in 0..nret {
+                    *m = m.max(t.values[ti * nret + j].abs());
+                }
+            }
+        }
+        let scales: Vec<f32> = maxabs.iter().map(|&m| m / 127.0).collect();
+        let tiles = w
+            .tiles
+            .iter()
+            .map(|t| {
+                let nret = t.indices.len();
+                let mut values = Vec::with_capacity(t.values.len());
+                for ti in 0..t.row_count {
+                    let s = scales[t.row_start + ti];
+                    for j in 0..nret {
+                        values.push(quantize_value(t.values[ti * nret + j], s));
+                    }
+                }
+                QuantTile {
+                    row_start: t.row_start,
+                    row_count: t.row_count,
+                    indices: t.indices.clone(),
+                    values,
+                }
+            })
+            .collect();
+        Self {
+            rows: w.rows,
+            cols: w.cols,
+            tile: w.tile,
+            n: w.n,
+            m: w.m,
+            tiles,
+            scales,
+        }
+    }
+
+    /// Reconstruct the dense dequantized matrix (testing / error-bound
+    /// derivation only).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for t in &self.tiles {
+            let nret = t.indices.len();
+            for ti in 0..t.row_count {
+                let r = t.row_start + ti;
+                let s = self.scales[r];
+                for (j, &c) in t.indices.iter().enumerate() {
+                    out[r * self.cols + c as usize] = t.values[ti * nret + j] as f32 * s;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Dense filter matrix on the int8 plane: `[rows, k]` i8 values plus
+/// one f32 scale per output row — the quantized twin of the dense
+/// `[C_out, K]` filter.
+#[derive(Clone, Debug)]
+pub struct QuantDense {
+    pub rows: usize,
+    pub k: usize,
+    /// Row-major `[rows, k]` quantized values.
+    pub values: Vec<i8>,
+    /// Per-output-row dequantization scales, `len == rows`.
+    pub scales: Vec<f32>,
+}
+
+impl QuantDense {
+    /// Quantize a dense `[rows, k]` f32 filter matrix per output row.
+    pub fn quantize(w: &[f32], rows: usize, k: usize) -> Self {
+        assert_eq!(w.len(), rows * k, "filter matrix shape");
+        let mut values = Vec::with_capacity(w.len());
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &w[r * k..(r + 1) * k];
+            let maxabs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let s = maxabs / 127.0;
+            scales.push(s);
+            for &v in row {
+                values.push(quantize_value(v, s));
+            }
+        }
+        Self {
+            rows,
+            k,
+            values,
+            scales,
+        }
+    }
+
+    /// Reconstruct the dequantized matrix (testing only).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.values.len());
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            for kk in 0..self.k {
+                out.push(self.values[r * self.k + kk] as f32 * s);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::prune_colwise;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn quantize_value_is_symmetric_and_clamped() {
+        assert_eq!(quantize_value(0.0, 1.0), 0);
+        assert_eq!(quantize_value(1.0, 1.0 / 127.0), 127);
+        assert_eq!(quantize_value(-1.0, 1.0 / 127.0), -127);
+        // Values beyond the scale range clamp at ±127, never -128.
+        assert_eq!(quantize_value(10.0, 1.0 / 127.0), 127);
+        assert_eq!(quantize_value(-10.0, 1.0 / 127.0), -127);
+        // All-zero rows get scale 0 and quantize to 0.
+        assert_eq!(quantize_value(0.5, 0.0), 0);
+    }
+
+    #[test]
+    fn colwise_roundtrip_error_within_half_step() {
+        let mut r = XorShiftRng::new(0x1A01);
+        let (rows, cols) = (16, 32);
+        let w = r.normal_vec(rows * cols, 1.0);
+        let p = prune_colwise(&w, rows, cols, 4, 2, 4);
+        let q = ColwiseQuant::quantize(&p);
+        assert_eq!(q.scales.len(), rows);
+        let dense = p.decompress();
+        let deq = q.dequantize();
+        for r_ in 0..rows {
+            let half_step = q.scales[r_] * 0.5 + 1e-6;
+            for c in 0..cols {
+                let d = (dense[r_ * cols + c] - deq[r_ * cols + c]).abs();
+                assert!(d <= half_step, "row {r_} col {c}: err {d} > {half_step}");
+            }
+        }
+        // The retained-column index sets are shared verbatim.
+        for (a, b) in p.tiles.iter().zip(&q.tiles) {
+            assert_eq!(a.indices, b.indices);
+            assert!(b.values.iter().all(|&v| v >= -127));
+        }
+    }
+
+    #[test]
+    fn quantization_is_deterministic() {
+        let mut r = XorShiftRng::new(0x1A02);
+        let w = r.normal_vec(8 * 16, 1.0);
+        let p = prune_colwise(&w, 8, 16, 4, 2, 4);
+        let q1 = ColwiseQuant::quantize(&p);
+        let q2 = ColwiseQuant::quantize(&p);
+        assert_eq!(
+            q1.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            q2.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+        for (a, b) in q1.tiles.iter().zip(&q2.tiles) {
+            assert_eq!(a.values, b.values);
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip_error_within_half_step() {
+        let mut r = XorShiftRng::new(0x1A03);
+        let (rows, k) = (9, 24);
+        let w = r.normal_vec(rows * k, 1.0);
+        let q = QuantDense::quantize(&w, rows, k);
+        let deq = q.dequantize();
+        for r_ in 0..rows {
+            let half_step = q.scales[r_] * 0.5 + 1e-6;
+            for kk in 0..k {
+                let d = (w[r_ * k + kk] - deq[r_ * k + kk]).abs();
+                assert!(d <= half_step, "row {r_} k {kk}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_rows_quantize_to_zero() {
+        let w = vec![0.0f32; 4 * 8];
+        let q = QuantDense::quantize(&w, 4, 8);
+        assert!(q.scales.iter().all(|&s| s == 0.0));
+        assert!(q.values.iter().all(|&v| v == 0));
+        assert!(q.dequantize().iter().all(|&v| v == 0.0));
+    }
+}

@@ -13,19 +13,24 @@
 //!
 //! ```text
 //! magic "NMPK" | version u32 | arch str | batch u32 | res u32
-//! path u8 | sparsity f64-bits u64 | seed u64 | default choice 4×u32
+//! path u8 | sparsity f64-bits u64 | seed u64 | default choice 5×u32
 //! n_layers u32
 //! per layer:
-//!   name str | kind u8 (0 dense, 1 sparse) | choice 4×u32
+//!   name str | kind u8 (0 dense, 1 sparse) | choice 5×u32
 //!   conv shape 9×u32 | payload_len u64
 //!   zero padding to a 64-byte-aligned payload offset | payload
 //! fnv1a-64 checksum u64 over all preceding bytes
 //! ```
 //!
-//! Choices are `v, tile, threads, kernel` (the kernel backend code,
-//! [`KernelId::code`]). Version 1 artifacts — written before the
-//! kernel dimension existed — carry 3×u32 choices and still load, with
-//! `kernel = auto` (runtime dispatch).
+//! Choices are `v, tile, threads, kernel, dtype` (the kernel backend
+//! code [`KernelId::code`] and the compute-dtype code
+//! [`Dtype::code`]). Legacy artifacts still load: version 1 — written
+//! before the kernel dimension existed — carries 3×u32 choices
+//! (`kernel = auto`, `dtype = f32`); version 2 — written before the
+//! dtype dimension existed — carries 4×u32 choices (`dtype = f32`).
+//! Weights are always stored as f32 masters, dtype included: i8 layers
+//! re-quantize deterministically on load, so logits stay bitwise across
+//! the roundtrip without freezing a second weight payload format.
 //!
 //! Strings are `u32` length + UTF-8 bytes. Dense payloads are the
 //! `[C_out, K]` filter matrix as raw f32; sparse payloads are
@@ -45,11 +50,12 @@ use crate::conv::{ConvPath, ConvShape};
 use crate::engine::LayerChoice;
 use crate::gemm::KernelId;
 use crate::pruning::ColwisePruned;
+use crate::tensor::Dtype;
 
 /// File magic: "NMPK" (N:M packed weights).
 pub const MAGIC: [u8; 4] = *b"NMPK";
-/// Current schema version (2: 4-field choices with a kernel code).
-pub const VERSION: u32 = 2;
+/// Current schema version (3: 5-field choices with a dtype code).
+pub const VERSION: u32 = 3;
 /// Oldest schema version this build still reads.
 pub const MIN_VERSION: u32 = 1;
 /// Payload alignment in bytes.
@@ -144,6 +150,7 @@ fn wchoice(out: &mut Vec<u8>, c: LayerChoice) {
     w32(out, c.tile);
     w32(out, c.threads);
     w32(out, c.kernel.code() as usize);
+    w32(out, c.dtype.code() as usize);
 }
 
 /// Bounds-checked read cursor: every read that would run past the end
@@ -189,7 +196,8 @@ impl<'a> Cur<'a> {
     }
 
     /// Version-aware choice read: v1 carried 3×u32 (no kernel field →
-    /// Auto); v2 carries 4×u32 with a validated kernel code.
+    /// Auto); v2 carries 4×u32 with a validated kernel code; v3 adds a
+    /// fifth u32 with a validated dtype code (older versions → f32).
     fn choice(&mut self, version: usize, what: &str) -> Result<LayerChoice> {
         let v = self.u32(what)?;
         let tile = self.u32(what)?;
@@ -201,11 +209,19 @@ impl<'a> Cur<'a> {
         } else {
             KernelId::Auto
         };
+        let dtype = if version >= 3 {
+            let code = self.u32(what)?;
+            Dtype::from_code(code as u32)
+                .ok_or_else(|| err(format!("artifact: {what} has unknown dtype code {code}")))?
+        } else {
+            Dtype::F32
+        };
         Ok(LayerChoice {
             v,
             tile,
             threads,
             kernel,
+            dtype,
         })
     }
 }
@@ -460,6 +476,7 @@ mod tests {
                         tile: 4,
                         threads: 2,
                         kernel: KernelId::Scalar,
+                        dtype: Dtype::I8,
                     },
                     shape: s1,
                     weights: LayerWeights::Dense(dense),
@@ -493,6 +510,7 @@ mod tests {
         assert_eq!(b.sparsity.to_bits(), 0.5f64.to_bits());
         assert_eq!(b.layers.len(), 2);
         assert_eq!(b.layers[0].name, "stem");
+        assert_eq!(b.layers[0].choice.dtype, Dtype::I8);
         assert_eq!(b.layers[1].choice, LayerChoice::default());
         // Bitwise: re-encoding the decoded artifact reproduces the file.
         assert_eq!(b.encode(), bytes);
@@ -570,8 +588,8 @@ mod tests {
         let a = sample();
         let bytes = a.encode();
         // Locate layer 0's kind byte: it follows the fixed header and
-        // the layer-0 name string (default choice is 4×u32 = 16 bytes).
-        let header = 4 + 4 + (4 + a.arch.len()) + 4 + 4 + 1 + 8 + 8 + 16 + 4;
+        // the layer-0 name string (default choice is 5×u32 = 20 bytes).
+        let header = 4 + 4 + (4 + a.arch.len()) + 4 + 4 + 1 + 8 + 8 + 20 + 4;
         let kind_off = header + 4 + a.layers[0].name.len();
         assert_eq!(bytes[kind_off], 0, "expected dense kind byte");
         let mut bad = bytes.clone();
@@ -648,6 +666,7 @@ mod tests {
             b.default_choice,
             LayerChoice {
                 kernel: KernelId::Auto,
+                dtype: Dtype::F32,
                 ..a.default_choice
             }
         );
@@ -657,10 +676,110 @@ mod tests {
                 got.choice,
                 LayerChoice {
                     kernel: KernelId::Auto,
+                    dtype: Dtype::F32,
                     ..want.choice
                 }
             );
         }
+    }
+
+    /// Encode `a` in the legacy v2 layout (4-field choices) — the exact
+    /// byte stream a pre-dtype build wrote. Dtype choices are dropped.
+    fn encode_v2(a: &PackedArtifact) -> Vec<u8> {
+        fn wchoice4(out: &mut Vec<u8>, c: LayerChoice) {
+            w32(out, c.v);
+            w32(out, c.tile);
+            w32(out, c.threads);
+            w32(out, c.kernel.code() as usize);
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        w32(&mut out, 2);
+        wstr(&mut out, &a.arch);
+        w32(&mut out, a.batch);
+        w32(&mut out, a.res);
+        out.push(path_code(a.path));
+        w64(&mut out, a.sparsity.to_bits());
+        w64(&mut out, a.seed);
+        wchoice4(&mut out, a.default_choice);
+        w32(&mut out, a.layers.len());
+        let mut payload = Vec::new();
+        for layer in &a.layers {
+            wstr(&mut out, &layer.name);
+            payload.clear();
+            let kind = match &layer.weights {
+                LayerWeights::Dense(f) => {
+                    for v in f {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                    0u8
+                }
+                LayerWeights::Sparse(p) => {
+                    p.encode_into(&mut payload);
+                    1u8
+                }
+            };
+            out.push(kind);
+            wchoice4(&mut out, layer.choice);
+            let s = &layer.shape;
+            for v in [s.n, s.c_in, s.h_in, s.w_in, s.c_out, s.kh, s.kw, s.stride, s.pad] {
+                w32(&mut out, v);
+            }
+            w64(&mut out, payload.len() as u64);
+            while out.len() % PAYLOAD_ALIGN != 0 {
+                out.push(0);
+            }
+            out.extend_from_slice(&payload);
+        }
+        let sum = fnv1a64(&out);
+        w64(&mut out, sum);
+        out
+    }
+
+    /// Artifacts written before the dtype dimension existed (schema v2,
+    /// 4-field choices) still load; every choice gets `dtype = f32` and
+    /// the kernel field survives intact.
+    #[test]
+    fn version2_artifact_still_loads_with_f32_dtype() {
+        let a = sample();
+        let bytes = encode_v2(&a);
+        let b = PackedArtifact::decode(&bytes).unwrap();
+        assert_eq!(b.arch, a.arch);
+        assert_eq!((b.batch, b.res, b.seed), (a.batch, a.res, a.seed));
+        assert_eq!(b.layers.len(), a.layers.len());
+        assert_eq!(
+            b.default_choice,
+            LayerChoice {
+                dtype: Dtype::F32,
+                ..a.default_choice
+            }
+        );
+        for (got, want) in b.layers.iter().zip(&a.layers) {
+            assert_eq!(got.name, want.name);
+            assert_eq!(
+                got.choice,
+                LayerChoice {
+                    dtype: Dtype::F32,
+                    ..want.choice
+                }
+            );
+        }
+    }
+
+    /// A v3 choice carrying an unknown dtype code is a load error with
+    /// a descriptive message, not a panic or a silent f32.
+    #[test]
+    fn unknown_dtype_code_is_rejected() {
+        let a = sample();
+        let bytes = a.encode();
+        // The dtype code is the last u32 of the default choice's
+        // 20-byte block in the fixed header.
+        let dtype_off = 4 + 4 + (4 + a.arch.len()) + 4 + 4 + 1 + 8 + 8 + 16;
+        let mut bad = bytes.clone();
+        bad[dtype_off..dtype_off + 4].copy_from_slice(&99u32.to_le_bytes());
+        resign(&mut bad);
+        let e = PackedArtifact::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("unknown dtype code"), "{e}");
     }
 
     /// A v2 choice carrying an unknown kernel code is a load error with

@@ -1,0 +1,112 @@
+//! Per-layer compute datatype — the fifth tuner dimension.
+//!
+//! A conv layer's GEMM plane runs either in `f32` (the baseline) or in
+//! symmetric signed `i8` with i32 accumulation and a requantize-to-f32
+//! epilogue (the quantized path; see docs/ARCHITECTURE.md
+//! "Quantization plane"). The dtype is a *per-layer* choice like the
+//! micro-kernel backend: the tuner picks it, artifacts record it, and
+//! `NMPRUNE_DTYPE` can force it process-wide for CI legs.
+
+use std::sync::OnceLock;
+
+/// Compute datatype of a conv layer's GEMM. `F32` is the historical
+/// default; `I8` quantizes both the packed activation panel and the
+/// (pruned or dense) weights symmetrically, accumulates in i32, and
+/// requantizes to f32 at the strip epilogue so downstream ops and
+/// logits stay f32.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    #[default]
+    F32,
+    I8,
+}
+
+/// Every dtype, in artifact-code order.
+pub const ALL_DTYPES: [Dtype; 2] = [Dtype::F32, Dtype::I8];
+
+impl Dtype {
+    /// Stable lower-case name (TSV / env / CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I8 => "i8",
+        }
+    }
+
+    /// Inverse of [`Dtype::name`].
+    pub fn from_name(s: &str) -> Option<Dtype> {
+        ALL_DTYPES.into_iter().find(|d| d.name() == s)
+    }
+
+    /// Stable numeric code used by the packed-artifact format (v3+).
+    pub fn code(self) -> u32 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::I8 => 1,
+        }
+    }
+
+    /// Inverse of [`Dtype::code`].
+    pub fn from_code(c: u32) -> Option<Dtype> {
+        ALL_DTYPES.into_iter().find(|d| d.code() == c)
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Parse an `NMPRUNE_DTYPE` value. `Ok(None)` means no forcing
+/// (unset/empty/`auto`); `Err` carries the loud-failure message for an
+/// unknown dtype — same fail-loud convention as `NMPRUNE_KERNEL`.
+fn parse_forced(raw: &str) -> Result<Option<Dtype>, String> {
+    let name = raw.trim().to_ascii_lowercase();
+    if name.is_empty() || name == "auto" {
+        return Ok(None);
+    }
+    Dtype::from_name(&name).map(Some).ok_or_else(|| {
+        let known = ALL_DTYPES.map(|d| d.name()).join(", ");
+        format!("NMPRUNE_DTYPE={raw}: unknown dtype (known: {known}, auto)")
+    })
+}
+
+/// The process-wide forced dtype from `NMPRUNE_DTYPE`, memoised.
+/// Panics (once, loudly) if the variable names an unknown dtype —
+/// forcing must never silently fall back. Applied when executors are
+/// *built* (op preparation), never on the zero-alloc run path.
+pub fn forced() -> Option<Dtype> {
+    static FORCED: OnceLock<Option<Dtype>> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var("NMPRUNE_DTYPE") {
+        Ok(v) => parse_forced(&v).unwrap_or_else(|e| panic!("{e}")),
+        Err(_) => None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_and_code_round_trip() {
+        for d in ALL_DTYPES {
+            assert_eq!(Dtype::from_name(d.name()), Some(d));
+            assert_eq!(Dtype::from_code(d.code()), Some(d));
+            assert_eq!(format!("{d}"), d.name());
+        }
+        assert_eq!(Dtype::from_name("fp16"), None);
+        assert_eq!(Dtype::from_code(9), None);
+        assert_eq!(Dtype::default(), Dtype::F32);
+    }
+
+    #[test]
+    fn parse_forced_accepts_auto_and_rejects_junk() {
+        assert_eq!(parse_forced("").unwrap(), None);
+        assert_eq!(parse_forced("auto").unwrap(), None);
+        assert_eq!(parse_forced(" AUTO ").unwrap(), None);
+        assert_eq!(parse_forced("f32").unwrap(), Some(Dtype::F32));
+        assert_eq!(parse_forced(" I8 ").unwrap(), Some(Dtype::I8));
+        assert!(parse_forced("int4").is_err());
+    }
+}

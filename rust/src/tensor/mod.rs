@@ -6,8 +6,10 @@
 //! to the `[C_out, K_h*K_w*C_in]` GEMM filter matrix. This module owns
 //! those shapes and conversions.
 
+pub mod dtype;
 pub mod layout;
 
+pub use dtype::Dtype;
 pub use layout::{ActLayout, WeightLayout};
 
 /// A dense, row-major f32 tensor of arbitrary rank.

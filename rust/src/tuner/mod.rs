@@ -5,8 +5,9 @@
 //!
 //! Two profiling backends:
 //! * **native** — wall-clock of the native Rust conv path on this host
-//!   (what a deployment would use); sweeps `(LMUL, T, P, kernel)` with
-//!   `P` over [`thread_candidates`] of the profiling pool and `kernel`
+//!   (what a deployment would use); sweeps `(LMUL, T, P, kernel, dtype)`
+//!   with `P` over [`thread_candidates`] of the profiling pool, `dtype`
+//!   over `{f32, i8}`, and `kernel`
 //!   over the micro-kernel backends available on the host
 //!   ([`crate::gemm::kernels::available_ids`]), so each layer also
 //!   picks how many pool workers it is worth waking and which SIMD
@@ -20,10 +21,11 @@
 //!   the choice).
 //!
 //! Results are memoised in a [`TuneCache`] persisted as TSV, mirroring
-//! AITemplate's profiling cache. The TSV is five columns
-//! (`key  v  tile  threads  kernel`); legacy three-column (no threads)
-//! and four-column (no kernel) files still load, defaulting the
-//! missing fields to 0 = uncapped and `auto`.
+//! AITemplate's profiling cache. The TSV is six columns
+//! (`key  v  tile  threads  kernel  dtype`); legacy three-column (no
+//! threads), four-column (no kernel) and five-column (no dtype) files
+//! still load, defaulting the missing fields to 0 = uncapped, `auto`
+//! and `f32`.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -37,7 +39,8 @@ use crate::im2col::pack_data_matrix;
 use crate::pruning::prune_colwise_adaptive;
 use crate::rvv::kernels::{max_tile_for_lmul, sim_spmm_colwise};
 use crate::rvv::RvvMachine;
-use crate::tensor::Tensor;
+use crate::tensor::dtype::ALL_DTYPES;
+use crate::tensor::{Dtype, Tensor};
 use crate::util::threadpool::ThreadPool;
 use crate::util::XorShiftRng;
 
@@ -59,6 +62,10 @@ pub struct Candidate {
     /// dispatch; what sim candidates carry, since the simulator does
     /// not run the native backends).
     pub kernel: KernelId,
+    /// Compute dtype profiled. Native sweeps cover both f32 and the
+    /// quantized i8 path; the simulator models the f32 RVV kernel only,
+    /// so sim candidates always carry [`Dtype::F32`].
+    pub dtype: Dtype,
     /// Profiling score (ns for native, cycles for sim) — lower is better.
     pub score: f64,
 }
@@ -135,6 +142,7 @@ pub fn tune_sim_colwise(shape: &ConvShape, sparsity: f64, tile_cap: usize) -> Tu
             // SIMD: the choice stays Auto so the deployment host
             // dispatches its own best backend.
             kernel: KernelId::Auto,
+            dtype: Dtype::F32, // the simulator profiles the f32 kernel only
             score: rep.cycles as f64 * scale,
         });
     }
@@ -144,7 +152,10 @@ pub fn tune_sim_colwise(shape: &ConvShape, sparsity: f64, tile_cap: usize) -> Tu
 /// Profile the *native* conv operator (dense or sparse CNHW path) by
 /// wall clock, running candidates on the caller's persistent pool so
 /// profiling measures the same dispatch the deployment uses. The sweep
-/// is the `(LMUL, T, P)` product with `P` over [`thread_candidates`]
+/// is the `(LMUL, T, P, kernel, dtype)` product — dtype over `{f32, i8}`
+/// (quantized layers trade accuracy for int throughput, so the i8 side
+/// only wins where the kernel is genuinely faster) — with `P` over
+/// [`thread_candidates`]
 /// of the pool size (trimmed to the caps that behave distinctly for
 /// the layer's strip count): each layer profiles its own parallelism
 /// degree, so small layers whose dispatch overhead dominates tune to
@@ -190,46 +201,52 @@ pub fn tune_native(
         if let Some(&t) = threads_space.iter().find(|&&t| t >= strips) {
             caps.push(t);
         }
-        // Weight compression/packing happens once per (LMUL, T); the
-        // parallelism and kernel sweeps only flip dispatch fields.
-        match sparsity {
-            None => {
-                let mut op = Conv2dDenseCnhw::new(*shape, &w, v, tile);
-                for &kernel in &kernel_space {
-                    op.kernel = kernel;
-                    for &threads in &caps {
-                        op.threads = threads;
-                        let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
-                        candidates.push(Candidate {
-                            lmul,
-                            v,
-                            tile,
-                            threads,
-                            kernel,
-                            score,
-                        });
+        // Weight compression/packing (and, for i8, weight quantization)
+        // happens once per (LMUL, T, dtype); the parallelism and kernel
+        // sweeps only flip dispatch fields.
+        for &dtype in &ALL_DTYPES {
+            match sparsity {
+                None => {
+                    let mut op = Conv2dDenseCnhw::new(*shape, &w, v, tile).with_dtype(dtype);
+                    for &kernel in &kernel_space {
+                        op.kernel = kernel;
+                        for &threads in &caps {
+                            op.threads = threads;
+                            let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
+                            candidates.push(Candidate {
+                                lmul,
+                                v,
+                                tile,
+                                threads,
+                                kernel,
+                                dtype,
+                                score,
+                            });
+                        }
                     }
                 }
-            }
-            Some(s) => {
-                let mut op = Conv2dSparseCnhw::new_adaptive(*shape, &w, v, tile, s);
-                for &kernel in &kernel_space {
-                    op.kernel = kernel;
-                    for &threads in &caps {
-                        op.threads = threads;
-                        let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
-                        candidates.push(Candidate {
-                            lmul,
-                            v,
-                            tile,
-                            threads,
-                            kernel,
-                            score,
-                        });
+                Some(s) => {
+                    let mut op =
+                        Conv2dSparseCnhw::new_adaptive(*shape, &w, v, tile, s).with_dtype(dtype);
+                    for &kernel in &kernel_space {
+                        op.kernel = kernel;
+                        for &threads in &caps {
+                            op.threads = threads;
+                            let score = bench("cand", cfg, || op.run(&x, pool)).mean_ns();
+                            candidates.push(Candidate {
+                                lmul,
+                                v,
+                                tile,
+                                threads,
+                                kernel,
+                                dtype,
+                                score,
+                            });
+                        }
                     }
                 }
-            }
-        };
+            };
+        }
     }
     pick(candidates)
 }
@@ -259,6 +276,7 @@ impl TuneResult {
             tile: self.best.tile,
             threads: self.best.threads,
             kernel: self.best.kernel,
+            dtype: self.best.dtype,
         }
     }
 }
@@ -292,11 +310,12 @@ pub fn cache_key(shape: &ConvShape, sparsity: Option<f64>) -> String {
 
 impl TuneCache {
     /// Load from a TSV file (missing file → empty cache). Accepts the
-    /// current five-column format (`key  v  tile  threads  kernel`) and
-    /// both legacy layouts — three columns (no threads) and four
-    /// columns (no kernel). Missing fields default to `threads = 0`
-    /// (uncapped) and `kernel = auto` (runtime dispatch), so caches
-    /// written before either dimension existed keep working.
+    /// current six-column format (`key  v  tile  threads  kernel
+    /// dtype`) and all legacy layouts — three columns (no threads),
+    /// four columns (no kernel) and five columns (no dtype). Missing
+    /// fields default to `threads = 0` (uncapped), `kernel = auto`
+    /// (runtime dispatch) and `dtype = f32`, so caches written before
+    /// any of the dimensions existed keep working.
     ///
     /// Robust against a corrupted cache (satellite): truncated rows, a
     /// trailing partial write (a row cut mid-field by a crash), rows
@@ -324,10 +343,11 @@ impl TuneCache {
             return None;
         }
         let fields: Vec<&str> = line.split('\t').collect();
-        let (k, v, t, threads, kernel) = match fields.as_slice() {
-            [k, v, t] => (*k, *v, *t, None, None),
-            [k, v, t, th] => (*k, *v, *t, Some(*th), None),
-            [k, v, t, th, kn] => (*k, *v, *t, Some(*th), Some(*kn)),
+        let (k, v, t, threads, kernel, dtype) = match fields.as_slice() {
+            [k, v, t] => (*k, *v, *t, None, None, None),
+            [k, v, t, th] => (*k, *v, *t, Some(*th), None, None),
+            [k, v, t, th, kn] => (*k, *v, *t, Some(*th), Some(*kn), None),
+            [k, v, t, th, kn, dt] => (*k, *v, *t, Some(*th), Some(*kn), Some(*dt)),
             _ => return None, // truncated or overlong row
         };
         if k.is_empty() {
@@ -335,8 +355,9 @@ impl TuneCache {
         }
         let v: usize = v.trim().parse().ok()?;
         let tile: usize = t.trim().parse().ok()?;
-        // A present-but-garbled threads or kernel column means the row
-        // was cut mid-write: skip it entirely rather than guessing.
+        // A present-but-garbled threads, kernel or dtype column means
+        // the row was cut mid-write: skip it entirely rather than
+        // guessing.
         let threads: usize = match threads {
             None => 0,
             Some(th) => th.trim().parse().ok()?,
@@ -345,6 +366,10 @@ impl TuneCache {
             None => KernelId::Auto,
             Some(kn) => KernelId::from_name(kn.trim())?,
         };
+        let dtype: Dtype = match dtype {
+            None => Dtype::F32,
+            Some(dt) => Dtype::from_name(dt.trim())?,
+        };
         Some((
             k.to_string(),
             LayerChoice {
@@ -352,11 +377,12 @@ impl TuneCache {
                 tile,
                 threads,
                 kernel,
+                dtype,
             },
         ))
     }
 
-    /// Persist as TSV (`key  v  tile  threads  kernel`).
+    /// Persist as TSV (`key  v  tile  threads  kernel  dtype`).
     pub fn save(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir)?;
@@ -365,11 +391,12 @@ impl TuneCache {
         for (k, c) in &self.entries {
             writeln!(
                 f,
-                "{k}\t{}\t{}\t{}\t{}",
+                "{k}\t{}\t{}\t{}\t{}\t{}",
                 c.v,
                 c.tile,
                 c.threads,
-                c.kernel.name()
+                c.kernel.name(),
+                c.dtype.name()
             )?;
         }
         Ok(())
@@ -451,6 +478,13 @@ mod tests {
             );
         }
         assert_ne!(c.kernel, KernelId::Auto);
+        // Both compute dtypes were profiled (the fifth sweep dimension).
+        for dt in ALL_DTYPES {
+            assert!(
+                r.candidates.iter().any(|cand| cand.dtype == dt),
+                "dtype {dt} not profiled"
+            );
+        }
     }
 
     #[test]
@@ -477,11 +511,12 @@ mod tests {
             lmul8.iter().all(|c| c.threads == 1),
             "single-strip layers must not re-profile redundant caps"
         );
-        // No duplicate (lmul, tile, threads, kernel) configurations anywhere.
+        // No duplicate (lmul, tile, threads, kernel, dtype)
+        // configurations anywhere.
         let mut keys: Vec<_> = r
             .candidates
             .iter()
-            .map(|c| (c.lmul, c.tile, c.threads, c.kernel.code()))
+            .map(|c| (c.lmul, c.tile, c.threads, c.kernel.code(), c.dtype.code()))
             .collect();
         keys.sort_unstable();
         keys.dedup();
@@ -507,6 +542,7 @@ mod tests {
             tile: 4,
             threads: 2,
             kernel: KernelId::Avx2,
+            dtype: Dtype::I8,
         };
         let choice = cache.get_or_tune(key.clone(), || want);
         assert_eq!(choice, want);
@@ -537,6 +573,7 @@ mod tests {
                     tile: 1 + i,
                     threads,
                     kernel: ALL_KERNEL_IDS[i % ALL_KERNEL_IDS.len()],
+                    dtype: ALL_DTYPES[i % ALL_DTYPES.len()],
                 },
             );
         }
@@ -562,7 +599,8 @@ mod tests {
                 v: 16,
                 tile: 4,
                 threads: 0,
-                kernel: KernelId::Auto
+                kernel: KernelId::Auto,
+                dtype: Dtype::F32
             })
         );
         assert_eq!(
@@ -571,7 +609,8 @@ mod tests {
                 v: 32,
                 tile: 8,
                 threads: 0,
-                kernel: KernelId::Auto
+                kernel: KernelId::Auto,
+                dtype: Dtype::F32
             })
         );
         std::fs::remove_file(path).ok();
@@ -590,7 +629,39 @@ mod tests {
                 v: 16,
                 tile: 4,
                 threads: 2,
-                kernel: KernelId::Auto
+                kernel: KernelId::Auto,
+                dtype: Dtype::F32
+            })
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    /// A five-column TSV (written before the dtype column existed)
+    /// loads with `dtype = f32` instead of erroring, and a six-column
+    /// row round-trips its dtype.
+    #[test]
+    fn cache_loads_legacy_tsv_without_dtype_column() {
+        let path = "/tmp/nmprune_tune_cache_legacy_dtype_test.tsv";
+        std::fs::write(path, "layerA\t16\t4\t2\tavx2\nlayerB\t32\t8\t0\tauto\ti8\n").unwrap();
+        let loaded = TuneCache::load(path);
+        assert_eq!(
+            loaded.entries.get("layerA"),
+            Some(&LayerChoice {
+                v: 16,
+                tile: 4,
+                threads: 2,
+                kernel: KernelId::Avx2,
+                dtype: Dtype::F32
+            })
+        );
+        assert_eq!(
+            loaded.entries.get("layerB"),
+            Some(&LayerChoice {
+                v: 32,
+                tile: 8,
+                threads: 0,
+                kernel: KernelId::Auto,
+                dtype: Dtype::I8
             })
         );
         std::fs::remove_file(path).ok();
@@ -612,8 +683,9 @@ mod tests {
             "nonnum2\t16\tfour\t2\n",             // non-numeric tile
             "nonnum3\t16\t4\ttwo\n",              // non-numeric threads → skip, not 0
             "badkern\t16\t4\t2\twarp9\n",         // unknown kernel name → skip, not auto
+            "badtype\t16\t4\t2\tscalar\tint4\n",  // unknown dtype name → skip, not f32
             "\t16\t4\t2\n",                       // empty key
-            "overlong\t16\t4\t2\tscalar\textra\n", // too many columns
+            "overlong\t16\t4\t2\tscalar\tf32\textra\n", // too many columns
             "\n",                                 // blank line
             "good3\t8\t1\t0\n",                   // valid after the garbage
             "partial\t1"                          // trailing partial write (crash mid-row)
@@ -627,15 +699,15 @@ mod tests {
         );
         assert_eq!(
             loaded.entries.get("good1"),
-            Some(&LayerChoice { v: 16, tile: 4, threads: 2, kernel: KernelId::Auto })
+            Some(&LayerChoice { v: 16, tile: 4, threads: 2, kernel: KernelId::Auto, dtype: Dtype::F32 })
         );
         assert_eq!(
             loaded.entries.get("good2"),
-            Some(&LayerChoice { v: 32, tile: 8, threads: 0, kernel: KernelId::Auto })
+            Some(&LayerChoice { v: 32, tile: 8, threads: 0, kernel: KernelId::Auto, dtype: Dtype::F32 })
         );
         assert_eq!(
             loaded.entries.get("good4"),
-            Some(&LayerChoice { v: 16, tile: 8, threads: 1, kernel: KernelId::Scalar })
+            Some(&LayerChoice { v: 16, tile: 8, threads: 1, kernel: KernelId::Scalar, dtype: Dtype::F32 })
         );
         // Round-trip: saving the survivors and re-loading is identity.
         loaded.save(path).unwrap();
@@ -652,11 +724,11 @@ mod tests {
         let loaded = TuneCache::load(path);
         assert_eq!(
             loaded.entries.get("layerA"),
-            Some(&LayerChoice { v: 16, tile: 4, threads: 1, kernel: KernelId::Scalar })
+            Some(&LayerChoice { v: 16, tile: 4, threads: 1, kernel: KernelId::Scalar, dtype: Dtype::F32 })
         );
         assert_eq!(
             loaded.entries.get("layerB"),
-            Some(&LayerChoice { v: 32, tile: 8, threads: 0, kernel: KernelId::Auto })
+            Some(&LayerChoice { v: 32, tile: 8, threads: 0, kernel: KernelId::Auto, dtype: Dtype::F32 })
         );
         std::fs::remove_file(path).ok();
     }
@@ -672,6 +744,7 @@ mod tests {
             tile: 1,
             threads: 1,
             kernel: KernelId::Scalar,
+            dtype: Dtype::F32,
             score,
         };
         let r = pick(vec![
@@ -695,6 +768,7 @@ mod tests {
             tile,
             threads: 1,
             kernel: KernelId::Scalar,
+            dtype: Dtype::F32,
             score,
         };
         let r = pick(vec![cand(1, f64::NAN), cand(2, f64::NAN)]);

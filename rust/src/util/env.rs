@@ -1,0 +1,96 @@
+//! Environment-variable parsing conventions shared by every
+//! `NMPRUNE_*` switch.
+//!
+//! Before this module each call site rolled its own parse and they
+//! disagreed: `NMPRUNE_TRACE=0` *enabled* tracing (the site tested
+//! `is_ok()`), `NMPRUNE_BENCH_QUICK=0` *triggered* quick mode (any
+//! non-empty value counted), while `NMPRUNE_PIN` and
+//! `NMPRUNE_SERVE_TRACE` required exactly `"1"`. [`flag`] is the single
+//! boolean convention now: unset, `""`, `"0"` and `"false"`
+//! (case-insensitive) are **off**; any other value is **on**.
+//!
+//! Numeric switches follow the `NMPRUNE_KERNEL` fail-loud convention:
+//! a value that is set but unparseable is a configuration typo, and
+//! [`parse_usize`] panics with the offending value rather than
+//! silently falling back ([`crate::util::threadpool::ThreadPool::default_size`]
+//! used to `unwrap_or` its way past `NMPRUNE_THREADS=two`).
+
+/// Boolean environment flag. Off when the variable is unset, empty,
+/// `"0"`, or `"false"` (ASCII case-insensitive); on for any other
+/// value. Every `NMPRUNE_*` on/off switch must go through this so
+/// `FLAG=0` means the same thing everywhere.
+pub fn flag(name: &str) -> bool {
+    match std::env::var(name) {
+        Ok(v) => !matches!(v.trim(), "" | "0") && !v.trim().eq_ignore_ascii_case("false"),
+        Err(_) => false,
+    }
+}
+
+/// Numeric environment switch, fail-loud: `None` when unset or empty
+/// (empty means "off", consistent with [`flag`]); panics with a
+/// descriptive message when the value is set but not a valid integer.
+/// A typo'd `NMPRUNE_THREADS=sixteen` must stop the process, not
+/// silently run on the hardware default.
+pub fn parse_usize(name: &str) -> Option<usize> {
+    let v = std::env::var(name).ok()?;
+    let t = v.trim();
+    if t.is_empty() {
+        return None;
+    }
+    match t.parse::<usize>() {
+        Ok(n) => Some(n),
+        Err(_) => panic!("{name}={v:?} is not a valid non-negative integer"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test owns a unique variable name: env mutation is process
+    // global and the test harness runs threads concurrently.
+
+    #[test]
+    fn flag_off_values() {
+        let k = "NMPRUNE_TEST_FLAG_OFF";
+        std::env::remove_var(k);
+        assert!(!flag(k), "unset is off");
+        for v in ["", "0", "false", "FALSE", "False", " 0 ", ""] {
+            std::env::set_var(k, v);
+            assert!(!flag(k), "{v:?} must be off");
+        }
+        std::env::remove_var(k);
+    }
+
+    #[test]
+    fn flag_on_values() {
+        let k = "NMPRUNE_TEST_FLAG_ON";
+        for v in ["1", "true", "yes", "2", "on"] {
+            std::env::set_var(k, v);
+            assert!(flag(k), "{v:?} must be on");
+        }
+        std::env::remove_var(k);
+    }
+
+    #[test]
+    fn parse_usize_accepts_numbers_and_treats_empty_as_unset() {
+        let k = "NMPRUNE_TEST_USIZE_OK";
+        std::env::remove_var(k);
+        assert_eq!(parse_usize(k), None);
+        std::env::set_var(k, "12");
+        assert_eq!(parse_usize(k), Some(12));
+        std::env::set_var(k, " 3 ");
+        assert_eq!(parse_usize(k), Some(3));
+        std::env::set_var(k, "");
+        assert_eq!(parse_usize(k), None);
+        std::env::remove_var(k);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a valid non-negative integer")]
+    fn parse_usize_fails_loudly_on_garbage() {
+        let k = "NMPRUNE_TEST_USIZE_BAD";
+        std::env::set_var(k, "two");
+        let _ = parse_usize(k);
+    }
+}

@@ -4,6 +4,7 @@
 //! rand/rayon/clap/serde/proptest).
 
 pub mod allocwatch;
+pub mod env;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;

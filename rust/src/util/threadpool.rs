@@ -134,9 +134,11 @@ pub mod affinity {
         Vec::new()
     }
 
-    /// Is pinning requested via the environment (`NMPRUNE_PIN=1`)?
+    /// Is pinning requested via the environment (`NMPRUNE_PIN`)?
+    /// Parsed by [`crate::util::env::flag`]: `""`/`"0"`/`"false"` are
+    /// off, anything else is on.
     pub fn env_pin() -> bool {
-        std::env::var("NMPRUNE_PIN").map(|v| v == "1").unwrap_or(false)
+        crate::util::env::flag("NMPRUNE_PIN")
     }
 }
 
@@ -258,16 +260,19 @@ impl ThreadPool {
     /// single sizing rule shared by [`ThreadPool::global`] and every
     /// CLI path that builds its own pool — placement flags like `--pin`
     /// must never change the count, only where workers land.
+    ///
+    /// Fail-loud (the `NMPRUNE_KERNEL` convention): a value that is set
+    /// but not a positive integer panics with the offending value; it
+    /// used to be silently ignored, so `NMPRUNE_THREADS=sixteen` ran on
+    /// the hardware default without a word.
     pub fn default_size() -> usize {
-        std::env::var("NMPRUNE_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(4)
-            })
+        match crate::util::env::parse_usize("NMPRUNE_THREADS") {
+            Some(0) => panic!("NMPRUNE_THREADS=0: worker count must be >= 1"),
+            Some(n) => n,
+            None => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        }
     }
 
     /// The process-wide default pool: sized by [`ThreadPool::default_size`];
@@ -742,6 +747,32 @@ mod tests {
             affinity::pin_current_thread(cpus[0]),
             "pinning to a CPU from our own affinity mask must succeed"
         );
+    }
+
+    /// Satellite (fail-loud env): `NMPRUNE_THREADS` with a valid count
+    /// is honoured; a non-numeric or zero value panics instead of being
+    /// silently ignored. The variable is restored before asserting so
+    /// the garbage window stays as short as possible.
+    #[test]
+    fn default_size_honours_and_validates_nmprune_threads() {
+        let saved = std::env::var("NMPRUNE_THREADS").ok();
+        std::env::set_var("NMPRUNE_THREADS", "3");
+        let ok = ThreadPool::default_size();
+        let garbage = catch_unwind(|| {
+            std::env::set_var("NMPRUNE_THREADS", "sixteen");
+            ThreadPool::default_size()
+        });
+        let zero = catch_unwind(|| {
+            std::env::set_var("NMPRUNE_THREADS", "0");
+            ThreadPool::default_size()
+        });
+        match saved {
+            Some(v) => std::env::set_var("NMPRUNE_THREADS", v),
+            None => std::env::remove_var("NMPRUNE_THREADS"),
+        }
+        assert_eq!(ok, 3);
+        assert!(garbage.is_err(), "non-numeric NMPRUNE_THREADS must panic");
+        assert!(zero.is_err(), "NMPRUNE_THREADS=0 must panic");
     }
 
     #[test]

@@ -35,7 +35,7 @@ use nmprune::conv::{Conv2dSparseCnhw, ConvShape};
 use nmprune::gemm::kernels::{available_ids, within_parity_bound};
 use nmprune::gemm::KernelId;
 use nmprune::im2col::im2col_cnhw;
-use nmprune::tensor::Tensor;
+use nmprune::tensor::{Dtype, Tensor};
 use nmprune::util::{prop, ThreadPool, XorShiftRng};
 
 /// One random fuzz scenario. Data is regenerated from `data_seed`
@@ -223,6 +223,234 @@ fn fuzz_every_kernel_backend_vs_scalar_oracle() {
         gen_case,
         every_kernel_matches_scalar_oracle,
     );
+}
+
+// ----------------------------------------------------------------------
+// The dtype axis: the quantized (i8) sparse conv path.
+//
+// Two contracts, each strictly checkable:
+//
+// 1. *Accuracy*: the i8 output must sit within a per-element error
+//    bound **derived from the actual quantization scales** the op
+//    computes — `Σ_retained (½·s_a·|w| + ½·s_w·|a| + ¼·s_w·s_a)`,
+//    the triangle-inequality sum of the two half-step rounding errors
+//    and their cross term — against an f64 masked-dense reference.
+//    The bound is per output element, not a global tolerance, so it
+//    tightens automatically on small accumulations.
+//
+// 2. *Determinism*: integer accumulation is order-independent, so a
+//    parallel capped run of ANY available backend must be **bitwise**
+//    equal to the serial scalar i8 oracle — a stronger bar than the
+//    f32 kernels' ULP parity bound.
+
+/// Contract 1: run the i8 sparse op and check every output element
+/// against an f64 masked-dense reference within the derived bound.
+/// Factored out of the property so the directed saturation fixtures
+/// below reuse it with hand-built extreme tensors.
+#[allow(clippy::too_many_arguments)]
+fn i8_output_within_derived_bound(
+    s: ConvShape,
+    x: &Tensor,
+    w: &Tensor,
+    v: usize,
+    tile: usize,
+    n_keep: usize,
+    m: usize,
+    layer_cap: usize,
+    pool: &ThreadPool,
+    run_cap: usize,
+) -> bool {
+    let op = Conv2dSparseCnhw::new(s, w, v, tile, n_keep, m)
+        .with_thread_cap(layer_cap)
+        .with_kernel(KernelId::Scalar)
+        .with_dtype(Dtype::I8);
+    let got = op.run_capped(x, pool, run_cap);
+    if got.shape != vec![s.c_out, s.n, s.h_out(), s.w_out()] {
+        return false;
+    }
+    let a = im2col_cnhw(x, &s);
+    let wm = op.weights.decompress();
+    let (k, cols) = (s.k(), s.gemm_cols());
+    // Recompute the scales exactly as the op does: activations get one
+    // panel-wide scale (strip zero-padding never raises the max), each
+    // output row its own weight scale over the retained values (the
+    // pruned entries of `wm` are exact zeros).
+    let sa = a.iter().fold(0.0f32, |mx, x| mx.max(x.abs())) / 127.0;
+    for o in 0..s.c_out {
+        let sw = wm[o * k..(o + 1) * k]
+            .iter()
+            .fold(0.0f32, |mx, x| mx.max(x.abs()))
+            / 127.0;
+        for col in 0..cols {
+            let mut want = 0.0f64;
+            let mut bound = 0.0f64;
+            for kk in 0..k {
+                let wv = wm[o * k + kk];
+                // Pruned columns are skipped by the compressed kernel
+                // and contribute exactly zero — no error term.
+                if wv != 0.0 {
+                    let av = a[kk * cols + col];
+                    want += wv as f64 * av as f64;
+                    bound += 0.5 * sa as f64 * wv.abs() as f64
+                        + 0.5 * sw as f64 * av.abs() as f64
+                        + 0.25 * (sw as f64) * (sa as f64);
+                }
+            }
+            let tol = bound * 1.001 + 1e-5 * want.abs() + 1e-4;
+            if (got.data[o * cols + col] as f64 - want).abs() > tol {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn quantized_conv_within_derived_bound(c: &Case) -> bool {
+    let s = c.shape;
+    let mut r = XorShiftRng::new(c.data_seed);
+    let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+    let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -0.5, 0.5);
+    let pool = ThreadPool::shared(c.pool_size);
+    i8_output_within_derived_bound(
+        s,
+        &x,
+        &w,
+        c.v,
+        c.tile,
+        c.n_keep,
+        c.m,
+        c.layer_cap,
+        &pool,
+        c.run_cap,
+    )
+}
+
+#[test]
+fn fuzz_quantized_conv_within_derived_bound() {
+    prop::check(
+        prop::Config {
+            cases: prop::cases_from_env(48),
+            seed: 0xF22D,
+            max_size: 48,
+        },
+        gen_case,
+        quantized_conv_within_derived_bound,
+    );
+}
+
+/// Contract 2: every available backend, under the case's pool and cap
+/// composition, must reproduce the serial scalar i8 output bitwise.
+fn every_kernel_i8_bitwise_equals_serial_scalar(c: &Case) -> bool {
+    let s = c.shape;
+    let mut r = XorShiftRng::new(c.data_seed);
+    let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+    let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -0.5, 0.5);
+    let serial = ThreadPool::shared(1);
+    let oracle = Conv2dSparseCnhw::new(s, &w, c.v, c.tile, c.n_keep, c.m)
+        .with_kernel(KernelId::Scalar)
+        .with_dtype(Dtype::I8)
+        .run_capped(&x, &serial, 1);
+    let pool = ThreadPool::shared(c.pool_size);
+    for id in available_ids() {
+        let op = Conv2dSparseCnhw::new(s, &w, c.v, c.tile, c.n_keep, c.m)
+            .with_thread_cap(c.layer_cap)
+            .with_kernel(id)
+            .with_dtype(Dtype::I8);
+        let got = op.run_capped(&x, &pool, c.run_cap);
+        if got.shape != oracle.shape || got.data != oracle.data {
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn fuzz_every_kernel_i8_bitwise_vs_serial_scalar() {
+    prop::check(
+        prop::Config {
+            cases: prop::cases_from_env(48),
+            seed: 0xF22E,
+            max_size: 48,
+        },
+        gen_case,
+        every_kernel_i8_bitwise_equals_serial_scalar,
+    );
+}
+
+/// Directed i8 corners the generator only hits probabilistically:
+/// all-zero activations and all-zero filters (scale-0 arms), extreme
+/// magnitudes that push every quantized value to ±127 (saturation),
+/// and the degenerate N:M edges — each checked against the derived
+/// bound and, where the output is exactly representable, exactly.
+#[test]
+fn i8_saturation_and_zero_fixtures() {
+    let s = ConvShape::square(1, 2, 6, 4, 3, 1, 1);
+    let k = s.k();
+    let pool = ThreadPool::shared(2);
+    let mut r = XorShiftRng::new(0xF22F);
+
+    // All-zero input: the panel scale is 0, every quantized activation
+    // is 0, and the output must be exactly zero.
+    let w = Tensor::random(&[s.c_out, s.c_in, s.kh, s.kw], &mut r, -0.5, 0.5);
+    let x0 = Tensor::zeros(&[s.c_in, s.n, s.h_in, s.w_in]);
+    let y = Conv2dSparseCnhw::new(s, &w, 8, 4, 2, 3)
+        .with_kernel(KernelId::Scalar)
+        .with_dtype(Dtype::I8)
+        .run_capped(&x0, &pool, 0);
+    assert!(y.data.iter().all(|&v| v == 0.0), "zero input must give 0");
+
+    // All-zero filter: every row scale is 0 → exact zeros out.
+    let x = Tensor::random(&[s.c_in, s.n, s.h_in, s.w_in], &mut r, -1.0, 1.0);
+    let w0 = Tensor::zeros(&[s.c_out, s.c_in, s.kh, s.kw]);
+    let y = Conv2dSparseCnhw::new(s, &w0, 8, 4, 1, k)
+        .with_kernel(KernelId::Scalar)
+        .with_dtype(Dtype::I8)
+        .run_capped(&x, &pool, 0);
+    assert!(y.data.iter().all(|&v| v == 0.0), "zero filter must give 0");
+
+    // Saturation: activations at ±1e30 and weights at ±1e3 quantize to
+    // exactly ±127 everywhere (the value IS the row max). The derived
+    // bound must still hold — scales absorb magnitude symmetrically.
+    let xs = Tensor::from_vec(
+        &[s.c_in, s.n, s.h_in, s.w_in],
+        (0..s.c_in * s.n * s.h_in * s.w_in)
+            .map(|i| if i % 2 == 0 { 1.0e30 } else { -1.0e30 })
+            .collect(),
+    );
+    let ws = Tensor::from_vec(
+        &[s.c_out, s.c_in, s.kh, s.kw],
+        (0..s.c_out * s.c_in * s.kh * s.kw)
+            .map(|i| if i % 3 == 0 { -1.0e3 } else { 1.0e3 })
+            .collect(),
+    );
+    assert!(
+        i8_output_within_derived_bound(s, &xs, &ws, 8, 4, 2, 3, 0, &pool, 0),
+        "saturated extremes must stay within the derived bound"
+    );
+
+    // Degenerate N:M edges under i8: 1:K (max sparsity) and K:K
+    // (dense-as-sparse), both bound-checked and backend-bitwise.
+    for (n_keep, m) in [(1, k), (k, k), (1, 3), (3, 3)] {
+        let c = Case {
+            shape: s,
+            v: 8,
+            tile: 4,
+            n_keep,
+            m,
+            pool_size: 2,
+            layer_cap: 0,
+            run_cap: 0,
+            data_seed: 23,
+        };
+        assert!(
+            quantized_conv_within_derived_bound(&c),
+            "i8 degenerate N:M bound failed: {c:?}"
+        );
+        assert!(
+            every_kernel_i8_bitwise_equals_serial_scalar(&c),
+            "i8 degenerate N:M bitwise failed: {c:?}"
+        );
+    }
 }
 
 /// Directed corners the generator only hits probabilistically: the

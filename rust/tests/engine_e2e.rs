@@ -207,6 +207,7 @@ fn tune_cache_roundtrip_and_memoisation() {
             v: 16,
             tile: 4,
             threads: 2,
+            ..Default::default()
         }
     });
     assert_eq!((c1.v, c1.tile, c1.threads), (16, 4, 2));
@@ -216,6 +217,7 @@ fn tune_cache_roundtrip_and_memoisation() {
             v: 8,
             tile: 2,
             threads: 1,
+            ..Default::default()
         }
     });
     assert_eq!((c2.v, c2.tile), (16, 4), "memoised value must win");
